@@ -1,0 +1,63 @@
+//! DCDM vs the generic QP solver (the Fig. 8 / Table VIII story), with
+//! and without SRBO, on one medium benchmark-mimic dataset.
+//!
+//!     cargo run --release --example solver_shootout
+
+use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
+use srbo::data::benchmark;
+use srbo::data::split::train_test_stratified;
+use srbo::kernel::{full_q, KernelKind};
+use srbo::stats::accuracy;
+use srbo::svm::nu::NuSvm;
+use srbo::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let spec = benchmark::spec("Electrical").expect("spec");
+    let scale = std::env::var("SRBO_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.06);
+    let d = benchmark::generate(spec, scale, 42);
+    let (train, test) = train_test_stratified(&d, 0.8, 7);
+    let kernel = KernelKind::rbf_from_sigma(2.0);
+    let q = full_q(&train.x, &train.y, kernel);
+    println!("dataset {} l={} p={}", d.name, train.len(), train.dim());
+    let nus: Vec<f64> = (0..40).map(|i| 0.2 + 0.005 * i as f64).collect();
+
+    println!(
+        "{:<26} {:>9} {:>10} {:>12}",
+        "solver", "time(s)", "acc(%)", "screening(%)"
+    );
+    for (label, solver, screening) in [
+        ("GQP (quadprog-like)", SolverChoice::Gqp, false),
+        ("GQP + SRBO", SolverChoice::Gqp, true),
+        ("DCDM", SolverChoice::Dcdm, false),
+        ("DCDM + SRBO", SolverChoice::Dcdm, true),
+        ("DCDM paper-mode", SolverChoice::DcdmPaper, false),
+    ] {
+        let mut cfg = PathConfig::new(nus.clone(), kernel);
+        cfg.solver = solver;
+        cfg.screening = screening;
+        let t = Timer::start();
+        let path = NuPath::run_with_q(&q, &cfg, false, Default::default())?;
+        let secs = t.secs();
+        // accuracy at the last grid point (any fixed point works for the
+        // comparison; the paper reports the optimum)
+        let step = path.steps.last().unwrap();
+        let m = NuSvm::from_alpha(
+            &train.x,
+            &train.y,
+            step.alpha.clone(),
+            step.nu,
+            kernel,
+            step.solve_stats.clone(),
+        );
+        println!(
+            "{label:<26} {:>9.3} {:>10.2} {:>12.2}",
+            secs,
+            accuracy(&m.predict(&test.x), &test.y),
+            path.avg_screening_ratio()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT export: lower every L2 graph to HLO *text* artifacts.
+
+HLO text (not `.serialize()` protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile does).
+Also writes `manifest.tsv`: name, input specs, output arity — the Rust
+runtime (rust/src/runtime/artifact.rs) reads it to validate shapes at load
+time instead of trusting callers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Fixed padded artifact shapes, shared with rust/src/runtime/shapes.rs.
+L = 512  # padded sample count for screen/dcdm/objective
+F = 64  # padded feature count
+GM = 256  # gram block rows
+GN = 256  # gram block cols
+T = 128  # decision test-batch rows
+DCDM_EPOCHS = 5
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_registry():
+    """name -> (fn, example arg specs). Single place both layers agree on."""
+    s1 = _spec((1,))
+    return {
+        f"gram_rbf_{GM}x{GN}x{F}": (
+            lambda x1, x2, g: (model.gram_rbf(x1, x2, g),),
+            [_spec((GM, F)), _spec((GN, F)), s1],
+        ),
+        f"gram_linear_{GM}x{GN}x{F}": (
+            lambda x1, x2: (model.gram_linear(x1, x2),),
+            [_spec((GM, F)), _spec((GN, F))],
+        ),
+        f"qmatvec_{L}": (
+            lambda q, v: (model.qmatvec(q, v),),
+            [_spec((L, L)), _spec((L,))],
+        ),
+        f"screen_step_{L}": (
+            lambda q, a0, d, m, nu1, lr: model.screen_step(q, a0, d, m, nu1, lr),
+            [
+                _spec((L, L)),
+                _spec((L,)),
+                _spec((L,)),
+                _spec((L,)),
+                s1,
+                s1,
+            ],
+        ),
+        f"dcdm_sweep{DCDM_EPOCHS}_{L}": (
+            lambda q, a, ub, nu: (
+                model.dcdm_solve(q, a, ub, nu, epochs=DCDM_EPOCHS),
+            ),
+            [_spec((L, L)), _spec((L,)), _spec((L,)), s1],
+        ),
+        f"decision_rbf_{T}x{L}x{F}": (
+            lambda xt, xtr, ya, g: (model.decision_rbf(xt, xtr, ya, g),),
+            [_spec((T, F)), _spec((L, F)), _spec((L,)), s1],
+        ),
+        f"decision_linear_{T}x{L}x{F}": (
+            lambda xt, xtr, ya: (model.decision_linear(xt, xtr, ya),),
+            [_spec((T, F)), _spec((L, F)), _spec((L,))],
+        ),
+        f"objective_{L}": (
+            lambda q, a: (model.objective(q, a),),
+            [_spec((L, L)), _spec((L,))],
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="export a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []
+    for name, (fn, specs) in artifact_registry().items():
+        if args.only and args.only != name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        inputs = ";".join(
+            "x".join(str(d) for d in s.shape) or "scalar" for s in specs
+        )
+        nouts = len(fn(*[jnp.zeros(s.shape, s.dtype) for s in specs]))
+        manifest_rows.append(f"{name}\t{inputs}\t{nouts}")
+        print(f"wrote {path} ({len(text)} chars, {nouts} outputs)")
+
+    if not args.only:
+        with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+            f.write("name\tinputs\toutputs\n")
+            f.write("\n".join(manifest_rows) + "\n")
+        print(f"wrote {args.out_dir}/manifest.tsv ({len(manifest_rows)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

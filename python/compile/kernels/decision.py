@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: batched decision-function scoring (Eq. 6).
+
+scores = K(Xtest, Xtrain) @ (y * alpha)
+
+Tiled over test rows: each grid step holds a [TT, F] test tile and the
+whole [L, F] training set in VMEM, computes the Gram tile on the MXU and
+immediately contracts it against (y*alpha) — the Gram tile never leaves
+VMEM (this is the serving hot path of the Rust coordinator).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TT = 128  # test-row tile
+
+
+def _pick(n: int, t: int) -> int:
+    """Largest tile <= t dividing n (shapes are static at trace time)."""
+    t = min(t, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _decision_rbf_kernel(gamma_ref, xt_ref, xtr_ref, ya_ref, o_ref):
+    xt = xt_ref[...]  # [TT, F]
+    xtr = xtr_ref[...]  # [L, F]
+    cross = jnp.dot(xt, xtr.T, preferred_element_type=jnp.float32)
+    n1 = jnp.sum(xt * xt, axis=1, keepdims=True)
+    n2 = jnp.sum(xtr * xtr, axis=1, keepdims=True)
+    d = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
+    k = jnp.exp(-gamma_ref[0] * d)
+    o_ref[...] = jnp.dot(k, ya_ref[...], preferred_element_type=jnp.float32)
+
+
+def _decision_linear_kernel(xt_ref, xtr_ref, ya_ref, o_ref):
+    cross = jnp.dot(xt_ref[...], xtr_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(cross, ya_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tt",))
+def decision_rbf(xt, xtr, yalpha, gamma, tt: int = TT):
+    """xt: [T, F], xtr: [L, F], yalpha: [L], gamma: (1,)."""
+    t, f = xt.shape
+    l = xtr.shape[0]
+    tt = _pick(t, tt)
+    return pl.pallas_call(
+        _decision_rbf_kernel,
+        grid=(t // tt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tt, f), lambda i: (i, 0)),
+            pl.BlockSpec((l, f), lambda i: (0, 0)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=True,
+    )(gamma, xt, xtr, yalpha)
+
+
+@functools.partial(jax.jit, static_argnames=("tt",))
+def decision_linear(xt, xtr, yalpha, tt: int = TT):
+    t, f = xt.shape
+    l = xtr.shape[0]
+    tt = _pick(t, tt)
+    return pl.pallas_call(
+        _decision_linear_kernel,
+        grid=(t // tt,),
+        in_specs=[
+            pl.BlockSpec((tt, f), lambda i: (i, 0)),
+            pl.BlockSpec((l, f), lambda i: (0, 0)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=True,
+    )(xt, xtr, yalpha)

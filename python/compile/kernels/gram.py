@@ -1,0 +1,99 @@
+"""L1 Pallas kernels: tiled Gram-matrix blocks (RBF and linear).
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the RBF Gram block is a
+matmul in disguise — ||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y — so the kernel
+computes the cross term on the MXU (x1 @ x2.T with
+preferred_element_type=f32) and fuses the rank-1 norm corrections plus the
+exp epilogue on the VPU inside the same (TM, TN) output tile.  BlockSpec
+keeps the feature axis whole in VMEM (F <= 256 after padding), giving one
+HBM->VMEM round trip per tile.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both jax-CPU (tests)
+and the Rust PJRT CPU client (artifacts) execute identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  128x128 matches the MXU systolic array on real TPUs;
+# interpret mode does not care but we keep the structure honest.
+TM = 128
+TN = 128
+
+
+def _pick(n: int, t: int) -> int:
+    """Largest tile <= t dividing n (shapes are static at trace time)."""
+    t = min(t, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _rbf_tile_kernel(gamma_ref, x1_ref, x2_ref, o_ref):
+    x1 = x1_ref[...]  # [TM, F] resident in VMEM
+    x2 = x2_ref[...]  # [TN, F]
+    # MXU: cross term.
+    cross = jnp.dot(x1, x2.T, preferred_element_type=jnp.float32)
+    # VPU epilogue: rank-1 corrections + exp, fused in-tile.
+    n1 = jnp.sum(x1 * x1, axis=1, keepdims=True)
+    n2 = jnp.sum(x2 * x2, axis=1, keepdims=True)
+    d = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-gamma_ref[0] * d)
+
+
+def _linear_tile_kernel(x1_ref, x2_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x1_ref[...], x2_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def gram_rbf(x1, x2, gamma, tm: int = TM, tn: int = TN):
+    """RBF Gram block K[i,j] = exp(-gamma ||x1_i - x2_j||^2).
+
+    x1: [M, F], x2: [N, F] with M % tm == 0 and N % tn == 0 (callers pad).
+    gamma: shape-(1,) f32 array (kept as an array so the AOT artifact takes
+    it as a runtime input rather than baking it in).
+    """
+    m, f = x1.shape
+    n, _ = x2.shape
+    tm, tn = _pick(m, tm), _pick(n, tn)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        _rbf_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((tm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(gamma, x1, x2)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def gram_linear(x1, x2, tm: int = TM, tn: int = TN):
+    """Linear Gram block K = X1 @ X2^T, tiled like gram_rbf."""
+    m, f = x1.shape
+    n, _ = x2.shape
+    tm, tn = _pick(m, tm), _pick(n, tn)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        _linear_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x1, x2)

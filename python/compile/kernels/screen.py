@@ -1,0 +1,89 @@
+"""L1 Pallas kernels for the screening rule's two hot ops.
+
+1. `qmatvec` — row-tiled Q @ v.  This is Z_i . c for every i (the dominant
+   cost of one screening step, O(l^2)).  Each grid step streams one row
+   block of Q through VMEM exactly once.
+2. `screen_codes` — the fused bound-evaluation epilogue of Corollary 3/4:
+   given q = Qv, per-sample norms ||Z_i||, sqrt(r) and the rho bounds, emit
+   the trinary keep/zero/upper code per sample in a single elementwise pass
+   (no temporaries, one read of each input).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TB = 128  # row-block tile
+
+
+def pick_tile(l: int, tb: int) -> int:
+    """Largest tile <= tb that divides l (shapes are static at trace time)."""
+    t = min(tb, l)
+    while l % t != 0:
+        t -= 1
+    return t
+
+
+def _matvec_kernel(q_ref, v_ref, o_ref):
+    # q_ref: [TB, L] row block; v_ref: [L]; one fused MXU/VPU contraction.
+    o_ref[...] = jnp.dot(q_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def qmatvec(q, v, tb: int = TB):
+    """Q @ v with Q [L, L], v [L]; tb shrinks to a divisor of L."""
+    l = q.shape[0]
+    tb = pick_tile(l, tb)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(l // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, l), lambda i: (i, 0)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        interpret=True,
+    )(q, v)
+
+
+def _screen_kernel(s_ref, qv_ref, n_ref, m_ref, o_ref):
+    # s_ref: [3] scalars = (sqrt_r, rho_up, rho_lo).
+    sqrt_r = s_ref[0]
+    rho_up = s_ref[1]
+    rho_lo = s_ref[2]
+    qv = qv_ref[...]
+    n = n_ref[...]
+    lower = qv - sqrt_r * n
+    upper = qv + sqrt_r * n
+    code = jnp.where(lower > rho_up, 1.0, jnp.where(upper < rho_lo, 2.0, 0.0))
+    o_ref[...] = jnp.where(m_ref[...] > 0.5, code, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def screen_codes(qv, norms, mask, sqrt_r, rho_up, rho_lo, tb: int = TB):
+    """Fused Corollary-3/4 bound check.
+
+    qv, norms, mask: [L] (L % tb == 0); sqrt_r/rho_up/rho_lo: shape-(1,)
+    arrays.  Returns f32 codes [L]: 0 keep, 1 -> alpha=0, 2 -> alpha=ub.
+    """
+    l = qv.shape[0]
+    tb = pick_tile(l, tb)
+    s = jnp.concatenate([sqrt_r, rho_up, rho_lo]).astype(jnp.float32)
+    return pl.pallas_call(
+        _screen_kernel,
+        grid=(l // tb,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        interpret=True,
+    )(s, qv, norms, mask)

@@ -1,0 +1,115 @@
+"""L2: the JAX compute graphs the Rust runtime executes.
+
+Each public function here is a jit-able graph composed from the L1 Pallas
+kernels (plus the few ops that belong at graph level: sort/argsort for the
+rho-bound order statistic, reductions for r).  `aot.py` lowers each one
+once, at fixed padded shapes, to HLO text in artifacts/.
+
+Conventions shared with the Rust runtime (rust/src/runtime/):
+  * all tensors f32; scalars travel as shape-(1,) f32 arrays;
+  * sample axes are padded to the artifact size; a {0,1} mask marks real
+    rows; padded rows carry zero Q rows/cols and ub=0 so they are inert;
+  * index arithmetic for Theorem 2 uses `lreal` (true l) not the padded L.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dcdm as dcdm_k
+from compile.kernels import decision as decision_k
+from compile.kernels import gram as gram_k
+from compile.kernels import screen as screen_k
+
+# Re-exported kernel graphs (already jitted in their modules).
+gram_rbf = gram_k.gram_rbf
+gram_linear = gram_k.gram_linear
+qmatvec = screen_k.qmatvec
+dcdm_epochs = dcdm_k.dcdm_epochs
+decision_rbf = decision_k.decision_rbf
+decision_linear = decision_k.decision_linear
+
+
+@jax.jit
+def screen_step(q, alpha0, delta, mask, nu1, lreal):
+    """One full SRBO screening step (Corollaries 2-4) against Q.
+
+    Inputs
+      q      [L, L]  Gram-with-labels matrix Q = diag(y) K diag(y), padded
+                     with zero rows/cols beyond lreal
+      alpha0 [L]     dual solution at the previous path point nu_0
+      delta  [L]     bi-level perturbation (any point of Delta)
+      mask   [L]     1.0 for real samples, 0.0 for padding
+      nu1    (1,)    next path parameter nu_1 > nu_0
+      lreal  (1,)    true sample count l as f32
+
+    Returns (codes[L], rho_up(1,), rho_lo(1,), r(1,)) where codes follow
+    ref.screen_codes: 0 keep / 1 -> alpha=0 / 2 -> alpha=1/l.
+    """
+    v = alpha0 + 0.5 * delta  # c = Z^T v  (Theorem 1)
+    qv = qmatvec(q, v)  # Z_i . c for all i  (hot op, Pallas)
+    q0 = qmatvec(q, alpha0)
+    ctc = jnp.dot(v, qv)  # c^T c     = v^T Q v
+    w0w0 = jnp.dot(alpha0, q0)  # w0^T w0   = a0^T Q a0
+    r = jnp.maximum(ctc - w0w0, 0.0)  # radius^2 (paper writes |r|)
+    sqrt_r = jnp.sqrt(r)
+
+    norms = jnp.sqrt(jnp.maximum(jnp.diagonal(q), 0.0))  # ||Z_i||
+
+    # Theorem 2 order statistic, made safe.  The paper's Eq. (21) reads
+    # "bound evaluated at the sorted index", but the provably safe version
+    # uses order-statistic dominance: if d_i <= u_i for all i then the
+    # k-th largest d is <= the k-th largest u (and symmetrically for the
+    # lower bounds).  So rho_up = k-th largest of u = qv + sqrt(r)*n with
+    # k = floor(i*), and rho_lo = k'-th largest of lo = qv - sqrt(r)*n
+    # with k' = ceil(i*).  See DESIGN.md §6.
+    u_bound = jnp.where(mask > 0.5, qv + sqrt_r * norms, -jnp.inf)
+    l_bound = jnp.where(mask > 0.5, qv - sqrt_r * norms, -jnp.inf)
+    u_sorted = -jnp.sort(-u_bound)  # descending
+    l_sorted = -jnp.sort(-l_bound)
+    l = lreal[0]
+    istar = l - nu1[0] * l  # 1-based rank into d(1) > ... > d(l)
+    lmax = jnp.maximum(l - 1.0, 0.0)
+    fidx = jnp.clip(jnp.floor(istar) - 1.0, 0.0, lmax).astype(jnp.int32)
+    cidx = jnp.clip(jnp.ceil(istar) - 1.0, 0.0, lmax).astype(jnp.int32)
+    rho_up = u_sorted[fidx]  # >= d(floor(i*)) >= rho*
+    rho_lo = l_sorted[cidx]  # <= d(ceil(i*))  <= rho*
+
+    # Numerical guard (mirrors rust screening::srbo, scaled up for the
+    # f32 boundary): alpha0 is eps-accurate and f32 matvecs carry
+    # ~sqrt(L)*1e-7 relative noise, so demand a margin beyond the bound
+    # before screening — degenerate problems put an atom of samples
+    # exactly on the hyperplane where strict comparisons flip on noise.
+    # The diag(Q) term covers the absolute gradient-noise floor.
+    guard = 1e-4 * (
+        jnp.max(jnp.abs(qv)) + jnp.max(jnp.abs(jnp.diagonal(q))) + 1.0
+    )
+
+    codes = screen_k.screen_codes(
+        qv,
+        norms,
+        mask,
+        sqrt_r.reshape(1),
+        (rho_up + guard).reshape(1),
+        (rho_lo - guard).reshape(1),
+    )
+    return codes, rho_up.reshape(1), rho_lo.reshape(1), r.reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=("epochs",))
+def dcdm_solve(q, alpha, ub, nu, epochs: int = 5):
+    """`epochs` DCDM sweeps over the padded dual (Algorithm 2).
+
+    The Rust caller loops this artifact, checking the projected-gradient
+    KKT residual natively between calls.
+    """
+    return dcdm_epochs(q, alpha, ub, nu, epochs=epochs)
+
+
+@jax.jit
+def objective(q, alpha):
+    """Dual objective F(alpha) = 1/2 alpha^T Q alpha (safety audits)."""
+    return (0.5 * jnp.dot(alpha, qmatvec(q, alpha))).reshape(1)

@@ -1,0 +1,112 @@
+"""Shared test utilities: tiny exact solvers + problem generators.
+
+The projected-gradient solver here is deliberately naive-but-correct: it
+is the in-test ground truth used to check that screening codes never
+contradict the true optimum (the paper's safety property).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def project_box_halfspace(a, ub, nu):
+    """Euclidean projection onto {0 <= a <= ub, sum(a) >= nu}.
+
+    If the box clip alone satisfies the halfspace it is the projection;
+    otherwise the halfspace is active and KKT gives p = clip(a + t, 0, ub)
+    with the shift t applied to the ORIGINAL a (not the clipped one) chosen
+    so the sum hits nu — found by bisection (water-filling).
+    """
+    a = np.asarray(a, dtype=np.float64)
+    ub = np.asarray(ub, dtype=np.float64)
+    clipped = np.clip(a, 0.0, ub)
+    if clipped.sum() >= nu - 1e-15:
+        return clipped
+    lo, hi = 0.0, float(nu) - float(np.min(a)) + float(np.max(ub)) + 1.0
+    for _ in range(200):
+        t = 0.5 * (lo + hi)
+        s = np.clip(a + t, 0.0, ub).sum()
+        if s < nu:
+            lo = t
+        else:
+            hi = t
+    return np.clip(a + hi, 0.0, ub)
+
+
+def solve_nu_dual(q, nu, ub=None, iters=20000, tol=1e-12):
+    """min 1/2 a^T Q a over {0 <= a <= ub, sum >= nu} by projected gradient."""
+    l = q.shape[0]
+    if ub is None:
+        ub = np.full(l, 1.0 / l)
+    lam = np.linalg.eigvalsh(q).max()
+    step = 1.0 / max(lam, 1e-12)
+    a = project_box_halfspace(np.full(l, nu / l), ub, nu)
+    prev = np.inf
+    for _ in range(iters):
+        g = q @ a
+        a = project_box_halfspace(a - step * g, ub, nu)
+        f = 0.5 * a @ q @ a
+        if abs(prev - f) < tol * max(1.0, abs(f)):
+            break
+        prev = f
+    return a
+
+
+def feasible_delta(alpha0, nu1, ub=None):
+    """A cheap member of Delta = {d | sum(a0+d) >= nu1, 0 <= a0+d <= ub}.
+
+    Distributes the mass shortfall (nu1 - sum(a0)) proportionally to each
+    coordinate's headroom ub_i - a0_i.  This is the warm-start delta the
+    Rust bi-level optimiser refines (Eq. 27)."""
+    a0 = np.asarray(alpha0, dtype=np.float64)
+    l = a0.shape[0]
+    if ub is None:
+        ub = np.full(l, 1.0 / l)
+    need = max(0.0, float(nu1) - float(a0.sum()))
+    head = np.maximum(ub - a0, 0.0)
+    total = head.sum()
+    if need <= 0.0 or total <= 0.0:
+        return np.zeros(l)
+    return head * min(1.0, need / total)
+
+
+def optimal_delta(q, alpha0, nu1, ub=None, iters=4000):
+    """The bi-level delta* of QPP (18): argmin_{delta in Delta} r(delta).
+
+    Substituting beta = alpha0 + delta turns it into min over beta in
+    A_{nu1} of 1/4 (b-a0)^T Q (b-a0) + a0^T Q (b-a0), with gradient
+    (1/2) Q (b + a0) — solved by projected gradient."""
+    a0 = np.asarray(alpha0, dtype=np.float64)
+    l = a0.shape[0]
+    if ub is None:
+        ub = np.full(l, 1.0 / l)
+    lam = np.linalg.eigvalsh(q).max()
+    step = 2.0 / max(lam, 1e-12)
+    b = project_box_halfspace(a0 + feasible_delta(a0, nu1, ub), ub, nu1)
+    for _ in range(iters):
+        g = 0.5 * (q @ (b + a0))
+        b = project_box_halfspace(b - step * g, ub, nu1)
+    return b - a0
+
+
+def make_problem(l=64, p=4, gamma=0.5, seed=0, separation=2.0, kernel="rbf"):
+    """Two-Gaussian binary task with its Q matrix (float64).
+
+    kernel="linear" folds the bias (Phi(x) <- [x, 1], paper Eq. 2)."""
+    rng = np.random.default_rng(seed)
+    half = l // 2
+    xp = rng.normal(loc=separation / 2, size=(half, p))
+    xn = rng.normal(loc=-separation / 2, size=(l - half, p))
+    x = np.vstack([xp, xn])
+    y = np.concatenate([np.ones(half), -np.ones(l - half)])
+    if kernel == "linear":
+        xb = np.hstack([x, np.ones((l, 1))])
+        k = xb @ xb.T
+    else:
+        d = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        k = np.exp(-gamma * d)
+    q = np.outer(y, y) * k
+    # Symmetrise to kill accumulation asymmetry.
+    q = 0.5 * (q + q.T)
+    return x.astype(np.float32), y.astype(np.float32), q

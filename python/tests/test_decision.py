@@ -1,0 +1,71 @@
+"""Decision-scoring kernels vs oracle."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decision, ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@given(
+    tt_blocks=st.integers(1, 3),
+    l=st.sampled_from([16, 64, 96]),
+    f=st.integers(1, 32),
+    gamma=st.floats(0.01, 4.0),
+    seed=st.integers(0, 2**16),
+)
+def test_decision_rbf_matches_ref(tt_blocks, l, f, gamma, seed):
+    tt = 16
+    xt = _rand((tt_blocks * tt, f), seed)
+    xtr = _rand((l, f), seed + 1)
+    ya = _rand((l,), seed + 2) / l
+    out = decision.decision_rbf(
+        xt, xtr, ya, jnp.array([gamma], jnp.float32), tt=tt
+    )
+    expect = ref.decision_rbf(xt, xtr, ya, gamma)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=2e-4, atol=2e-5)
+
+
+@given(
+    tt_blocks=st.integers(1, 3),
+    l=st.sampled_from([16, 64]),
+    f=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_decision_linear_matches_ref(tt_blocks, l, f, seed):
+    tt = 16
+    xt = _rand((tt_blocks * tt, f), seed)
+    xtr = _rand((l, f), seed + 1)
+    ya = _rand((l,), seed + 2) / l
+    out = decision.decision_linear(xt, xtr, ya, tt=tt)
+    expect = ref.decision_linear(xt, xtr, ya)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=2e-4, atol=2e-5)
+
+
+def test_decision_sign_flip_antisymmetry():
+    xt = _rand((32, 8), 1)
+    xtr = _rand((64, 8), 2)
+    ya = _rand((64,), 3)
+    g = jnp.array([0.5], jnp.float32)
+    s1 = np.array(decision.decision_rbf(xt, xtr, ya, g, tt=16))
+    s2 = np.array(decision.decision_rbf(xt, xtr, -ya, g, tt=16))
+    np.testing.assert_allclose(s1, -s2, rtol=1e-5, atol=1e-6)
+
+
+def test_decision_zero_alpha_gives_zero_scores():
+    xt = _rand((16, 4), 4)
+    xtr = _rand((32, 4), 5)
+    ya = np.zeros(32, np.float32)
+    out = np.array(
+        decision.decision_rbf(xt, xtr, ya, jnp.array([1.0], jnp.float32), tt=16)
+    )
+    np.testing.assert_array_equal(out, np.zeros(16, np.float32))

@@ -1,0 +1,82 @@
+"""Pallas Gram kernels vs the pure-jnp oracle (hypothesis shape sweeps)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    f=st.integers(1, 48),
+    gamma=st.floats(1e-3, 8.0),
+    seed=st.integers(0, 2**16),
+)
+def test_gram_rbf_matches_ref(mt, nt, f, gamma, seed):
+    tm = tn = 16
+    x1 = _rand((mt * tm, f), seed)
+    x2 = _rand((nt * tn, f), seed + 1)
+    g = jnp.array([gamma], jnp.float32)
+    out = gram.gram_rbf(x1, x2, g, tm=tm, tn=tn)
+    expect = ref.gram_rbf(x1, x2, gamma)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=2e-5, atol=2e-6)
+
+
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    f=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_gram_linear_matches_ref(mt, nt, f, seed):
+    tm = tn = 16
+    x1 = _rand((mt * tm, f), seed)
+    x2 = _rand((nt * tn, f), seed + 1)
+    out = gram.gram_linear(x1, x2, tm=tm, tn=tn)
+    expect = ref.gram_linear(x1, x2)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_gram_rbf_default_tiles():
+    x1 = _rand((256, 64), 7)
+    x2 = _rand((128, 64), 8)
+    g = jnp.array([0.25], jnp.float32)
+    out = gram.gram_rbf(x1, x2, g)
+    np.testing.assert_allclose(
+        np.array(out), np.array(ref.gram_rbf(x1, x2, 0.25)), rtol=2e-5, atol=2e-6
+    )
+
+
+def test_gram_rbf_diag_is_one():
+    x = _rand((128, 16), 9)
+    g = jnp.array([1.3], jnp.float32)
+    out = np.array(gram.gram_rbf(x, x, g))
+    np.testing.assert_allclose(np.diagonal(out), 1.0, atol=1e-5)
+
+
+def test_gram_rbf_symmetric_psd_ish():
+    x = _rand((64, 8), 10)
+    g = jnp.array([0.7], jnp.float32)
+    k = np.array(gram.gram_rbf(x, x, g, tm=16, tn=16), dtype=np.float64)
+    np.testing.assert_allclose(k, k.T, atol=1e-6)
+    w = np.linalg.eigvalsh(0.5 * (k + k.T))
+    assert w.min() > -1e-4
+
+
+def test_gram_rbf_range():
+    x1 = _rand((32, 4), 11)
+    x2 = _rand((32, 4), 12)
+    k = np.array(gram.gram_rbf(x1, x2, jnp.array([2.0], jnp.float32), tm=16, tn=16))
+    assert (k > 0).all() and (k <= 1.0 + 1e-6).all()

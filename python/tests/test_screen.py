@@ -1,0 +1,150 @@
+"""qmatvec + screen_codes kernels and the composed screen_step graph."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, screen
+from tests.helpers import (
+    feasible_delta,
+    make_problem,
+    optimal_delta,
+    solve_nu_dual,
+)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(bt=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_qmatvec_matches_ref(bt, seed):
+    tb = 16
+    l = bt * tb
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(l, l)).astype(np.float32)
+    v = rng.normal(size=(l,)).astype(np.float32)
+    out = screen.qmatvec(jnp.asarray(q), jnp.asarray(v), tb=tb)
+    np.testing.assert_allclose(np.array(out), q @ v, rtol=2e-4, atol=2e-5)
+
+
+@given(
+    bt=st.integers(1, 4),
+    sqrt_r=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**16),
+)
+def test_screen_codes_matches_ref(bt, sqrt_r, seed):
+    tb = 16
+    l = bt * tb
+    rng = np.random.default_rng(seed)
+    qv = rng.normal(size=(l,)).astype(np.float32)
+    norms = np.abs(rng.normal(size=(l,))).astype(np.float32)
+    mask = (rng.uniform(size=l) > 0.2).astype(np.float32)
+    up, lo = 0.4, -0.4
+    out = screen.screen_codes(
+        jnp.asarray(qv),
+        jnp.asarray(norms),
+        jnp.asarray(mask),
+        jnp.array([sqrt_r], jnp.float32),
+        jnp.array([up], jnp.float32),
+        jnp.array([lo], jnp.float32),
+        tb=tb,
+    )
+    expect = ref.screen_codes(qv, norms, mask, sqrt_r, up, lo)
+    np.testing.assert_array_equal(np.array(out), np.array(expect))
+    assert set(np.unique(np.array(out))) <= {0.0, 1.0, 2.0}
+
+
+def test_screen_codes_padding_is_inert():
+    l = 32
+    qv = np.zeros(l, np.float32)
+    norms = np.ones(l, np.float32)
+    mask = np.zeros(l, np.float32)
+    out = screen.screen_codes(
+        jnp.asarray(qv),
+        jnp.asarray(norms),
+        jnp.asarray(mask),
+        jnp.array([0.0], jnp.float32),
+        jnp.array([10.0], jnp.float32),
+        jnp.array([-10.0], jnp.float32),
+        tb=16,
+    )
+    np.testing.assert_array_equal(np.array(out), np.ones(l, np.float32))
+
+
+def _screen_safety_case(
+    l, nu0, nu1, seed, sep=2.0, use_optimal_delta=False, kernel="rbf"
+):
+    """Codes from screen_step must never contradict the true alpha(nu1)."""
+    _, _, q = make_problem(l=l, seed=seed, separation=sep, kernel=kernel)
+    a0 = solve_nu_dual(q, nu0)
+    a1 = solve_nu_dual(q, nu1)
+    qf = q.astype(np.float32)
+    mask = np.ones(l, np.float32)
+    # delta must be a member of Delta (Theorem 1); delta = 0 is NOT
+    # feasible because sum(alpha0) = nu0 < nu1.
+    if use_optimal_delta:
+        delta = optimal_delta(q, a0, nu1).astype(np.float32)
+    else:
+        delta = feasible_delta(a0, nu1).astype(np.float32)
+    codes, up, lo, r = model.screen_step(
+        jnp.asarray(qf),
+        jnp.asarray(a0.astype(np.float32)),
+        jnp.asarray(delta),
+        jnp.asarray(mask),
+        jnp.array([nu1], jnp.float32),
+        jnp.array([float(l)], jnp.float32),
+    )
+    codes = np.array(codes)
+    tol = 2e-4
+    for i in range(l):
+        if codes[i] == 1.0:
+            assert a1[i] <= tol, f"code=1 but alpha1[{i}]={a1[i]}"
+        elif codes[i] == 2.0:
+            assert a1[i] >= 1.0 / l - tol, f"code=2 but alpha1[{i}]={a1[i]}"
+    return codes
+
+
+def test_screen_step_safety_small():
+    codes = _screen_safety_case(l=48, nu0=0.3, nu1=0.34, seed=3)
+    assert set(np.unique(codes)) <= {0.0, 1.0, 2.0}
+
+
+def test_screen_step_safety_larger_gap():
+    _screen_safety_case(l=64, nu0=0.25, nu1=0.4, seed=5)
+
+
+def test_screen_step_screens_something_with_optimal_delta():
+    """With the bi-level delta* (QPP 18) the sphere tightens enough to
+    actually screen on easy data — the cheap feasible delta does not,
+    which is exactly the paper's motivation for the bi-level structure
+    (Fig. 2 and §3.5)."""
+    codes = _screen_safety_case(
+        l=64,
+        nu0=0.3,
+        nu1=0.31,
+        seed=7,
+        sep=2.4,
+        use_optimal_delta=True,
+        kernel="linear",
+    )
+    # Well-separated classes => most samples inactive => some get screened.
+    assert (codes != 0.0).sum() > 0
+
+
+def test_screen_step_r_nonnegative():
+    l = 32
+    _, _, q = make_problem(l=l, seed=11)
+    a0 = solve_nu_dual(q, 0.3)
+    delta = feasible_delta(a0, 0.35).astype(np.float32)
+    _, _, _, r = model.screen_step(
+        jnp.asarray(q.astype(np.float32)),
+        jnp.asarray(a0.astype(np.float32)),
+        jnp.asarray(delta),
+        jnp.asarray(np.ones(l, np.float32)),
+        jnp.array([0.35], jnp.float32),
+        jnp.array([float(l)], jnp.float32),
+    )
+    assert float(r[0]) >= 0.0

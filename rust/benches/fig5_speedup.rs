@@ -1,0 +1,58 @@
+//! Fig. 5: speedup ratio of SRBO-ν-SVM vs dataset size, linear and RBF
+//! series, on a size sweep of one mimic family.
+
+use srbo::bench_harness::scale;
+use srbo::coordinator::path::SolverChoice;
+use srbo::data::benchmark;
+use srbo::kernel::KernelKind;
+use srbo::report::ascii_series;
+use srbo::report::experiments::{default_nus, supervised_row};
+use srbo::util::tsv::{f, Table};
+
+fn main() {
+    let nus = default_nus();
+    let spec = benchmark::spec("Electrical").unwrap();
+    let sizes: Vec<f64> = [0.02, 0.04, 0.08, 0.12, 0.2]
+        .iter()
+        .map(|s| s * scale().max(0.5))
+        .collect();
+    let mut table = Table::new(
+        "Fig.5 — speedup ratio vs sample size",
+        &["l_train", "speedup_linear", "speedup_rbf", "ratio_linear", "ratio_rbf"],
+    );
+    let mut xs = Vec::new();
+    let mut lin_s = Vec::new();
+    let mut rbf_s = Vec::new();
+    for &sz in &sizes {
+        let d = benchmark::generate(spec, sz, 42);
+        let lin = supervised_row(&d, KernelKind::Linear, &nus, SolverChoice::Dcdm, 7);
+        let rbf = supervised_row(
+            &d,
+            KernelKind::rbf_from_sigma(2.0),
+            &nus,
+            SolverChoice::Dcdm,
+            7,
+        );
+        xs.push(lin.l_train as f64);
+        lin_s.push(lin.speedup);
+        rbf_s.push(rbf.speedup);
+        table.row(vec![
+            format!("{}", lin.l_train),
+            f(lin.speedup, 3),
+            f(rbf.speedup, 3),
+            f(lin.ratio, 2),
+            f(rbf.ratio, 2),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "{}",
+        ascii_series(
+            "speedup vs l (paper Fig. 5: grows with sample size)",
+            &xs,
+            &[("linear", lin_s), ("rbf", rbf_s)],
+        )
+    );
+    let p = table.save_tsv("fig5_speedup").expect("save");
+    println!("saved {}", p.display());
+}

@@ -1,0 +1,59 @@
+//! Fig. 6: remaining-instance percentage after screening at each ν along
+//! the path, four datasets, linear and RBF rows.
+
+use srbo::bench_harness::scale;
+use srbo::data::benchmark;
+use srbo::kernel::KernelKind;
+use srbo::report::ascii_series;
+use srbo::report::experiments::remaining_curve;
+use srbo::util::tsv::Table;
+
+fn main() {
+    let s = (0.1 * scale().max(0.5)).min(0.2);
+    let nus: Vec<f64> = {
+        let mut v = Vec::new();
+        let mut x = 0.1;
+        while x < 0.9 {
+            v.push(x);
+            x += 0.005;
+        }
+        v
+    };
+    let names = ["Banknote", "CMC", "Wifi-localization", "CTG"];
+    let mut table = Table::new(
+        &format!("Fig.6 — remaining instances (%) along the nu path (scale={s})"),
+        &["dataset", "kernel", "nu_k", "remaining(%)"],
+    );
+    for kernel in [KernelKind::Linear, KernelKind::rbf_from_sigma(2.0)] {
+        let mut all_series = Vec::new();
+        for name in names {
+            let spec = benchmark::spec(name).unwrap();
+            let d = benchmark::generate(spec, s, 42);
+            let curve = remaining_curve(&d, kernel, &nus);
+            for (i, &v) in curve.iter().enumerate() {
+                if i % 20 == 0 {
+                    table.row(vec![
+                        name.to_string(),
+                        kernel.name().to_string(),
+                        format!("{:.3}", nus[i]),
+                        format!("{v:.2}"),
+                    ]);
+                }
+            }
+            all_series.push((name, curve));
+        }
+        let series: Vec<(&str, Vec<f64>)> =
+            all_series.iter().map(|(n, c)| (*n, c.clone())).collect();
+        println!(
+            "{}",
+            ascii_series(
+                &format!("remaining instances vs nu ({})", kernel.name()),
+                &nus,
+                &series,
+            )
+        );
+    }
+    println!("{}", table.render());
+    let p = table.save_tsv("fig6_path").expect("save");
+    println!("saved {}", p.display());
+}

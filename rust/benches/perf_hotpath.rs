@@ -1,0 +1,94 @@
+//! §Perf micro-benchmarks of the hot paths, native and PJRT:
+//!   * Gram build (L3 native vs L1 artifact block)
+//!   * Q·v matvec (screening's dominant op)
+//!   * DCDM sweep + pairwise step costs
+//!   * full screening step
+//!   * decision scoring (native vs artifact)
+//! Prints medians (bench_harness) — the before/after log lives in
+//! EXPERIMENTS.md §Perf.
+
+use srbo::bench_harness::bench;
+use srbo::data::synthetic;
+use srbo::kernel::{full_gram, full_q, KernelKind};
+use srbo::qp::dcdm::{self, DcdmOpts};
+use srbo::qp::{ConstraintKind, QpProblem};
+use srbo::runtime::Runtime;
+use srbo::screening::{delta, srbo as rule};
+
+fn main() {
+    let d = synthetic::gaussians(250, 2.0, 42); // l = 500
+    let l = d.len();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+
+    let s = bench("gram_rbf_native_500x500", 1, 5, || {
+        std::hint::black_box(full_gram(&d.x, kernel));
+    });
+    println!("{}", s.human());
+
+    let q = full_q(&d.x, &d.y, kernel);
+    let v = vec![1.0 / l as f64; l];
+    let mut out = vec![0.0; l];
+    let s = bench("qmatvec_native_500", 3, 20, || {
+        q.matvec(&v, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!("{}", s.human());
+
+    let ub = vec![1.0 / l as f64; l];
+    let p = QpProblem {
+        q: &q,
+        lin: None,
+        ub: &ub,
+        constraint: ConstraintKind::SumGe(0.3),
+    };
+    let s = bench("dcdm_full_solve_500", 1, 5, || {
+        std::hint::black_box(dcdm::solve(&p, None, &DcdmOpts::default()));
+    });
+    println!("{}", s.human());
+
+    let (a0, _) = dcdm::solve(&p, None, &DcdmOpts::default());
+    let s = bench("dcdm_warm_solve_500", 1, 10, || {
+        std::hint::black_box(dcdm::solve(&p, Some(&a0), &DcdmOpts::default()));
+    });
+    println!("{}", s.human());
+
+    let s = bench("delta_refine_8iters_500", 1, 10, || {
+        std::hint::black_box(delta::optimal(&q, &a0, &ub, 0.305, 8));
+    });
+    println!("{}", s.human());
+
+    let del = delta::optimal(&q, &a0, &ub, 0.305, 30);
+    let s = bench("screen_step_native_500", 1, 20, || {
+        std::hint::black_box(rule::screen(&q, &a0, &del, 0.305));
+    });
+    println!("{}", s.human());
+
+    // PJRT path (if artifacts are built)
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let s = bench("qmatvec_artifact_500(padded512)", 1, 10, || {
+                std::hint::black_box(rt.qmatvec(&q, &v).unwrap());
+            });
+            println!("{}", s.human());
+            let s = bench("screen_step_artifact_500", 1, 10, || {
+                std::hint::black_box(rt.screen_step(&q, &a0, &del, 0.305).unwrap());
+            });
+            println!("{}", s.human());
+            let small = synthetic::gaussians(100, 2.0, 7);
+            let g = 0.5;
+            let ya = vec![1.0 / 200.0; 200];
+            let s = bench("decision_rbf_artifact_200x200", 1, 10, || {
+                std::hint::black_box(
+                    rt.decision_rbf(&small.x, &small.x, &ya, g).unwrap(),
+                );
+            });
+            println!("{}", s.human());
+            let m = srbo::svm::nu::NuSvm::train(&small.x, &small.y, 0.3, kernel).unwrap();
+            let s = bench("decision_rbf_native_200x200", 1, 10, || {
+                std::hint::black_box(m.decision(&small.x));
+            });
+            println!("{}", s.human());
+        }
+        Err(e) => println!("(runtime skipped: {e})"),
+    }
+}

@@ -1,0 +1,88 @@
+//! Tables X/XI: MNIST-like one-vs-one (digit 1 vs each other digit),
+//! linear and RBF, GQP ('quadprog') and DCDM, with and without SRBO.
+
+use srbo::bench_harness::scale;
+use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
+use srbo::data::mnist_like;
+use srbo::kernel::{full_q, KernelKind};
+use srbo::stats::accuracy;
+use srbo::svm::nu::NuSvm;
+use srbo::util::tsv::{f, Table};
+use srbo::util::Timer;
+
+fn run_arm(
+    train: &srbo::data::Dataset,
+    test: &srbo::data::Dataset,
+    kernel: KernelKind,
+    nus: &[f64],
+    solver: SolverChoice,
+    screening: bool,
+) -> (f64, f64, f64) {
+    let q = full_q(&train.x, &train.y, kernel);
+    let mut cfg = PathConfig::new(nus.to_vec(), kernel);
+    cfg.solver = solver;
+    cfg.screening = screening;
+    let t = Timer::start();
+    let path = NuPath::run_with_q(&q, &cfg, false, Default::default()).expect("path");
+    let secs = t.secs();
+    let mut best = f64::NEG_INFINITY;
+    for s in &path.steps {
+        let m = NuSvm::from_alpha(
+            &train.x, &train.y, s.alpha.clone(), s.nu, kernel, s.solve_stats.clone(),
+        );
+        best = best.max(accuracy(&m.predict(&test.x), &test.y));
+    }
+    (secs, best, path.avg_screening_ratio())
+}
+
+fn main() {
+    // paper scale is 60k; default here ~1/100 (600ish per task) — the
+    // kernel QP is O(l^2) memory on a 1-core box.
+    let s = (0.01 * scale().max(1.0)).min(0.05);
+    let nus: Vec<f64> = (0..15).map(|i| 0.2 + 0.01 * i as f64).collect();
+    for (kernel, tag) in [
+        (KernelKind::Linear, "Table X (linear)"),
+        (KernelKind::rbf_from_sigma(4.0), "Table XI (RBF)"),
+    ] {
+        let mut table = Table::new(
+            &format!("{tag} — MNIST-like, digit 1 vs k (scale={s})"),
+            &[
+                "neg digit", "l",
+                "GQP acc", "GQP T(s)", "GQP+SRBO T(s)",
+                "DCDM acc", "DCDM T(s)", "DCDM+SRBO T(s)",
+                "Screen(%)", "Speedup(DCDM)",
+            ],
+        );
+        for neg in [0usize, 2, 3, 7] {
+            let (train, test) = mnist_like::one_vs_one(1, neg, s, 42);
+            let (tg, ag, _) = run_arm(&train, &test, kernel, &nus, SolverChoice::Gqp, false);
+            let (tgs, _, _) = run_arm(&train, &test, kernel, &nus, SolverChoice::Gqp, true);
+            let (td, ad, _) = run_arm(&train, &test, kernel, &nus, SolverChoice::Dcdm, false);
+            let (tds, ads, ratio) =
+                run_arm(&train, &test, kernel, &nus, SolverChoice::Dcdm, true);
+            if (ad - ads).abs() > 1e-9 {
+                println!("WARNING digit {neg}: SRBO accuracy differs by {:+.3}pp", ads - ad);
+            }
+            table.row(vec![
+                format!("{neg}"),
+                format!("{}", train.len()),
+                f(ag, 2),
+                f(tg, 3),
+                f(tgs, 3),
+                f(ad, 2),
+                f(td, 3),
+                f(tds, 3),
+                f(ratio, 2),
+                f(td / tds, 3),
+            ]);
+        }
+        println!("{}", table.render());
+        let p = table
+            .save_tsv(&format!(
+                "table10_mnist_{}",
+                if matches!(kernel, KernelKind::Linear) { "linear" } else { "rbf" }
+            ))
+            .expect("save");
+        println!("saved {}", p.display());
+    }
+}

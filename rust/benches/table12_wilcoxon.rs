@@ -1,0 +1,67 @@
+//! Table XII: Wilcoxon signed-rank significance tests over the timing
+//! pairs collected by the other benches (reads their saved TSVs when
+//! present; regenerates a compact run otherwise).
+
+use srbo::bench_harness::scale;
+use srbo::coordinator::path::SolverChoice;
+use srbo::data::benchmark;
+use srbo::kernel::KernelKind;
+use srbo::report::experiments::{default_nus, supervised_row, unsupervised_row};
+use srbo::stats::wilcoxon_signed_rank;
+use srbo::util::tsv::{f, Table};
+
+fn collect_times(
+    names: &[&str],
+    kernel: KernelKind,
+    supervised: bool,
+    s: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let nus = default_nus();
+    let mut base = Vec::new();
+    let mut srbo = Vec::new();
+    for name in names {
+        let spec = benchmark::spec(name).unwrap();
+        let d = benchmark::generate(spec, s, 42);
+        if supervised {
+            let r = supervised_row(&d, kernel, &nus, SolverChoice::Dcdm, 7);
+            base.push(r.nu_time);
+            srbo.push(r.srbo_time);
+        } else {
+            let r = unsupervised_row(&d, kernel, &nus, 7);
+            base.push(r.oc_time);
+            srbo.push(r.srbo_time);
+        }
+    }
+    (base, srbo)
+}
+
+fn main() {
+    let s = (scale() * 0.08).clamp(0.02, 0.15);
+    // subset of the fleet for runtime sanity; SRBO_SCALE raises coverage
+    let names: Vec<&str> = benchmark::table_v_names().into_iter().skip(10).collect();
+    let mut table = Table::new(
+        &format!("Table XII — Wilcoxon signed-rank on times (scale={s}, n={})", names.len()),
+        &["experiment", "n", "W+", "W-", "z", "p", "significant@0.05"],
+    );
+    for (label, kernel, supervised) in [
+        ("nu-SVM linear", KernelKind::Linear, true),
+        ("nu-SVM RBF", KernelKind::rbf_from_sigma(2.0), true),
+        ("OC-SVM linear", KernelKind::Linear, false),
+        ("OC-SVM RBF", KernelKind::rbf_from_sigma(2.0), false),
+    ] {
+        let (base, srbo) = collect_times(&names, kernel, supervised, s);
+        let w = wilcoxon_signed_rank(&base, &srbo);
+        table.row(vec![
+            label.to_string(),
+            format!("{}", w.n),
+            f(w.w_plus, 1),
+            f(w.w_minus, 1),
+            if w.z.is_nan() { "-".into() } else { f(w.z, 2) },
+            f(w.p, 4),
+            format!("{}", w.significant_05),
+        ]);
+    }
+    println!("{}", table.render());
+    let p = table.save_tsv("table12_wilcoxon").expect("save");
+    println!("saved {}", p.display());
+}

@@ -1,0 +1,64 @@
+//! Table V: C-SVM vs ν-SVM vs SRBO-ν-SVM, RBF kernel, on the 26
+//! small/medium benchmark-mimic sets.
+
+use srbo::bench_harness::scale;
+use srbo::coordinator::path::SolverChoice;
+use srbo::data::benchmark;
+use srbo::kernel::KernelKind;
+use srbo::report::experiments::{default_nus, supervised_row};
+use srbo::report::{supervised_headers, supervised_row as print_row};
+use srbo::stats::{win_draw_loss, wilcoxon_signed_rank};
+use srbo::util::tsv::Table;
+
+fn main() {
+    let s = scale().min(0.25);
+    let nus = default_nus();
+    let kernel = KernelKind::rbf_from_sigma(2.0);
+    let mut table = Table::new(
+        &format!("Table V — supervised, RBF kernel (scale={s}, sigma=2)"),
+        &supervised_headers(),
+    );
+    let mut nu_times = Vec::new();
+    let mut srbo_times = Vec::new();
+    let mut nu_accs = Vec::new();
+    let mut c_accs = Vec::new();
+    for name in benchmark::table_v_names() {
+        let spec = benchmark::spec(name).unwrap();
+        let d = benchmark::generate(spec, s, 42);
+        let row = supervised_row(&d, kernel, &nus, SolverChoice::Dcdm, 7);
+        // exact-equality up to solver tolerance: degenerate grid points
+        // can hold test scores at exactly 0 where eps-flutter flips ties
+        // (see EXPERIMENTS.md "Safety") — audit tests pin the strict
+        // objective/score property.
+        // Both paths are audited KKT-optimal (tests/safety.rs pins the
+        // strict objective/score property); near-boundary test samples
+        // can still flip on eps-flutter between equal optima, so report
+        // loudly instead of aborting the table (EXPERIMENTS.md "Safety").
+        if (row.nu_acc - row.srbo_acc).abs() > 1e-9 {
+            println!(
+                "WARNING {name}: SRBO best-accuracy differs by {:+.3}pp \
+                 ({} test samples; eps-flutter on boundary ties)",
+                row.srbo_acc - row.nu_acc,
+                row.l_test
+            );
+        }
+        print_row(
+            &mut table, &row.name, row.c_acc, row.c_time, row.nu_acc, row.nu_time,
+            row.srbo_acc, row.srbo_time, row.ratio, row.speedup,
+        );
+        nu_times.push(row.nu_time);
+        srbo_times.push(row.srbo_time);
+        nu_accs.push(row.nu_acc);
+        c_accs.push(row.c_acc);
+    }
+    println!("{}", table.render());
+    let (w, dr, l) = win_draw_loss(&nu_accs, &c_accs, 1e-9);
+    println!("nu-SVM vs C-SVM accuracy W/D/L: {w}/{dr}/{l}");
+    let wx = wilcoxon_signed_rank(&nu_times, &srbo_times);
+    println!(
+        "Wilcoxon (time nu-SVM > SRBO): n={} W+={} z={:.2} p={:.4} significant={}",
+        wx.n, wx.w_plus, wx.z, wx.p, wx.significant_05
+    );
+    let p = table.save_tsv("table5_rbf").expect("save");
+    println!("saved {}", p.display());
+}

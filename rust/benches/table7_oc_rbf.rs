@@ -1,0 +1,48 @@
+//! Table VII: KDE vs OC-SVM vs SRBO-OC-SVM, RBF kernel, 26 mimic sets.
+
+use srbo::bench_harness::scale;
+use srbo::data::benchmark;
+use srbo::kernel::KernelKind;
+use srbo::report::experiments::{default_nus, unsupervised_row};
+use srbo::report::{unsupervised_headers, unsupervised_row as print_row};
+use srbo::stats::wilcoxon_signed_rank;
+use srbo::util::tsv::Table;
+
+fn main() {
+    let s = scale().min(0.25);
+    let nus = default_nus();
+    let kernel = KernelKind::rbf_from_sigma(2.0);
+    let mut table = Table::new(
+        &format!("Table VII — unsupervised, RBF kernel (scale={s}, sigma=2)"),
+        &unsupervised_headers(),
+    );
+    let mut oc_times = Vec::new();
+    let mut srbo_times = Vec::new();
+    for name in benchmark::table_v_names() {
+        let spec = benchmark::spec(name).unwrap();
+        let d = benchmark::generate(spec, s, 42);
+        let row = unsupervised_row(&d, kernel, &nus, 7);
+        // see table4_linear.rs: report eps-flutter loudly, don't abort
+        if (row.oc_auc - row.srbo_auc).abs() > 1e-9 {
+            println!(
+                "WARNING {name}: SRBO best-AUC differs by {:+.3}pp \
+                 (eps-flutter on boundary ties)",
+                row.srbo_auc - row.oc_auc
+            );
+        }
+        print_row(
+            &mut table, &row.name, row.kde_auc, row.kde_time, row.oc_auc,
+            row.oc_time, row.srbo_auc, row.srbo_time, row.ratio, row.speedup,
+        );
+        oc_times.push(row.oc_time);
+        srbo_times.push(row.srbo_time);
+    }
+    println!("{}", table.render());
+    let wx = wilcoxon_signed_rank(&oc_times, &srbo_times);
+    println!(
+        "Wilcoxon (time OC-SVM > SRBO): n={} W+={} z={:.2} p={:.4} significant={}",
+        wx.n, wx.w_plus, wx.z, wx.p, wx.significant_05
+    );
+    let p = table.save_tsv("table7_oc_rbf").expect("save");
+    println!("saved {}", p.display());
+}

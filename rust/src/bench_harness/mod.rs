@@ -1,0 +1,123 @@
+//! Minimal benchmarking framework (criterion is not in the offline crate
+//! set).  The `[[bench]]` targets use `harness = false` and call into
+//! this: warmup, repeated measurement, median/MAD summary, and paper-table
+//! reporting via `util::tsv::Table`.
+
+use crate::util::Timer;
+
+/// Summary statistics of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub reps: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Sample {
+    pub fn human(&self) -> String {
+        format!(
+            "{:<40} median {:>10} (±{}) over {} reps",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            self.reps
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Measure `f` with `reps` timed repetitions after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+    }
+    summarize(name, &times)
+}
+
+/// Time a single long-running invocation (end-to-end drivers).
+pub fn bench_once<F: FnOnce() -> T, T>(name: &str, f: F) -> (Sample, T) {
+    let t = Timer::start();
+    let out = f();
+    let secs = t.secs();
+    (summarize(name, &[secs]), out)
+}
+
+fn summarize(name: &str, times: &[f64]) -> Sample {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2];
+    let mut dev: Vec<f64> = sorted.iter().map(|t| (t - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = dev[dev.len() / 2];
+    Sample {
+        name: name.to_string(),
+        reps: times.len(),
+        median_s: median,
+        mad_s: mad,
+        min_s: sorted[0],
+        max_s: *sorted.last().unwrap(),
+    }
+}
+
+/// Scale knob shared by all bench binaries: `SRBO_SCALE=0.25 cargo bench`
+/// shrinks dataset sizes for smoke runs; 1.0 is the EXPERIMENTS.md
+/// configuration.
+pub fn scale() -> f64 {
+    std::env::var("SRBO_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Apply the scale to a sample count with a floor so tiny runs stay valid.
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let s = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.median_s >= 0.0);
+        assert_eq!(s.reps, 5);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn scaled_has_floor() {
+        assert!(scaled(10) >= 40);
+    }
+}

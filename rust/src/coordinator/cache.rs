@@ -1,0 +1,188 @@
+//! Gram/Q matrix cache with a byte budget and LRU eviction.
+//!
+//! The grid search revisits (dataset × kernel) pairs across the σ grid
+//! and the SRBO/baseline arms; recomputing an O(l²p) Gram each time
+//! dominates run time, so the coordinator shares matrices through this
+//! cache.  Thread-safe via an internal mutex; values are handed out as
+//! `Arc<Mat>` so eviction never invalidates a borrower.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::kernel::{full_gram, full_q, KernelKind};
+use crate::util::Mat;
+
+/// Cache key: dataset identity + kernel + labelled/unlabelled.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct QKey {
+    pub dataset: String,
+    /// γ bits (0 for linear) — f64 keys are hashed via to_bits.
+    pub gamma_bits: u64,
+    pub labelled: bool,
+}
+
+impl QKey {
+    pub fn new(dataset: &str, kernel: KernelKind, labelled: bool) -> Self {
+        let gamma_bits = match kernel {
+            KernelKind::Linear => 0,
+            KernelKind::Rbf { gamma } => gamma.to_bits(),
+        };
+        QKey { dataset: dataset.to_string(), gamma_bits, labelled }
+    }
+}
+
+struct Entry {
+    mat: Arc<Mat>,
+    last_used: u64,
+}
+
+/// The cache.
+pub struct GramCache {
+    inner: Mutex<Inner>,
+    budget_bytes: usize,
+}
+
+struct Inner {
+    map: HashMap<QKey, Entry>,
+    clock: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl GramCache {
+    /// `budget_bytes` caps resident matrices (default: 512 MiB).
+    pub fn new(budget_bytes: usize) -> Self {
+        GramCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+            }),
+            budget_bytes,
+        }
+    }
+
+    pub fn default_budget() -> Self {
+        Self::new(512 << 20)
+    }
+
+    /// Get-or-compute the labelled Q for (x, y).
+    pub fn q(&self, key: QKey, x: &Mat, y: &[f64], kernel: KernelKind) -> Arc<Mat> {
+        self.get_or_insert(key, || full_q(x, y, kernel))
+    }
+
+    /// Get-or-compute the unlabelled H for x.
+    pub fn h(&self, key: QKey, x: &Mat, kernel: KernelKind) -> Arc<Mat> {
+        self.get_or_insert(key, || full_gram(x, kernel))
+    }
+
+    fn get_or_insert(&self, key: QKey, compute: impl FnOnce() -> Mat) -> Arc<Mat> {
+        // fast path: hit
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_used = clock;
+                let mat = Arc::clone(&e.mat);
+                inner.hits += 1;
+                return mat;
+            }
+            inner.misses += 1;
+        }
+        // compute outside the lock (single entry may be computed twice
+        // under a race; correctness unaffected)
+        let mat = Arc::new(compute());
+        let sz = mat.data.len() * std::mem::size_of::<f64>();
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        // evict LRU until within budget
+        while inner.bytes + sz > self.budget_bytes && !inner.map.is_empty() {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .unwrap();
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.bytes -= e.mat.data.len() * std::mem::size_of::<f64>();
+            }
+        }
+        inner.bytes += sz;
+        inner.map.insert(key, Entry { mat: Arc::clone(&mat), last_used: clock });
+        mat
+    }
+
+    /// (hits, misses, resident bytes).
+    pub fn stats(&self) -> (u64, u64, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses, inner.bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussians;
+
+    #[test]
+    fn second_lookup_hits() {
+        let cache = GramCache::new(64 << 20);
+        let d = gaussians(20, 1.0, 1);
+        let k = KernelKind::Rbf { gamma: 0.5 };
+        let key = QKey::new("g", k, true);
+        let a = cache.q(key.clone(), &d.x, &d.y, k);
+        let b = cache.q(key, &d.x, &d.y, k);
+        assert!(Arc::ptr_eq(&a, &b));
+        let (h, m, _) = cache.stats();
+        assert_eq!((h, m), (1, 1));
+    }
+
+    #[test]
+    fn distinct_gammas_distinct_entries() {
+        let cache = GramCache::new(64 << 20);
+        let d = gaussians(10, 1.0, 2);
+        let k1 = KernelKind::Rbf { gamma: 0.5 };
+        let k2 = KernelKind::Rbf { gamma: 1.0 };
+        let a = cache.q(QKey::new("g", k1, true), &d.x, &d.y, k1);
+        let b = cache.q(QKey::new("g", k2, true), &d.x, &d.y, k2);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!((a.get(0, 1) - b.get(0, 1)).abs() > 0.0);
+    }
+
+    #[test]
+    fn eviction_respects_budget() {
+        // budget fits one 20x20 f64 matrix (3200 B) but not two
+        let cache = GramCache::new(4000);
+        let d = gaussians(10, 1.0, 3);
+        let k = KernelKind::Linear;
+        let _a = cache.q(QKey::new("a", k, true), &d.x, &d.y, k);
+        let _b = cache.q(QKey::new("b", k, true), &d.x, &d.y, k);
+        let (_, _, bytes) = cache.stats();
+        assert!(bytes <= 4000, "bytes={bytes}");
+    }
+
+    #[test]
+    fn evicted_arc_stays_valid() {
+        let cache = GramCache::new(4000);
+        let d = gaussians(10, 1.0, 4);
+        let k = KernelKind::Linear;
+        let a = cache.q(QKey::new("a", k, true), &d.x, &d.y, k);
+        let _b = cache.q(QKey::new("b", k, true), &d.x, &d.y, k); // evicts a
+        assert_eq!(a.rows, 20); // still usable
+    }
+
+    #[test]
+    fn labelled_flag_separates() {
+        let cache = GramCache::new(64 << 20);
+        let d = gaussians(10, 1.0, 5);
+        let k = KernelKind::Linear;
+        let q = cache.q(QKey::new("x", k, true), &d.x, &d.y, k);
+        let h = cache.h(QKey::new("x", k, false), &d.x, k);
+        assert!(!Arc::ptr_eq(&q, &h));
+    }
+}

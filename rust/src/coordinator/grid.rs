@@ -1,0 +1,263 @@
+//! Grid-search service: schedules (dataset × kernel × ν-path) jobs over a
+//! worker pool with a bounded queue (backpressure), shares Gram matrices
+//! through [`super::cache::GramCache`], and collects per-job results.
+//!
+//! tokio is not in the offline crate set; std threads + condvar-bounded
+//! queue provide the same shape (DESIGN.md §2).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::cache::{GramCache, QKey};
+use crate::coordinator::path::{NuPath, PathConfig};
+use crate::data::Dataset;
+use crate::kernel::KernelKind;
+use crate::stats::accuracy;
+use crate::svm::nu::NuSvm;
+use crate::util::timer::Timer;
+
+/// One grid-search job.
+#[derive(Clone)]
+pub struct Job {
+    pub dataset: Arc<Dataset>,
+    pub test: Arc<Dataset>,
+    pub kernel: KernelKind,
+    pub cfg: PathConfig,
+    pub tag: String,
+}
+
+/// Per-job outcome.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub tag: String,
+    pub kernel: KernelKind,
+    /// (nu, test accuracy %) per grid point.
+    pub curve: Vec<(f64, f64)>,
+    pub best_nu: f64,
+    pub best_accuracy: f64,
+    pub avg_screening_ratio: f64,
+    pub wall_time: f64,
+}
+
+/// Bounded MPMC job queue.
+struct Queue {
+    q: Mutex<QueueInner>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct QueueInner {
+    items: VecDeque<Job>,
+    closed: bool,
+}
+
+impl Queue {
+    fn new(cap: usize) -> Self {
+        Queue {
+            q: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let mut g = self.q.lock().unwrap();
+        while g.items.len() >= self.cap {
+            g = self.not_full.wait(g).unwrap();
+        }
+        g.items.push_back(job);
+        self.not_empty.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(j) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(j);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+/// The service.
+pub struct GridSearch {
+    pub workers: usize,
+    pub queue_cap: usize,
+    pub cache: Arc<GramCache>,
+}
+
+impl Default for GridSearch {
+    fn default() -> Self {
+        GridSearch {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            queue_cap: 64,
+            cache: Arc::new(GramCache::default_budget()),
+        }
+    }
+}
+
+impl GridSearch {
+    /// Run all jobs; results come back in completion order.
+    pub fn run(&self, jobs: Vec<Job>) -> Vec<JobResult> {
+        let queue = Arc::new(Queue::new(self.queue_cap));
+        let results = Arc::new(Mutex::new(Vec::new()));
+        let in_flight = Arc::new(AtomicUsize::new(jobs.len()));
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.max(1) {
+                let queue = Arc::clone(&queue);
+                let results = Arc::clone(&results);
+                let cache = Arc::clone(&self.cache);
+                let in_flight = Arc::clone(&in_flight);
+                scope.spawn(move || {
+                    while let Some(job) = queue.pop() {
+                        let r = run_job(&cache, &job);
+                        results.lock().unwrap().push(r);
+                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+            }
+            for job in jobs {
+                queue.push(job);
+            }
+            queue.close();
+        });
+        Arc::try_unwrap(results).unwrap().into_inner().unwrap()
+    }
+}
+
+fn run_job(cache: &GramCache, job: &Job) -> JobResult {
+    let t = Timer::start();
+    let d = &job.dataset;
+    let key = QKey::new(&format!("{}#{}", d.name, job.tag), job.kernel, true);
+    let q = cache.q(key, &d.x, &d.y, job.kernel);
+    let path = NuPath::run_with_q(&q, &job.cfg, false, Default::default())
+        .expect("path failed");
+    let mut curve = Vec::with_capacity(path.steps.len());
+    let mut best = (job.cfg.nus[0], f64::NEG_INFINITY);
+    for step in &path.steps {
+        let model = NuSvm::from_alpha(
+            &d.x,
+            &d.y,
+            step.alpha.clone(),
+            step.nu,
+            job.kernel,
+            step.solve_stats.clone(),
+        );
+        let acc = accuracy(&model.predict(&job.test.x), &job.test.y);
+        curve.push((step.nu, acc));
+        if acc > best.1 {
+            best = (step.nu, acc);
+        }
+    }
+    JobResult {
+        tag: job.tag.clone(),
+        kernel: job.kernel,
+        curve,
+        best_nu: best.0,
+        best_accuracy: best.1,
+        avg_screening_ratio: path.avg_screening_ratio(),
+        wall_time: t.secs(),
+    }
+}
+
+/// Convenience: full supervised model selection for one dataset —
+/// ν grid × σ grid, returns the best (kernel, ν, accuracy).
+pub fn select_model(
+    train: &Dataset,
+    test: &Dataset,
+    nus: Vec<f64>,
+    sigmas: &[f64],
+    screening: bool,
+    workers: usize,
+) -> (KernelKind, f64, f64, Vec<JobResult>) {
+    let mut jobs = Vec::new();
+    let train = Arc::new(train.clone());
+    let test = Arc::new(test.clone());
+    let mut kernels = vec![KernelKind::Linear];
+    kernels.extend(sigmas.iter().map(|&s| KernelKind::rbf_from_sigma(s)));
+    for kernel in kernels {
+        let mut cfg = PathConfig::new(nus.clone(), kernel);
+        cfg.screening = screening;
+        jobs.push(Job {
+            dataset: Arc::clone(&train),
+            test: Arc::clone(&test),
+            kernel,
+            cfg,
+            tag: format!("{}/{:?}", train.name, kernel),
+        });
+    }
+    let gs = GridSearch { workers, ..Default::default() };
+    let results = gs.run(jobs);
+    let mut best = (KernelKind::Linear, 0.0, f64::NEG_INFINITY);
+    for r in &results {
+        if r.best_accuracy > best.2 {
+            best = (r.kernel, r.best_nu, r.best_accuracy);
+        }
+    }
+    (best.0, best.1, best.2, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::split::train_test_stratified;
+    use crate::data::synthetic::gaussians;
+
+    fn nus() -> Vec<f64> {
+        vec![0.2, 0.25, 0.3, 0.35]
+    }
+
+    #[test]
+    fn single_worker_runs_all_jobs() {
+        let d = gaussians(30, 2.0, 1);
+        let (tr, te) = train_test_stratified(&d, 0.8, 2);
+        let (_, _, best_acc, results) =
+            select_model(&tr, &te, nus(), &[1.0], true, 1);
+        assert_eq!(results.len(), 2); // linear + 1 rbf
+        assert!(best_acc > 80.0, "acc={best_acc}");
+    }
+
+    #[test]
+    fn multi_worker_matches_job_count() {
+        let d = gaussians(25, 2.0, 3);
+        let (tr, te) = train_test_stratified(&d, 0.8, 4);
+        let (_, _, _, results) = select_model(&tr, &te, nus(), &[0.5, 2.0], true, 4);
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert_eq!(r.curve.len(), 4);
+        }
+    }
+
+    #[test]
+    fn cache_shared_across_arms() {
+        let d = Arc::new(gaussians(20, 1.5, 5));
+        let gs = GridSearch { workers: 2, ..Default::default() };
+        let mk_job = |tag: &str| Job {
+            dataset: Arc::clone(&d),
+            test: Arc::clone(&d),
+            kernel: KernelKind::Linear,
+            cfg: PathConfig::new(nus(), KernelKind::Linear),
+            tag: tag.to_string(),
+        };
+        // same tag -> same cache key -> 1 miss, 1 hit
+        let _ = gs.run(vec![mk_job("same"), mk_job("same")]);
+        let (hits, misses, _) = gs.cache.stats();
+        assert!(hits >= 1, "hits={hits} misses={misses}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Path telemetry and the safety audit.
+
+use crate::qp::{ConstraintKind, QpProblem, SolveStats};
+use crate::util::timer::PhaseTimes;
+use crate::util::Mat;
+
+/// Aggregated statistics of one ν-path run.
+#[derive(Clone, Debug, Default)]
+pub struct PathMetrics {
+    pub times: PhaseTimes,
+    pub screened_steps: usize,
+    pub ratio_sum: f64,
+    pub reduced_sizes: Vec<usize>,
+    pub total_sweeps: usize,
+    pub total_pair_steps: usize,
+}
+
+impl PathMetrics {
+    pub fn record_step(&mut self, ratio: f64, reduced_size: usize, stats: &SolveStats) {
+        self.screened_steps += 1;
+        self.ratio_sum += ratio;
+        self.reduced_sizes.push(reduced_size);
+        self.total_sweeps += stats.sweeps;
+        self.total_pair_steps += stats.pair_steps;
+    }
+
+    pub fn avg_ratio(&self) -> f64 {
+        if self.screened_steps == 0 {
+            0.0
+        } else {
+            self.ratio_sum / self.screened_steps as f64
+        }
+    }
+}
+
+/// Safety audit: the screened path must reproduce the full solve.
+///
+/// Because degenerate duals admit optimal faces, the audit compares
+/// *objective values* and *decision scores*, not raw α: identical
+/// objectives at every grid point + identical predictions is exactly the
+/// paper's "same solution, same accuracy" claim.
+#[derive(Clone, Debug)]
+pub struct SafetyAudit {
+    pub max_objective_gap: f64,
+    pub max_score_gap: f64,
+    pub predictions_match: bool,
+}
+
+impl SafetyAudit {
+    /// Compare two α-paths under the same Q/grid.
+    pub fn compare(
+        q: &Mat,
+        nus: &[f64],
+        ub_for: impl Fn(f64) -> Vec<f64>,
+        constraint_for: impl Fn(f64) -> ConstraintKind,
+        path_a: &[Vec<f64>],
+        path_b: &[Vec<f64>],
+        scores: impl Fn(&[f64]) -> Vec<f64>,
+    ) -> SafetyAudit {
+        assert_eq!(path_a.len(), nus.len());
+        assert_eq!(path_b.len(), nus.len());
+        let mut max_obj = 0.0f64;
+        let mut max_score = 0.0f64;
+        let mut preds_ok = true;
+        for (k, &nu) in nus.iter().enumerate() {
+            let ub = ub_for(nu);
+            let p = QpProblem {
+                q,
+                lin: None,
+                ub: &ub,
+                constraint: constraint_for(nu),
+            };
+            let fa = p.objective(&path_a[k]);
+            let fb = p.objective(&path_b[k]);
+            max_obj = max_obj.max((fa - fb).abs() / (1.0 + fa.abs()));
+            let sa = scores(&path_a[k]);
+            let sb = scores(&path_b[k]);
+            for (x, y) in sa.iter().zip(&sb) {
+                max_score = max_score.max((x - y).abs());
+                if x.signum() != y.signum() && (x - y).abs() > 1e-7 {
+                    preds_ok = false;
+                }
+            }
+        }
+        SafetyAudit {
+            max_objective_gap: max_obj,
+            max_score_gap: max_score,
+            predictions_match: preds_ok,
+        }
+    }
+
+    pub fn is_safe(&self, tol: f64) -> bool {
+        self.max_objective_gap <= tol && self.predictions_match
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = PathMetrics::default();
+        let stats = SolveStats { sweeps: 3, pair_steps: 5, ..Default::default() };
+        m.record_step(50.0, 10, &stats);
+        m.record_step(70.0, 6, &stats);
+        assert_eq!(m.avg_ratio(), 60.0);
+        assert_eq!(m.total_sweeps, 6);
+        assert_eq!(m.reduced_sizes, vec![10, 6]);
+    }
+
+    #[test]
+    fn audit_passes_identical_paths() {
+        let mut g = crate::prop::Gen::new(1);
+        let q = g.psd(6);
+        let path = vec![vec![0.1; 6], vec![0.12; 6]];
+        let audit = SafetyAudit::compare(
+            &q,
+            &[0.3, 0.4],
+            |_| vec![1.0; 6],
+            ConstraintKind::SumGe,
+            &path,
+            &path,
+            |a| a.to_vec(),
+        );
+        assert!(audit.is_safe(1e-12));
+        assert_eq!(audit.max_score_gap, 0.0);
+    }
+
+    #[test]
+    fn audit_flags_objective_gap() {
+        let mut g = crate::prop::Gen::new(2);
+        let q = g.psd(4);
+        let a = vec![vec![0.1; 4]];
+        let b = vec![vec![0.9; 4]];
+        let audit = SafetyAudit::compare(
+            &q,
+            &[0.2],
+            |_| vec![1.0; 4],
+            ConstraintKind::SumGe,
+            &a,
+            &b,
+            |al| al.to_vec(),
+        );
+        assert!(!audit.is_safe(1e-9));
+    }
+}

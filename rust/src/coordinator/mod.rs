@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the grid-search training service.
+//!
+//! * [`path`] — the sequential SRBO ν-path (Algorithm 1), the paper's
+//!   central procedure;
+//! * [`grid`] — multi-threaded orchestration over (dataset × kernel ×
+//!   ν-path) jobs with a bounded queue;
+//! * [`cache`] — Gram/Q matrix cache with a memory budget;
+//! * [`metrics`] — per-step telemetry + the safety audit.
+
+pub mod cache;
+pub mod grid;
+pub mod metrics;
+pub mod path;
+
+pub use metrics::{PathMetrics, SafetyAudit};
+pub use path::{NuPath, PathConfig, SolverChoice};

@@ -1,0 +1,393 @@
+//! The sequential SRBO ν-path — the paper's Algorithm 1.
+//!
+//! Given an increasing parameter grid ν₀ < ν₁ < … < ν_K:
+//!
+//! 1. **Init** — solve the full dual at ν₀ exactly.
+//! 2. Per step k → k+1:
+//!    a. **δ update** (bi-level, Eq. 27): warm-started restricted
+//!       refinement of QPP (18);
+//!    b. **Screen** (Corollary 4 / Table II): fix α_D;
+//!    c. **Reduced solve** (Eq. 26): warm-started DCDM on the survivors;
+//!    d. **Combine** into the full α^{k+1}.
+//!
+//! `screening: false` runs the same loop without SRBO (the "ν-SVM"
+//! baseline column of Tables IV-VII); `SolverChoice::Gqp` swaps in the
+//! generic QP solver (Fig. 8 / Table VIII).
+
+use crate::kernel::{full_gram, full_q, KernelKind};
+use crate::qp::dcdm::{self, DcdmOpts};
+use crate::qp::gqp::{self, GqpOpts};
+use crate::qp::{reduced, ConstraintKind, QpProblem, SolveStats};
+use crate::screening::{self, delta, oneclass, srbo, ScreenCode};
+use crate::util::timer::{PhaseTimes, Timer};
+use crate::util::Mat;
+use anyhow::{bail, Result};
+
+use super::metrics::PathMetrics;
+
+/// Which QP solver backs the path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverChoice {
+    /// DCDM with pairwise refinement (exact; default).
+    Dcdm,
+    /// Verbatim Algorithm 2 (paper mode, approximate).
+    DcdmPaper,
+    /// Generic projected-gradient QP ("quadprog" stand-in).
+    Gqp,
+}
+
+/// Path configuration.
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    /// Strictly increasing ν grid.
+    pub nus: Vec<f64>,
+    pub kernel: KernelKind,
+    pub solver: SolverChoice,
+    /// SRBO on/off (off ⇒ every step is a full solve).
+    pub screening: bool,
+    /// Bi-level budget: PG sweeps for the first δ (subsequent steps use
+    /// a fraction of this, warm-started — Eq. 27).
+    pub delta_iters: usize,
+    /// Solver tolerance.
+    pub eps: f64,
+}
+
+impl PathConfig {
+    pub fn new(nus: Vec<f64>, kernel: KernelKind) -> Self {
+        PathConfig {
+            nus,
+            kernel,
+            solver: SolverChoice::Dcdm,
+            screening: true,
+            delta_iters: 30,
+            eps: 1e-8,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.nus.is_empty() {
+            bail!("empty nu grid");
+        }
+        for w in self.nus.windows(2) {
+            if w[1] <= w[0] {
+                bail!("nu grid must be strictly increasing");
+            }
+        }
+        if self.nus[0] <= 0.0 || *self.nus.last().unwrap() >= 1.0 {
+            bail!("nu grid must lie in (0,1)");
+        }
+        Ok(())
+    }
+}
+
+/// One solved grid point.
+#[derive(Clone, Debug)]
+pub struct PathStep {
+    pub nu: f64,
+    pub alpha: Vec<f64>,
+    /// Screening outcome (empty on the init step / when screening off).
+    pub codes: Vec<ScreenCode>,
+    pub screening_ratio: f64,
+    pub solve_stats: SolveStats,
+}
+
+/// A completed path.
+#[derive(Clone, Debug)]
+pub struct NuPath {
+    pub steps: Vec<PathStep>,
+    pub metrics: PathMetrics,
+    /// Equality (OC-SVM) or inequality (ν-SVM) family.
+    pub oneclass: bool,
+}
+
+fn solve_qp(
+    p: &QpProblem,
+    warm: Option<&[f64]>,
+    choice: SolverChoice,
+    eps: f64,
+) -> (Vec<f64>, SolveStats) {
+    match choice {
+        SolverChoice::Dcdm => {
+            dcdm::solve(p, warm, &DcdmOpts { eps, ..DcdmOpts::default() })
+        }
+        SolverChoice::DcdmPaper => dcdm::solve(
+            p,
+            warm,
+            &DcdmOpts { eps, paper_mode: true, ..DcdmOpts::default() },
+        ),
+        SolverChoice::Gqp => {
+            gqp::solve(p, warm, &GqpOpts { eps, ..GqpOpts::default() })
+        }
+    }
+}
+
+impl NuPath {
+    /// Run the supervised ν-SVM path on (x, y).
+    pub fn run(x: &Mat, y: &[f64], cfg: &PathConfig) -> Result<NuPath> {
+        cfg.validate()?;
+        let mut times = PhaseTimes::new();
+        let mut t = Timer::start();
+        let q = full_q(x, y, cfg.kernel);
+        times.add("gram", t.lap());
+        Self::run_with_q(&q, cfg, false, times)
+    }
+
+    /// Run the unsupervised OC-SVM path on x (positive data only).
+    pub fn run_oneclass(x: &Mat, cfg: &PathConfig) -> Result<NuPath> {
+        cfg.validate()?;
+        let l = x.rows;
+        if let Some(&nu_min) = cfg.nus.first() {
+            if nu_min * l as f64 <= 1.0 {
+                bail!("nu*l must exceed 1 for OC-SVM");
+            }
+        }
+        let mut times = PhaseTimes::new();
+        let mut t = Timer::start();
+        let h = full_gram(x, cfg.kernel);
+        times.add("gram", t.lap());
+        Self::run_with_q(&h, cfg, true, times)
+    }
+
+    /// Shared driver against a precomputed Q/H (cache path).
+    pub fn run_with_q(
+        q: &Mat,
+        cfg: &PathConfig,
+        oneclass_mode: bool,
+        mut times: PhaseTimes,
+    ) -> Result<NuPath> {
+        cfg.validate()?;
+        let l = q.rows;
+        let ub_for = |nu: f64| -> Vec<f64> {
+            if oneclass_mode {
+                vec![oneclass::upper_bound(nu, l); l]
+            } else {
+                vec![1.0 / l as f64; l]
+            }
+        };
+        let constraint_for = |nu: f64| -> ConstraintKind {
+            if oneclass_mode {
+                ConstraintKind::SumEq(1.0)
+            } else {
+                ConstraintKind::SumGe(nu)
+            }
+        };
+
+        let mut steps: Vec<PathStep> = Vec::with_capacity(cfg.nus.len());
+        let mut metrics = PathMetrics::default();
+        let mut t = Timer::start();
+
+        // One-time Lipschitz estimate shared by every δ refinement step.
+        let lip = if cfg.screening { Some(q.power_eig_max(40)) } else { None };
+
+        // Step 1 (Initialization): full solve at nu_0.
+        let nu0 = cfg.nus[0];
+        let ub0 = ub_for(nu0);
+        let p0 = QpProblem {
+            q,
+            lin: None,
+            ub: &ub0,
+            constraint: constraint_for(nu0),
+        };
+        let (alpha0, stats0) = solve_qp(&p0, None, cfg.solver, cfg.eps);
+        times.add("solve", t.lap());
+        steps.push(PathStep {
+            nu: nu0,
+            alpha: alpha0,
+            codes: Vec::new(),
+            screening_ratio: 0.0,
+            solve_stats: stats0,
+        });
+
+        let mut prev_delta: Option<Vec<f64>> = None;
+        for k in 0..cfg.nus.len() - 1 {
+            let nu_next = cfg.nus[k + 1];
+            let alpha_k = steps[k].alpha.clone();
+            let ub_next = ub_for(nu_next);
+
+            if !cfg.screening {
+                // Baseline: full solve at each grid point (cold start, as
+                // the original nu-SVM column does).
+                let p = QpProblem {
+                    q,
+                    lin: None,
+                    ub: &ub_next,
+                    constraint: constraint_for(nu_next),
+                };
+                let (a, stats) = solve_qp(&p, None, cfg.solver, cfg.eps);
+                times.add("solve", t.lap());
+                steps.push(PathStep {
+                    nu: nu_next,
+                    alpha: a,
+                    codes: Vec::new(),
+                    screening_ratio: 0.0,
+                    solve_stats: stats,
+                });
+                continue;
+            }
+
+            // Step 2a: delta via the warm-started restricted problem (27).
+            let iters = if k == 0 { cfg.delta_iters } else { cfg.delta_iters / 4 + 1 };
+            let d = delta::optimal_from(
+                q,
+                &alpha_k,
+                &ub_next,
+                if oneclass_mode {
+                    ConstraintKind::SumEq(1.0)
+                } else {
+                    ConstraintKind::SumGe(nu_next)
+                },
+                prev_delta.as_deref(),
+                iters,
+                lip,
+            );
+            times.add("delta", t.lap());
+
+            // Step 2b: screen.
+            let res = srbo::screen(q, &alpha_k, &d, nu_next);
+            times.add("screen", t.lap());
+
+            // Step 3: reduced solve (warm-started at the survivors).
+            let red = reduced::build(q, &ub_next, constraint_for(nu_next), &res.codes);
+            let warm = red.restrict(&alpha_k);
+            let (alpha_s, stats) = if red.is_empty() {
+                (Vec::new(), SolveStats::default())
+            } else {
+                solve_qp(&red.as_qp(), Some(&warm), cfg.solver, cfg.eps)
+            };
+            // Step 4: combine.
+            let alpha_next = red.combine(&alpha_s, l);
+            times.add("solve", t.lap());
+
+            let ratio = screening::screening_ratio(&res.codes);
+            metrics.record_step(ratio, red.keep.len(), &stats);
+            prev_delta = Some(d);
+            steps.push(PathStep {
+                nu: nu_next,
+                alpha: alpha_next,
+                codes: res.codes,
+                screening_ratio: ratio,
+                solve_stats: stats,
+            });
+        }
+
+        metrics.times = times;
+        Ok(NuPath { steps, metrics, oneclass: oneclass_mode })
+    }
+
+    /// α at grid index k.
+    pub fn alpha(&self, k: usize) -> &[f64] {
+        &self.steps[k].alpha
+    }
+
+    /// Average screening ratio over the screened steps (the paper's
+    /// per-dataset "Screening Ratio" figure).
+    pub fn avg_screening_ratio(&self) -> f64 {
+        let screened: Vec<f64> = self
+            .steps
+            .iter()
+            .skip(1)
+            .map(|s| s.screening_ratio)
+            .collect();
+        if screened.is_empty() {
+            0.0
+        } else {
+            screened.iter().sum::<f64>() / screened.len() as f64
+        }
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.metrics.times.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussians;
+
+    fn grid(a: f64, b: f64, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| a + (b - a) * i as f64 / (n - 1) as f64)
+            .collect()
+    }
+
+    #[test]
+    fn path_runs_and_is_feasible() {
+        let d = gaussians(40, 2.0, 1);
+        let cfg = PathConfig::new(grid(0.2, 0.4, 5), KernelKind::Linear);
+        let p = NuPath::run(&d.x, &d.y, &cfg).unwrap();
+        assert_eq!(p.steps.len(), 5);
+        let l = d.len();
+        for (i, s) in p.steps.iter().enumerate() {
+            let sum: f64 = s.alpha.iter().sum();
+            assert!(sum >= cfg.nus[i] - 1e-6, "step {i}: sum {sum}");
+            assert!(s
+                .alpha
+                .iter()
+                .all(|&a| a >= -1e-9 && a <= 1.0 / l as f64 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn screened_path_matches_unscreened() {
+        let d = gaussians(40, 2.5, 2);
+        let nus = grid(0.2, 0.35, 6);
+        let on = PathConfig::new(nus.clone(), KernelKind::Linear);
+        let mut off = PathConfig::new(nus, KernelKind::Linear);
+        off.screening = false;
+        let p_on = NuPath::run(&d.x, &d.y, &on).unwrap();
+        let p_off = NuPath::run(&d.x, &d.y, &off).unwrap();
+        // objectives must agree at every grid point (solutions may differ
+        // inside a degenerate optimal face)
+        let q = full_q(&d.x, &d.y, KernelKind::Linear);
+        for k in 0..p_on.steps.len() {
+            let ub = vec![1.0 / d.len() as f64; d.len()];
+            let prob = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(on.nus[k]),
+            };
+            let f_on = prob.objective(p_on.alpha(k));
+            let f_off = prob.objective(p_off.alpha(k));
+            assert!(
+                (f_on - f_off).abs() <= 1e-6 * (1.0 + f_on.abs()),
+                "step {k}: {f_on} vs {f_off}"
+            );
+        }
+    }
+
+    #[test]
+    fn screening_actually_screens_on_easy_data() {
+        let d = gaussians(60, 3.0, 3);
+        let mut cfg = PathConfig::new(grid(0.2, 0.3, 21), KernelKind::Linear);
+        cfg.delta_iters = 200;
+        let p = NuPath::run(&d.x, &d.y, &cfg).unwrap();
+        assert!(
+            p.avg_screening_ratio() > 5.0,
+            "ratio={}",
+            p.avg_screening_ratio()
+        );
+    }
+
+    #[test]
+    fn oneclass_path_runs() {
+        let d = gaussians(50, 1.0, 4).positives();
+        let cfg = PathConfig::new(grid(0.2, 0.5, 5), KernelKind::Rbf { gamma: 0.5 });
+        let p = NuPath::run_oneclass(&d.x, &cfg).unwrap();
+        assert!(p.oneclass);
+        for s in &p.steps {
+            let sum: f64 = s.alpha.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_grids() {
+        let d = gaussians(10, 1.0, 5);
+        let cfg = PathConfig::new(vec![0.3, 0.2], KernelKind::Linear);
+        assert!(NuPath::run(&d.x, &d.y, &cfg).is_err());
+        let cfg2 = PathConfig::new(vec![], KernelKind::Linear);
+        assert!(NuPath::run(&d.x, &d.y, &cfg2).is_err());
+    }
+}

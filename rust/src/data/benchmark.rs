@@ -1,0 +1,248 @@
+//! Table-III-mimic benchmark fleet.
+//!
+//! The paper evaluates on 29 UCI/LIBSVM data sets + MNIST; the raw files
+//! are not available offline, so each entry here regenerates a synthetic
+//! stand-in with the *same* sample count, class balance and feature
+//! dimension as Table III, drawn from class-conditional Gaussian mixtures
+//! whose separability is calibrated per data set to land in the paper's
+//! accuracy band (see DESIGN.md §2).  Real files, when present under
+//! `data/real/<name>.libsvm`, take precedence via `data::loader`.
+
+use super::{loader, Dataset};
+use crate::util::{Mat, Rng};
+
+/// Metadata mirroring one row of Table III.
+#[derive(Clone, Debug)]
+pub struct BenchmarkSpec {
+    pub name: &'static str,
+    pub instances: usize,
+    pub positive: usize,
+    pub negative: usize,
+    pub features: usize,
+    /// Mixture separability in [0, 3]: tuned so a ν-SVM lands near the
+    /// paper's accuracy for this data set (1.0 ≈ ~75%, 2.0 ≈ ~95%).
+    pub separation: f64,
+    /// Number of Gaussian mixture components per class (structure knob).
+    pub modes: usize,
+}
+
+/// The 30 entries of Table III (MNIST lives in `mnist_like`).
+pub const TABLE_III: &[BenchmarkSpec] = &[
+    BenchmarkSpec { name: "Hepatitis", instances: 80, positive: 13, negative: 67, features: 19, separation: 1.4, modes: 1 },
+    BenchmarkSpec { name: "Fertility", instances: 100, positive: 88, negative: 12, features: 9, separation: 1.5, modes: 1 },
+    BenchmarkSpec { name: "PlanningRelax", instances: 146, positive: 94, negative: 52, features: 12, separation: 0.9, modes: 1 },
+    BenchmarkSpec { name: "Sonar", instances: 208, positive: 97, negative: 111, features: 60, separation: 1.3, modes: 2 },
+    BenchmarkSpec { name: "SpectHeart", instances: 267, positive: 212, negative: 55, features: 44, separation: 1.2, modes: 1 },
+    BenchmarkSpec { name: "Haberman", instances: 306, positive: 225, negative: 81, features: 3, separation: 1.1, modes: 1 },
+    BenchmarkSpec { name: "LiverDisorder", instances: 345, positive: 145, negative: 200, features: 6, separation: 0.8, modes: 2 },
+    BenchmarkSpec { name: "Monks", instances: 432, positive: 216, negative: 216, features: 6, separation: 1.6, modes: 2 },
+    BenchmarkSpec { name: "BreastCancer569", instances: 569, positive: 357, negative: 212, features: 30, separation: 2.2, modes: 1 },
+    BenchmarkSpec { name: "BreastCancer683", instances: 683, positive: 444, negative: 239, features: 9, separation: 2.1, modes: 1 },
+    BenchmarkSpec { name: "Australian", instances: 690, positive: 307, negative: 383, features: 14, separation: 1.7, modes: 1 },
+    BenchmarkSpec { name: "Pima", instances: 768, positive: 500, negative: 268, features: 8, separation: 1.0, modes: 1 },
+    BenchmarkSpec { name: "Biodegration", instances: 1055, positive: 356, negative: 699, features: 41, separation: 1.8, modes: 1 },
+    BenchmarkSpec { name: "Banknote", instances: 1372, positive: 762, negative: 610, features: 4, separation: 2.6, modes: 2 },
+    BenchmarkSpec { name: "HCV-Egy", instances: 1385, positive: 362, negative: 1023, features: 28, separation: 0.7, modes: 1 },
+    BenchmarkSpec { name: "CMC", instances: 1473, positive: 629, negative: 844, features: 9, separation: 0.8, modes: 2 },
+    BenchmarkSpec { name: "Yeast", instances: 1484, positive: 463, negative: 1021, features: 9, separation: 0.9, modes: 2 },
+    BenchmarkSpec { name: "Wifi-localization", instances: 2000, positive: 500, negative: 1500, features: 9, separation: 2.5, modes: 2 },
+    BenchmarkSpec { name: "CTG", instances: 2126, positive: 1655, negative: 471, features: 22, separation: 2.3, modes: 1 },
+    BenchmarkSpec { name: "Abalone", instances: 4177, positive: 689, negative: 3488, features: 8, separation: 1.6, modes: 1 },
+    BenchmarkSpec { name: "Winequality", instances: 4898, positive: 1060, negative: 3838, features: 11, separation: 1.3, modes: 2 },
+    BenchmarkSpec { name: "ShillBidding", instances: 6321, positive: 5646, negative: 675, features: 10, separation: 2.4, modes: 1 },
+    BenchmarkSpec { name: "Musk", instances: 6598, positive: 5581, negative: 1017, features: 166, separation: 2.0, modes: 2 },
+    BenchmarkSpec { name: "Electrical", instances: 10000, positive: 3620, negative: 6380, features: 13, separation: 2.4, modes: 1 },
+    BenchmarkSpec { name: "Epiletic", instances: 11500, positive: 2300, negative: 9200, features: 178, separation: 1.5, modes: 2 },
+    BenchmarkSpec { name: "Nursery", instances: 12960, positive: 8640, negative: 4320, features: 8, separation: 2.8, modes: 1 },
+    BenchmarkSpec { name: "credit card", instances: 30000, positive: 6636, negative: 23364, features: 23, separation: 0.6, modes: 1 },
+    BenchmarkSpec { name: "Accelerometer", instances: 31991, positive: 31420, negative: 571, features: 6, separation: 2.7, modes: 1 },
+    BenchmarkSpec { name: "Adult", instances: 32561, positive: 7841, negative: 24720, features: 14, separation: 1.9, modes: 2 },
+];
+
+/// Look up a spec by name.
+pub fn spec(name: &str) -> Option<&'static BenchmarkSpec> {
+    TABLE_III.iter().find(|s| s.name == name)
+}
+
+/// The 13 larger sets used for the linear-kernel Table IV (the paper's
+/// Banknote … Nursery block: big enough for linear acceleration to
+/// matter, below the medium-scale tier).
+pub fn table_iv_names() -> Vec<&'static str> {
+    TABLE_III
+        .iter()
+        .filter(|s| s.instances >= 1300 && s.instances <= 13_000)
+        .map(|s| s.name)
+        .collect()
+}
+
+/// The 26 small/medium sets used for Tables V-VII (≤ 13000 samples).
+pub fn table_v_names() -> Vec<&'static str> {
+    TABLE_III
+        .iter()
+        .filter(|s| s.instances <= 13_000)
+        .map(|s| s.name)
+        .collect()
+}
+
+/// Generate (or load, if a real file exists) a dataset for a spec.
+/// `scale` shrinks the sample count (class balance preserved).
+pub fn generate(spec: &BenchmarkSpec, scale: f64, seed: u64) -> Dataset {
+    if let Ok(d) = loader::load_real(spec.name) {
+        return d;
+    }
+    let n_pos = ((spec.positive as f64 * scale).round() as usize).max(10);
+    let n_neg = ((spec.negative as f64 * scale).round() as usize).max(10);
+    let p = spec.features;
+    let mut rng = Rng::new(seed ^ hash_name(spec.name));
+    // Per-class mixture: a shared base direction u separates the classes
+    // at ±separation/2; each mode adds a smaller orthogonal-ish offset so
+    // the class structure is multi-modal without collapsing the margin.
+    // Anisotropic noise scales keep features non-iid.
+    let mut scales = vec![0.0; p];
+    for s in scales.iter_mut() {
+        *s = rng.range(0.6, 1.5);
+    }
+    let mut u: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let un = crate::util::linalg::norm2(&u).max(1e-9);
+    for v in u.iter_mut() {
+        *v /= un;
+    }
+    let mk_means = |rng: &mut Rng, sign: f64, modes: usize| -> Vec<Vec<f64>> {
+        (0..modes)
+            .map(|_| {
+                let mut m: Vec<f64> = (0..p)
+                    .map(|j| sign * spec.separation / 2.0 * u[j])
+                    .collect();
+                if modes > 1 {
+                    let off = 0.4 * spec.separation;
+                    for v in m.iter_mut() {
+                        *v += off * rng.normal() / (p as f64).sqrt();
+                    }
+                }
+                m
+            })
+            .collect()
+    };
+    let pos_means = mk_means(&mut rng, 1.0, spec.modes);
+    let neg_means = mk_means(&mut rng, -1.0, spec.modes);
+    let mut rows = Vec::with_capacity(n_pos + n_neg);
+    let mut y = Vec::with_capacity(n_pos + n_neg);
+    for (count, means, label) in
+        [(n_pos, &pos_means, 1.0), (n_neg, &neg_means, -1.0)]
+    {
+        for _ in 0..count {
+            let m = &means[rng.usize(means.len())];
+            let row: Vec<f64> = (0..p)
+                .map(|j| m[j] + scales[j] * rng.normal())
+                .collect();
+            rows.push(row);
+            y.push(label);
+        }
+    }
+    // Shuffle so class blocks are interleaved as in real files.
+    let mut idx: Vec<usize> = (0..rows.len()).collect();
+    rng.shuffle(&mut idx);
+    let rows: Vec<Vec<f64>> = idx.iter().map(|&i| rows[i].clone()).collect();
+    let y: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+    Dataset::new(spec.name, Mat::from_rows(&rows), y)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a so each data set gets a distinct deterministic stream.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iii_has_29_specs() {
+        assert_eq!(TABLE_III.len(), 29);
+    }
+
+    #[test]
+    fn generate_respects_spec() {
+        let s = spec("Sonar").unwrap();
+        let d = generate(s, 1.0, 1);
+        assert_eq!(d.len(), 208);
+        assert_eq!(d.dim(), 60);
+        assert_eq!(d.n_positive(), 97);
+    }
+
+    #[test]
+    fn scaling_shrinks_with_balance() {
+        let s = spec("Abalone").unwrap();
+        let d = generate(s, 0.1, 1);
+        assert_eq!(d.n_positive(), 69);
+        assert_eq!(d.n_negative(), 349);
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = spec("Pima").unwrap();
+        let a = generate(s, 0.5, 9);
+        let b = generate(s, 0.5, 9);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn distinct_datasets_differ() {
+        let a = generate(spec("Pima").unwrap(), 0.5, 9);
+        let b = generate(spec("CMC").unwrap(), 0.5, 9);
+        assert_ne!(a.x.data.len(), b.x.data.len());
+    }
+
+    #[test]
+    fn table_iv_names_are_largest_13() {
+        let names = table_iv_names();
+        assert_eq!(names.len(), 13);
+        assert!(names.contains(&"Nursery"));
+        assert!(names.contains(&"Banknote"));
+        assert!(!names.contains(&"Hepatitis"));
+    }
+
+    #[test]
+    fn table_v_excludes_huge() {
+        let names = table_v_names();
+        assert_eq!(names.len(), 26);
+        assert!(!names.contains(&"Adult"));
+        assert!(!names.contains(&"credit card"));
+        assert!(!names.contains(&"Accelerometer"));
+    }
+
+    #[test]
+    fn separable_spec_is_learnable() {
+        // quick sanity: a high-separation mimic should have classes with
+        // distinct means along some direction
+        let s = spec("Banknote").unwrap();
+        let d = generate(s, 0.2, 3);
+        let mut mp = vec![0.0; d.dim()];
+        let mut mn = vec![0.0; d.dim()];
+        for i in 0..d.len() {
+            let target = if d.y[i] > 0.0 { &mut mp } else { &mut mn };
+            for j in 0..d.dim() {
+                target[j] += d.x.get(i, j);
+            }
+        }
+        for v in mp.iter_mut() {
+            *v /= d.n_positive() as f64;
+        }
+        for v in mn.iter_mut() {
+            *v /= d.n_negative() as f64;
+        }
+        let gap: f64 = mp
+            .iter()
+            .zip(&mn)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(gap > 1.0, "gap={gap}");
+    }
+}

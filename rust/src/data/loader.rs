@@ -1,0 +1,151 @@
+//! On-disk dataset loaders: LIBSVM sparse format and dense CSV.
+//!
+//! Real benchmark files dropped under `data/real/<Name>.libsvm` (or
+//! `.csv` with the label in the last column) override the synthetic
+//! mimics in `data::benchmark`.
+
+use std::fs;
+use std::path::Path;
+
+use super::Dataset;
+use crate::util::Mat;
+use anyhow::{bail, Context};
+
+/// Parse LIBSVM format: `label idx:val idx:val ...` (1-based indices).
+pub fn parse_libsvm(text: &str) -> anyhow::Result<Dataset> {
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .context("missing label")?
+            .parse()
+            .with_context(|| format!("bad label at line {}", lineno + 1))?;
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .with_context(|| format!("bad feature '{tok}' at line {}", lineno + 1))?;
+            let i: usize = i.parse()?;
+            let v: f64 = v.parse()?;
+            if i == 0 {
+                bail!("LIBSVM indices are 1-based (line {})", lineno + 1);
+            }
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        rows.push(feats);
+        y.push(label);
+    }
+    if rows.is_empty() {
+        bail!("empty LIBSVM file");
+    }
+    let mut x = Mat::zeros(rows.len(), max_idx);
+    for (r, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x.set(r, j, v);
+        }
+    }
+    Ok(Dataset::new("libsvm", x, y))
+}
+
+/// Parse dense CSV with the label in the last column (+1/-1 or 0/1).
+pub fn parse_csv(text: &str) -> anyhow::Result<Dataset> {
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        // skip a non-numeric header row
+        let cells: Vec<&str> = line.split(',').collect();
+        if lineno == 0 && cells[0].parse::<f64>().is_err() {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> =
+            cells.iter().map(|c| c.trim().parse::<f64>()).collect();
+        let vals =
+            vals.with_context(|| format!("bad number at line {}", lineno + 1))?;
+        if vals.len() < 2 {
+            bail!("need >= 1 feature + label at line {}", lineno + 1);
+        }
+        let (feat, label) = vals.split_at(vals.len() - 1);
+        rows.push(feat.to_vec());
+        y.push(if label[0] > 0.0 { 1.0 } else { -1.0 });
+    }
+    if rows.is_empty() {
+        bail!("empty CSV file");
+    }
+    Ok(Dataset::new("csv", Mat::from_rows(&rows), y))
+}
+
+/// Try to load a real data set for a benchmark name.
+pub fn load_real(name: &str) -> anyhow::Result<Dataset> {
+    let base = Path::new("data").join("real");
+    let libsvm = base.join(format!("{name}.libsvm"));
+    if libsvm.exists() {
+        let mut d = parse_libsvm(&fs::read_to_string(&libsvm)?)?;
+        d.name = name.to_string();
+        return Ok(d);
+    }
+    let csv = base.join(format!("{name}.csv"));
+    if csv.exists() {
+        let mut d = parse_csv(&fs::read_to_string(&csv)?)?;
+        d.name = name.to_string();
+        return Ok(d);
+    }
+    bail!("no real file for {name}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn libsvm_roundtrip() {
+        let d = parse_libsvm("+1 1:0.5 3:1.5\n-1 2:2.0\n").unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.dim(), 3);
+        assert_eq!(d.x.get(0, 0), 0.5);
+        assert_eq!(d.x.get(0, 2), 1.5);
+        assert_eq!(d.x.get(1, 1), 2.0);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn libsvm_rejects_zero_index() {
+        assert!(parse_libsvm("+1 0:1.0\n").is_err());
+    }
+
+    #[test]
+    fn libsvm_skips_comments_and_blank() {
+        let d = parse_libsvm("# hi\n\n+1 1:1\n").unwrap();
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn csv_with_header() {
+        let d = parse_csv("f1,f2,label\n1.0,2.0,1\n3.0,4.0,0\n").unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+        assert_eq!(d.x.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn csv_bad_number_errors() {
+        assert!(parse_csv("1.0,x,1\n").is_err());
+    }
+
+    #[test]
+    fn load_real_missing_is_err() {
+        assert!(load_real("DefinitelyNotADataset").is_err());
+    }
+}

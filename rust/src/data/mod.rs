@@ -1,0 +1,162 @@
+//! Datasets: the paper's 6 artificial sets, a Table-III-mimic benchmark
+//! fleet, an MNIST-like generator, and on-disk loaders (LIBSVM/CSV) for
+//! dropping in real data.
+
+pub mod benchmark;
+pub mod loader;
+pub mod mnist_like;
+pub mod split;
+pub mod synthetic;
+
+use crate::util::Mat;
+
+/// A labelled dataset: features `x` (l × p) and labels `y` in {+1, -1}.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Mat,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Mat, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows, y.len(), "feature/label length mismatch");
+        assert!(
+            y.iter().all(|&v| v == 1.0 || v == -1.0),
+            "labels must be +/-1"
+        );
+        Dataset { name: name.to_string(), x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    pub fn n_positive(&self) -> usize {
+        self.y.iter().filter(|&&v| v > 0.0).count()
+    }
+
+    pub fn n_negative(&self) -> usize {
+        self.len() - self.n_positive()
+    }
+
+    /// Subset by row indices.
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Only the positive-class samples (OC-SVM trains on these).
+    pub fn positives(&self) -> Dataset {
+        let idx: Vec<usize> =
+            (0..self.len()).filter(|&i| self.y[i] > 0.0).collect();
+        self.select(&idx)
+    }
+
+    /// Standardise features to zero mean / unit variance (in place),
+    /// returning the (mean, std) per column so test data can reuse them.
+    pub fn standardize(&mut self) -> (Vec<f64>, Vec<f64>) {
+        let (l, p) = (self.x.rows, self.x.cols);
+        let mut mean = vec![0.0; p];
+        let mut std = vec![0.0; p];
+        for i in 0..l {
+            for (j, m) in mean.iter_mut().enumerate() {
+                *m += self.x.get(i, j);
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= l.max(1) as f64;
+        }
+        for i in 0..l {
+            for j in 0..p {
+                let d = self.x.get(i, j) - mean[j];
+                std[j] += d * d;
+            }
+        }
+        for s in std.iter_mut() {
+            *s = (*s / l.max(1) as f64).sqrt().max(1e-12);
+        }
+        for i in 0..l {
+            for j in 0..p {
+                let v = (self.x.get(i, j) - mean[j]) / std[j];
+                self.x.set(i, j, v);
+            }
+        }
+        (mean, std)
+    }
+
+    /// Apply a previously computed standardisation.
+    pub fn apply_standardize(&mut self, mean: &[f64], std: &[f64]) {
+        for i in 0..self.x.rows {
+            for j in 0..self.x.cols {
+                let v = (self.x.get(i, j) - mean[j]) / std[j];
+                self.x.set(i, j, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = Mat::from_rows(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![5.0, 6.0],
+            vec![7.0, 8.0],
+        ]);
+        Dataset::new("tiny", x, vec![1.0, -1.0, 1.0, -1.0])
+    }
+
+    #[test]
+    fn counts() {
+        let d = tiny();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.n_positive(), 2);
+        assert_eq!(d.n_negative(), 2);
+    }
+
+    #[test]
+    fn positives_filters() {
+        let d = tiny().positives();
+        assert_eq!(d.len(), 2);
+        assert!(d.y.iter().all(|&v| v == 1.0));
+        assert_eq!(d.x.row(0), &[1.0, 2.0]);
+        assert_eq!(d.x.row(1), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = tiny();
+        d.standardize();
+        for j in 0..2 {
+            let mean: f64 =
+                (0..4).map(|i| d.x.get(i, j)).sum::<f64>() / 4.0;
+            let var: f64 =
+                (0..4).map(|i| d.x.get(i, j).powi(2)).sum::<f64>() / 4.0;
+            assert!(mean.abs() < 1e-9);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "labels")]
+    fn rejects_bad_labels() {
+        let x = Mat::zeros(1, 1);
+        Dataset::new("bad", x, vec![0.5]);
+    }
+}

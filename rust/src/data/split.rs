@@ -1,0 +1,102 @@
+//! Train/test splitting and k-fold cross-validation indices, matching the
+//! paper's protocol ("four-fifths of the random samples for training and
+//! the other fifth for test").
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// Random train/test split with the given training fraction.
+pub fn train_test(d: &Dataset, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<usize> = (0..d.len()).collect();
+    rng.shuffle(&mut idx);
+    let n_train = ((d.len() as f64) * train_frac).round() as usize;
+    let n_train = n_train.clamp(1, d.len().saturating_sub(1).max(1));
+    let (tr, te) = idx.split_at(n_train);
+    (d.select(tr), d.select(te))
+}
+
+/// Stratified split: preserves the class ratio in both halves.
+pub fn train_test_stratified(
+    d: &Dataset,
+    train_frac: f64,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let mut rng = Rng::new(seed);
+    let mut pos: Vec<usize> = (0..d.len()).filter(|&i| d.y[i] > 0.0).collect();
+    let mut neg: Vec<usize> = (0..d.len()).filter(|&i| d.y[i] < 0.0).collect();
+    rng.shuffle(&mut pos);
+    rng.shuffle(&mut neg);
+    let mut tr = Vec::new();
+    let mut te = Vec::new();
+    for class in [pos, neg] {
+        let n_train = ((class.len() as f64) * train_frac).round() as usize;
+        let n_train = n_train.min(class.len());
+        tr.extend_from_slice(&class[..n_train]);
+        te.extend_from_slice(&class[n_train..]);
+    }
+    rng.shuffle(&mut tr);
+    rng.shuffle(&mut te);
+    (d.select(&tr), d.select(&te))
+}
+
+/// k-fold CV index pairs (train_idx, val_idx).
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n);
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut folds = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = n * f / k;
+        let hi = n * (f + 1) / k;
+        let val: Vec<usize> = idx[lo..hi].to_vec();
+        let mut train: Vec<usize> = idx[..lo].to_vec();
+        train.extend_from_slice(&idx[hi..]);
+        folds.push((train, val));
+    }
+    folds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussians;
+
+    #[test]
+    fn split_sizes() {
+        let d = gaussians(50, 1.0, 1);
+        let (tr, te) = train_test(&d, 0.8, 2);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+
+    #[test]
+    fn stratified_preserves_ratio() {
+        let d = gaussians(50, 1.0, 3); // 50/50
+        let (tr, te) = train_test_stratified(&d, 0.8, 4);
+        assert_eq!(tr.n_positive(), 40);
+        assert_eq!(tr.n_negative(), 40);
+        assert_eq!(te.n_positive(), 10);
+        assert_eq!(te.n_negative(), 10);
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let d = gaussians(30, 1.0, 5);
+        let (tr, te) = train_test(&d, 0.75, 6);
+        assert_eq!(tr.len() + te.len(), d.len());
+    }
+
+    #[test]
+    fn kfold_covers_everything_once() {
+        let folds = kfold(25, 5, 7);
+        assert_eq!(folds.len(), 5);
+        let mut all_val: Vec<usize> = folds.iter().flat_map(|f| f.1.clone()).collect();
+        all_val.sort_unstable();
+        assert_eq!(all_val, (0..25).collect::<Vec<_>>());
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), 25);
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! The paper's six artificial data sets (Figs. 4 and 7):
+//! three 2-D Gaussian pairs (μ± = ±1, ±2, ±5), circle, exclusive (XOR)
+//! and spiral, generated exactly as §5.1 describes.
+
+use super::Dataset;
+use crate::util::{Mat, Rng};
+
+/// Two-class isotropic Gaussians N(±mu, I) in 2-D, `n` points per class.
+pub fn gaussians(n_per_class: usize, mu: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::with_capacity(2 * n_per_class);
+    let mut y = Vec::with_capacity(2 * n_per_class);
+    for _ in 0..n_per_class {
+        rows.push(vec![rng.normal_ms(mu, 1.0), rng.normal_ms(mu, 1.0)]);
+        y.push(1.0);
+    }
+    for _ in 0..n_per_class {
+        rows.push(vec![rng.normal_ms(-mu, 1.0), rng.normal_ms(-mu, 1.0)]);
+        y.push(-1.0);
+    }
+    Dataset::new(&format!("gauss_mu{mu}"), Mat::from_rows(&rows), y)
+}
+
+/// Circle data: positives inside radius `r_in`, negatives on an annulus.
+pub fn circle(n_per_class: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for _ in 0..n_per_class {
+        // inner disk, radius ~ 1
+        let theta = rng.range(0.0, std::f64::consts::TAU);
+        let r = rng.f64().sqrt() * 1.0;
+        rows.push(vec![r * theta.cos(), r * theta.sin()]);
+        y.push(1.0);
+    }
+    for _ in 0..n_per_class {
+        // annulus radius in [1.8, 2.8]
+        let theta = rng.range(0.0, std::f64::consts::TAU);
+        let r = rng.range(1.8, 2.8);
+        rows.push(vec![r * theta.cos(), r * theta.sin()]);
+        y.push(-1.0);
+    }
+    Dataset::new("circle", Mat::from_rows(&rows), y)
+}
+
+/// Exclusive (XOR) data: positives in quadrants I/III, negatives II/IV.
+pub fn exclusive(n_per_class: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    let half = n_per_class / 2;
+    for class in [1.0f64, -1.0] {
+        let n = n_per_class;
+        for k in 0..n {
+            let (sx, sy) = if class > 0.0 {
+                if k < half { (1.0, 1.0) } else { (-1.0, -1.0) }
+            } else if k < half {
+                (1.0, -1.0)
+            } else {
+                (-1.0, 1.0)
+            };
+            rows.push(vec![
+                rng.normal_ms(1.5 * sx, 0.6),
+                rng.normal_ms(1.5 * sy, 0.6),
+            ]);
+            y.push(class);
+        }
+    }
+    Dataset::new("exclusive", Mat::from_rows(&rows), y)
+}
+
+/// Two interleaved Archimedean spirals.
+pub fn spiral(n_per_class: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for class in [1.0f64, -1.0] {
+        let phase = if class > 0.0 { 0.0 } else { std::f64::consts::PI };
+        for k in 0..n_per_class {
+            let t = 0.25 + 3.0 * std::f64::consts::PI * (k as f64)
+                / (n_per_class as f64);
+            let r = 0.35 * t;
+            let noise = 0.08;
+            rows.push(vec![
+                r * (t + phase).cos() + rng.normal_ms(0.0, noise),
+                r * (t + phase).sin() + rng.normal_ms(0.0, noise),
+            ]);
+            y.push(class);
+        }
+    }
+    Dataset::new("spiral", Mat::from_rows(&rows), y)
+}
+
+/// One-class variants (Fig. 7): same shapes but with the negative class
+/// reduced to 20% of its size, positives as normal data. For Fig. 7 the
+/// Gaussian means follow the paper: μ+ = 0.5 vs μ- ∈ {0.2, -0.2, -1}.
+pub fn oneclass_gaussians(n_pos: usize, mu_neg: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let n_neg = n_pos / 5;
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for _ in 0..n_pos {
+        rows.push(vec![rng.normal_ms(0.5, 1.0), rng.normal_ms(0.5, 1.0)]);
+        y.push(1.0);
+    }
+    for _ in 0..n_neg {
+        rows.push(vec![rng.normal_ms(mu_neg, 1.0), rng.normal_ms(mu_neg, 1.0)]);
+        y.push(-1.0);
+    }
+    Dataset::new(&format!("oc_gauss_neg{mu_neg}"), Mat::from_rows(&rows), y)
+}
+
+/// Downsample the negative class to `frac` of its size (Fig. 7 setup).
+pub fn reduce_negatives(d: &Dataset, frac: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let pos: Vec<usize> = (0..d.len()).filter(|&i| d.y[i] > 0.0).collect();
+    let neg: Vec<usize> = (0..d.len()).filter(|&i| d.y[i] < 0.0).collect();
+    let keep = ((neg.len() as f64) * frac).round().max(1.0) as usize;
+    let chosen = rng.sample_indices(neg.len(), keep);
+    let mut idx = pos;
+    idx.extend(chosen.iter().map(|&k| neg[k]));
+    d.select(&idx)
+}
+
+/// All six artificial classification sets at the paper's sizes (scaled).
+pub fn all_artificial(scale: f64, seed: u64) -> Vec<Dataset> {
+    let n1 = ((1000.0 * scale) as usize).max(40);
+    let n2 = ((500.0 * scale) as usize).max(40);
+    vec![
+        gaussians(n1, 1.0, seed),
+        gaussians(n1, 2.0, seed + 1),
+        gaussians(n1, 5.0, seed + 2),
+        circle(n2, seed + 3),
+        exclusive(n2, seed + 4),
+        spiral(n2, seed + 5),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussians_shapes_and_balance() {
+        let d = gaussians(100, 2.0, 1);
+        assert_eq!(d.len(), 200);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.n_positive(), 100);
+    }
+
+    #[test]
+    fn gaussians_means_separate() {
+        let d = gaussians(500, 5.0, 2);
+        let mean_pos: f64 = (0..d.len())
+            .filter(|&i| d.y[i] > 0.0)
+            .map(|i| d.x.get(i, 0))
+            .sum::<f64>()
+            / 500.0;
+        assert!((mean_pos - 5.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn circle_radii_separate() {
+        let d = circle(200, 3);
+        for i in 0..d.len() {
+            let r = (d.x.get(i, 0).powi(2) + d.x.get(i, 1).powi(2)).sqrt();
+            if d.y[i] > 0.0 {
+                assert!(r <= 1.0 + 1e-9);
+            } else {
+                assert!((1.8..=2.8).contains(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn exclusive_is_xorish() {
+        let d = exclusive(200, 4);
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let sign = d.x.get(i, 0).signum() * d.x.get(i, 1).signum();
+            if sign == d.y[i].signum() {
+                correct += 1;
+            }
+        }
+        // most points should match the XOR pattern (noise flips a few)
+        assert!(correct as f64 / d.len() as f64 > 0.85);
+    }
+
+    #[test]
+    fn spiral_balanced() {
+        let d = spiral(150, 5);
+        assert_eq!(d.n_positive(), 150);
+        assert_eq!(d.n_negative(), 150);
+    }
+
+    #[test]
+    fn reduce_negatives_keeps_fraction() {
+        let d = gaussians(100, 1.0, 6);
+        let r = reduce_negatives(&d, 0.2, 7);
+        assert_eq!(r.n_positive(), 100);
+        assert_eq!(r.n_negative(), 20);
+    }
+
+    #[test]
+    fn all_artificial_has_six() {
+        let ds = all_artificial(0.05, 8);
+        assert_eq!(ds.len(), 6);
+        for d in &ds {
+            assert!(d.len() >= 80);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gaussians(10, 1.0, 9);
+        let b = gaussians(10, 1.0, 9);
+        assert_eq!(a.x.data, b.x.data);
+    }
+}

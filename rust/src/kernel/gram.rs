@@ -1,0 +1,172 @@
+//! Gram matrix construction: full K, labelled Q = diag(y) K diag(y),
+//! and single-row computation for cache-driven solvers.
+//!
+//! The full builders exploit symmetry (compute the upper triangle once)
+//! and, for RBF, hoist the squared-norm vector out of the pair loop —
+//! mirroring the structure of the L1 Pallas kernel.
+
+use super::KernelKind;
+use crate::util::linalg::dot;
+use crate::util::Mat;
+
+/// Full Gram matrix K(X, X) (symmetric).
+pub fn full_gram(x: &Mat, kernel: KernelKind) -> Mat {
+    let l = x.rows;
+    let mut k = Mat::zeros(l, l);
+    match kernel {
+        KernelKind::Linear => {
+            for i in 0..l {
+                let xi = x.row(i);
+                for j in 0..=i {
+                    let v = dot(xi, x.row(j)) + 1.0;
+                    k.set(i, j, v);
+                    k.set(j, i, v);
+                }
+            }
+        }
+        KernelKind::Rbf { gamma } => {
+            // ||xi - xj||^2 = ni + nj - 2 xi.xj  (one-pass norms)
+            let norms: Vec<f64> = (0..l).map(|i| dot(x.row(i), x.row(i))).collect();
+            for i in 0..l {
+                let xi = x.row(i);
+                k.set(i, i, 1.0);
+                for j in 0..i {
+                    let d = (norms[i] + norms[j] - 2.0 * dot(xi, x.row(j))).max(0.0);
+                    let v = (-gamma * d).exp();
+                    k.set(i, j, v);
+                    k.set(j, i, v);
+                }
+            }
+        }
+    }
+    k
+}
+
+/// Labelled Gram matrix Q = diag(y) K diag(y).
+pub fn full_q(x: &Mat, y: &[f64], kernel: KernelKind) -> Mat {
+    let mut q = full_gram(x, kernel);
+    let l = x.rows;
+    for i in 0..l {
+        for j in 0..l {
+            let v = q.get(i, j) * y[i] * y[j];
+            q.set(i, j, v);
+        }
+    }
+    q
+}
+
+/// One row of K(X, X) (for row-cache solvers).
+pub fn gram_row(x: &Mat, i: usize, kernel: KernelKind, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), x.rows);
+    let xi = x.row(i);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = kernel.eval(xi, x.row(j));
+    }
+}
+
+/// One row of Q = diag(y) K diag(y).
+pub fn q_row(x: &Mat, y: &[f64], i: usize, kernel: KernelKind, out: &mut [f64]) {
+    gram_row(x, i, kernel, out);
+    let yi = y[i];
+    for (j, o) in out.iter_mut().enumerate() {
+        *o *= yi * y[j];
+    }
+}
+
+/// Rectangular Gram block K(A, B) (decision function path).
+pub fn cross_gram(a: &Mat, b: &Mat, kernel: KernelKind) -> Mat {
+    let mut k = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let ai = a.row(i);
+        let row = k.row_mut(i);
+        for (j, o) in row.iter_mut().enumerate() {
+            *o = kernel.eval(ai, b.row(j));
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat3() -> Mat {
+        Mat::from_rows(&[vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 2.0]])
+    }
+
+    #[test]
+    fn gram_matches_eval_linear() {
+        let x = mat3();
+        let k = full_gram(&x, KernelKind::Linear);
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = KernelKind::Linear.eval(x.row(i), x.row(j));
+                assert!((k.get(i, j) - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matches_eval_rbf() {
+        let x = mat3();
+        let kk = KernelKind::Rbf { gamma: 0.7 };
+        let k = full_gram(&x, kk);
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = kk.eval(x.row(i), x.row(j));
+                assert!((k.get(i, j) - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn q_signs() {
+        let x = mat3();
+        let y = vec![1.0, -1.0, 1.0];
+        let q = full_q(&x, &y, KernelKind::Linear);
+        let k = full_gram(&x, KernelKind::Linear);
+        assert_eq!(q.get(0, 1), -k.get(0, 1));
+        assert_eq!(q.get(0, 2), k.get(0, 2));
+    }
+
+    #[test]
+    fn q_row_matches_full() {
+        let x = mat3();
+        let y = vec![1.0, -1.0, 1.0];
+        let kk = KernelKind::Rbf { gamma: 0.3 };
+        let q = full_q(&x, &y, kk);
+        let mut row = vec![0.0; 3];
+        q_row(&x, &y, 1, kk, &mut row);
+        for j in 0..3 {
+            assert!((row[j] - q.get(1, j)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cross_gram_rect() {
+        let a = mat3();
+        let b = Mat::from_rows(&[vec![1.0, 1.0]]);
+        let k = cross_gram(&a, &b, KernelKind::Linear);
+        assert_eq!(k.rows, 3);
+        assert_eq!(k.cols, 1);
+        assert_eq!(k.get(1, 0), 2.0); // [1,0].[1,1] + 1
+    }
+
+    #[test]
+    fn rbf_gram_is_psd() {
+        let x = Mat::from_rows(&[
+            vec![0.1, 0.2],
+            vec![-1.0, 0.4],
+            vec![2.0, -0.3],
+            vec![0.5, 0.5],
+        ]);
+        let k = full_gram(&x, KernelKind::Rbf { gamma: 1.0 });
+        // all 2x2 principal minors nonnegative
+        for i in 0..4 {
+            for j in 0..4 {
+                let det = k.get(i, i) * k.get(j, j) - k.get(i, j) * k.get(j, i);
+                assert!(det > -1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Kernels and Gram-matrix machinery (§2.1 of the paper).
+//!
+//! The linear kernel folds the bias into the feature map, Φ(x) ← [x, 1]
+//! (paper Eq. 2 — the "bounded SVM" form), so ⟨Φ(a),Φ(b)⟩ = a·b + 1.
+//! RBF is κ(a,b) = exp(-γ‖a−b‖²) (the paper's σ grid maps to
+//! γ = 1/(2σ²)).
+
+pub mod gram;
+
+pub use gram::{full_gram, full_q, gram_row, q_row};
+
+use crate::util::linalg::{dot, sq_dist};
+
+/// Which kernel a model uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelKind {
+    /// a·b + 1  (bias folded into the feature map).
+    Linear,
+    /// exp(-gamma * ||a-b||^2).
+    Rbf { gamma: f64 },
+}
+
+impl KernelKind {
+    /// Build from the paper's σ parameter: γ = 1 / (2σ²).
+    pub fn rbf_from_sigma(sigma: f64) -> Self {
+        KernelKind::Rbf { gamma: 1.0 / (2.0 * sigma * sigma) }
+    }
+
+    /// κ(a, b).
+    #[inline]
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        match *self {
+            KernelKind::Linear => dot(a, b) + 1.0,
+            KernelKind::Rbf { gamma } => (-gamma * sq_dist(a, b)).exp(),
+        }
+    }
+
+    /// κ(a, a) — the screening rule needs ‖Z_i‖ = sqrt(κ(x_i, x_i)).
+    #[inline]
+    pub fn self_eval(&self, a: &[f64]) -> f64 {
+        match *self {
+            KernelKind::Linear => dot(a, a) + 1.0,
+            KernelKind::Rbf { .. } => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Linear => "linear",
+            KernelKind::Rbf { .. } => "rbf",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_includes_bias() {
+        let k = KernelKind::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 12.0);
+        assert_eq!(k.self_eval(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn rbf_identity_and_decay() {
+        let k = KernelKind::Rbf { gamma: 0.5 };
+        assert!((k.eval(&[1.0], &[1.0]) - 1.0).abs() < 1e-12);
+        let far = k.eval(&[0.0], &[10.0]);
+        assert!(far < 1e-20);
+        assert_eq!(k.self_eval(&[3.0]), 1.0);
+    }
+
+    #[test]
+    fn rbf_from_sigma_maps() {
+        let k = KernelKind::rbf_from_sigma(2.0);
+        if let KernelKind::Rbf { gamma } = k {
+            assert!((gamma - 1.0 / 8.0).abs() < 1e-12);
+        } else {
+            panic!("wrong kind");
+        }
+    }
+
+    #[test]
+    fn rbf_symmetry() {
+        let k = KernelKind::Rbf { gamma: 0.3 };
+        let a = [1.0, -2.0, 0.5];
+        let b = [0.0, 1.0, 2.0];
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+}

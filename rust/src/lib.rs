@@ -1,0 +1,44 @@
+//! # SRBO-ν-SVM
+//!
+//! A production reproduction of *"A Safe Screening Rule with Bi-level
+//! Optimization of ν Support Vector Machine"* (Yang et al., 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the grid-search training service: the
+//!   sequential SRBO ν-path (Algorithm 1), the DCDM solver (Algorithm 2),
+//!   ν-SVM / C-SVM / OC-SVM / KDE models, Gram caching, metrics, and the
+//!   benchmark harness that regenerates every table and figure of the
+//!   paper's evaluation.
+//! * **Layer 2/1 (python/, build-time only)** — JAX graphs composed from
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`, executed
+//!   here through [`runtime`] on the PJRT CPU client. Python is never on
+//!   the request path.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use srbo::data::synthetic;
+//! use srbo::kernel::KernelKind;
+//! use srbo::svm::nu::NuSvm;
+//!
+//! let ds = synthetic::gaussians(200, 1.0, 42);
+//! let model = NuSvm::train(&ds.x, &ds.y, 0.3, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+//! let acc = model.accuracy(&ds.x, &ds.y);
+//! assert!(acc > 0.5);
+//! ```
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod kernel;
+pub mod prop;
+pub mod qp;
+pub mod report;
+pub mod runtime;
+pub mod screening;
+pub mod stats;
+pub mod svm;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,268 @@
+//! `srbo` — the SRBO-ν-SVM training service CLI.
+//!
+//! Subcommands:
+//!   train      train one ν-SVM / OC-SVM on a dataset (screened path)
+//!   path       run a full SRBO ν-path and print screening telemetry
+//!   grid       grid-search (ν × σ) model selection via the coordinator
+//!   datasets   list the built-in Table-III benchmark fleet
+//!   runtime    load + smoke-test the PJRT artifacts
+//!
+//! Examples:
+//!   srbo path --dataset gauss2 --kernel rbf --sigma 1.0 --nu-from 0.1 \
+//!        --nu-to 0.5 --nu-step 0.02
+//!   srbo grid --dataset Banknote --scale 0.2
+//!   srbo runtime
+
+use srbo::coordinator::grid::select_model;
+use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
+use srbo::data::{benchmark, split, synthetic, Dataset};
+use srbo::kernel::KernelKind;
+use srbo::runtime::Runtime;
+use srbo::stats::accuracy;
+use srbo::svm::nu::NuSvm;
+use srbo::util::cli::Args;
+use srbo::util::tsv::f;
+use srbo::util::Timer;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: srbo <train|path|grid|datasets|runtime> [options]\n\
+         common options:\n\
+           --dataset NAME    gauss1|gauss2|gauss5|circle|exclusive|spiral|<TableIII name>\n\
+           --scale S         shrink benchmark sizes (default 0.2)\n\
+           --seed N          RNG seed (default 42)\n\
+           --kernel K        linear|rbf (default rbf)\n\
+           --sigma S         RBF sigma (default 1.0)\n\
+           --nu V            single nu for `train` (default 0.3)\n\
+           --nu-from/--nu-to/--nu-step   path grid (default 0.1..0.5 step 0.02)\n\
+           --solver S        dcdm|dcdm-paper|gqp (default dcdm)\n\
+           --no-screening    disable SRBO\n\
+           --oneclass        OC-SVM family\n\
+           --workers N       grid workers (default: cores)"
+    );
+    std::process::exit(2);
+}
+
+fn load_dataset(args: &Args) -> Dataset {
+    let name = args.get_or("dataset", "gauss2");
+    let seed = args.get_u64("seed", 42);
+    let scale = args.get_f64("scale", 0.2);
+    let n = args.get_usize("n", (1000.0 * scale) as usize);
+    match name.as_str() {
+        "gauss1" => synthetic::gaussians(n, 1.0, seed),
+        "gauss2" => synthetic::gaussians(n, 2.0, seed),
+        "gauss5" => synthetic::gaussians(n, 5.0, seed),
+        "circle" => synthetic::circle(n, seed),
+        "exclusive" => synthetic::exclusive(n, seed),
+        "spiral" => synthetic::spiral(n, seed),
+        other => match benchmark::spec(other) {
+            Some(s) => benchmark::generate(s, scale, seed),
+            None => {
+                eprintln!("unknown dataset {other}");
+                usage()
+            }
+        },
+    }
+}
+
+fn kernel_of(args: &Args) -> KernelKind {
+    match args.get_or("kernel", "rbf").as_str() {
+        "linear" => KernelKind::Linear,
+        "rbf" => KernelKind::rbf_from_sigma(args.get_f64("sigma", 1.0)),
+        other => {
+            eprintln!("unknown kernel {other}");
+            usage()
+        }
+    }
+}
+
+fn solver_of(args: &Args) -> SolverChoice {
+    match args.get_or("solver", "dcdm").as_str() {
+        "dcdm" => SolverChoice::Dcdm,
+        "dcdm-paper" => SolverChoice::DcdmPaper,
+        "gqp" => SolverChoice::Gqp,
+        other => {
+            eprintln!("unknown solver {other}");
+            usage()
+        }
+    }
+}
+
+fn nu_grid(args: &Args) -> Vec<f64> {
+    let from = args.get_f64("nu-from", 0.1);
+    let to = args.get_f64("nu-to", 0.5);
+    let step = args.get_f64("nu-step", 0.002);
+    let mut out = Vec::new();
+    let mut v = from;
+    while v < to + 1e-12 {
+        out.push(v);
+        v += step;
+    }
+    out
+}
+
+fn cmd_train(args: &Args) {
+    let d = load_dataset(args);
+    let (train, test) = split::train_test_stratified(&d, 0.8, args.get_u64("seed", 42));
+    let kernel = kernel_of(args);
+    let nu = args.get_f64("nu", 0.3);
+    let t = Timer::start();
+    if args.flag("oneclass") {
+        let pos = train.positives();
+        let m = srbo::svm::oneclass::OcSvm::train(&pos.x, nu, kernel)
+            .expect("training failed");
+        println!(
+            "OC-SVM {} l={} nu={nu} kernel={} rho={:.4}: train {:.3}s, AUC {:.2}%",
+            d.name,
+            pos.len(),
+            kernel.name(),
+            m.rho,
+            t.secs(),
+            m.auc(&test.x, &test.y)
+        );
+    } else {
+        let m = NuSvm::train(&train.x, &train.y, nu, kernel).expect("training failed");
+        println!(
+            "nu-SVM {} l={} nu={nu} kernel={}: train {:.3}s, acc {:.2}%, SVs {}",
+            d.name,
+            train.len(),
+            kernel.name(),
+            t.secs(),
+            m.accuracy(&test.x, &test.y),
+            m.model.n_sv()
+        );
+    }
+}
+
+fn cmd_path(args: &Args) {
+    let d = load_dataset(args);
+    let (train, test) = split::train_test_stratified(&d, 0.8, args.get_u64("seed", 42));
+    let kernel = kernel_of(args);
+    let mut cfg = PathConfig::new(nu_grid(args), kernel);
+    cfg.solver = solver_of(args);
+    cfg.screening = !args.flag("no-screening");
+    let t = Timer::start();
+    let path = if args.flag("oneclass") {
+        let pos = train.positives();
+        NuPath::run_oneclass(&pos.x, &cfg).expect("path failed")
+    } else {
+        NuPath::run(&train.x, &train.y, &cfg).expect("path failed")
+    };
+    let total = t.secs();
+    println!(
+        "path {} kernel={} screening={} solver={:?}: {} grid points in {:.3}s",
+        d.name,
+        kernel.name(),
+        cfg.screening,
+        cfg.solver,
+        path.steps.len(),
+        total
+    );
+    println!(
+        "  avg screening ratio {:.2}%  phase times: {}",
+        path.avg_screening_ratio(),
+        path.metrics
+            .times
+            .entries()
+            .iter()
+            .map(|(k, v)| format!("{k}={}", f(*v, 3)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    if !args.flag("oneclass") {
+        // accuracy along the path
+        let mut best = (0.0, 0.0);
+        for s in &path.steps {
+            let m = NuSvm::from_alpha(
+                &train.x,
+                &train.y,
+                s.alpha.clone(),
+                s.nu,
+                kernel,
+                s.solve_stats.clone(),
+            );
+            let acc = accuracy(&m.predict(&test.x), &test.y);
+            if acc > best.1 {
+                best = (s.nu, acc);
+            }
+        }
+        println!("  best nu={:.3} with test accuracy {:.2}%", best.0, best.1);
+    }
+}
+
+fn cmd_grid(args: &Args) {
+    let d = load_dataset(args);
+    let (train, test) = split::train_test_stratified(&d, 0.8, args.get_u64("seed", 42));
+    let sigmas: Vec<f64> = (-3..=8).map(|i| (2f64).powi(i)).collect();
+    let workers = args.get_usize(
+        "workers",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    let t = Timer::start();
+    let (kernel, nu, acc, results) = select_model(
+        &train,
+        &test,
+        nu_grid(args),
+        &sigmas,
+        !args.flag("no-screening"),
+        workers,
+    );
+    println!(
+        "grid {}: {} arms in {:.2}s -> best kernel={:?} nu={:.3} acc={:.2}%",
+        d.name,
+        results.len(),
+        t.secs(),
+        kernel,
+        nu,
+        acc
+    );
+}
+
+fn cmd_datasets() {
+    println!("{:<20} {:>9} {:>9} {:>9} {:>9}", "name", "instances", "pos", "neg", "dims");
+    for s in benchmark::TABLE_III {
+        println!(
+            "{:<20} {:>9} {:>9} {:>9} {:>9}",
+            s.name, s.instances, s.positive, s.negative, s.features
+        );
+    }
+}
+
+fn cmd_runtime() {
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let mut names = rt.names();
+            names.sort();
+            println!("loaded {} artifacts: {}", names.len(), names.join(", "));
+            // smoke: decision artifact on random-ish data
+            let d = synthetic::gaussians(64, 2.0, 7);
+            let q = srbo::kernel::full_q(&d.x, &d.y, KernelKind::Rbf { gamma: 0.5 });
+            let v = vec![1.0 / d.len() as f64; d.len()];
+            let qv = rt.qmatvec(&q, &v).expect("qmatvec");
+            let mut native = vec![0.0; d.len()];
+            q.matvec(&v, &mut native);
+            let err = qv
+                .iter()
+                .zip(&native)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            println!("qmatvec artifact max |err| vs native: {err:.2e}");
+        }
+        Err(e) => {
+            eprintln!("runtime load failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("path") => cmd_path(&args),
+        Some("grid") => cmd_grid(&args),
+        Some("datasets") => cmd_datasets(),
+        Some("runtime") => cmd_runtime(),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal property-based testing framework (proptest is not in the
+//! offline crate set).
+//!
+//! Provides seeded generators and an N-case runner with first-failure
+//! reporting including the case seed, so failures are reproducible:
+//!
+//! ```
+//! use srbo::prop::{run_cases, Gen};
+//! run_cases(64, 0xFEED, |g| {
+//!     let v = g.vec_f64(10, -1.0, 1.0);
+//!     assert!(v.iter().all(|x| x.abs() <= 1.0));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen { rng: Rng::new(case_seed), case_seed }
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.usize(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// A random symmetric PSD matrix G = A A^T / cols (well-conditioned
+    /// enough for solver property tests).
+    pub fn psd(&mut self, n: usize) -> crate::util::Mat {
+        let mut a = crate::util::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a.set(i, j, self.rng.normal());
+            }
+        }
+        let mut g = crate::util::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = crate::util::linalg::dot(a.row(i), a.row(j)) / n as f64;
+                g.set(i, j, v);
+                g.set(j, i, v);
+            }
+        }
+        g
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `n` cases of a property; panics with the failing case seed.
+pub fn run_cases<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(n: usize, seed: u64, prop: F) {
+    let mut meta = Rng::new(seed);
+    for case in 0..n {
+        let case_seed = meta.next_u64();
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{n} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_cases(32, 1, |g| {
+            let v = g.vec_f64(8, 0.0, 1.0);
+            assert!(v.iter().all(|x| (0.0..=1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_case() {
+        run_cases(16, 2, |g| {
+            assert!(g.f64(0.0, 1.0) < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn psd_is_symmetric_nonneg_diag() {
+        run_cases(8, 3, |g| {
+            let n = g.usize(2, 10);
+            let m = g.psd(n);
+            for i in 0..n {
+                assert!(m.get(i, i) >= -1e-12);
+                for j in 0..n {
+                    assert!((m.get(i, j) - m.get(j, i)).abs() < 1e-12);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Exact Euclidean projection onto the dual feasible sets
+//! {0 ≤ α ≤ ub} ∩ {eᵀα ≥ ν}  and  {0 ≤ α ≤ ub} ∩ {eᵀα = c}.
+//!
+//! KKT form: the projection is clip(a + t·e, 0, ub) with the scalar
+//! shift t found by bisection on the monotone map t ↦ Σ clip(a+t)
+//! (water-filling).  For the inequality form, t = 0 whenever the plain
+//! box clip already satisfies the halfspace.
+
+use super::ConstraintKind;
+
+/// Project `a` in place onto the feasible set.
+pub fn project(a: &mut [f64], ub: &[f64], constraint: ConstraintKind) {
+    match constraint {
+        ConstraintKind::SumGe(nu) => {
+            let clipped_sum: f64 = a
+                .iter()
+                .zip(ub)
+                .map(|(&v, &u)| v.clamp(0.0, u))
+                .sum();
+            if clipped_sum >= nu - 1e-15 {
+                for (v, &u) in a.iter_mut().zip(ub) {
+                    *v = v.clamp(0.0, u);
+                }
+            } else {
+                shift_to_sum(a, ub, nu);
+            }
+        }
+        ConstraintKind::SumEq(c) => shift_to_sum(a, ub, c),
+    }
+}
+
+/// Overwrite a with clip(a + t, 0, ub), t chosen so the sum equals `target`.
+fn shift_to_sum(a: &mut [f64], ub: &[f64], target: f64) {
+    let sum_at = |a: &[f64], t: f64| -> f64 {
+        a.iter()
+            .zip(ub)
+            .map(|(&v, &u)| (v + t).clamp(0.0, u))
+            .sum()
+    };
+    let max_ub_sum: f64 = ub.iter().sum();
+    // target must be attainable within the box
+    let target = target.clamp(0.0, max_ub_sum);
+    let a_min = a.iter().cloned().fold(f64::INFINITY, f64::min);
+    let a_max = a.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let ub_max = ub.iter().cloned().fold(0.0, f64::max);
+    let mut lo = -(a_max) - 1.0; // sum -> 0
+    let mut hi = ub_max - a_min + 1.0; // sum -> max
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if sum_at(a, mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let t = 0.5 * (lo + hi);
+    for (v, &u) in a.iter_mut().zip(ub) {
+        *v = (*v + t).clamp(0.0, u);
+    }
+}
+
+/// Convenience: projected copy.
+pub fn projected(a: &[f64], ub: &[f64], constraint: ConstraintKind) -> Vec<f64> {
+    let mut out = a.to_vec();
+    project(&mut out, ub, constraint);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::run_cases;
+    use crate::util::linalg::sq_dist;
+
+    #[test]
+    fn noop_when_feasible() {
+        let a = vec![0.2, 0.3];
+        let p = projected(&a, &[1.0, 1.0], ConstraintKind::SumGe(0.4));
+        assert_eq!(p, a);
+    }
+
+    #[test]
+    fn clips_to_box() {
+        let p = projected(&[-0.5, 2.0], &[1.0, 1.0], ConstraintKind::SumGe(0.0));
+        assert_eq!(p, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn shifts_to_halfspace() {
+        let p = projected(&[0.0, 0.0], &[1.0, 1.0], ConstraintKind::SumGe(1.0));
+        assert!((p[0] - 0.5).abs() < 1e-9);
+        assert!((p[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equality_hits_target_both_directions() {
+        let p = projected(&[0.9, 0.9], &[1.0, 1.0], ConstraintKind::SumEq(1.0));
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let p2 = projected(&[0.0, 0.1], &[1.0, 1.0], ConstraintKind::SumEq(1.5));
+        assert!((p2.iter().sum::<f64>() - 1.5).abs() < 1e-9);
+    }
+
+    /// Property: P(a) is feasible and no feasible grid point is closer.
+    #[test]
+    fn projection_is_nearest_point_property() {
+        run_cases(64, 0xBEE, |g| {
+            let n = g.usize(2, 6);
+            let ub: Vec<f64> = (0..n).map(|_| g.f64(0.1, 1.0)).collect();
+            let nu = g.f64(0.0, ub.iter().sum::<f64>() * 0.9);
+            let a = g.vec_f64(n, -1.0, 2.0);
+            let kind = if g.bool() {
+                ConstraintKind::SumGe(nu)
+            } else {
+                ConstraintKind::SumEq(nu)
+            };
+            let p = projected(&a, &ub, kind);
+            // feasibility
+            let sum: f64 = p.iter().sum();
+            for (v, &u) in p.iter().zip(&ub) {
+                assert!(*v >= -1e-9 && *v <= u + 1e-9);
+            }
+            match kind {
+                ConstraintKind::SumGe(v) => assert!(sum >= v - 1e-7),
+                ConstraintKind::SumEq(v) => assert!((sum - v).abs() < 1e-7),
+            }
+            // random feasible competitors are never closer
+            let d_p = sq_dist(&p, &a);
+            for _ in 0..20 {
+                let z: Vec<f64> = (0..n).map(|i| g.f64(0.0, ub[i])).collect();
+                let z = projected(&z, &ub, kind); // make exactly feasible
+                let d_z = sq_dist(&z, &a);
+                assert!(
+                    d_p <= d_z + 1e-6,
+                    "projection not nearest: {d_p} vs {d_z}"
+                );
+            }
+        });
+    }
+}

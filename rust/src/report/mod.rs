@@ -1,0 +1,160 @@
+//! Paper-table reporting: shared row schemas for the bench targets plus
+//! ASCII scatter rendering for the figure benches.
+
+pub mod experiments;
+
+use crate::util::tsv::{f, Table};
+
+/// Standard supervised-comparison row (Tables IV/V).
+#[allow(clippy::too_many_arguments)]
+pub fn supervised_row(
+    table: &mut Table,
+    dataset: &str,
+    c_acc: f64,
+    c_time: f64,
+    nu_acc: f64,
+    nu_time: f64,
+    srbo_acc: f64,
+    srbo_time: f64,
+    screen_ratio: f64,
+    speedup: f64,
+) {
+    table.row(vec![
+        dataset.to_string(),
+        f(c_acc, 2),
+        f(c_time, 4),
+        f(nu_acc, 2),
+        f(nu_time, 4),
+        f(srbo_acc, 2),
+        f(srbo_time, 4),
+        f(screen_ratio, 2),
+        f(speedup, 4),
+    ]);
+}
+
+pub fn supervised_headers() -> Vec<&'static str> {
+    vec![
+        "Dataset",
+        "C-SVM Acc%",
+        "C-SVM T(s)",
+        "nuSVM Acc%",
+        "nuSVM T(s)",
+        "SRBO Acc%",
+        "SRBO T(s)",
+        "Screen%",
+        "Speedup",
+    ]
+}
+
+/// Standard unsupervised row (Tables VI/VII).
+#[allow(clippy::too_many_arguments)]
+pub fn unsupervised_row(
+    table: &mut Table,
+    dataset: &str,
+    kde_auc: f64,
+    kde_time: f64,
+    oc_auc: f64,
+    oc_time: f64,
+    srbo_auc: f64,
+    srbo_time: f64,
+    screen_ratio: f64,
+    speedup: f64,
+) {
+    table.row(vec![
+        dataset.to_string(),
+        f(kde_auc, 2),
+        f(kde_time, 4),
+        f(oc_auc, 2),
+        f(oc_time, 4),
+        f(srbo_auc, 2),
+        f(srbo_time, 4),
+        f(screen_ratio, 2),
+        f(speedup, 4),
+    ]);
+}
+
+pub fn unsupervised_headers() -> Vec<&'static str> {
+    vec![
+        "Dataset",
+        "KDE AUC%",
+        "KDE T(s)",
+        "OCSVM AUC%",
+        "OCSVM T(s)",
+        "SRBO AUC%",
+        "SRBO T(s)",
+        "Screen%",
+        "Speedup",
+    ]
+}
+
+/// ASCII line/scatter plot for figure benches (x ascending).
+pub fn ascii_series(title: &str, xs: &[f64], series: &[(&str, Vec<f64>)]) -> String {
+    let width = 64usize;
+    let height = 16usize;
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::INFINITY, f64::min);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+    let xmin = xs.first().cloned().unwrap_or(0.0);
+    let xmax = xs.last().cloned().unwrap_or(1.0);
+    let xspan = (xmax - xmin).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', '+', 'o', 'x', '#'];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, y) in xs.iter().zip(ys) {
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((ymax - y) / span) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("-- {title} --\n");
+    out.push_str(&format!("ymax={ymax:.3}\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "ymin={ymin:.3}  x: {xmin:.3} .. {xmax:.3}   legend: {}\n",
+        series
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| format!("{}={}", marks[i % marks.len()], n))
+            .collect::<Vec<_>>()
+            .join(" ")
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_align_with_headers() {
+        let mut t = Table::new("T4", &supervised_headers());
+        supervised_row(&mut t, "X", 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0);
+        assert_eq!(t.rows.len(), 1);
+        let mut u = Table::new("T6", &unsupervised_headers());
+        unsupervised_row(&mut u, "X", 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0);
+        assert_eq!(u.rows.len(), 1);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0];
+        let s = ascii_series(
+            "demo",
+            &xs,
+            &[("a", vec![0.0, 1.0, 2.0, 3.0]), ("b", vec![3.0, 2.0, 1.0, 0.0])],
+        );
+        assert!(s.contains("demo"));
+        assert!(s.contains('*'));
+        assert!(s.contains('+'));
+    }
+}

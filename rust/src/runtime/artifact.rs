@@ -1,0 +1,261 @@
+//! PJRT artifact registry: loads `artifacts/*.hlo.txt`, compiles each on
+//! the CPU client once, and exposes typed entry points for the graphs the
+//! coordinator uses (Gram blocks, screening step, DCDM sweeps, decision
+//! scoring).
+//!
+//! All artifact I/O is f32 at fixed padded shapes (see [`super::shapes`]);
+//! the native f64 path remains the exact reference and the runtime path is
+//! cross-validated against it in `rust/tests/runtime_artifacts.rs`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::shapes::{self, F, GM, GN, L, T};
+use crate::screening::ScreenCode;
+use crate::util::Mat;
+
+/// One compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+    pub n_outputs: usize,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the untupled outputs.
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute failed: {e:?}"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffers"))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal failed: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple failed: {e:?}"))?;
+        if parts.len() != self.n_outputs {
+            bail!("expected {} outputs, got {}", self.n_outputs, parts.len());
+        }
+        Ok(parts)
+    }
+}
+
+/// The registry: PJRT client + all compiled artifacts from `artifacts/`.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts`"))?;
+        let mut artifacts = HashMap::new();
+        for line in text.lines().skip(1) {
+            let mut cols = line.split('\t');
+            let (name, _inputs, nouts) = (
+                cols.next().context("manifest name")?,
+                cols.next().context("manifest inputs")?,
+                cols.next().context("manifest outputs")?,
+            );
+            let n_outputs: usize = nouts.parse()?;
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            artifacts.insert(
+                name.to_string(),
+                Artifact { name: name.to_string(), exe, n_outputs },
+            );
+        }
+        if artifacts.is_empty() {
+            bail!("no artifacts in manifest");
+        }
+        Ok(Runtime { client, artifacts, dir })
+    }
+
+    /// Default location (`artifacts/` at the repo root).
+    pub fn load_default() -> Result<Runtime> {
+        Self::load("artifacts")
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn lit_vec(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    fn lit_scalar1(v: f32) -> xla::Literal {
+        xla::Literal::vec1(&[v])
+    }
+
+    /// RBF Gram block via the Pallas artifact (x1: ≤GM rows, x2: ≤GN rows,
+    /// ≤F features).  Returns the un-padded block.
+    pub fn gram_rbf_block(&self, x1: &Mat, x2: &Mat, gamma: f64) -> Result<Mat> {
+        if x1.rows > GM || x2.rows > GN || x1.cols > F || x2.cols > F {
+            bail!("block exceeds artifact shape");
+        }
+        let art = self.get(&format!("gram_rbf_{GM}x{GN}x{F}"))?;
+        let l1 = Self::lit_vec(
+            &shapes::pad_features_f32(x1, GM, F),
+            &[GM as i64, F as i64],
+        )?;
+        let l2 = Self::lit_vec(
+            &shapes::pad_features_f32(x2, GN, F),
+            &[GN as i64, F as i64],
+        )?;
+        let g = Self::lit_scalar1(gamma as f32);
+        let out = art.call(&[l1, l2, g])?;
+        let flat: Vec<f32> = out[0]
+            .to_vec()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let mut m = Mat::zeros(x1.rows, x2.rows);
+        for i in 0..x1.rows {
+            for j in 0..x2.rows {
+                m.set(i, j, flat[i * GN + j] as f64);
+            }
+        }
+        Ok(m)
+    }
+
+    /// Q·v via the qmatvec artifact (l ≤ L).
+    pub fn qmatvec(&self, q: &Mat, v: &[f64]) -> Result<Vec<f64>> {
+        let l = q.rows;
+        if l > L {
+            bail!("problem larger than artifact L");
+        }
+        let art = self.get(&format!("qmatvec_{L}"))?;
+        let ql = Self::lit_vec(&shapes::pad_mat_f32(q, L), &[L as i64, L as i64])?;
+        let vl = Self::lit_vec(&shapes::pad_vec_f32(v, L), &[L as i64])?;
+        let out = art.call(&[ql, vl])?;
+        let flat: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(shapes::unpad_f64(&flat, l))
+    }
+
+    /// Full screening step via the fused L2 artifact.  Returns
+    /// (codes, rho_upper, rho_lower, r).
+    pub fn screen_step(
+        &self,
+        q: &Mat,
+        alpha0: &[f64],
+        delta: &[f64],
+        nu1: f64,
+    ) -> Result<(Vec<ScreenCode>, f64, f64, f64)> {
+        let l = q.rows;
+        if l > L {
+            bail!("problem larger than artifact L");
+        }
+        let art = self.get(&format!("screen_step_{L}"))?;
+        let ql = Self::lit_vec(&shapes::pad_mat_f32(q, L), &[L as i64, L as i64])?;
+        let al = Self::lit_vec(&shapes::pad_vec_f32(alpha0, L), &[L as i64])?;
+        let dl = Self::lit_vec(&shapes::pad_vec_f32(delta, L), &[L as i64])?;
+        let ml = Self::lit_vec(&shapes::mask_f32(l, L), &[L as i64])?;
+        let nul = Self::lit_scalar1(nu1 as f32);
+        let ll = Self::lit_scalar1(l as f32);
+        let out = art.call(&[ql, al, dl, ml, nul, ll])?;
+        let codes_f: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let rho_up: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let rho_lo: Vec<f32> = out[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let r: Vec<f32> = out[3].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let codes = codes_f
+            .iter()
+            .take(l)
+            .map(|&c| {
+                if c == 1.0 {
+                    ScreenCode::Zero
+                } else if c == 2.0 {
+                    ScreenCode::Upper
+                } else {
+                    ScreenCode::Keep
+                }
+            })
+            .collect();
+        Ok((codes, rho_up[0] as f64, rho_lo[0] as f64, r[0] as f64))
+    }
+
+    /// `DCDM_EPOCHS` Algorithm-2 sweeps via the Pallas kernel artifact.
+    pub fn dcdm_sweeps(
+        &self,
+        q: &Mat,
+        alpha: &[f64],
+        ub: &[f64],
+        nu: f64,
+    ) -> Result<Vec<f64>> {
+        let l = q.rows;
+        if l > L {
+            bail!("problem larger than artifact L");
+        }
+        let art = self.get(&format!("dcdm_sweep{}_{L}", shapes::DCDM_EPOCHS))?;
+        let ql = Self::lit_vec(&shapes::pad_mat_f32(q, L), &[L as i64, L as i64])?;
+        let al = Self::lit_vec(&shapes::pad_vec_f32(alpha, L), &[L as i64])?;
+        // padded coordinates get ub = 0 ⇒ inert
+        let ul = Self::lit_vec(&shapes::pad_vec_f32(ub, L), &[L as i64])?;
+        let nul = Self::lit_scalar1(nu as f32);
+        let out = art.call(&[ql, al, ul, nul])?;
+        let flat: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(shapes::unpad_f64(&flat, l))
+    }
+
+    /// Batched RBF decision scores via the Pallas kernel artifact.
+    /// xt ≤ T rows per call (tiles internally), xtr ≤ L rows.
+    pub fn decision_rbf(
+        &self,
+        xt: &Mat,
+        xtr: &Mat,
+        yalpha: &[f64],
+        gamma: f64,
+    ) -> Result<Vec<f64>> {
+        if xtr.rows > L || xt.cols > F || xtr.cols > F {
+            bail!("training set exceeds artifact shape");
+        }
+        let art = self.get(&format!("decision_rbf_{T}x{L}x{F}"))?;
+        let xtr_pad = shapes::pad_features_f32(xtr, L, F);
+        let ya = shapes::pad_vec_f32(yalpha, L);
+        let mut scores = Vec::with_capacity(xt.rows);
+        let mut row0 = 0;
+        while row0 < xt.rows {
+            let hi = (row0 + T).min(xt.rows);
+            let idx: Vec<usize> = (row0..hi).collect();
+            let chunk = xt.select_rows(&idx);
+            let xt_l = Self::lit_vec(
+                &shapes::pad_features_f32(&chunk, T, F),
+                &[T as i64, F as i64],
+            )?;
+            let out = art.call(&[
+                xt_l,
+                Self::lit_vec(&xtr_pad, &[L as i64, F as i64])?,
+                Self::lit_vec(&ya, &[L as i64])?,
+                Self::lit_scalar1(gamma as f32),
+            ])?;
+            let flat: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            scores.extend(flat.iter().take(hi - row0).map(|&s| s as f64));
+            row0 = hi;
+        }
+        Ok(scores)
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) built by
+//! `python/compile/aot.py` and executes them on the `xla` crate's CPU
+//! client.  Python never runs here — HLO text is the interchange format
+//! (see aot.py for why text, not serialized protos).
+
+pub mod artifact;
+pub mod shapes;
+
+pub use artifact::{Artifact, Runtime};

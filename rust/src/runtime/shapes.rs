@@ -1,0 +1,106 @@
+//! Artifact shape constants + padding helpers shared with
+//! `python/compile/aot.py` (keep the two in sync).
+
+/// Padded sample count for screen/dcdm/qmatvec/objective artifacts.
+pub const L: usize = 512;
+/// Padded feature count.
+pub const F: usize = 64;
+/// Gram block rows/cols.
+pub const GM: usize = 256;
+pub const GN: usize = 256;
+/// Decision test-batch rows.
+pub const T: usize = 128;
+/// Epochs per dcdm_sweep artifact call.
+pub const DCDM_EPOCHS: usize = 5;
+
+/// Pad a vector with zeros to `n` (f32 for the PJRT boundary).
+pub fn pad_vec_f32(v: &[f64], n: usize) -> Vec<f32> {
+    assert!(v.len() <= n, "vector longer than pad target");
+    let mut out = vec![0.0f32; n];
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o = x as f32;
+    }
+    out
+}
+
+/// Pad an l×l matrix (row-major f64) into an n×n zero-padded f32 buffer.
+pub fn pad_mat_f32(m: &crate::util::Mat, n: usize) -> Vec<f32> {
+    assert!(m.rows <= n && m.cols <= n);
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..m.rows {
+        let src = m.row(i);
+        let dst = &mut out[i * n..i * n + m.cols];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s as f32;
+        }
+    }
+    out
+}
+
+/// Pad rows×cols feature matrix to rows_p×cols_p.
+pub fn pad_features_f32(
+    m: &crate::util::Mat,
+    rows_p: usize,
+    cols_p: usize,
+) -> Vec<f32> {
+    assert!(m.rows <= rows_p && m.cols <= cols_p);
+    let mut out = vec![0.0f32; rows_p * cols_p];
+    for i in 0..m.rows {
+        let src = m.row(i);
+        for (j, &s) in src.iter().enumerate() {
+            out[i * cols_p + j] = s as f32;
+        }
+    }
+    out
+}
+
+/// The real-entries mask (1.0 for i < l).
+pub fn mask_f32(l: usize, n: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; n];
+    for v in m.iter_mut().take(l) {
+        *v = 1.0;
+    }
+    m
+}
+
+/// Truncate + widen an f32 result back to f64.
+pub fn unpad_f64(v: &[f32], l: usize) -> Vec<f64> {
+    v.iter().take(l).map(|&x| x as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Mat;
+
+    #[test]
+    fn pad_vec_zero_fills() {
+        let p = pad_vec_f32(&[1.0, 2.0], 4);
+        assert_eq!(p, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pad_mat_blocks() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let p = pad_mat_f32(&m, 3);
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[1], 2.0);
+        assert_eq!(p[2], 0.0);
+        assert_eq!(p[3], 3.0);
+        assert_eq!(p[8], 0.0);
+    }
+
+    #[test]
+    fn mask_and_unpad() {
+        let m = mask_f32(2, 4);
+        assert_eq!(m, vec![1.0, 1.0, 0.0, 0.0]);
+        let u = unpad_f64(&[1.5f32, 2.5, 9.0], 2);
+        assert_eq!(u, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_rejects_oversize() {
+        pad_vec_f32(&[0.0; 10], 4);
+    }
+}

@@ -1,0 +1,192 @@
+//! The bi-level δ (QPP 18) and its warm-started restricted update
+//! (Eq. 27).
+//!
+//! r(δ) = ¼ δᵀQδ + α⁰ᵀQδ over Δ = {δ | α⁰+δ ∈ A_{ν₁}}.  Substituting
+//! β = α⁰ + δ turns it into a projected-gradient problem over A_{ν₁}
+//! with gradient ½ Q (β + α⁰).  The sequential form warm-starts β at the
+//! previous step's value projected into the new feasible set — this is
+//! the restricted problem (27): coordinates that stayed feasible barely
+//! move; the projection + a few PG sweeps fix up the rest.
+
+use crate::qp::projection;
+use crate::qp::ConstraintKind;
+use crate::util::linalg::dot;
+use crate::util::Mat;
+
+/// The cheapest member of Δ: spread the mass shortfall ν₁ − Σα⁰ over the
+/// coordinates' headroom (used as PG warm start and as the fallback when
+/// the budget is 0 iterations).
+pub fn feasible(alpha0: &[f64], ub: &[f64], nu1: f64) -> Vec<f64> {
+    let sum: f64 = alpha0.iter().sum();
+    let need = (nu1 - sum).max(0.0);
+    let head: Vec<f64> = alpha0
+        .iter()
+        .zip(ub)
+        .map(|(&a, &u)| (u - a).max(0.0))
+        .collect();
+    let total: f64 = head.iter().sum();
+    if need <= 0.0 || total <= 0.0 {
+        return vec![0.0; alpha0.len()];
+    }
+    let frac = (need / total).min(1.0);
+    head.iter().map(|h| h * frac).collect()
+}
+
+/// r(δ) = ¼ δᵀQδ + α⁰ᵀQδ — exposed for diagnostics and tests.
+pub fn radius_sq(q: &Mat, alpha0: &[f64], delta: &[f64]) -> f64 {
+    let l = alpha0.len();
+    let mut qd = vec![0.0; l];
+    q.matvec(delta, &mut qd);
+    0.25 * dot(delta, &qd) + dot(alpha0, &qd)
+}
+
+/// Approximately optimal δ* of QPP (18) by `iters` projected-gradient
+/// sweeps on β = α⁰ + δ (ν-SVM inequality form).
+pub fn optimal(q: &Mat, alpha0: &[f64], ub: &[f64], nu1: f64, iters: usize) -> Vec<f64> {
+    optimal_from(q, alpha0, ub, ConstraintKind::SumGe(nu1), None, iters, None)
+}
+
+/// Warm-started restricted update (Eq. 27): seed β from the previous δ.
+///
+/// `lip` is the (upper bound on the) largest eigenvalue of Q; pass it
+/// when known — the path driver computes it once per Q instead of per
+/// step (40 power-iteration matvecs otherwise dominate the δ phase).
+pub fn optimal_from(
+    q: &Mat,
+    alpha0: &[f64],
+    ub: &[f64],
+    constraint: ConstraintKind,
+    prev_delta: Option<&[f64]>,
+    iters: usize,
+    lip: Option<f64>,
+) -> Vec<f64> {
+    let l = alpha0.len();
+    let mut beta: Vec<f64> = match prev_delta {
+        Some(d) => alpha0.iter().zip(d).map(|(&a, &x)| a + x).collect(),
+        None => {
+            let d0 = match constraint {
+                ConstraintKind::SumGe(nu1) => feasible(alpha0, ub, nu1),
+                ConstraintKind::SumEq(_) => vec![0.0; l],
+            };
+            alpha0.iter().zip(&d0).map(|(&a, &x)| a + x).collect()
+        }
+    };
+    projection::project(&mut beta, ub, constraint);
+    if iters == 0 {
+        return beta.iter().zip(alpha0).map(|(b, a)| b - a).collect();
+    }
+    let lip = lip.unwrap_or_else(|| q.power_eig_max(40)).max(1e-12);
+    let step = 2.0 / lip; // gradient is (1/2) Q (β + α⁰) ⇒ L = λmax/2
+    let mut g = vec![0.0; l];
+    let mut tmp = vec![0.0; l];
+    let mut prev_r = f64::INFINITY;
+    for _ in 0..iters {
+        for (t, (&b, &a)) in tmp.iter_mut().zip(beta.iter().zip(alpha0)) {
+            *t = b + a;
+        }
+        q.matvec(&tmp, &mut g);
+        for (b, gi) in beta.iter_mut().zip(&g) {
+            *b -= step * 0.5 * gi;
+        }
+        projection::project(&mut beta, ub, constraint);
+        // cheap stall check every sweep
+        let delta: Vec<f64> = beta.iter().zip(alpha0).map(|(b, a)| b - a).collect();
+        let r = radius_sq(q, alpha0, &delta);
+        if (prev_r - r).abs() < 1e-14 {
+            break;
+        }
+        prev_r = r;
+    }
+    beta.iter().zip(alpha0).map(|(b, a)| b - a).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::run_cases;
+
+    #[test]
+    fn feasible_reaches_nu() {
+        let a0 = vec![0.1, 0.1, 0.1];
+        let ub = vec![0.4; 3];
+        let d = feasible(&a0, &ub, 0.6);
+        let sum: f64 = a0.iter().zip(&d).map(|(a, x)| a + x).sum();
+        assert!((sum - 0.6).abs() < 1e-12);
+        for ((a, x), u) in a0.iter().zip(&d).zip(&ub) {
+            assert!(a + x <= u + 1e-12);
+        }
+    }
+
+    #[test]
+    fn feasible_zero_when_already_enough() {
+        let d = feasible(&[0.5, 0.5], &[1.0, 1.0], 0.3);
+        assert_eq!(d, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn optimal_shrinks_radius_vs_cheap() {
+        run_cases(12, 0xDE1, |g| {
+            let n = g.usize(6, 24);
+            let q = g.psd(n);
+            let ub = vec![1.0 / n as f64; n];
+            let nu0 = g.f64(0.1, 0.4);
+            let nu1 = nu0 + g.f64(0.02, 0.2);
+            let p0 = crate::qp::QpProblem {
+                q: &q, lin: None, ub: &ub,
+                constraint: crate::qp::ConstraintKind::SumGe(nu0),
+            };
+            let (a0, _) = crate::qp::dcdm::solve(&p0, None, &Default::default());
+            let cheap = feasible(&a0, &ub, nu1);
+            let opt = optimal(&q, &a0, &ub, nu1, 100);
+            let r_cheap = radius_sq(&q, &a0, &cheap);
+            let r_opt = radius_sq(&q, &a0, &opt);
+            assert!(
+                r_opt <= r_cheap + 1e-9,
+                "optimal should not be worse: {r_opt} vs {r_cheap}"
+            );
+            // and the optimal delta stays feasible
+            let sum: f64 = a0.iter().zip(&opt).map(|(a, d)| a + d).sum();
+            assert!(sum >= nu1 - 1e-7);
+            for ((a, d), u) in a0.iter().zip(&opt).zip(&ub) {
+                assert!(a + d >= -1e-9 && a + d <= u + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn warm_start_matches_cold_quality() {
+        let mut g = crate::prop::Gen::new(21);
+        let n = 20;
+        let q = g.psd(n);
+        let ub = vec![1.0 / n as f64; n];
+        let p0 = crate::qp::QpProblem {
+            q: &q, lin: None, ub: &ub,
+            constraint: crate::qp::ConstraintKind::SumGe(0.3),
+        };
+        let (a0, _) = crate::qp::dcdm::solve(&p0, None, &Default::default());
+        let cold = optimal(&q, &a0, &ub, 0.35, 200);
+        let warm = optimal_from(
+            &q, &a0, &ub,
+            crate::qp::ConstraintKind::SumGe(0.35),
+            Some(&cold),
+            10,
+            None,
+        );
+        let r_cold = radius_sq(&q, &a0, &cold);
+        let r_warm = radius_sq(&q, &a0, &warm);
+        assert!(r_warm <= r_cold + 1e-9);
+    }
+
+    #[test]
+    fn radius_nonnegative_on_feasible_delta() {
+        // r(δ) = ||c||² − ||w0||² ≥ 0 not guaranteed pointwise, but for
+        // our produced deltas it is the sphere radius and must be ≥ 0
+        // after the (max 0) clamp used downstream; here check finite.
+        let mut g = crate::prop::Gen::new(33);
+        let q = g.psd(8);
+        let a0 = vec![0.05; 8];
+        let ub = vec![0.2; 8];
+        let d = feasible(&a0, &ub, 0.6);
+        assert!(radius_sq(&q, &a0, &d).is_finite());
+    }
+}

@@ -1,0 +1,64 @@
+//! SRBO — the Safe screening Rule with Bi-level Optimization (§3, §4).
+//!
+//! Pipeline per path step ν_k → ν_{k+1}:
+//!
+//! 1. [`delta`] picks δ ∈ Δ (bi-level: warm-started refinement of QPP 18
+//!    via Eq. 27's restricted update);
+//! 2. [`region`] builds the sphere W ∋ w_{k+1} (Theorem 1): center
+//!    c = w_k + ½Zᵀδ, radius² r = cᵀc − w_kᵀw_k;
+//! 3. [`rho`] bounds ρ* by the safe order statistics (Theorem 2 /
+//!    Corollary 2, order-statistic form — DESIGN.md §6);
+//! 4. [`srbo`] emits per-sample codes (Corollaries 3/4);
+//! 5. [`oneclass`] adapts 1-4 to the OC-SVM dual (Table II).
+
+pub mod delta;
+pub mod oneclass;
+pub mod region;
+pub mod rho;
+pub mod srbo;
+
+/// Per-sample screening decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScreenCode {
+    /// Active candidate — goes into the reduced problem.
+    Keep,
+    /// Screened: α_i = 0 (sample provably in R).
+    Zero,
+    /// Screened: α_i = ub_i (sample provably in L).
+    Upper,
+}
+
+impl ScreenCode {
+    pub fn is_screened(&self) -> bool {
+        !matches!(self, ScreenCode::Keep)
+    }
+}
+
+/// Fraction of samples screened (the paper's "Screening Ratio", %).
+pub fn screening_ratio(codes: &[ScreenCode]) -> f64 {
+    if codes.is_empty() {
+        return 0.0;
+    }
+    100.0 * codes.iter().filter(|c| c.is_screened()).count() as f64
+        / codes.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_counts_screened() {
+        use ScreenCode::*;
+        let codes = [Keep, Zero, Upper, Keep];
+        assert_eq!(screening_ratio(&codes), 50.0);
+        assert_eq!(screening_ratio(&[]), 0.0);
+    }
+
+    #[test]
+    fn is_screened() {
+        assert!(!ScreenCode::Keep.is_screened());
+        assert!(ScreenCode::Zero.is_screened());
+        assert!(ScreenCode::Upper.is_screened());
+    }
+}

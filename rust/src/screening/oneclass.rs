@@ -1,0 +1,124 @@
+//! SRBO for the unsupervised OC-SVM (paper §4, Table II).
+//!
+//! Dual: min ½αᵀHα over {eᵀα = 1, 0 ≤ α ≤ 1/(νl)} with H the *unlabelled*
+//! Gram matrix.  Differences from the ν-SVM rule:
+//!
+//! * the sum constraint is an equality and stays at 1 along the path;
+//! * the box shrinks with ν: ub(ν) = 1/(νl), so the previous solution can
+//!   violate the next box and δ must repair it;
+//! * the "Upper" code fixes α_i = 1/(ν_{k+1} l).
+//!
+//! The sphere (Theorem 1) and ρ bracket (Theorem 2) carry over verbatim
+//! with Q → H: both variational inequalities hold because
+//! A_{ν_{k+1}} ⊆ A_{ν_k} (box shrinks) and α⁰+δ ∈ A_{ν_{k+1}} by choice
+//! of δ.
+
+use super::srbo::{self, ScreenResult};
+use crate::qp::ConstraintKind;
+use crate::util::Mat;
+
+/// The OC-SVM box bound 1/(νl).
+pub fn upper_bound(nu: f64, l: usize) -> f64 {
+    1.0 / (nu * l as f64)
+}
+
+/// δ for the step ν_k → ν_{k+1}: member of
+/// Δ = {δ | eᵀ(α⁰+δ) = 1, 0 ≤ α⁰+δ ≤ 1/(ν_{k+1} l)}, optionally refined
+/// by `iters` bi-level PG sweeps (QPP 18 analogue).
+pub fn delta_for_step(
+    h: &Mat,
+    alpha0: &[f64],
+    nu1: f64,
+    iters: usize,
+) -> Vec<f64> {
+    let l = alpha0.len();
+    let ub = vec![upper_bound(nu1, l); l];
+    super::delta::optimal_from(
+        h,
+        alpha0,
+        &ub,
+        ConstraintKind::SumEq(1.0),
+        None,
+        iters,
+        None,
+    )
+}
+
+/// Apply the Table-II rule for the step to ν₁ = `nu1`.
+pub fn screen(h: &Mat, alpha0: &[f64], delta: &[f64], nu1: f64) -> ScreenResult {
+    // identical sphere + bracket machinery; the caller interprets Upper
+    // as 1/(nu1 * l).
+    srbo::screen(h, alpha0, delta, nu1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::run_cases;
+    use crate::qp::{dcdm, QpProblem};
+    use crate::screening::ScreenCode;
+
+    fn solve_oc(h: &Mat, nu: f64) -> Vec<f64> {
+        let l = h.rows;
+        let ub = vec![upper_bound(nu, l); l];
+        let p = QpProblem {
+            q: h,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumEq(1.0),
+        };
+        dcdm::solve(&p, None, &Default::default()).0
+    }
+
+    #[test]
+    fn upper_bound_shrinks_with_nu() {
+        assert!(upper_bound(0.2, 100) > upper_bound(0.4, 100));
+        assert!((upper_bound(0.5, 10) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_restores_feasibility() {
+        let mut g = crate::prop::Gen::new(17);
+        let h = g.psd(12);
+        let a0 = solve_oc(&h, 0.3);
+        let nu1 = 0.5;
+        let d = delta_for_step(&h, &a0, nu1, 50);
+        let l = 12;
+        let ubn = upper_bound(nu1, l);
+        let sum: f64 = a0.iter().zip(&d).map(|(a, x)| a + x).sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum={sum}");
+        for (a, x) in a0.iter().zip(&d) {
+            assert!(a + x >= -1e-9 && a + x <= ubn + 1e-9);
+        }
+    }
+
+    /// Safety audit for the one-class rule against the exact solver.
+    #[test]
+    fn oneclass_screening_is_safe() {
+        run_cases(16, 0x0C5, |g| {
+            let n = g.usize(10, 30);
+            let h = g.psd(n);
+            let nu0 = g.f64(0.2, 0.45);
+            let nu1 = nu0 + g.f64(0.02, 0.2);
+            let a0 = solve_oc(&h, nu0);
+            let a1 = solve_oc(&h, nu1);
+            let d = delta_for_step(&h, &a0, nu1, 80);
+            let res = screen(&h, &a0, &d, nu1);
+            let ub1 = upper_bound(nu1, n);
+            let tol = 1e-6;
+            for i in 0..n {
+                match res.codes[i] {
+                    ScreenCode::Zero => {
+                        assert!(a1[i] <= tol, "unsafe Zero: a1[{i}]={}", a1[i])
+                    }
+                    ScreenCode::Upper => assert!(
+                        a1[i] >= ub1 - tol,
+                        "unsafe Upper: a1[{i}]={} ub={ub1}",
+                        a1[i]
+                    ),
+                    ScreenCode::Keep => {}
+                }
+            }
+        });
+    }
+}

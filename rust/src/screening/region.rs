@@ -1,0 +1,179 @@
+//! The sphere W containing w_{k+1} (Theorem 1), computed entirely in the
+//! dual: with v = α⁰ + δ/2 we have c = Zᵀv, so
+//!
+//!   Z_i·c      = (Qv)_i            (the screening scores, hot O(l²) op)
+//!   cᵀc        = vᵀQv
+//!   w₀ᵀw₀      = α⁰ᵀQα⁰
+//!   r          = cᵀc − w₀ᵀw₀       (radius²; clamped at 0 per |r|)
+//!   ‖Z_i‖      = √κ(x_i, x_i)      (from the Q diagonal)
+
+use crate::util::linalg::dot;
+use crate::util::Mat;
+
+/// Everything the rules need about the sphere, per path step.
+#[derive(Clone, Debug)]
+pub struct Sphere {
+    /// (Qv)_i = Z_i · c for every sample.
+    pub qv: Vec<f64>,
+    /// √r (radius).
+    pub sqrt_r: f64,
+    /// ‖Z_i‖ per sample.
+    pub norms: Vec<f64>,
+}
+
+/// Build the sphere from the dual quantities.
+///
+/// `q` is the labelled Gram matrix (or H for OC-SVM), `alpha0` the
+/// previous exact solution, `delta` a member of Δ (see [`super::delta`]).
+pub fn build(q: &Mat, alpha0: &[f64], delta: &[f64]) -> Sphere {
+    let l = alpha0.len();
+    assert_eq!(q.rows, l);
+    let v: Vec<f64> = alpha0
+        .iter()
+        .zip(delta)
+        .map(|(&a, &d)| a + 0.5 * d)
+        .collect();
+    let mut qv = vec![0.0; l];
+    q.matvec(&v, &mut qv);
+    let mut qa0 = vec![0.0; l];
+    q.matvec(alpha0, &mut qa0);
+    let ctc = dot(&v, &qv);
+    let w0w0 = dot(alpha0, &qa0);
+    let r = (ctc - w0w0).max(0.0);
+    let norms: Vec<f64> = (0..l).map(|i| q.get(i, i).max(0.0).sqrt()).collect();
+    Sphere { qv, sqrt_r: r.sqrt(), norms }
+}
+
+impl Sphere {
+    /// inf_{w∈W} Z_i·w  (Corollary 1, lower side).
+    #[inline]
+    pub fn lower(&self, i: usize) -> f64 {
+        self.qv[i] - self.sqrt_r * self.norms[i]
+    }
+
+    /// sup_{w∈W} Z_i·w  (Corollary 1, upper side).
+    #[inline]
+    pub fn upper(&self, i: usize) -> f64 {
+        self.qv[i] + self.sqrt_r * self.norms[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.qv.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.qv.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::run_cases;
+    use crate::qp::projection::projected;
+    use crate::qp::ConstraintKind;
+
+    /// Theorem 1 audit: for random PSD Q and *any* feasible δ, the true
+    /// next optimum w₁ lies in the sphere — verified in w-space through
+    /// the factor Q = A Aᵀ.
+    #[test]
+    fn sphere_contains_next_optimum() {
+        run_cases(16, 0x5EA, |g| {
+            let n = g.usize(6, 16);
+            // factor A so w-space is explicit
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a.set(i, j, g.rng().normal());
+                }
+            }
+            let mut q = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = dot(a.row(i), a.row(j)) / n as f64;
+                    q.set(i, j, v);
+                    q.set(j, i, v);
+                }
+            }
+            let ub = vec![1.0 / n as f64; n];
+            let nu0 = g.f64(0.1, 0.4);
+            let nu1 = nu0 + g.f64(0.01, 0.2);
+            let p0 = crate::qp::QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nu0),
+            };
+            let p1 = crate::qp::QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nu1),
+            };
+            let (a0, _) = crate::qp::dcdm::solve(&p0, None, &Default::default());
+            let (a1, _) = crate::qp::dcdm::solve(&p1, None, &Default::default());
+            // any feasible delta: project a random perturbation of a0
+            let mut beta: Vec<f64> = a0
+                .iter()
+                .map(|&v| v + 0.1 * g.rng().normal())
+                .collect();
+            beta = projected(&beta, &ub, ConstraintKind::SumGe(nu1));
+            let delta: Vec<f64> =
+                beta.iter().zip(&a0).map(|(b, a)| b - a).collect();
+            let sphere = build(&q, &a0, &delta);
+            // ||w1 - c||^2 <= r, with w = (A^T alpha)/sqrt(n)
+            let wvec = |al: &[f64]| -> Vec<f64> {
+                let mut w = vec![0.0; n];
+                for (i, &ai) in al.iter().enumerate() {
+                    for (wk, &ak) in w.iter_mut().zip(a.row(i)) {
+                        *wk += ai * ak;
+                    }
+                }
+                for wk in w.iter_mut() {
+                    *wk /= (n as f64).sqrt();
+                }
+                w
+            };
+            let w1 = wvec(&a1);
+            let v: Vec<f64> = a0
+                .iter()
+                .zip(&delta)
+                .map(|(&x, &d)| x + 0.5 * d)
+                .collect();
+            let c = wvec(&v);
+            let dist2: f64 = w1
+                .iter()
+                .zip(&c)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            let r2 = sphere.sqrt_r * sphere.sqrt_r;
+            assert!(
+                dist2 <= r2 + 1e-6,
+                "sphere violated: dist2={dist2} r={r2} (n={n})"
+            );
+        });
+    }
+
+    #[test]
+    fn bounds_bracket_scores() {
+        let mut g = crate::prop::Gen::new(3);
+        let q = g.psd(8);
+        let a0 = vec![0.05; 8];
+        let delta = vec![0.01; 8];
+        let s = build(&q, &a0, &delta);
+        for i in 0..8 {
+            assert!(s.lower(i) <= s.qv[i] + 1e-12);
+            assert!(s.upper(i) >= s.qv[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_delta_zero_radius_when_alpha_unchanged() {
+        // delta = 0 => v = a0 => r = 0 exactly
+        let mut g = crate::prop::Gen::new(4);
+        let q = g.psd(6);
+        let a0 = vec![0.1; 6];
+        let s = build(&q, &a0, &vec![0.0; 6]);
+        assert!(s.sqrt_r < 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! ρ* bounds (Theorem 2 / Corollary 2) in the safe order-statistic form.
+//!
+//! Theorem 2 gives d(⌈i*⌉) ≤ ρ* ≤ d(⌊i*⌋) with i* = l − νl over the
+//! descending-sorted true margins d_i = Z_i·w*.  The true d are unknown;
+//! Corollary 1 brackets them per-sample: lo_i ≤ d_i ≤ up_i.  Dominance of
+//! order statistics (if d_i ≤ u_i ∀i then the k-th largest d ≤ the k-th
+//! largest u) then yields
+//!
+//!   ρ_upper = (⌊i*⌋)-th largest of {up_i},
+//!   ρ_lower = (⌈i*⌉)-th largest of {lo_i}.
+//!
+//! The paper's Eq. (21) evaluates the bound at the sorted *index* instead,
+//! which our randomized audits show can mis-screen (DESIGN.md §6).
+
+use super::region::Sphere;
+use crate::util::argsort::kth_largest;
+
+/// The ρ* bracket for one path step.
+#[derive(Clone, Copy, Debug)]
+pub struct RhoBounds {
+    pub upper: f64,
+    pub lower: f64,
+}
+
+/// Compute the bracket for the ν₁ problem with l real samples.
+///
+/// Degenerate grids (νl integral, i* at the edges) are clamped into
+/// [1, l]; when ν₁·l ≥ l (everything a support vector) the bracket
+/// collapses to (−∞, +∞) conservative-keep.
+pub fn bounds(sphere: &Sphere, nu1: f64, l: usize) -> RhoBounds {
+    let lf = l as f64;
+    let istar = lf - nu1 * lf; // 1-based rank
+    if istar < 1.0 {
+        // ν so large that even d(1) may undershoot ρ*: no safe bracket.
+        return RhoBounds { upper: f64::INFINITY, lower: f64::NEG_INFINITY };
+    }
+    let fidx = (istar.floor() as usize).clamp(1, l);
+    let cidx = (istar.ceil() as usize).clamp(1, l);
+    let ups: Vec<f64> = (0..l).map(|i| sphere.upper(i)).collect();
+    let los: Vec<f64> = (0..l).map(|i| sphere.lower(i)).collect();
+    RhoBounds {
+        upper: kth_largest(&ups, fidx),
+        lower: kth_largest(&los, cidx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::region;
+
+    fn sphere_from(qv: Vec<f64>, sqrt_r: f64) -> Sphere {
+        let n = qv.len();
+        Sphere { qv, sqrt_r, norms: vec![1.0; n] }
+    }
+
+    #[test]
+    fn zero_radius_reduces_to_plain_order_statistics() {
+        let s = sphere_from(vec![4.0, 1.0, 3.0, 2.0], 0.0);
+        // nu = 0.5, l = 4 => i* = 2: rho in [d(2), d(2)] = [3, 3]
+        let b = bounds(&s, 0.5, 4);
+        assert_eq!(b.upper, 3.0);
+        assert_eq!(b.lower, 3.0);
+    }
+
+    #[test]
+    fn fractional_istar_brackets() {
+        let s = sphere_from(vec![4.0, 1.0, 3.0, 2.0], 0.0);
+        // nu = 0.4, l = 4 => i* = 2.4: upper = d(2) = 3, lower = d(3) = 2
+        let b = bounds(&s, 0.4, 4);
+        assert_eq!(b.upper, 3.0);
+        assert_eq!(b.lower, 2.0);
+    }
+
+    #[test]
+    fn radius_widens_bracket() {
+        let tight = bounds(&sphere_from(vec![4.0, 1.0, 3.0, 2.0], 0.0), 0.4, 4);
+        let wide = bounds(&sphere_from(vec![4.0, 1.0, 3.0, 2.0], 0.5), 0.4, 4);
+        assert!(wide.upper > tight.upper);
+        assert!(wide.lower < tight.lower);
+    }
+
+    #[test]
+    fn nu_too_large_gives_conservative_bracket() {
+        let s = sphere_from(vec![1.0, 2.0], 0.1);
+        let b = bounds(&s, 1.0, 2);
+        assert!(b.upper.is_infinite());
+        assert!(b.lower == f64::NEG_INFINITY);
+    }
+
+    /// End-to-end audit against the exact solver: the bracket must
+    /// contain the true ρ* (recovered from the interior of the exact
+    /// dual via d_i = (Qα*)_i = μ = ρ*-like multiplier).
+    #[test]
+    fn bracket_contains_true_multiplier() {
+        use crate::qp::{dcdm, projection::projected, ConstraintKind, QpProblem};
+        crate::prop::run_cases(12, 0x9B0, |g| {
+            let n = g.usize(8, 24);
+            let q = g.psd(n);
+            let ub = vec![1.0 / n as f64; n];
+            let nu0 = g.f64(0.15, 0.4);
+            let nu1 = nu0 + g.f64(0.01, 0.1);
+            let p0 = QpProblem {
+                q: &q, lin: None, ub: &ub,
+                constraint: ConstraintKind::SumGe(nu0),
+            };
+            let p1 = QpProblem {
+                q: &q, lin: None, ub: &ub,
+                constraint: ConstraintKind::SumGe(nu1),
+            };
+            let (a0, _) = dcdm::solve(&p0, None, &Default::default());
+            let (a1, _) = dcdm::solve(&p1, None, &Default::default());
+            let beta = projected(&a0, &ub, ConstraintKind::SumGe(nu1));
+            let delta: Vec<f64> =
+                beta.iter().zip(&a0).map(|(b, a)| b - a).collect();
+            let s = region::build(&q, &a0, &delta);
+            let b = bounds(&s, nu1, n);
+            // true multiplier from the interior coordinates of a1
+            let mut qa1 = vec![0.0; n];
+            q.matvec(&a1, &mut qa1);
+            let tol = 1e-7;
+            let interior: Vec<f64> = (0..n)
+                .filter(|&i| a1[i] > tol && a1[i] < ub[i] - tol)
+                .map(|i| qa1[i])
+                .collect();
+            if interior.is_empty() {
+                return; // degenerate vertex solution: no rho witness
+            }
+            let rho = interior.iter().sum::<f64>() / interior.len() as f64;
+            assert!(
+                rho <= b.upper + 1e-6 && rho >= b.lower - 1e-6,
+                "rho {rho} outside [{}, {}]",
+                b.lower,
+                b.upper
+            );
+        });
+    }
+}

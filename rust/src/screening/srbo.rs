@@ -1,0 +1,150 @@
+//! The SRBO rule for ν-SVM (Corollaries 3 & 4): per-sample codes from the
+//! sphere and the ρ bracket.
+
+use super::region::{self, Sphere};
+use super::rho::{self, RhoBounds};
+use super::ScreenCode;
+use crate::util::Mat;
+
+/// Outcome of one screening step.
+#[derive(Clone, Debug)]
+pub struct ScreenResult {
+    pub codes: Vec<ScreenCode>,
+    pub rho: RhoBounds,
+    pub sqrt_r: f64,
+}
+
+/// Apply Corollary 4 for the step ν_k → ν_{k+1}.
+///
+/// * `q` — labelled Gram matrix (Q = diag(y) K diag(y));
+/// * `alpha0` — the *exact* dual optimum at ν_k (safety assumes this);
+/// * `delta` — a member of Δ (see [`super::delta`]);
+/// * `nu1` — the next parameter value.
+pub fn screen(q: &Mat, alpha0: &[f64], delta: &[f64], nu1: f64) -> ScreenResult {
+    let sphere = region::build(q, alpha0, delta);
+    screen_with_sphere(&sphere, nu1)
+}
+
+/// Same, reusing a precomputed sphere (the coordinator shares it with
+/// diagnostics).
+///
+/// Numerical guard: α⁰ is only ε-accurate, so the scores qv carry
+/// solver-tolerance noise; on degenerate problems many samples sit
+/// *exactly* on the hyperplane (d_i = ρ*) and the paper's strict
+/// inequalities flip on that noise.  We require a margin of
+/// `GUARD_REL · max|qv|` beyond the bound before screening — vanishing
+/// against real screening margins, decisive against noise (DESIGN.md §6).
+pub fn screen_with_sphere(sphere: &Sphere, nu1: f64) -> ScreenResult {
+    let l = sphere.len();
+    let rho = rho::bounds(sphere, nu1, l);
+    // Guard: |qv|-relative term covers scale noise; GUARD_ABS covers the
+    // *absolute* gradient-level noise floor of the ε-accurate α⁰ (the
+    // KKT residual is measured in exactly these units, so the floor is
+    // O(ε) — observed up to ~1e-7 after warm-started paths).  Rank-
+    // deficient duals put an atom of coordinates exactly at ρ*, where
+    // this floor decides correctness; see DESIGN.md §6.
+    let scale_qv = sphere.qv.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    let guard = GUARD_REL * scale_qv + GUARD_ABS;
+    let mut codes = Vec::with_capacity(l);
+    for i in 0..l {
+        let code = if sphere.lower(i) > rho.upper + guard {
+            // inf Z_i w > rho_upper >= rho*  ⇒  i ∈ R ⇒ α_i = 0   (Eq. 22)
+            ScreenCode::Zero
+        } else if sphere.upper(i) < rho.lower - guard {
+            // sup Z_i w < rho_lower <= rho*  ⇒  i ∈ L ⇒ α_i = 1/l (Eq. 23)
+            ScreenCode::Upper
+        } else {
+            ScreenCode::Keep
+        };
+        codes.push(code);
+    }
+    ScreenResult { codes, rho, sqrt_r: sphere.sqrt_r }
+}
+
+/// Relative screening guard (× max|Z_i·c|); ~1e2 × the solver KKT ε.
+pub const GUARD_REL: f64 = 1e-6;
+
+/// Absolute guard: ~1e3 × the default solver KKT ε (gradient units).
+pub const GUARD_ABS: f64 = 1e-5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::run_cases;
+    use crate::qp::{dcdm, projection::projected, ConstraintKind, QpProblem};
+
+    /// The paper's safety property, end to end on random duals: screened
+    /// codes never contradict the exact α(ν₁).
+    #[test]
+    fn screening_is_safe_on_random_duals() {
+        run_cases(20, 0x5AFE, |g| {
+            let n = g.usize(10, 40);
+            let q = g.psd(n);
+            let ub = vec![1.0 / n as f64; n];
+            let nu0 = g.f64(0.1, 0.5);
+            let nu1 = nu0 + g.f64(0.005, 0.15);
+            let p0 = QpProblem {
+                q: &q, lin: None, ub: &ub,
+                constraint: ConstraintKind::SumGe(nu0),
+            };
+            let p1 = QpProblem {
+                q: &q, lin: None, ub: &ub,
+                constraint: ConstraintKind::SumGe(nu1),
+            };
+            let (a0, _) = dcdm::solve(&p0, None, &Default::default());
+            let (a1, _) = dcdm::solve(&p1, None, &Default::default());
+            let beta = projected(&a0, &ub, ConstraintKind::SumGe(nu1));
+            let delta: Vec<f64> =
+                beta.iter().zip(&a0).map(|(b, a)| b - a).collect();
+            let res = screen(&q, &a0, &delta, nu1);
+            let tol = 1e-6;
+            for i in 0..n {
+                match res.codes[i] {
+                    ScreenCode::Zero => assert!(
+                        a1[i] <= tol,
+                        "unsafe Zero at {i}: a1={} (n={n}, nu0={nu0}, nu1={nu1})",
+                        a1[i]
+                    ),
+                    ScreenCode::Upper => assert!(
+                        a1[i] >= ub[i] - tol,
+                        "unsafe Upper at {i}: a1={} (n={n})",
+                        a1[i]
+                    ),
+                    ScreenCode::Keep => {}
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn screens_on_separable_geometry() {
+        // linear-kernel well-separated Gaussians: most samples inactive.
+        use crate::data::synthetic::gaussians;
+        use crate::kernel::{full_q, KernelKind};
+        let d = gaussians(40, 2.5, 3);
+        let q = full_q(&d.x, &d.y, KernelKind::Linear);
+        let l = d.len();
+        let ub = vec![1.0 / l as f64; l];
+        let (nu0, nu1) = (0.2, 0.22);
+        let p0 = QpProblem {
+            q: &q, lin: None, ub: &ub,
+            constraint: ConstraintKind::SumGe(nu0),
+        };
+        let (a0, _) = dcdm::solve(&p0, None, &Default::default());
+        let delta = crate::screening::delta::optimal(&q, &a0, &ub, nu1, 200);
+        let res = screen(&q, &a0, &delta, nu1);
+        let screened = res.codes.iter().filter(|c| c.is_screened()).count();
+        assert!(screened > 0, "expected some screening on easy data");
+    }
+
+    #[test]
+    fn empty_bracket_keeps_everything() {
+        let mut g = crate::prop::Gen::new(5);
+        let q = g.psd(8);
+        let a0 = vec![0.1; 8];
+        let delta = vec![0.0; 8];
+        // nu1 = 1.0 -> conservative bracket -> all Keep
+        let res = screen(&q, &a0, &delta, 1.0);
+        assert!(res.codes.iter().all(|c| *c == ScreenCode::Keep));
+    }
+}

@@ -1,0 +1,69 @@
+//! ROC-AUC via the rank-sum (Mann-Whitney) formulation with midranks for
+//! tied scores — the metric of the one-class tables (VI, VII).
+
+use crate::util::argsort::ranks_of_abs;
+
+/// AUC (%) of `scores` against binary `labels` (+1 positive, -1 negative).
+///
+/// AUC = (R⁺ − n⁺(n⁺+1)/2) / (n⁺ n⁻) with R⁺ the positive rank sum.
+pub fn roc_auc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 50.0;
+    }
+    // midranks of the raw scores: shift so everything is positive and
+    // reuse the |.| midrank helper
+    let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+    let shifted: Vec<f64> = scores.iter().map(|s| s - min + 1.0).collect();
+    let ranks = ranks_of_abs(&shifted);
+    let r_pos: f64 = ranks
+        .iter()
+        .zip(labels)
+        .filter(|(_, &y)| y > 0.0)
+        .map(|(r, _)| r)
+        .sum();
+    let auc =
+        (r_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64);
+    100.0 * auc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_is_100() {
+        let scores = [3.0, 2.5, 0.1, -1.0];
+        let labels = [1.0, 1.0, -1.0, -1.0];
+        assert!((roc_auc(&scores, &labels) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverted_is_0() {
+        let scores = [-3.0, -2.5, 0.1, 1.0];
+        let labels = [1.0, 1.0, -1.0, -1.0];
+        assert!(roc_auc(&scores, &labels).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interleaved_is_50() {
+        // pos scores {1,4}, neg {2,3}: exactly half the pairs are ordered
+        let scores = [1.0, 2.0, 3.0, 4.0];
+        let labels = [1.0, -1.0, -1.0, 1.0];
+        assert!((roc_auc(&scores, &labels) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ties_give_half_credit() {
+        let scores = [1.0, 1.0];
+        let labels = [1.0, -1.0];
+        assert!((roc_auc(&scores, &labels) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_single_class() {
+        assert_eq!(roc_auc(&[1.0, 2.0], &[1.0, 1.0]), 50.0);
+    }
+}

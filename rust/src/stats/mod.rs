@@ -1,0 +1,56 @@
+//! Evaluation statistics: ROC-AUC (unsupervised tables), the Wilcoxon
+//! signed-rank test (Table XII), and summary helpers.
+
+pub mod auc;
+pub mod wilcoxon;
+
+pub use auc::roc_auc;
+pub use wilcoxon::{wilcoxon_signed_rank, WilcoxonResult};
+
+/// Classification accuracy (%) of predictions vs labels.
+pub fn accuracy(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred
+        .iter()
+        .zip(truth)
+        .filter(|(p, t)| p.signum() == t.signum())
+        .count();
+    100.0 * correct as f64 / pred.len() as f64
+}
+
+/// Win/Draw/Loss comparison of two metric columns (higher is better).
+pub fn win_draw_loss(a: &[f64], b: &[f64], tol: f64) -> (usize, usize, usize) {
+    let mut w = 0;
+    let mut d = 0;
+    let mut l = 0;
+    for (x, y) in a.iter().zip(b) {
+        if (x - y).abs() <= tol {
+            d += 1;
+        } else if x > y {
+            w += 1;
+        } else {
+            l += 1;
+        }
+    }
+    (w, d, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_signs() {
+        let acc = accuracy(&[1.0, -2.0, 0.5], &[1.0, 1.0, 1.0]);
+        assert!((acc - 66.666).abs() < 0.01);
+    }
+
+    #[test]
+    fn wdl_with_tolerance() {
+        let (w, d, l) = win_draw_loss(&[1.0, 2.0, 3.0], &[1.0001, 1.0, 4.0], 0.01);
+        assert_eq!((w, d, l), (1, 1, 1));
+    }
+}

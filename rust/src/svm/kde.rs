@@ -1,0 +1,127 @@
+//! Gaussian kernel density estimator — the unsupervised baseline of
+//! Tables VI/VII ("KDE").  Scores are log densities; the anomaly
+//! threshold is the training-quantile at level ν for predict().
+
+use crate::stats::roc_auc;
+use crate::util::Mat;
+use anyhow::{bail, Result};
+
+/// A fitted KDE.
+#[derive(Clone, Debug)]
+pub struct Kde {
+    pub train: Mat,
+    pub bandwidth: f64,
+    pub threshold: f64,
+}
+
+impl Kde {
+    /// Fit with the given bandwidth; `quantile` sets the outlier cut
+    /// (fraction of training data scored below the threshold).
+    pub fn fit(x: &Mat, bandwidth: f64, quantile: f64) -> Result<Kde> {
+        if x.rows == 0 {
+            bail!("empty training set");
+        }
+        if bandwidth <= 0.0 {
+            bail!("bandwidth must be positive");
+        }
+        let mut kde = Kde { train: x.clone(), bandwidth, threshold: f64::NEG_INFINITY };
+        let mut scores = kde.score(x);
+        scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((x.rows as f64) * quantile) as usize;
+        kde.threshold = scores[idx.min(x.rows - 1)];
+        Ok(kde)
+    }
+
+    /// Silverman's rule-of-thumb bandwidth.
+    pub fn silverman_bandwidth(x: &Mat) -> f64 {
+        let (n, p) = (x.rows as f64, x.cols as f64);
+        // average per-dimension std
+        let mut var_sum = 0.0;
+        for j in 0..x.cols {
+            let mean: f64 = (0..x.rows).map(|i| x.get(i, j)).sum::<f64>() / n;
+            let var: f64 =
+                (0..x.rows).map(|i| (x.get(i, j) - mean).powi(2)).sum::<f64>() / n;
+            var_sum += var;
+        }
+        let sigma = (var_sum / p).sqrt().max(1e-6);
+        sigma * (4.0 / ((p + 2.0) * n)).powf(1.0 / (p + 4.0))
+    }
+
+    /// Log-density scores (up to a constant).
+    pub fn score(&self, x: &Mat) -> Vec<f64> {
+        let inv2h2 = 1.0 / (2.0 * self.bandwidth * self.bandwidth);
+        let mut out = Vec::with_capacity(x.rows);
+        for i in 0..x.rows {
+            let xi = x.row(i);
+            // log-sum-exp over training kernels
+            let mut maxe = f64::NEG_INFINITY;
+            let exps: Vec<f64> = (0..self.train.rows)
+                .map(|j| {
+                    let e = -crate::util::linalg::sq_dist(xi, self.train.row(j))
+                        * inv2h2;
+                    maxe = maxe.max(e);
+                    e
+                })
+                .collect();
+            let sum: f64 = exps.iter().map(|e| (e - maxe).exp()).sum();
+            out.push(maxe + sum.ln() - (self.train.rows as f64).ln());
+        }
+        out
+    }
+
+    /// +1 inlier / -1 outlier.
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        self.score(x)
+            .into_iter()
+            .map(|s| if s >= self.threshold { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    pub fn auc(&self, x: &Mat, y: &[f64]) -> f64 {
+        roc_auc(&self.score(x), y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn scores_higher_near_training_mass() {
+        let d = synthetic::oneclass_gaussians(100, -3.0, 1).positives();
+        let kde = Kde::fit(&d.x, 0.5, 0.1).unwrap();
+        let near = Mat::from_rows(&[vec![0.5, 0.5]]);
+        let far = Mat::from_rows(&[vec![8.0, 8.0]]);
+        assert!(kde.score(&near)[0] > kde.score(&far)[0]);
+    }
+
+    #[test]
+    fn auc_on_separated_anomalies() {
+        let d = synthetic::oneclass_gaussians(120, -3.0, 2);
+        let kde = Kde::fit(&d.positives().x, 0.6, 0.1).unwrap();
+        assert!(kde.auc(&d.x, &d.y) > 80.0);
+    }
+
+    #[test]
+    fn silverman_positive() {
+        let d = synthetic::gaussians(50, 1.0, 3);
+        assert!(Kde::silverman_bandwidth(&d.x) > 0.0);
+    }
+
+    #[test]
+    fn quantile_controls_train_outliers() {
+        let d = synthetic::gaussians(60, 1.0, 4);
+        let kde = Kde::fit(&d.x, 0.8, 0.25).unwrap();
+        let preds = kde.predict(&d.x);
+        let out = preds.iter().filter(|&&p| p < 0.0).count();
+        let frac = out as f64 / d.len() as f64;
+        assert!((frac - 0.25).abs() < 0.1, "frac={frac}");
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let d = synthetic::gaussians(10, 1.0, 5);
+        assert!(Kde::fit(&d.x, 0.0, 0.1).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! The model zoo: ν-SVM (paper §2), C-SVM (baseline), OC-SVM (§4) and
+//! the KDE anomaly-detection baseline (§5.2).
+//!
+//! All models share the bounded-SVM convention of the paper's Eq. (2):
+//! the bias is folded into the kernel (linear: κ(a,b) = a·b + 1), so the
+//! decision function is sgn(Σ α_i y_i κ(x_i, x)) with no separate b.
+
+pub mod c;
+pub mod kde;
+pub mod nu;
+pub mod oneclass;
+
+use crate::kernel::KernelKind;
+use crate::util::Mat;
+
+/// A trained kernel expansion: f(x) = Σ coef_i κ(sv_i, x) (+ threshold
+/// for one-class models).
+#[derive(Clone, Debug)]
+pub struct KernelModel {
+    pub kernel: KernelKind,
+    /// Support vectors (rows).
+    pub sv: Mat,
+    /// coef_i = y_i α_i (binary) or α_i (one-class).
+    pub coef: Vec<f64>,
+    /// Decision threshold (0 for binary ν/C-SVM, ρ* for OC-SVM).
+    pub threshold: f64,
+}
+
+impl KernelModel {
+    /// Raw decision scores f(x) − threshold for each row of `x`.
+    pub fn decision(&self, x: &Mat) -> Vec<f64> {
+        let mut out = Vec::with_capacity(x.rows);
+        for i in 0..x.rows {
+            let xi = x.row(i);
+            let mut s = 0.0;
+            for (j, &c) in self.coef.iter().enumerate() {
+                if c != 0.0 {
+                    s += c * self.kernel.eval(self.sv.row(j), xi);
+                }
+            }
+            out.push(s - self.threshold);
+        }
+        out
+    }
+
+    /// sgn predictions.
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        self.decision(x)
+            .into_iter()
+            .map(|s| if s >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Number of support vectors (nonzero coefficients).
+    pub fn n_sv(&self) -> usize {
+        self.coef.iter().filter(|&&c| c.abs() > 1e-12).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_linear_expansion() {
+        let sv = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let m = KernelModel {
+            kernel: KernelKind::Linear,
+            sv,
+            coef: vec![1.0, -1.0],
+            threshold: 0.0,
+        };
+        let x = Mat::from_rows(&[vec![2.0, 0.0]]);
+        // (2*1 + 1) - (0 + 1) = 2
+        assert_eq!(m.decision(&x), vec![2.0]);
+        assert_eq!(m.predict(&x), vec![1.0]);
+        assert_eq!(m.n_sv(), 2);
+    }
+
+    #[test]
+    fn threshold_shifts() {
+        let sv = Mat::from_rows(&[vec![0.0]]);
+        let m = KernelModel {
+            kernel: KernelKind::Linear,
+            sv,
+            coef: vec![1.0],
+            threshold: 2.0,
+        };
+        let x = Mat::from_rows(&[vec![0.0]]);
+        // k = 1, minus threshold = -1
+        assert_eq!(m.decision(&x), vec![-1.0]);
+        assert_eq!(m.predict(&x), vec![-1.0]);
+    }
+}

@@ -1,0 +1,170 @@
+//! ν-SVM (paper §2.1): dual Eq. (4) solved by DCDM, decision Eq. (6).
+
+use super::KernelModel;
+use crate::kernel::{full_q, KernelKind};
+use crate::qp::dcdm::{self, DcdmOpts};
+use crate::qp::{ConstraintKind, QpProblem, SolveStats};
+use crate::stats::accuracy;
+use crate::util::Mat;
+use anyhow::{bail, Result};
+
+/// A trained ν-SVM.
+#[derive(Clone, Debug)]
+pub struct NuSvm {
+    pub model: KernelModel,
+    pub alpha: Vec<f64>,
+    pub nu: f64,
+    pub stats: SolveStats,
+}
+
+impl NuSvm {
+    /// Train on (x, y) with the given ν and kernel (exact DCDM solve).
+    pub fn train(x: &Mat, y: &[f64], nu: f64, kernel: KernelKind) -> Result<NuSvm> {
+        let q = full_q(x, y, kernel);
+        Self::train_with_q(x, y, &q, nu, kernel, None, &DcdmOpts::default())
+    }
+
+    /// Train against a precomputed Q (the coordinator's cache path).
+    pub fn train_with_q(
+        x: &Mat,
+        y: &[f64],
+        q: &Mat,
+        nu: f64,
+        kernel: KernelKind,
+        warm: Option<&[f64]>,
+        opts: &DcdmOpts,
+    ) -> Result<NuSvm> {
+        let l = x.rows;
+        if l == 0 {
+            bail!("empty training set");
+        }
+        if !(0.0 < nu && nu < 1.0) {
+            bail!("nu must be in (0,1), got {nu}");
+        }
+        let ub = vec![1.0 / l as f64; l];
+        let p = QpProblem {
+            q,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(nu),
+        };
+        let (alpha, stats) = dcdm::solve(&p, warm, opts);
+        Ok(Self::from_alpha(x, y, alpha, nu, kernel, stats))
+    }
+
+    /// Assemble the model from a dual solution (SRBO path reuses this).
+    pub fn from_alpha(
+        x: &Mat,
+        y: &[f64],
+        alpha: Vec<f64>,
+        nu: f64,
+        kernel: KernelKind,
+        stats: SolveStats,
+    ) -> NuSvm {
+        let coef: Vec<f64> =
+            alpha.iter().zip(y).map(|(&a, &yi)| a * yi).collect();
+        NuSvm {
+            model: KernelModel { kernel, sv: x.clone(), coef, threshold: 0.0 },
+            alpha,
+            nu,
+            stats,
+        }
+    }
+
+    pub fn decision(&self, x: &Mat) -> Vec<f64> {
+        self.model.decision(x)
+    }
+
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        self.model.predict(x)
+    }
+
+    pub fn accuracy(&self, x: &Mat, y: &[f64]) -> f64 {
+        accuracy(&self.predict(x), y)
+    }
+
+    /// Verify the ν-property (Lemma 2): m/l ≤ ν ≤ s/l, with ρ* estimated
+    /// from the interior coordinates.  Returns (m/l, s/l, holds).
+    pub fn nu_property(&self, q: &Mat) -> (f64, f64, bool) {
+        let l = self.alpha.len();
+        let ub = 1.0 / l as f64;
+        let tol = 1e-7;
+        let mut qa = vec![0.0; l];
+        q.matvec(&self.alpha, &mut qa);
+        // rho* from interior coords (d_i = (Q alpha)_i = rho on interior)
+        let interior: Vec<f64> = (0..l)
+            .filter(|&i| self.alpha[i] > tol && self.alpha[i] < ub - tol)
+            .map(|i| qa[i])
+            .collect();
+        let rho = if interior.is_empty() {
+            // fall back: boundary between cap and zero groups
+            qa.iter().cloned().sum::<f64>() / l as f64
+        } else {
+            interior.iter().sum::<f64>() / interior.len() as f64
+        };
+        let s = self.alpha.iter().filter(|&&a| a > tol).count();
+        let m = (0..l).filter(|&i| qa[i] < rho - 1e-9).count();
+        let m_frac = m as f64 / l as f64;
+        let s_frac = s as f64 / l as f64;
+        let holds = m_frac <= self.nu + 1e-6 && self.nu <= s_frac + 1e-6;
+        (m_frac, s_frac, holds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussians;
+
+    #[test]
+    fn separable_gaussians_high_accuracy() {
+        let d = gaussians(60, 2.0, 1);
+        let m = NuSvm::train(&d.x, &d.y, 0.3, KernelKind::Linear).unwrap();
+        assert!(m.accuracy(&d.x, &d.y) > 90.0);
+    }
+
+    #[test]
+    fn rbf_solves_xor() {
+        use crate::data::synthetic::exclusive;
+        let d = exclusive(60, 2);
+        let lin = NuSvm::train(&d.x, &d.y, 0.3, KernelKind::Linear).unwrap();
+        let rbf =
+            NuSvm::train(&d.x, &d.y, 0.3, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        assert!(rbf.accuracy(&d.x, &d.y) > 90.0);
+        assert!(rbf.accuracy(&d.x, &d.y) > lin.accuracy(&d.x, &d.y));
+    }
+
+    #[test]
+    fn alpha_is_feasible() {
+        let d = gaussians(40, 1.0, 3);
+        let m = NuSvm::train(&d.x, &d.y, 0.4, KernelKind::Rbf { gamma: 0.3 }).unwrap();
+        let l = d.len();
+        let sum: f64 = m.alpha.iter().sum();
+        assert!(sum >= 0.4 - 1e-6);
+        assert!(m.alpha.iter().all(|&a| a >= -1e-9 && a <= 1.0 / l as f64 + 1e-9));
+    }
+
+    #[test]
+    fn nu_property_holds() {
+        let d = gaussians(50, 1.5, 4);
+        let q = full_q(&d.x, &d.y, KernelKind::Rbf { gamma: 0.5 });
+        let m = NuSvm::train(&d.x, &d.y, 0.35, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        let (m_frac, s_frac, holds) = m.nu_property(&q);
+        assert!(holds, "nu-property violated: m/l={m_frac} s/l={s_frac}");
+    }
+
+    #[test]
+    fn rejects_bad_nu() {
+        let d = gaussians(10, 1.0, 5);
+        assert!(NuSvm::train(&d.x, &d.y, 0.0, KernelKind::Linear).is_err());
+        assert!(NuSvm::train(&d.x, &d.y, 1.0, KernelKind::Linear).is_err());
+    }
+
+    #[test]
+    fn larger_nu_more_support_vectors() {
+        let d = gaussians(50, 2.0, 6);
+        let a = NuSvm::train(&d.x, &d.y, 0.1, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        let b = NuSvm::train(&d.x, &d.y, 0.6, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        assert!(b.model.n_sv() >= a.model.n_sv());
+    }
+}

@@ -1,0 +1,162 @@
+//! One-class SVM (paper §4, Table II): trains on positive data only,
+//! declares outliers where ⟨w, Φ(x)⟩ < ρ*.
+
+use super::KernelModel;
+use crate::kernel::{full_gram, KernelKind};
+use crate::qp::dcdm::{self, DcdmOpts};
+use crate::qp::{ConstraintKind, QpProblem, SolveStats};
+use crate::util::Mat;
+use anyhow::{bail, Result};
+
+/// A trained OC-SVM.
+#[derive(Clone, Debug)]
+pub struct OcSvm {
+    pub model: KernelModel,
+    pub alpha: Vec<f64>,
+    pub nu: f64,
+    pub rho: f64,
+    pub stats: SolveStats,
+}
+
+impl OcSvm {
+    /// Train on `x` (normal data only) with parameter ν ∈ (0,1).
+    pub fn train(x: &Mat, nu: f64, kernel: KernelKind) -> Result<OcSvm> {
+        let h = full_gram(x, kernel);
+        Self::train_with_h(x, &h, nu, kernel, None, &DcdmOpts::default())
+    }
+
+    /// Train against a precomputed H (coordinator cache / SRBO path).
+    pub fn train_with_h(
+        x: &Mat,
+        h: &Mat,
+        nu: f64,
+        kernel: KernelKind,
+        warm: Option<&[f64]>,
+        opts: &DcdmOpts,
+    ) -> Result<OcSvm> {
+        let l = x.rows;
+        if l == 0 {
+            bail!("empty training set");
+        }
+        if !(0.0 < nu && nu < 1.0) {
+            bail!("nu must be in (0,1), got {nu}");
+        }
+        if nu * l as f64 <= 1.0 {
+            bail!("nu*l must exceed 1 for a feasible OC-SVM dual");
+        }
+        let ub = vec![1.0 / (nu * l as f64); l];
+        let p = QpProblem {
+            q: h,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumEq(1.0),
+        };
+        let (alpha, stats) = dcdm::solve(&p, warm, opts);
+        Ok(Self::from_alpha(x, h, alpha, nu, kernel, stats))
+    }
+
+    /// Assemble from a dual solution; ρ* recovered from the interior
+    /// coordinates (d_i = (Hα)_i = ρ* there).
+    pub fn from_alpha(
+        x: &Mat,
+        h: &Mat,
+        alpha: Vec<f64>,
+        nu: f64,
+        kernel: KernelKind,
+        stats: SolveStats,
+    ) -> OcSvm {
+        let l = alpha.len();
+        let ub = 1.0 / (nu * l as f64);
+        let mut ha = vec![0.0; l];
+        h.matvec(&alpha, &mut ha);
+        let tol = ub * 1e-6;
+        let interior: Vec<f64> = (0..l)
+            .filter(|&i| alpha[i] > tol && alpha[i] < ub - tol)
+            .map(|i| ha[i])
+            .collect();
+        let rho = if !interior.is_empty() {
+            interior.iter().sum::<f64>() / interior.len() as f64
+        } else {
+            // degenerate: fall back to the max score among cap coords
+            (0..l)
+                .filter(|&i| alpha[i] > tol)
+                .map(|i| ha[i])
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        OcSvm {
+            model: KernelModel {
+                kernel,
+                sv: x.clone(),
+                coef: alpha.clone(),
+                threshold: rho,
+            },
+            alpha,
+            nu,
+            rho,
+            stats,
+        }
+    }
+
+    /// Decision scores (≥ 0 ⇒ inlier).
+    pub fn decision(&self, x: &Mat) -> Vec<f64> {
+        self.model.decision(x)
+    }
+
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        self.model.predict(x)
+    }
+
+    /// AUC (%) on a labelled test set (+1 normal, -1 anomaly).
+    pub fn auc(&self, x: &Mat, y: &[f64]) -> f64 {
+        crate::stats::roc_auc(&self.decision(x), y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn detects_shifted_anomalies() {
+        let d = synthetic::oneclass_gaussians(100, -2.0, 1);
+        let train = d.positives();
+        let m = OcSvm::train(&train.x, 0.2, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        let auc = m.auc(&d.x, &d.y);
+        assert!(auc > 75.0, "auc={auc}");
+    }
+
+    #[test]
+    fn nu_bounds_outlier_fraction_on_train() {
+        let d = synthetic::oneclass_gaussians(120, -1.0, 2).positives();
+        let nu = 0.25;
+        let m = OcSvm::train(&d.x, nu, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        let scores = m.decision(&d.x);
+        let outliers = scores.iter().filter(|&&s| s < -1e-9).count();
+        // nu-property: outlier fraction <= nu (+ slack for ties)
+        assert!(
+            (outliers as f64) / (d.len() as f64) <= nu + 0.05,
+            "outliers={outliers}"
+        );
+    }
+
+    #[test]
+    fn alpha_sums_to_one() {
+        let d = synthetic::oneclass_gaussians(80, -1.0, 3).positives();
+        let m = OcSvm::train(&d.x, 0.3, KernelKind::Rbf { gamma: 1.0 }).unwrap();
+        assert!((m.alpha.iter().sum::<f64>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_infeasible_nu() {
+        let d = synthetic::oneclass_gaussians(50, -1.0, 4).positives();
+        assert!(OcSvm::train(&d.x, 1.0 / 100.0, KernelKind::Linear).is_err());
+    }
+
+    #[test]
+    fn rho_positive_on_clustered_data() {
+        let d = synthetic::oneclass_gaussians(80, -1.0, 5).positives();
+        let m = OcSvm::train(&d.x, 0.3, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+        assert!(m.rho > 0.0);
+    }
+}

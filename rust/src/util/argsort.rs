@@ -1,0 +1,81 @@
+//! Index sorting helpers used by the ρ-bound order statistics (Thm. 2)
+//! and the Wilcoxon signed-rank test.
+
+/// Indices that sort `xs` in *descending* order (stable; ties keep index
+/// order, which makes the screening bounds deterministic).
+pub fn argsort_desc(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+/// The k-th largest value of `xs` (k is 1-based, as in d(1) > d(2) ...).
+pub fn kth_largest(xs: &[f64], k: usize) -> f64 {
+    assert!(k >= 1 && k <= xs.len());
+    let mut v: Vec<f64> = xs.to_vec();
+    // partial select would be O(n); the screening path calls this twice
+    // per step on an O(l) vector, dwarfed by the O(l^2) matvec, so a sort
+    // is fine and simpler to audit.
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    v[k - 1]
+}
+
+/// Average ranks of |xs| (1-based, midranks for ties) — Wilcoxon helper.
+pub fn ranks_of_abs(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        xs[a].abs()
+            .partial_cmp(&xs[b].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && (xs[idx[j + 1]].abs() - xs[idx[i]].abs()).abs() < 1e-12 {
+            j += 1;
+        }
+        // midrank for the tie group [i, j]
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argsort_descending() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(argsort_desc(&xs), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn argsort_stable_on_ties() {
+        let xs = [1.0, 2.0, 2.0, 0.0];
+        assert_eq!(argsort_desc(&xs), vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn kth_largest_basic() {
+        let xs = [5.0, 1.0, 4.0, 2.0];
+        assert_eq!(kth_largest(&xs, 1), 5.0);
+        assert_eq!(kth_largest(&xs, 2), 4.0);
+        assert_eq!(kth_largest(&xs, 4), 1.0);
+    }
+
+    #[test]
+    fn midranks_for_ties() {
+        let xs = [1.0, -1.0, 2.0];
+        // |xs| = [1,1,2] -> ranks 1.5, 1.5, 3
+        assert_eq!(ranks_of_abs(&xs), vec![1.5, 1.5, 3.0]);
+    }
+}

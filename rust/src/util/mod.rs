@@ -1,0 +1,18 @@
+//! Dependency-free substrates: RNG, dense linear algebra, sorting,
+//! timing, TSV/JSON report writers, CLI parsing.
+//!
+//! The offline crate registry only carries the `xla` crate's closure, so
+//! `rand`, `serde`, `clap` etc. are re-implemented here at the size this
+//! project needs (see DESIGN.md §2).
+
+pub mod argsort;
+pub mod cli;
+pub mod linalg;
+pub mod rng;
+pub mod timer;
+pub mod tsv;
+
+pub use argsort::{argsort_desc, ranks_of_abs};
+pub use linalg::Mat;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,92 @@
+//! Wall-clock timing with named sections, used by coordinator metrics and
+//! the bench harness.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the elapsed seconds of the lap.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Accumulates per-phase timings (screen / solve / delta / gram ...).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == phase) {
+            e.1 += secs;
+        } else {
+            self.entries.push((phase.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.entries.iter().find(|e| e.0 == phase).map(|e| e.1).unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (k, v) in &other.entries {
+            self.add(k, *v);
+        }
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.secs() > 0.0);
+    }
+
+    #[test]
+    fn phases_accumulate_and_merge() {
+        let mut p = PhaseTimes::new();
+        p.add("solve", 1.0);
+        p.add("solve", 0.5);
+        p.add("screen", 0.25);
+        assert_eq!(p.get("solve"), 1.5);
+        assert_eq!(p.total(), 1.75);
+        let mut q = PhaseTimes::new();
+        q.add("screen", 0.75);
+        p.merge(&q);
+        assert_eq!(p.get("screen"), 1.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Cross-module integration: datasets → kernels → solvers → models →
+//! coordinator, on realistic workloads.
+
+use srbo::coordinator::grid::select_model;
+use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
+use srbo::data::split::train_test_stratified;
+use srbo::data::{benchmark, synthetic};
+use srbo::kernel::KernelKind;
+use srbo::qp::{dcdm, gqp, ConstraintKind, QpProblem};
+use srbo::stats::{accuracy, roc_auc};
+use srbo::svm::c::CSvm;
+use srbo::svm::kde::Kde;
+use srbo::svm::nu::NuSvm;
+use srbo::svm::oneclass::OcSvm;
+
+fn grid(a: f64, b: f64, n: usize) -> Vec<f64> {
+    (0..n).map(|i| a + (b - a) * i as f64 / (n - 1) as f64).collect()
+}
+
+#[test]
+fn nu_svm_beats_chance_on_all_artificial_sets() {
+    for d in synthetic::all_artificial(0.06, 7) {
+        let (tr, te) = train_test_stratified(&d, 0.8, 1);
+        let m = NuSvm::train(&tr.x, &tr.y, 0.3, KernelKind::Rbf { gamma: 1.0 })
+            .unwrap();
+        let acc = accuracy(&m.predict(&te.x), &te.y);
+        assert!(acc > 65.0, "{}: acc={acc}", d.name);
+    }
+}
+
+#[test]
+fn rbf_solves_all_nonlinear_artificial_sets_well() {
+    for (name, d) in [
+        ("circle", synthetic::circle(80, 2)),
+        ("exclusive", synthetic::exclusive(80, 3)),
+        ("spiral", synthetic::spiral(120, 4)),
+    ] {
+        let (tr, te) = train_test_stratified(&d, 0.8, 5);
+        let mut best = 0.0f64;
+        for gamma in [0.5, 2.0, 8.0] {
+            let m =
+                NuSvm::train(&tr.x, &tr.y, 0.2, KernelKind::Rbf { gamma }).unwrap();
+            best = best.max(accuracy(&m.predict(&te.x), &te.y));
+        }
+        assert!(best > 85.0, "{name}: best={best}");
+    }
+}
+
+#[test]
+fn c_svm_and_nu_svm_comparable_on_benchmark_mimic() {
+    let spec = benchmark::spec("Banknote").unwrap();
+    let d = benchmark::generate(spec, 0.15, 11);
+    let (tr, te) = train_test_stratified(&d, 0.8, 12);
+    let k = KernelKind::rbf_from_sigma(2.0);
+    // small C grid, as the paper's protocol does for C-SVM
+    let ca = [1.0, 8.0, 64.0]
+        .iter()
+        .map(|&c| {
+            let m = CSvm::train(&tr.x, &tr.y, c, k).unwrap();
+            accuracy(&m.predict(&te.x), &te.y)
+        })
+        .fold(0.0, f64::max);
+    let nu = NuSvm::train(&tr.x, &tr.y, 0.25, k).unwrap();
+    let na = accuracy(&nu.predict(&te.x), &te.y);
+    assert!(ca > 80.0, "C-SVM acc={ca}");
+    assert!(na > 80.0, "nu-SVM acc={na}");
+    assert!((ca - na).abs() < 15.0, "models disagree wildly: {ca} vs {na}");
+}
+
+#[test]
+fn dcdm_and_gqp_agree_on_benchmark_dual() {
+    let spec = benchmark::spec("Pima").unwrap();
+    let d = benchmark::generate(spec, 0.1, 13);
+    let q = srbo::kernel::full_q(&d.x, &d.y, KernelKind::rbf_from_sigma(1.0));
+    let l = d.len();
+    let ub = vec![1.0 / l as f64; l];
+    let p = QpProblem {
+        q: &q,
+        lin: None,
+        ub: &ub,
+        constraint: ConstraintKind::SumGe(0.3),
+    };
+    let (a1, s1) = dcdm::solve(&p, None, &Default::default());
+    let (a2, s2) = gqp::solve(&p, None, &Default::default());
+    assert!(
+        (s1.objective - s2.objective).abs() < 1e-5 * (1.0 + s1.objective.abs()),
+        "objectives: dcdm={} gqp={}",
+        s1.objective,
+        s2.objective
+    );
+    // decision agreement on training data (the deployable quantity)
+    let score = |a: &[f64]| -> Vec<f64> {
+        let mut s = vec![0.0; l];
+        q.matvec(a, &mut s);
+        s
+    };
+    let (sa, sb) = (score(&a1), score(&a2));
+    let max_gap = sa
+        .iter()
+        .zip(&sb)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max);
+    assert!(max_gap < 1e-3, "score gap {max_gap}");
+}
+
+#[test]
+fn oc_svm_and_kde_both_detect_anomalies() {
+    let d = synthetic::oneclass_gaussians(150, -2.0, 21);
+    let train = d.positives();
+    let oc = OcSvm::train(&train.x, 0.2, KernelKind::Rbf { gamma: 0.5 }).unwrap();
+    let kde = Kde::fit(&train.x, Kde::silverman_bandwidth(&train.x), 0.1).unwrap();
+    let (a1, a2) = (oc.auc(&d.x, &d.y), kde.auc(&d.x, &d.y));
+    assert!(a1 > 70.0, "oc auc={a1}");
+    assert!(a2 > 70.0, "kde auc={a2}");
+}
+
+#[test]
+fn grid_search_finds_good_model_on_circle() {
+    let d = synthetic::circle(60, 31);
+    let (tr, te) = train_test_stratified(&d, 0.8, 32);
+    let (kernel, _nu, acc, results) =
+        select_model(&tr, &te, grid(0.15, 0.4, 6), &[0.5, 1.0], true, 2);
+    assert_eq!(results.len(), 3);
+    assert!(matches!(kernel, KernelKind::Rbf { .. }), "circle needs rbf");
+    assert!(acc > 90.0, "acc={acc}");
+}
+
+#[test]
+fn paper_mode_dcdm_close_but_maybe_inexact() {
+    // Table VIII behaviour: paper-mode DCDM is close to exact but can
+    // deviate; the resulting accuracy stays in a sane band.
+    let d = synthetic::gaussians(80, 2.0, 41);
+    let (tr, te) = train_test_stratified(&d, 0.8, 42);
+    let q = srbo::kernel::full_q(&tr.x, &tr.y, KernelKind::Linear);
+    let mut cfg = PathConfig::new(grid(0.2, 0.3, 4), KernelKind::Linear);
+    cfg.solver = SolverChoice::DcdmPaper;
+    cfg.screening = false;
+    let path = NuPath::run_with_q(&q, &cfg, false, Default::default()).unwrap();
+    for step in &path.steps {
+        let m = NuSvm::from_alpha(
+            &tr.x,
+            &tr.y,
+            step.alpha.clone(),
+            step.nu,
+            KernelKind::Linear,
+            step.solve_stats.clone(),
+        );
+        let acc = accuracy(&m.predict(&te.x), &te.y);
+        assert!(acc > 85.0, "paper-mode collapsed: acc={acc}");
+    }
+}
+
+#[test]
+fn oc_path_auc_consistent_with_direct_training() {
+    let d = synthetic::oneclass_gaussians(120, -1.5, 51);
+    let train = d.positives();
+    let k = KernelKind::Rbf { gamma: 0.5 };
+    let nus = grid(0.2, 0.4, 5);
+    let cfg = PathConfig::new(nus.clone(), k);
+    let path = NuPath::run_oneclass(&train.x, &cfg).unwrap();
+    let h = srbo::kernel::full_gram(&train.x, k);
+    for (i, &nu) in nus.iter().enumerate() {
+        let from_path = OcSvm::from_alpha(
+            &train.x,
+            &h,
+            path.steps[i].alpha.clone(),
+            nu,
+            k,
+            Default::default(),
+        );
+        let direct = OcSvm::train(&train.x, nu, k).unwrap();
+        let (a, b) = (from_path.auc(&d.x, &d.y), direct.auc(&d.x, &d.y));
+        assert!((a - b).abs() < 2.0, "nu={nu}: path auc {a} vs direct {b}");
+    }
+}
+
+#[test]
+fn auc_and_accuracy_are_consistent_metrics() {
+    let d = synthetic::gaussians(100, 2.0, 61);
+    let m = NuSvm::train(&d.x, &d.y, 0.3, KernelKind::Linear).unwrap();
+    let scores = m.decision(&d.x);
+    let auc = roc_auc(&scores, &d.y);
+    let acc = accuracy(&m.predict(&d.x), &d.y);
+    assert!(auc > 95.0 && acc > 95.0, "auc={auc} acc={acc}");
+}
+
+#[test]
+fn standardization_keeps_benchmark_accuracy_sane() {
+    let spec = benchmark::spec("CMC").unwrap();
+    let d = benchmark::generate(spec, 0.1, 71);
+    let (mut tr, mut te) = train_test_stratified(&d, 0.8, 72);
+    let k = KernelKind::rbf_from_sigma(1.0);
+    let raw = NuSvm::train(&tr.x, &tr.y, 0.4, k).unwrap();
+    let raw_acc = accuracy(&raw.predict(&te.x), &te.y);
+    let (mean, std) = tr.standardize();
+    te.apply_standardize(&mean, &std);
+    let std_m = NuSvm::train(&tr.x, &tr.y, 0.4, k).unwrap();
+    let std_acc = accuracy(&std_m.predict(&te.x), &te.y);
+    assert!(std_acc + 10.0 >= raw_acc, "std hurt a lot: {std_acc} vs {raw_acc}");
+}
+
+#[test]
+fn benchmark_fleet_generates_and_trains_quickly_at_small_scale() {
+    for name in ["Hepatitis", "Sonar", "Haberman", "Monks"] {
+        let spec = benchmark::spec(name).unwrap();
+        let d = benchmark::generate(spec, 1.0, 81);
+        let (tr, te) = train_test_stratified(&d, 0.8, 82);
+        let m = NuSvm::train(&tr.x, &tr.y, 0.3, KernelKind::rbf_from_sigma(2.0))
+            .unwrap();
+        let acc = accuracy(&m.predict(&te.x), &te.y);
+        assert!(acc > 55.0, "{name}: acc={acc}");
+    }
+}

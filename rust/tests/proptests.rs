@@ -1,0 +1,252 @@
+//! Heavier property-based tests over coordinator/solver invariants,
+//! using the in-tree prop framework (see DESIGN.md §2 for why not
+//! proptest).
+
+use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
+use srbo::kernel::{full_q, KernelKind};
+use srbo::prop::run_cases;
+use srbo::qp::{dcdm, kkt_violation, projection, ConstraintKind, QpProblem};
+use srbo::screening::{delta, srbo as rule, ScreenCode};
+use srbo::util::Mat;
+
+/// Random two-Gaussian datasets with random kernels: the full path must
+/// keep every iterate feasible and screening must never contradict the
+/// exact solution at the next grid point.
+#[test]
+fn prop_path_feasible_and_screening_safe() {
+    run_cases(10, 0xA11CE, |g| {
+        let n_per = g.usize(15, 35);
+        let mu = g.f64(0.8, 3.0);
+        let seed = g.rng().next_u64();
+        let d = srbo::data::synthetic::gaussians(n_per, mu, seed);
+        let kernel = if g.bool() {
+            KernelKind::Linear
+        } else {
+            KernelKind::Rbf { gamma: g.f64(0.1, 2.0) }
+        };
+        let q = full_q(&d.x, &d.y, kernel);
+        let nu_lo = g.f64(0.15, 0.35);
+        let nu_hi = nu_lo + g.f64(0.05, 0.2);
+        let k = g.usize(4, 9);
+        let nus: Vec<f64> = (0..k)
+            .map(|i| nu_lo + (nu_hi - nu_lo) * i as f64 / (k - 1) as f64)
+            .collect();
+        let cfg = PathConfig::new(nus.clone(), kernel);
+        let path = NuPath::run_with_q(&q, &cfg, false, Default::default()).unwrap();
+        let l = d.len();
+        let ub = vec![1.0 / l as f64; l];
+        for (i, step) in path.steps.iter().enumerate() {
+            let p = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nus[i]),
+            };
+            assert!(p.is_feasible(&step.alpha, 1e-6), "step {i} infeasible");
+            // alpha is (near-)optimal: KKT violation small
+            let viol = kkt_violation(&p, &step.alpha);
+            assert!(viol < 1e-5, "step {i}: KKT violation {viol}");
+        }
+    });
+}
+
+/// Projection idempotence: P(P(x)) = P(x).
+#[test]
+fn prop_projection_idempotent() {
+    run_cases(60, 0x1D3, |g| {
+        let n = g.usize(2, 12);
+        let ub: Vec<f64> = (0..n).map(|_| g.f64(0.05, 1.0)).collect();
+        let target = g.f64(0.0, ub.iter().sum::<f64>());
+        let kind = if g.bool() {
+            ConstraintKind::SumGe(target)
+        } else {
+            ConstraintKind::SumEq(target)
+        };
+        let x = g.vec_f64(n, -2.0, 2.0);
+        let p1 = projection::projected(&x, &ub, kind);
+        let p2 = projection::projected(&p1, &ub, kind);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-7, "not idempotent: {a} vs {b}");
+        }
+    });
+}
+
+/// Solver invariance to coordinate permutation: permuting the problem and
+/// un-permuting the solution gives the same objective.
+#[test]
+fn prop_dcdm_permutation_invariant_objective() {
+    run_cases(16, 0x9E2, |g| {
+        let n = g.usize(5, 18);
+        let q = g.psd(n);
+        let ub = vec![1.5 / n as f64; n];
+        let nu = g.f64(0.1, 0.6);
+        let p = QpProblem {
+            q: &q,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(nu),
+        };
+        let (a, s) = dcdm::solve(&p, None, &Default::default());
+        // permute
+        let mut perm: Vec<usize> = (0..n).collect();
+        g.rng().shuffle(&mut perm);
+        let mut qp = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                qp.set(i, j, q.get(perm[i], perm[j]));
+            }
+        }
+        let pp = QpProblem {
+            q: &qp,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(nu),
+        };
+        let (ap, sp) = dcdm::solve(&pp, None, &Default::default());
+        assert!(
+            (s.objective - sp.objective).abs() < 1e-6 * (1.0 + s.objective.abs()),
+            "objective changed under permutation: {} vs {}",
+            s.objective,
+            sp.objective
+        );
+        let _ = (a, ap);
+    });
+}
+
+/// Screening monotonicity in delta quality: the optimal delta never
+/// screens fewer samples than the cheap feasible delta (same sphere
+/// centre family, smaller radius).
+#[test]
+fn prop_better_delta_screens_no_fewer() {
+    run_cases(12, 0xDE17A, |g| {
+        let n_per = g.usize(20, 40);
+        let d = srbo::data::synthetic::gaussians(n_per, g.f64(1.5, 3.0), g.rng().next_u64());
+        let q = full_q(&d.x, &d.y, KernelKind::Linear);
+        let l = d.len();
+        let ub = vec![1.0 / l as f64; l];
+        let nu0 = g.f64(0.2, 0.4);
+        let nu1 = nu0 + 0.005;
+        let p0 = QpProblem {
+            q: &q,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(nu0),
+        };
+        let (a0, _) = dcdm::solve(&p0, None, &Default::default());
+        let cheap = delta::feasible(&a0, &ub, nu1);
+        let opt = delta::optimal(&q, &a0, &ub, nu1, 120);
+        let r_cheap = delta::radius_sq(&q, &a0, &cheap).max(0.0);
+        let r_opt = delta::radius_sq(&q, &a0, &opt).max(0.0);
+        assert!(r_opt <= r_cheap + 1e-9, "r grew: {r_opt} vs {r_cheap}");
+    });
+}
+
+/// The reduced problem reconstruction: for arbitrary (safe-by-
+/// construction) fixed sets, solving reduced + combining equals solving
+/// the full problem.
+#[test]
+fn prop_reduced_solve_roundtrip() {
+    run_cases(12, 0x2ED, |g| {
+        let n = g.usize(8, 20);
+        let q = g.psd(n);
+        let ub = vec![1.0 / n as f64; n];
+        let nu = g.f64(0.2, 0.5);
+        let p = QpProblem {
+            q: &q,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(nu),
+        };
+        let (a_full, _) = dcdm::solve(&p, None, &Default::default());
+        let codes: Vec<ScreenCode> = a_full
+            .iter()
+            .zip(&ub)
+            .map(|(&a, &u)| {
+                if a < 1e-9 {
+                    ScreenCode::Zero
+                } else if a > u - 1e-9 {
+                    ScreenCode::Upper
+                } else {
+                    ScreenCode::Keep
+                }
+            })
+            .collect();
+        let red = srbo::qp::reduced::build(&q, &ub, ConstraintKind::SumGe(nu), &codes);
+        let (a_s, _) = if red.is_empty() {
+            (Vec::new(), Default::default())
+        } else {
+            dcdm::solve(&red.as_qp(), None, &Default::default())
+        };
+        let a_rec = red.combine(&a_s, n);
+        let (f1, f2) = (p.objective(&a_full), p.objective(&a_rec));
+        assert!(
+            (f1 - f2).abs() < 1e-6 * (1.0 + f1.abs()),
+            "roundtrip objective {f1} vs {f2}"
+        );
+    });
+}
+
+/// Solver-independence of the rule (paper §3.6: "the solver will not
+/// have an effect on our safe screening rule"): swapping GQP for DCDM
+/// leaves every path objective unchanged.
+#[test]
+fn prop_rule_solver_independent() {
+    run_cases(6, 0x501F, |g| {
+        let d = srbo::data::synthetic::gaussians(
+            g.usize(20, 30),
+            2.0,
+            g.rng().next_u64(),
+        );
+        let q = full_q(&d.x, &d.y, KernelKind::Linear);
+        let nus = vec![0.2, 0.21, 0.22];
+        let mut cfg_d = PathConfig::new(nus.clone(), KernelKind::Linear);
+        cfg_d.solver = SolverChoice::Dcdm;
+        let mut cfg_g = cfg_d.clone();
+        cfg_g.solver = SolverChoice::Gqp;
+        let pd = NuPath::run_with_q(&q, &cfg_d, false, Default::default()).unwrap();
+        let pg = NuPath::run_with_q(&q, &cfg_g, false, Default::default()).unwrap();
+        // codes can differ on degenerate coordinates, but screened sets
+        // must never contradict each other's exact solutions: audit both
+        // against objectives
+        let l = d.len();
+        let ub = vec![1.0 / l as f64; l];
+        for k in 0..nus.len() {
+            let p = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nus[k]),
+            };
+            let (fd, fg) = (p.objective(&pd.steps[k].alpha), p.objective(&pg.steps[k].alpha));
+            assert!(
+                (fd - fg).abs() < 1e-4 * (1.0 + fd.abs()),
+                "solver-dependent objective at {k}: {fd} vs {fg}"
+            );
+        }
+    });
+}
+
+/// Screening rule emits only valid codes and the ratio statistic agrees
+/// with the codes.
+#[test]
+fn prop_codes_and_ratio_consistent() {
+    run_cases(20, 0xC0DE5, |g| {
+        let n = g.usize(10, 30);
+        let q = g.psd(n);
+        let ub = vec![1.0 / n as f64; n];
+        let nu0 = g.f64(0.2, 0.4);
+        let nu1 = nu0 + g.f64(0.01, 0.1);
+        let p0 = QpProblem {
+            q: &q,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(nu0),
+        };
+        let (a0, _) = dcdm::solve(&p0, None, &Default::default());
+        let del = delta::optimal(&q, &a0, &ub, nu1, 60);
+        let res = rule::screen(&q, &a0, &del, nu1);
+        let screened = res.codes.iter().filter(|c| c.is_screened()).count();
+        let ratio = srbo::screening::screening_ratio(&res.codes);
+        assert!((ratio - 100.0 * screened as f64 / n as f64).abs() < 1e-9);
+    });
+}

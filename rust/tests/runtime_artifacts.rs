@@ -1,0 +1,210 @@
+//! PJRT artifact path vs the native f64 path: the AOT-compiled Pallas/JAX
+//! graphs must reproduce the Rust reference within f32 tolerance.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a note) when artifacts/ is absent so `cargo test` works in a
+//! fresh checkout.
+
+use srbo::data::synthetic;
+use srbo::kernel::{full_gram, full_q, KernelKind};
+use srbo::qp::{ConstraintKind, QpProblem};
+use srbo::runtime::Runtime;
+use srbo::screening::{delta, srbo as srbo_rule, ScreenCode};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_manifest_loads_and_names_match() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    for expected in [
+        "gram_rbf_256x256x64",
+        "gram_linear_256x256x64",
+        "qmatvec_512",
+        "screen_step_512",
+        "dcdm_sweep5_512",
+        "decision_rbf_128x512x64",
+        "decision_linear_128x512x64",
+        "objective_512",
+    ] {
+        assert!(names.contains(&expected), "missing artifact {expected}");
+    }
+}
+
+#[test]
+fn gram_rbf_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let d = synthetic::gaussians(64, 1.5, 11); // 128 rows, 2 features
+    let gamma = 0.7;
+    let art = rt.gram_rbf_block(&d.x, &d.x, gamma).unwrap();
+    let native = full_gram(&d.x, KernelKind::Rbf { gamma });
+    // linear-kernel bias差: full_gram for RBF has diag 1 — same formula
+    let mut max_err = 0.0f64;
+    for i in 0..d.len() {
+        for j in 0..d.len() {
+            max_err = max_err.max((art.get(i, j) - native.get(i, j)).abs());
+        }
+    }
+    assert!(max_err < 1e-5, "max err {max_err}");
+}
+
+#[test]
+fn qmatvec_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let d = synthetic::gaussians(100, 2.0, 12);
+    let q = full_q(&d.x, &d.y, KernelKind::Rbf { gamma: 0.5 });
+    let v: Vec<f64> = (0..d.len()).map(|i| (i % 7) as f64 / 100.0).collect();
+    let art = rt.qmatvec(&q, &v).unwrap();
+    let mut native = vec![0.0; d.len()];
+    q.matvec(&v, &mut native);
+    let max_err = art
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(max_err < 1e-4, "max err {max_err}");
+}
+
+#[test]
+fn screen_step_artifact_agrees_with_native_rule() {
+    let Some(rt) = runtime() else { return };
+    let d = synthetic::gaussians(80, 2.5, 13);
+    let q = full_q(&d.x, &d.y, KernelKind::Linear);
+    let l = d.len();
+    let ub = vec![1.0 / l as f64; l];
+    let (nu0, nu1) = (0.2, 0.205);
+    let p0 = QpProblem {
+        q: &q,
+        lin: None,
+        ub: &ub,
+        constraint: ConstraintKind::SumGe(nu0),
+    };
+    let (a0, _) = srbo::qp::dcdm::solve(&p0, None, &Default::default());
+    let del = delta::optimal(&q, &a0, &ub, nu1, 150);
+    let native = srbo_rule::screen(&q, &a0, &del, nu1);
+    let (codes, rho_up, rho_lo, r) = rt.screen_step(&q, &a0, &del, nu1).unwrap();
+    assert_eq!(codes.len(), l);
+    assert!(r >= 0.0);
+    assert!(rho_lo <= rho_up + 1e-6, "rho_lo {rho_lo} > rho_up {rho_up}");
+    // The artifact runs in f32 with a larger guard, so it may screen a
+    // SUBSET of what the native rule screens — but must never contradict
+    // it: anything the artifact screens, the native f64 rule screens too
+    // or leaves as Keep-with-tiny-margin.  Audit against the exact next
+    // solution instead (the real safety property).
+    let p1 = QpProblem {
+        q: &q,
+        lin: None,
+        ub: &ub,
+        constraint: ConstraintKind::SumGe(nu1),
+    };
+    let (a1, _) = srbo::qp::dcdm::solve(&p1, None, &Default::default());
+    for i in 0..l {
+        match codes[i] {
+            ScreenCode::Zero => {
+                assert!(a1[i] <= 1e-6, "artifact unsafe Zero at {i}: {}", a1[i])
+            }
+            ScreenCode::Upper => assert!(
+                a1[i] >= ub[i] - 1e-6,
+                "artifact unsafe Upper at {i}: {}",
+                a1[i]
+            ),
+            ScreenCode::Keep => {}
+        }
+    }
+    // and it should screen a nontrivial fraction of what native finds
+    let native_screened =
+        native.codes.iter().filter(|c| c.is_screened()).count();
+    let artifact_screened = codes.iter().filter(|c| c.is_screened()).count();
+    if native_screened > 10 {
+        assert!(
+            artifact_screened * 2 >= native_screened,
+            "artifact screens {artifact_screened} vs native {native_screened}"
+        );
+    }
+}
+
+#[test]
+fn dcdm_artifact_descends_objective_and_stays_feasible() {
+    let Some(rt) = runtime() else { return };
+    let d = synthetic::gaussians(60, 1.5, 14);
+    let q = full_q(&d.x, &d.y, KernelKind::Rbf { gamma: 0.5 });
+    let l = d.len();
+    let nu = 0.3;
+    let ub = vec![1.0 / l as f64; l];
+    let a0: Vec<f64> = vec![nu / l as f64; l];
+    let a1 = rt.dcdm_sweeps(&q, &a0, &ub, nu).unwrap();
+    let p = QpProblem {
+        q: &q,
+        lin: None,
+        ub: &ub,
+        constraint: ConstraintKind::SumGe(nu),
+    };
+    assert!(p.is_feasible(&a1, 1e-5), "infeasible after artifact sweeps");
+    assert!(
+        p.objective(&a1) <= p.objective(&a0) + 1e-7,
+        "objective increased"
+    );
+    // matches the native paper-mode sweeps to f32 tolerance
+    let (native, _) = srbo::qp::dcdm::solve(
+        &p,
+        Some(&a0),
+        &srbo::qp::dcdm::DcdmOpts {
+            paper_mode: true,
+            max_sweeps: srbo::runtime::shapes::DCDM_EPOCHS,
+            eps: 0.0,
+            ..Default::default()
+        },
+    );
+    let max_gap = a1
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(max_gap < 1e-4, "artifact vs native sweeps gap {max_gap}");
+}
+
+#[test]
+fn decision_artifact_matches_native_scores() {
+    let Some(rt) = runtime() else { return };
+    let d = synthetic::gaussians(100, 2.0, 15);
+    let gamma = 0.5;
+    let m = srbo::svm::nu::NuSvm::train(
+        &d.x,
+        &d.y,
+        0.3,
+        KernelKind::Rbf { gamma },
+    )
+    .unwrap();
+    let test = synthetic::gaussians(90, 2.0, 16);
+    let native = m.decision(&test.x);
+    let ya: Vec<f64> = m.alpha.iter().zip(&d.y).map(|(&a, &y)| a * y).collect();
+    let art = rt.decision_rbf(&test.x, &d.x, &ya, gamma).unwrap();
+    assert_eq!(art.len(), native.len());
+    let max_gap = art
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(max_gap < 1e-5, "decision gap {max_gap}");
+    // predictions identical
+    for (a, b) in art.iter().zip(&native) {
+        assert_eq!(a.signum(), b.signum());
+    }
+}
+
+#[test]
+fn artifact_rejects_oversized_problems() {
+    let Some(rt) = runtime() else { return };
+    let d = synthetic::gaussians(300, 1.0, 17); // 600 > L = 512
+    let q = full_q(&d.x, &d.y, KernelKind::Linear);
+    let v = vec![0.0; 600];
+    assert!(rt.qmatvec(&q, &v).is_err());
+}
