@@ -1,0 +1,38 @@
+# SRBO-ν-SVM build entrypoints — humans and CI run the identical pipeline.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all verify lint fmt bench-compile bench aot clean
+
+all: verify
+
+# Tier-1 verify (verbatim — keep in sync with ROADMAP.md and CI).
+verify:
+	$(CARGO) build --release && $(CARGO) test -q
+
+# Lint gate: formatting + clippy with warnings denied.
+lint:
+	$(CARGO) fmt --check
+	$(CARGO) clippy --all-targets -- -D warnings
+
+fmt:
+	$(CARGO) fmt
+
+# Compile all 12 paper-table/figure benches without running them.
+bench-compile:
+	$(CARGO) bench --no-run
+
+# Run the full paper evaluation (slow; SRBO_SCALE shrinks it).
+bench:
+	$(CARGO) bench
+
+# Optional: export the L2 JAX/Pallas graphs to artifacts/*.hlo.txt.
+# Needs the Python toolchain (jax); the Rust `pjrt` feature consumes the
+# result. The default Rust build does NOT require this.
+aot:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts python/compile/__pycache__ python/compile/kernels/__pycache__

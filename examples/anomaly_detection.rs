@@ -11,7 +11,7 @@ use srbo::svm::kde::Kde;
 use srbo::svm::oneclass::OcSvm;
 use srbo::util::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> srbo::Result<()> {
     // Normal data around (0.5, 0.5); anomalies at three shift levels,
     // negatives reduced to 20% (the Fig. 7 setup).
     for mu_neg in [0.2, -0.2, -1.0] {

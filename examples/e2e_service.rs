@@ -21,7 +21,7 @@ use srbo::runtime::Runtime;
 use srbo::svm::nu::NuSvm;
 use srbo::util::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> srbo::Result<()> {
     let fleet = ["Banknote", "Pima", "Haberman", "Monks"];
     let scale = std::env::var("SRBO_SCALE")
         .ok()
@@ -140,7 +140,7 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
-        Err(e) => println!("  (artifacts not built — `make artifacts`; {e})"),
+        Err(e) => println!("  (artifacts not built — `make aot`; {e})"),
     }
     Ok(())
 }

@@ -10,7 +10,7 @@ use srbo::data::synthetic;
 use srbo::kernel::KernelKind;
 use srbo::util::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> srbo::Result<()> {
     let data = synthetic::gaussians(500, 2.0, 42);
     let kernel = KernelKind::Rbf { gamma: 0.5 };
     let nus: Vec<f64> = (0..250).map(|i| 0.3 + 0.002 * i as f64).collect();

@@ -10,7 +10,7 @@ use srbo::kernel::KernelKind;
 use srbo::stats::accuracy;
 use srbo::svm::nu::NuSvm;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> srbo::Result<()> {
     // 1. Data: two Gaussians at ±2 (the paper's Fig. 4b setting).
     let data = synthetic::gaussians(400, 2.0, 42);
     let (train, test) = train_test_stratified(&data, 0.8, 7);

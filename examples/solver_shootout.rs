@@ -11,7 +11,7 @@ use srbo::stats::accuracy;
 use srbo::svm::nu::NuSvm;
 use srbo::util::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> srbo::Result<()> {
     let spec = benchmark::spec("Electrical").expect("spec");
     let scale = std::env::var("SRBO_SCALE")
         .ok()

@@ -14,14 +14,15 @@
 //! baseline column of Tables IV-VII); `SolverChoice::Gqp` swaps in the
 //! generic QP solver (Fig. 8 / Table VIII).
 
+use crate::bail;
 use crate::kernel::{full_gram, full_q, KernelKind};
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::gqp::{self, GqpOpts};
 use crate::qp::{reduced, ConstraintKind, QpProblem, SolveStats};
 use crate::screening::{self, delta, oneclass, srbo, ScreenCode};
+use crate::util::error::Result;
 use crate::util::timer::{PhaseTimes, Timer};
 use crate::util::Mat;
-use anyhow::{bail, Result};
 
 use super::metrics::PathMetrics;
 

@@ -8,11 +8,12 @@ use std::fs;
 use std::path::Path;
 
 use super::Dataset;
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::Mat;
-use anyhow::{bail, Context};
 
 /// Parse LIBSVM format: `label idx:val idx:val ...` (1-based indices).
-pub fn parse_libsvm(text: &str) -> anyhow::Result<Dataset> {
+pub fn parse_libsvm(text: &str) -> Result<Dataset> {
     let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
     let mut y = Vec::new();
     let mut max_idx = 0usize;
@@ -57,7 +58,7 @@ pub fn parse_libsvm(text: &str) -> anyhow::Result<Dataset> {
 }
 
 /// Parse dense CSV with the label in the last column (+1/-1 or 0/1).
-pub fn parse_csv(text: &str) -> anyhow::Result<Dataset> {
+pub fn parse_csv(text: &str) -> Result<Dataset> {
     let mut rows = Vec::new();
     let mut y = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -88,7 +89,7 @@ pub fn parse_csv(text: &str) -> anyhow::Result<Dataset> {
 }
 
 /// Try to load a real data set for a benchmark name.
-pub fn load_real(name: &str) -> anyhow::Result<Dataset> {
+pub fn load_real(name: &str) -> Result<Dataset> {
     let base = Path::new("data").join("real");
     let libsvm = base.join(format!("{name}.libsvm"));
     if libsvm.exists() {

@@ -40,5 +40,7 @@ pub mod stats;
 pub mod svm;
 pub mod util;
 
+pub use crate::util::error::SrboError;
+
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = crate::util::error::Result<T>;

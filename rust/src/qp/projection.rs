@@ -43,7 +43,7 @@ fn shift_to_sum(a: &mut [f64], ub: &[f64], target: f64) {
     let a_min = a.iter().cloned().fold(f64::INFINITY, f64::min);
     let a_max = a.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     let ub_max = ub.iter().cloned().fold(0.0, f64::max);
-    let mut lo = -(a_max) - 1.0; // sum -> 0
+    let mut lo = -a_max - 1.0; // sum -> 0
     let mut hi = ub_max - a_min + 1.0; // sum -> max
     for _ in 0..200 {
         let mid = 0.5 * (lo + hi);

@@ -10,7 +10,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result, SrboError};
 
 use super::shapes::{self, F, GM, GN, L, T};
 use crate::screening::ScreenCode;
@@ -29,16 +30,18 @@ impl Artifact {
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute failed: {e:?}"))?;
+            .map_err(|e| SrboError::new(format!("execute failed: {e:?}")))?;
         let first = result
             .first()
             .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("no output buffers"))?;
+            .ok_or_else(|| SrboError::new("no output buffers"))?;
         let lit = first
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal failed: {e:?}"))?;
+            .map_err(|e| SrboError::new(format!("to_literal failed: {e:?}")))?;
         // aot.py lowers with return_tuple=True
-        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple failed: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| SrboError::new(format!("untuple failed: {e:?}")))?;
         if parts.len() != self.n_outputs {
             bail!("expected {} outputs, got {}", self.n_outputs, parts.len());
         }
@@ -58,10 +61,10 @@ impl Runtime {
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            .map_err(|e| SrboError::new(format!("PJRT cpu client: {e:?}")))?;
         let manifest = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {manifest:?} — run `make artifacts`"))?;
+            .with_context(|| format!("reading {manifest:?} — run `make aot`"))?;
         let mut artifacts = HashMap::new();
         for line in text.lines().skip(1) {
             let mut cols = line.split('\t');
@@ -73,11 +76,11 @@ impl Runtime {
             let n_outputs: usize = nouts.parse()?;
             let path = dir.join(format!("{name}.hlo.txt"));
             let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+                .map_err(|e| SrboError::new(format!("parse {path:?}: {e:?}")))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                .map_err(|e| SrboError::new(format!("compile {name}: {e:?}")))?;
             artifacts.insert(
                 name.to_string(),
                 Artifact { name: name.to_string(), exe, n_outputs },
@@ -97,7 +100,7 @@ impl Runtime {
     pub fn get(&self, name: &str) -> Result<&Artifact> {
         self.artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not loaded"))
+            .ok_or_else(|| SrboError::new(format!("artifact {name} not loaded")))
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -107,7 +110,7 @@ impl Runtime {
     fn lit_vec(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
         xla::Literal::vec1(data)
             .reshape(dims)
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+            .map_err(|e| SrboError::new(format!("reshape: {e:?}")))
     }
 
     fn lit_scalar1(v: f32) -> xla::Literal {
@@ -133,7 +136,7 @@ impl Runtime {
         let out = art.call(&[l1, l2, g])?;
         let flat: Vec<f32> = out[0]
             .to_vec()
-            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            .map_err(|e| SrboError::new(format!("to_vec: {e:?}")))?;
         let mut m = Mat::zeros(x1.rows, x2.rows);
         for i in 0..x1.rows {
             for j in 0..x2.rows {
@@ -153,7 +156,7 @@ impl Runtime {
         let ql = Self::lit_vec(&shapes::pad_mat_f32(q, L), &[L as i64, L as i64])?;
         let vl = Self::lit_vec(&shapes::pad_vec_f32(v, L), &[L as i64])?;
         let out = art.call(&[ql, vl])?;
-        let flat: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let flat: Vec<f32> = out[0].to_vec().map_err(|e| SrboError::new(format!("{e:?}")))?;
         Ok(shapes::unpad_f64(&flat, l))
     }
 
@@ -178,10 +181,10 @@ impl Runtime {
         let nul = Self::lit_scalar1(nu1 as f32);
         let ll = Self::lit_scalar1(l as f32);
         let out = art.call(&[ql, al, dl, ml, nul, ll])?;
-        let codes_f: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-        let rho_up: Vec<f32> = out[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-        let rho_lo: Vec<f32> = out[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-        let r: Vec<f32> = out[3].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let codes_f: Vec<f32> = out[0].to_vec().map_err(|e| SrboError::new(format!("{e:?}")))?;
+        let rho_up: Vec<f32> = out[1].to_vec().map_err(|e| SrboError::new(format!("{e:?}")))?;
+        let rho_lo: Vec<f32> = out[2].to_vec().map_err(|e| SrboError::new(format!("{e:?}")))?;
+        let r: Vec<f32> = out[3].to_vec().map_err(|e| SrboError::new(format!("{e:?}")))?;
         let codes = codes_f
             .iter()
             .take(l)
@@ -217,7 +220,7 @@ impl Runtime {
         let ul = Self::lit_vec(&shapes::pad_vec_f32(ub, L), &[L as i64])?;
         let nul = Self::lit_scalar1(nu as f32);
         let out = art.call(&[ql, al, ul, nul])?;
-        let flat: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let flat: Vec<f32> = out[0].to_vec().map_err(|e| SrboError::new(format!("{e:?}")))?;
         Ok(shapes::unpad_f64(&flat, l))
     }
 
@@ -252,7 +255,7 @@ impl Runtime {
                 Self::lit_vec(&ya, &[L as i64])?,
                 Self::lit_scalar1(gamma as f32),
             ])?;
-            let flat: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let flat: Vec<f32> = out[0].to_vec().map_err(|e| SrboError::new(format!("{e:?}")))?;
             scores.extend(flat.iter().take(hi - row0).map(|&s| s as f64));
             row0 = hi;
         }

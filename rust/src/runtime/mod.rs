@@ -2,8 +2,21 @@
 //! `python/compile/aot.py` and executes them on the `xla` crate's CPU
 //! client.  Python never runs here — HLO text is the interchange format
 //! (see aot.py for why text, not serialized protos).
+//!
+//! The XLA-backed implementation is gated behind the off-by-default
+//! `pjrt` feature so the default build carries zero external crate
+//! dependencies.  Without the feature, [`stub::Runtime`] keeps the same
+//! surface and returns a clean "artifacts unavailable" error from every
+//! entry point, so the CLI, examples and tests compile either way.
+//! [`shapes`] (the padded artifact geometry) is always available.
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
 pub mod shapes;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::{Artifact, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;

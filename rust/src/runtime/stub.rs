@@ -1,0 +1,106 @@
+//! Stub runtime for builds without the `pjrt` feature.
+//!
+//! Keeps the exact `Runtime` surface of [`super::artifact`] so the CLI
+//! (`srbo runtime`), the examples and `tests/runtime_artifacts.rs` compile
+//! in the pure-std default configuration; every entry point fails with
+//! [`UNAVAILABLE`] instead of panicking, and callers that probe with
+//! [`Runtime::load_default`] degrade gracefully (they report and skip).
+
+use std::path::Path;
+
+use crate::screening::ScreenCode;
+use crate::util::error::{Result, SrboError};
+use crate::util::Mat;
+
+/// The error message every stub entry point returns.
+pub const UNAVAILABLE: &str = "PJRT artifacts unavailable: built without the `pjrt` feature \
+     (vendor the xla crate, enable `--features pjrt`, and run `make aot`)";
+
+fn unavailable<T>() -> Result<T> {
+    Err(SrboError::new(UNAVAILABLE))
+}
+
+/// Feature-off stand-in for the PJRT artifact registry.  Cannot be
+/// constructed: both loaders return the [`UNAVAILABLE`] error.
+#[derive(Debug)]
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails: artifacts need the `pjrt` feature to execute.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Runtime> {
+        unavailable()
+    }
+
+    /// Default location (`artifacts/` at the repo root); always fails.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load("artifacts")
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// RBF Gram block — unavailable without the feature.
+    pub fn gram_rbf_block(&self, _x1: &Mat, _x2: &Mat, _gamma: f64) -> Result<Mat> {
+        unavailable()
+    }
+
+    /// Q·v matvec — unavailable without the feature.
+    pub fn qmatvec(&self, _q: &Mat, _v: &[f64]) -> Result<Vec<f64>> {
+        unavailable()
+    }
+
+    /// Fused screening step — unavailable without the feature.
+    pub fn screen_step(
+        &self,
+        _q: &Mat,
+        _alpha0: &[f64],
+        _delta: &[f64],
+        _nu1: f64,
+    ) -> Result<(Vec<ScreenCode>, f64, f64, f64)> {
+        unavailable()
+    }
+
+    /// DCDM sweeps — unavailable without the feature.
+    pub fn dcdm_sweeps(
+        &self,
+        _q: &Mat,
+        _alpha: &[f64],
+        _ub: &[f64],
+        _nu: f64,
+    ) -> Result<Vec<f64>> {
+        unavailable()
+    }
+
+    /// Batched RBF decision scores — unavailable without the feature.
+    pub fn decision_rbf(
+        &self,
+        _xt: &Mat,
+        _xtr: &Mat,
+        _yalpha: &[f64],
+        _gamma: f64,
+    ) -> Result<Vec<f64>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loaders_fail_with_clean_message() {
+        for res in [Runtime::load_default(), Runtime::load("elsewhere")] {
+            let err = match res {
+                Ok(_) => panic!("stub Runtime must not load"),
+                Err(e) => e,
+            };
+            assert!(
+                err.msg().contains("artifacts unavailable"),
+                "unexpected message: {err}"
+            );
+        }
+    }
+}

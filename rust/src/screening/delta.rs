@@ -132,7 +132,9 @@ mod tests {
             let nu0 = g.f64(0.1, 0.4);
             let nu1 = nu0 + g.f64(0.02, 0.2);
             let p0 = crate::qp::QpProblem {
-                q: &q, lin: None, ub: &ub,
+                q: &q,
+                lin: None,
+                ub: &ub,
                 constraint: crate::qp::ConstraintKind::SumGe(nu0),
             };
             let (a0, _) = crate::qp::dcdm::solve(&p0, None, &Default::default());
@@ -160,7 +162,9 @@ mod tests {
         let q = g.psd(n);
         let ub = vec![1.0 / n as f64; n];
         let p0 = crate::qp::QpProblem {
-            q: &q, lin: None, ub: &ub,
+            q: &q,
+            lin: None,
+            ub: &ub,
             constraint: crate::qp::ConstraintKind::SumGe(0.3),
         };
         let (a0, _) = crate::qp::dcdm::solve(&p0, None, &Default::default());

@@ -173,7 +173,7 @@ mod tests {
         let mut g = crate::prop::Gen::new(4);
         let q = g.psd(6);
         let a0 = vec![0.1; 6];
-        let s = build(&q, &a0, &vec![0.0; 6]);
+        let s = build(&q, &a0, &[0.0; 6]);
         assert!(s.sqrt_r < 1e-9);
     }
 }

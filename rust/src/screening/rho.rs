@@ -101,11 +101,15 @@ mod tests {
             let nu0 = g.f64(0.15, 0.4);
             let nu1 = nu0 + g.f64(0.01, 0.1);
             let p0 = QpProblem {
-                q: &q, lin: None, ub: &ub,
+                q: &q,
+                lin: None,
+                ub: &ub,
                 constraint: ConstraintKind::SumGe(nu0),
             };
             let p1 = QpProblem {
-                q: &q, lin: None, ub: &ub,
+                q: &q,
+                lin: None,
+                ub: &ub,
                 constraint: ConstraintKind::SumGe(nu1),
             };
             let (a0, _) = dcdm::solve(&p0, None, &Default::default());

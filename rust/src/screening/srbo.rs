@@ -84,11 +84,15 @@ mod tests {
             let nu0 = g.f64(0.1, 0.5);
             let nu1 = nu0 + g.f64(0.005, 0.15);
             let p0 = QpProblem {
-                q: &q, lin: None, ub: &ub,
+                q: &q,
+                lin: None,
+                ub: &ub,
                 constraint: ConstraintKind::SumGe(nu0),
             };
             let p1 = QpProblem {
-                q: &q, lin: None, ub: &ub,
+                q: &q,
+                lin: None,
+                ub: &ub,
                 constraint: ConstraintKind::SumGe(nu1),
             };
             let (a0, _) = dcdm::solve(&p0, None, &Default::default());
@@ -127,7 +131,9 @@ mod tests {
         let ub = vec![1.0 / l as f64; l];
         let (nu0, nu1) = (0.2, 0.22);
         let p0 = QpProblem {
-            q: &q, lin: None, ub: &ub,
+            q: &q,
+            lin: None,
+            ub: &ub,
             constraint: ConstraintKind::SumGe(nu0),
         };
         let (a0, _) = dcdm::solve(&p0, None, &Default::default());

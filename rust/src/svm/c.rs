@@ -5,12 +5,13 @@
 //! ν-SVM).  Solved by the same DCDM machinery with a linear term.
 
 use super::KernelModel;
+use crate::bail;
 use crate::kernel::{full_q, KernelKind};
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::{ConstraintKind, QpProblem, SolveStats};
 use crate::stats::accuracy;
+use crate::util::error::Result;
 use crate::util::Mat;
-use anyhow::{bail, Result};
 
 /// A trained C-SVM.
 #[derive(Clone, Debug)]

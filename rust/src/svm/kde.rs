@@ -2,9 +2,10 @@
 //! Tables VI/VII ("KDE").  Scores are log densities; the anomaly
 //! threshold is the training-quantile at level ν for predict().
 
+use crate::bail;
 use crate::stats::roc_auc;
+use crate::util::error::Result;
 use crate::util::Mat;
-use anyhow::{bail, Result};
 
 /// A fitted KDE.
 #[derive(Clone, Debug)]

@@ -1,12 +1,13 @@
 //! ν-SVM (paper §2.1): dual Eq. (4) solved by DCDM, decision Eq. (6).
 
 use super::KernelModel;
+use crate::bail;
 use crate::kernel::{full_q, KernelKind};
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::{ConstraintKind, QpProblem, SolveStats};
 use crate::stats::accuracy;
+use crate::util::error::Result;
 use crate::util::Mat;
-use anyhow::{bail, Result};
 
 /// A trained ν-SVM.
 #[derive(Clone, Debug)]

@@ -2,11 +2,12 @@
 //! declares outliers where ⟨w, Φ(x)⟩ < ρ*.
 
 use super::KernelModel;
+use crate::bail;
 use crate::kernel::{full_gram, KernelKind};
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::{ConstraintKind, QpProblem, SolveStats};
+use crate::util::error::Result;
 use crate::util::Mat;
-use anyhow::{bail, Result};
 
 /// A trained OC-SVM.
 #[derive(Clone, Debug)]

@@ -1,0 +1,126 @@
+//! Crate-local error type — the offline crate registry carries nothing,
+//! so `anyhow` is replaced by this single-message error plus the two
+//! ergonomic pieces the codebase actually uses: a [`bail!`] macro and a
+//! [`Context`] extension trait for `Result`/`Option`.
+
+use std::fmt;
+
+/// The crate-wide error: a human-readable message chain.
+#[derive(Debug, Clone)]
+pub struct SrboError {
+    msg: String,
+}
+
+impl SrboError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        SrboError { msg: msg.into() }
+    }
+
+    /// The rendered message.
+    pub fn msg(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for SrboError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for SrboError {}
+
+/// Crate-wide result alias (re-exported as `srbo::Result`).
+pub type Result<T> = std::result::Result<T, SrboError>;
+
+impl From<std::num::ParseIntError> for SrboError {
+    fn from(e: std::num::ParseIntError) -> Self {
+        SrboError::new(format!("integer parse error: {e}"))
+    }
+}
+
+impl From<std::num::ParseFloatError> for SrboError {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        SrboError::new(format!("float parse error: {e}"))
+    }
+}
+
+impl From<std::io::Error> for SrboError {
+    fn from(e: std::io::Error) -> Self {
+        SrboError::new(format!("io error: {e}"))
+    }
+}
+
+/// `anyhow::Context`-shaped extension: attach a message to the error path.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a static message.
+    fn context(self, msg: &str) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily built message.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| SrboError::new(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| SrboError::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.ok_or_else(|| SrboError::new(msg))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| SrboError::new(f()))
+    }
+}
+
+/// Early-return with a formatted [`SrboError`] (the `anyhow::bail!` shape).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::SrboError::new(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("bad value {}", 7)
+    }
+
+    #[test]
+    fn bail_formats_message() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.msg(), "bad value 7");
+        assert_eq!(format!("{e}"), "bad value 7");
+    }
+
+    #[test]
+    fn context_wraps_results_and_options() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.msg(), "outer: inner");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.msg(), "missing x");
+        assert_eq!(Some(3).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse()?)
+        }
+        assert_eq!(parse("5").unwrap(), 5);
+        assert!(parse("x").unwrap_err().msg().contains("parse"));
+    }
+}

@@ -7,12 +7,14 @@
 
 pub mod argsort;
 pub mod cli;
+pub mod error;
 pub mod linalg;
 pub mod rng;
 pub mod timer;
 pub mod tsv;
 
 pub use argsort::{argsort_desc, ranks_of_abs};
+pub use error::SrboError;
 pub use linalg::Mat;
 pub use rng::Rng;
 pub use timer::Timer;

@@ -1,7 +1,7 @@
 //! PJRT artifact path vs the native f64 path: the AOT-compiled Pallas/JAX
 //! graphs must reproduce the Rust reference within f32 tolerance.
 //!
-//! These tests require `make artifacts` to have run; they are skipped
+//! These tests require `make aot` to have run; they are skipped
 //! (with a note) when artifacts/ is absent so `cargo test` works in a
 //! fresh checkout.
 
@@ -19,6 +19,25 @@ fn runtime() -> Option<Runtime> {
             None
         }
     }
+}
+
+/// Feature-gate contract: without `pjrt` the stub `Runtime` must fail to
+/// load with the clean "artifacts unavailable" error — never panic — so
+/// `tests/safety.rs` and `tests/proptests.rs` (and everything else) run
+/// entirely on the native f64 path.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stub_runtime_reports_artifacts_unavailable() {
+    let err = match Runtime::load_default() {
+        Ok(_) => panic!("stub Runtime must not load"),
+        Err(e) => e,
+    };
+    let msg = err.to_string();
+    assert!(
+        msg.contains("artifacts unavailable"),
+        "unexpected stub error: {msg}"
+    );
+    assert!(msg.contains("pjrt"), "error should name the feature: {msg}");
 }
 
 #[test]
