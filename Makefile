@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all verify lint fmt bench-compile bench aot clean
+.PHONY: all verify lint fmt bench-compile bench bench-gram aot clean
 
 all: verify
 
@@ -19,13 +19,18 @@ lint:
 fmt:
 	$(CARGO) fmt
 
-# Compile all 12 paper-table/figure benches without running them.
+# Compile all bench targets (12 paper tables/figures + gram_build)
+# without running them.
 bench-compile:
 	$(CARGO) bench --no-run
 
 # Run the full paper evaluation (slow; SRBO_SCALE shrinks it).
 bench:
 	$(CARGO) bench
+
+# Gram-build scaling bench (threads × size grid) → BENCH_gram.json.
+bench-gram:
+	$(CARGO) bench --bench gram_build
 
 # Optional: export the L2 JAX/Pallas graphs to artifacts/*.hlo.txt.
 # Needs the Python toolchain (jax); the Rust `pjrt` feature consumes the

@@ -16,6 +16,7 @@
 use srbo::coordinator::grid::select_model;
 use srbo::data::split::train_test_stratified;
 use srbo::data::{benchmark, Dataset};
+use srbo::kernel::matrix::GramPolicy;
 use srbo::kernel::KernelKind;
 use srbo::runtime::Runtime;
 use srbo::svm::nu::NuSvm;
@@ -41,12 +42,12 @@ fn main() -> srbo::Result<()> {
 
         let t = Timer::start();
         let (kernel, nu, acc, _) =
-            select_model(&train, &test, nus.clone(), &sigmas, true, 2);
+            select_model(&train, &test, nus.clone(), &sigmas, true, 2, GramPolicy::Auto);
         let on_time = t.secs();
 
         let t = Timer::start();
         let (_, _, acc_off, _) =
-            select_model(&train, &test, nus.clone(), &sigmas, false, 2);
+            select_model(&train, &test, nus.clone(), &sigmas, false, 2, GramPolicy::Auto);
         let off_time = t.secs();
 
         total_screened_time += on_time;

@@ -1,0 +1,55 @@
+//! §Perf Gram-build scaling bench: serial vs `std::thread::scope`
+//! parallel full-Q construction over a threads × size grid.  Prints
+//! medians and writes `BENCH_gram.json` (the perf trajectory — run via
+//! `make bench-gram`; `SRBO_SCALE` shrinks sizes for smoke runs).
+
+use srbo::bench_harness::{bench, scaled};
+use srbo::data::synthetic;
+use srbo::kernel::{full_gram_threaded, KernelKind};
+use srbo::util::tsv::Json;
+
+fn main() {
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut runs = Vec::new();
+    for &base in &[128usize, 256, 512] {
+        let n = scaled(base); // per-class count; l = 2n
+        let d = synthetic::gaussians(n, 2.0, 42);
+        let l = d.len();
+        let mut serial_median = f64::NAN;
+        for &threads in &[1usize, 2, 4, 8] {
+            let s = bench(&format!("gram_rbf_l{l}_t{threads}"), 1, 3, || {
+                std::hint::black_box(full_gram_threaded(&d.x, kernel, threads));
+            });
+            if threads == 1 {
+                serial_median = s.median_s;
+            }
+            let speedup = serial_median / s.median_s.max(1e-12);
+            println!("{}  speedup vs serial: {speedup:.2}x", s.human());
+            runs.push(Json::Obj(vec![
+                ("l".into(), Json::Num(l as f64)),
+                ("threads".into(), Json::Num(threads as f64)),
+                ("median_s".into(), Json::Num(s.median_s)),
+                ("min_s".into(), Json::Num(s.min_s)),
+                ("speedup_vs_serial".into(), Json::Num(speedup)),
+            ]));
+        }
+    }
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("gram_build".into())),
+        ("kernel".into(), Json::Str("rbf".into())),
+        ("host_parallelism".into(), Json::Num(cores as f64)),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    let payload = doc.render() + "\n";
+    // anchor at the repo root (bench cwd is the package dir) so the
+    // perf-trajectory file lands in a stable, committable spot
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_gram.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_gram.json"));
+    std::fs::write(&out, &payload).expect("write BENCH_gram.json");
+    println!("wrote {} (host parallelism {cores})", out.display());
+}

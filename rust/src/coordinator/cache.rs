@@ -9,7 +9,10 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::kernel::{full_gram, full_q, KernelKind};
+use crate::kernel::matrix::DenseGram;
+use crate::kernel::{
+    default_build_threads, full_gram_threaded, full_q_threaded, KernelKind,
+};
 use crate::util::Mat;
 
 /// Cache key: dataset identity + kernel + labelled/unlabelled.
@@ -69,14 +72,35 @@ impl GramCache {
         Self::new(512 << 20)
     }
 
-    /// Get-or-compute the labelled Q for (x, y).
+    /// Get-or-compute the labelled Q for (x, y) (parallel build on miss).
     pub fn q(&self, key: QKey, x: &Mat, y: &[f64], kernel: KernelKind) -> Arc<Mat> {
-        self.get_or_insert(key, || full_q(x, y, kernel))
+        self.get_or_insert(key, || {
+            full_q_threaded(x, y, kernel, default_build_threads(x.rows))
+        })
     }
 
-    /// Get-or-compute the unlabelled H for x.
+    /// Get-or-compute the unlabelled H for x (parallel build on miss).
     pub fn h(&self, key: QKey, x: &Mat, kernel: KernelKind) -> Arc<Mat> {
-        self.get_or_insert(key, || full_gram(x, kernel))
+        self.get_or_insert(key, || {
+            full_gram_threaded(x, kernel, default_build_threads(x.rows))
+        })
+    }
+
+    /// Get-or-compute Q, wrapped as a trait-backed dense backend for
+    /// [`crate::coordinator::path::NuPath::run_with_matrix`].
+    pub fn q_backend(
+        &self,
+        key: QKey,
+        x: &Mat,
+        y: &[f64],
+        kernel: KernelKind,
+    ) -> DenseGram {
+        DenseGram::from_arc(self.q(key, x, y, kernel))
+    }
+
+    /// Get-or-compute H, wrapped as a trait-backed dense backend.
+    pub fn h_backend(&self, key: QKey, x: &Mat, kernel: KernelKind) -> DenseGram {
+        DenseGram::from_arc(self.h(key, x, kernel))
     }
 
     fn get_or_insert(&self, key: QKey, compute: impl FnOnce() -> Mat) -> Arc<Mat> {
@@ -174,6 +198,16 @@ mod tests {
         let a = cache.q(QKey::new("a", k, true), &d.x, &d.y, k);
         let _b = cache.q(QKey::new("b", k, true), &d.x, &d.y, k); // evicts a
         assert_eq!(a.rows, 20); // still usable
+    }
+
+    #[test]
+    fn backend_wrapper_shares_cache_entry() {
+        let cache = GramCache::new(64 << 20);
+        let d = gaussians(10, 1.0, 6);
+        let k = KernelKind::Linear;
+        let a = cache.q(QKey::new("b", k, true), &d.x, &d.y, k);
+        let b = cache.q_backend(QKey::new("b", k, true), &d.x, &d.y, k);
+        assert!(Arc::ptr_eq(&a, &b.share()));
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //! generic QP solver (Fig. 8 / Table VIII).
 
 use crate::bail;
-use crate::kernel::{full_gram, full_q, KernelKind};
+use crate::kernel::matrix::{GramPolicy, KernelMatrix};
+use crate::kernel::KernelKind;
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::gqp::{self, GqpOpts};
 use crate::qp::{reduced, ConstraintKind, QpProblem, SolveStats};
@@ -51,6 +52,9 @@ pub struct PathConfig {
     pub delta_iters: usize,
     /// Solver tolerance.
     pub eps: f64,
+    /// How `run`/`run_oneclass` materialise Q: parallel dense build or
+    /// bounded LRU row cache (`run_with_q` callers bypass this).
+    pub gram: GramPolicy,
 }
 
 impl PathConfig {
@@ -62,6 +66,7 @@ impl PathConfig {
             screening: true,
             delta_iters: 30,
             eps: 1e-8,
+            gram: GramPolicy::Auto,
         }
     }
 
@@ -123,14 +128,16 @@ fn solve_qp(
 }
 
 impl NuPath {
-    /// Run the supervised ν-SVM path on (x, y).
+    /// Run the supervised ν-SVM path on (x, y).  Q is materialised
+    /// through the configured [`GramPolicy`] (parallel dense build, or
+    /// a bounded LRU row cache when l exceeds memory).
     pub fn run(x: &Mat, y: &[f64], cfg: &PathConfig) -> Result<NuPath> {
         cfg.validate()?;
         let mut times = PhaseTimes::new();
         let mut t = Timer::start();
-        let q = full_q(x, y, cfg.kernel);
+        let q = cfg.gram.q(x, y, cfg.kernel);
         times.add("gram", t.lap());
-        Self::run_with_q(&q, cfg, false, times)
+        Self::run_with_matrix(&q, cfg, false, times)
     }
 
     /// Run the unsupervised OC-SVM path on x (positive data only).
@@ -144,20 +151,30 @@ impl NuPath {
         }
         let mut times = PhaseTimes::new();
         let mut t = Timer::start();
-        let h = full_gram(x, cfg.kernel);
+        let h = cfg.gram.gram(x, cfg.kernel);
         times.add("gram", t.lap());
-        Self::run_with_q(&h, cfg, true, times)
+        Self::run_with_matrix(&h, cfg, true, times)
     }
 
-    /// Shared driver against a precomputed Q/H (cache path).
+    /// Driver against a precomputed dense Q/H (the Gram-cache path).
     pub fn run_with_q(
         q: &Mat,
+        cfg: &PathConfig,
+        oneclass_mode: bool,
+        times: PhaseTimes,
+    ) -> Result<NuPath> {
+        Self::run_with_matrix(q, cfg, oneclass_mode, times)
+    }
+
+    /// Shared driver against any [`KernelMatrix`] backend.
+    pub fn run_with_matrix(
+        q: &dyn KernelMatrix,
         cfg: &PathConfig,
         oneclass_mode: bool,
         mut times: PhaseTimes,
     ) -> Result<NuPath> {
         cfg.validate()?;
-        let l = q.rows;
+        let l = q.dims();
         let ub_for = |nu: f64| -> Vec<f64> {
             if oneclass_mode {
                 vec![oneclass::upper_bound(nu, l); l]
@@ -305,6 +322,7 @@ impl NuPath {
 mod tests {
     use super::*;
     use crate::data::synthetic::gaussians;
+    use crate::kernel::full_q;
 
     fn grid(a: f64, b: f64, n: usize) -> Vec<f64> {
         (0..n)
@@ -380,6 +398,23 @@ mod tests {
         for s in &p.steps {
             let sum: f64 = s.alpha.iter().sum();
             assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lru_policy_path_matches_dense_policy() {
+        let d = gaussians(30, 2.0, 8);
+        let kernel = KernelKind::Rbf { gamma: 0.5 };
+        let mut cfg_lru = PathConfig::new(grid(0.2, 0.3, 4), kernel);
+        cfg_lru.gram = GramPolicy::Lru { budget_rows: 8 };
+        let cfg_dense = PathConfig::new(grid(0.2, 0.3, 4), kernel);
+        let p_lru = NuPath::run(&d.x, &d.y, &cfg_lru).unwrap();
+        let p_dense = NuPath::run(&d.x, &d.y, &cfg_dense).unwrap();
+        for (a, b) in p_lru.steps.iter().zip(&p_dense.steps) {
+            assert_eq!(a.codes, b.codes);
+            for (x, y) in a.alpha.iter().zip(&b.alpha) {
+                assert!((x - y).abs() < 1e-12);
+            }
         }
     }
 

@@ -1,15 +1,55 @@
 //! Gram matrix construction: full K, labelled Q = diag(y) K diag(y),
 //! and single-row computation for cache-driven solvers.
 //!
-//! The full builders exploit symmetry (compute the upper triangle once)
+//! The full builders exploit symmetry (compute the lower triangle once)
 //! and, for RBF, hoist the squared-norm vector out of the pair loop —
-//! mirroring the structure of the L1 Pallas kernel.
+//! mirroring the structure of the L1 Pallas kernel.  The same hoisted
+//! per-row kernel ([`gram_row_hoisted`]) backs serial builds, the
+//! `std::thread::scope` parallel builds, and `matrix::LruRowCache`
+//! row-mode, so every backend computes bit-identical entries.
 
 use super::KernelKind;
 use crate::util::linalg::dot;
 use crate::util::Mat;
 
-/// Full Gram matrix K(X, X) (symmetric).
+/// Squared row norms ‖x_i‖² — the RBF builders' shared hoist
+/// (‖x_i − x_j‖² = n_i + n_j − 2 x_i·x_j).
+pub fn row_norms(x: &Mat) -> Vec<f64> {
+    (0..x.rows).map(|i| dot(x.row(i), x.row(i))).collect()
+}
+
+/// One row of K(X, X) with the squared-norm vector hoisted by the
+/// caller (row-mode backends compute `norms` once, not per row).
+///
+/// `norms` is only read for RBF kernels; pass `&[]` for linear.  Entry
+/// arithmetic is identical to [`full_gram`]'s, so rows produced here
+/// match the dense builders bit for bit.
+pub fn gram_row_hoisted(
+    x: &Mat,
+    norms: &[f64],
+    i: usize,
+    kernel: KernelKind,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), x.rows);
+    let xi = x.row(i);
+    match kernel {
+        KernelKind::Linear => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = dot(xi, x.row(j)) + 1.0;
+            }
+        }
+        KernelKind::Rbf { gamma } => {
+            let ni = norms[i];
+            for (j, o) in out.iter_mut().enumerate() {
+                let d = (ni + norms[j] - 2.0 * dot(xi, x.row(j))).max(0.0);
+                *o = (-gamma * d).exp();
+            }
+        }
+    }
+}
+
+/// Full Gram matrix K(X, X) (symmetric, serial).
 pub fn full_gram(x: &Mat, kernel: KernelKind) -> Mat {
     let l = x.rows;
     let mut k = Mat::zeros(l, l);
@@ -25,8 +65,7 @@ pub fn full_gram(x: &Mat, kernel: KernelKind) -> Mat {
             }
         }
         KernelKind::Rbf { gamma } => {
-            // ||xi - xj||^2 = ni + nj - 2 xi.xj  (one-pass norms)
-            let norms: Vec<f64> = (0..l).map(|i| dot(x.row(i), x.row(i))).collect();
+            let norms = row_norms(x);
             for i in 0..l {
                 let xi = x.row(i);
                 k.set(i, i, 1.0);
@@ -42,25 +81,110 @@ pub fn full_gram(x: &Mat, kernel: KernelKind) -> Mat {
     k
 }
 
-/// Labelled Gram matrix Q = diag(y) K diag(y).
-pub fn full_q(x: &Mat, y: &[f64], kernel: KernelKind) -> Mat {
-    let mut q = full_gram(x, kernel);
+/// Worker count for parallel Gram builds: the machine's parallelism,
+/// capped so tiny matrices don't pay thread-spawn overhead.
+pub fn default_build_threads(l: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    cores.min((l / 128).max(1))
+}
+
+/// Full Gram matrix, built in parallel over symmetric row blocks.
+///
+/// Rows are handed to `threads` scoped workers round-robin (row i costs
+/// i+1 triangle entries, so interleaving balances the load); each worker
+/// fills the lower triangle of its rows and a serial O(l²) mirror pass
+/// copies it into the upper triangle.  Entry arithmetic is identical to
+/// [`full_gram`], so the result matches the serial build bit for bit.
+pub fn full_gram_threaded(x: &Mat, kernel: KernelKind, threads: usize) -> Mat {
     let l = x.rows;
+    let threads = threads.max(1).min(l.max(1));
+    if threads == 1 || l < 2 {
+        return full_gram(x, kernel);
+    }
+    let norms = match kernel {
+        KernelKind::Rbf { .. } => row_norms(x),
+        KernelKind::Linear => Vec::new(),
+    };
+    let mut k = Mat::zeros(l, l);
+    {
+        let mut buckets: Vec<Vec<(usize, &mut [f64])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, row) in k.data.chunks_mut(l).enumerate() {
+            buckets[i % threads].push((i, row));
+        }
+        let norms = &norms;
+        std::thread::scope(|s| {
+            for bucket in buckets {
+                s.spawn(move || {
+                    for (i, row) in bucket {
+                        let xi = x.row(i);
+                        match kernel {
+                            KernelKind::Linear => {
+                                for (j, o) in row[..=i].iter_mut().enumerate() {
+                                    *o = dot(xi, x.row(j)) + 1.0;
+                                }
+                            }
+                            KernelKind::Rbf { gamma } => {
+                                row[i] = 1.0;
+                                for (j, o) in row[..i].iter_mut().enumerate() {
+                                    let d = (norms[i] + norms[j]
+                                        - 2.0 * dot(xi, x.row(j)))
+                                    .max(0.0);
+                                    *o = (-gamma * d).exp();
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+    // mirror the strict lower triangle into the upper
+    for i in 0..l {
+        for j in 0..i {
+            let v = k.get(i, j);
+            k.set(j, i, v);
+        }
+    }
+    k
+}
+
+/// Scale K into Q = diag(y) K diag(y) in place.
+fn apply_labels(q: &mut Mat, y: &[f64]) {
+    let l = q.rows;
+    debug_assert_eq!(y.len(), l);
     for i in 0..l {
         for j in 0..l {
             let v = q.get(i, j) * y[i] * y[j];
             q.set(i, j, v);
         }
     }
+}
+
+/// Labelled Gram matrix Q = diag(y) K diag(y) (serial).
+pub fn full_q(x: &Mat, y: &[f64], kernel: KernelKind) -> Mat {
+    let mut q = full_gram(x, kernel);
+    apply_labels(&mut q, y);
+    q
+}
+
+/// Labelled Gram matrix, parallel build (see [`full_gram_threaded`]).
+pub fn full_q_threaded(x: &Mat, y: &[f64], kernel: KernelKind, threads: usize) -> Mat {
+    let mut q = full_gram_threaded(x, kernel, threads);
+    apply_labels(&mut q, y);
     q
 }
 
 /// One row of K(X, X) (for row-cache solvers).
 pub fn gram_row(x: &Mat, i: usize, kernel: KernelKind, out: &mut [f64]) {
-    debug_assert_eq!(out.len(), x.rows);
-    let xi = x.row(i);
-    for (j, o) in out.iter_mut().enumerate() {
-        *o = kernel.eval(xi, x.row(j));
+    match kernel {
+        KernelKind::Linear => gram_row_hoisted(x, &[], i, kernel, out),
+        KernelKind::Rbf { .. } => {
+            let norms = row_norms(x);
+            gram_row_hoisted(x, &norms, i, kernel, out);
+        }
     }
 }
 
@@ -69,7 +193,7 @@ pub fn q_row(x: &Mat, y: &[f64], i: usize, kernel: KernelKind, out: &mut [f64]) 
     gram_row(x, i, kernel, out);
     let yi = y[i];
     for (j, o) in out.iter_mut().enumerate() {
-        *o *= yi * y[j];
+        *o = *o * yi * y[j];
     }
 }
 
@@ -140,6 +264,59 @@ mod tests {
         for j in 0..3 {
             assert!((row[j] - q.get(1, j)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn hoisted_row_matches_full_gram_exactly() {
+        let mut g = crate::prop::Gen::new(0x60A);
+        let rows: Vec<Vec<f64>> = (0..17).map(|_| g.vec_f64(4, -2.0, 2.0)).collect();
+        let x = Mat::from_rows(&rows);
+        for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma: 0.8 }] {
+            let k = full_gram(&x, kernel);
+            let norms = row_norms(&x);
+            let mut row = vec![0.0; 17];
+            for i in 0..17 {
+                gram_row_hoisted(&x, &norms, i, kernel, &mut row);
+                assert_eq!(row.as_slice(), k.row(i), "row {i} differs ({kernel:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_gram_matches_serial_bit_for_bit() {
+        crate::prop::run_cases(6, 0x7EAD, |g| {
+            let l = g.usize(2, 40);
+            let d = g.usize(1, 5);
+            let rows: Vec<Vec<f64>> =
+                (0..l).map(|_| g.vec_f64(d, -3.0, 3.0)).collect();
+            let x = Mat::from_rows(&rows);
+            let gamma = g.f64(0.1, 2.0);
+            for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma }] {
+                let serial = full_gram(&x, kernel);
+                for threads in [2, 3, 8] {
+                    let par = full_gram_threaded(&x, kernel, threads);
+                    assert_eq!(serial, par, "threads={threads} kernel={kernel:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn threaded_q_matches_serial() {
+        let mut g = crate::prop::Gen::new(0x71D);
+        let rows: Vec<Vec<f64>> = (0..23).map(|_| g.vec_f64(3, -1.0, 1.0)).collect();
+        let x = Mat::from_rows(&rows);
+        let y: Vec<f64> =
+            (0..23).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        let kernel = KernelKind::Rbf { gamma: 0.4 };
+        assert_eq!(full_q(&x, &y, kernel), full_q_threaded(&x, &y, kernel, 4));
+    }
+
+    #[test]
+    fn default_build_threads_scales_with_size() {
+        assert_eq!(default_build_threads(0), 1);
+        assert_eq!(default_build_threads(100), 1);
+        assert!(default_build_threads(100_000) >= 1);
     }
 
     #[test]

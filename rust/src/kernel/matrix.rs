@@ -1,0 +1,765 @@
+//! The kernel-matrix abstraction layer: a [`KernelMatrix`] trait over
+//! which every Q consumer (QP solvers, screening, the path coordinator)
+//! operates, with two interchangeable backends.
+//!
+//! # Backends and when to pick each
+//!
+//! * [`DenseGram`] — the full l×l matrix, precomputed once with the
+//!   thread-parallel builder ([`full_q_threaded`]).  O(l²) resident
+//!   memory (8·l² bytes), O(1) row access.  Pick it whenever the matrix
+//!   fits: at l = 8192 it costs 512 MiB, which is the
+//!   [`DENSE_AUTO_LIMIT`] the [`GramPolicy::Auto`] policy uses.
+//! * [`LruRowCache`] — rows are computed on demand
+//!   ([`gram_row_hoisted`], with the RBF squared-norm vector hoisted to
+//!   construction time) and kept behind a bounded LRU.  Peak Q memory is
+//!   `budget_rows · l · 8` bytes plus the O(l·d) feature matrix — the
+//!   row budget, not l², bounds the footprint, so l ≫ memory works.
+//!   Row access is O(l·d) on a miss, O(1) on a hit.  Phases with a
+//!   compact working set (pairwise refinement, warm restarts over the
+//!   same support set) hit; *sequential full sweeps* are the classic
+//!   LRU worst case (budget < l ⇒ every access misses) and degrade to
+//!   streaming recomputation — correct, memory-bounded, but O(l²·d)
+//!   per sweep, which is the price of not holding Q.
+//!
+//! Both backends produce **bit-identical** entries (they share the
+//! per-row kernel in [`crate::kernel::gram`]), so swapping backends
+//! never changes screening decisions or solver iterates — only time and
+//! memory.  [`Row`] handles returned by `row()` are refcounted for the
+//! LRU backend, so a handle stays valid even if the row is evicted
+//! while borrowed (the pairwise solver holds two rows at once).
+//!
+//! `LruRowCache` uses single-threaded interior mutability ([`RefCell`] +
+//! [`Rc`]); share one per worker thread, not across threads.  Dense
+//! backends wrap [`Arc<Mat>`] and share freely.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::Deref;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use super::gram::{
+    default_build_threads, full_gram_threaded, full_q_threaded, gram_row_hoisted,
+    row_norms,
+};
+use super::KernelKind;
+use crate::util::linalg::{dot, norm2};
+use crate::util::Mat;
+
+/// Auto policy: densify below this many rows (8·l² = 512 MiB at 8192).
+pub const DENSE_AUTO_LIMIT: usize = 8192;
+
+/// Default row budget for the LRU backend (≈ budget·l·8 bytes resident).
+pub const DEFAULT_LRU_ROWS: usize = 1024;
+
+/// A borrowed or cache-held Q row.  Derefs to `[f64]`; the `Cached`
+/// variant keeps the row alive across later evictions.
+pub enum Row<'a> {
+    Borrowed(&'a [f64]),
+    Cached(Rc<[f64]>),
+}
+
+impl Deref for Row<'_> {
+    type Target = [f64];
+
+    #[inline]
+    fn deref(&self) -> &[f64] {
+        match self {
+            Row::Borrowed(s) => s,
+            Row::Cached(rc) => rc,
+        }
+    }
+}
+
+/// A symmetric kernel matrix (Q = diag(y) K diag(y), or the unlabelled
+/// H) accessed by row.  Implementations may materialise rows lazily
+/// behind interior mutability — all methods take `&self`.
+pub trait KernelMatrix {
+    /// Number of rows = columns (the matrix is square, l×l).
+    fn dims(&self) -> usize;
+
+    /// Q_ii without materialising a row.
+    fn diag(&self, i: usize) -> f64;
+
+    /// Row i of the matrix.
+    fn row(&self, i: usize) -> Row<'_>;
+
+    /// y = Q x.
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.dims());
+        assert_eq!(y.len(), self.dims());
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = dot(&self.row(i), x);
+        }
+    }
+
+    /// (Q x1, Q x2) in a single row sweep — the screening sphere needs
+    /// Qv and Qα⁰ together, and row backends should materialise each
+    /// row once for both products instead of twice.
+    fn matvec2(&self, x1: &[f64], x2: &[f64], y1: &mut [f64], y2: &mut [f64]) {
+        let n = self.dims();
+        assert_eq!(x1.len(), n);
+        assert_eq!(x2.len(), n);
+        assert_eq!(y1.len(), n);
+        assert_eq!(y2.len(), n);
+        for i in 0..n {
+            let r = self.row(i);
+            y1[i] = dot(&r, x1);
+            y2[i] = dot(&r, x2);
+        }
+    }
+
+    /// aᵀ Q b (objective / sphere-radius helper).
+    fn quad(&self, a: &[f64], b: &[f64]) -> f64 {
+        let mut qb = vec![0.0; self.dims()];
+        self.matvec(b, &mut qb);
+        dot(a, &qb)
+    }
+
+    /// Largest eigenvalue by power iteration (PG step sizes).  The
+    /// default mirrors [`Mat::power_eig_max`] exactly so backends agree.
+    fn power_eig_max(&self, iters: usize) -> f64 {
+        let n = self.dims();
+        if n == 0 {
+            return 0.0;
+        }
+        let mut v = vec![1.0 / (n as f64).sqrt(); n];
+        let mut av = vec![0.0; n];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            self.matvec(&v, &mut av);
+            let nrm = norm2(&av);
+            if nrm < 1e-300 {
+                return 0.0;
+            }
+            for (vi, avi) in v.iter_mut().zip(av.iter()) {
+                *vi = avi / nrm;
+            }
+            lambda = nrm;
+        }
+        lambda
+    }
+
+    /// (hits, misses, resident rows) — dense backends report zeros.
+    fn cache_stats(&self) -> (u64, u64, usize) {
+        (0, 0, 0)
+    }
+}
+
+/// A resident `Mat` is itself a dense kernel-matrix backend, so every
+/// precomputed-Q call site (tests, the Gram cache, `run_with_q`)
+/// coerces to `&dyn KernelMatrix` unchanged.
+impl KernelMatrix for Mat {
+    fn dims(&self) -> usize {
+        self.rows
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.get(i, i)
+    }
+
+    fn row(&self, i: usize) -> Row<'_> {
+        Row::Borrowed(Mat::row(self, i))
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        Mat::matvec(self, x, y)
+    }
+
+    fn power_eig_max(&self, iters: usize) -> f64 {
+        Mat::power_eig_max(self, iters)
+    }
+}
+
+/// Dense backend: the full matrix, built in parallel and shared via
+/// [`Arc`] (the Gram cache hands these out without copying).
+#[derive(Clone, Debug)]
+pub struct DenseGram {
+    mat: Arc<Mat>,
+}
+
+impl DenseGram {
+    pub fn from_mat(mat: Mat) -> Self {
+        DenseGram { mat: Arc::new(mat) }
+    }
+
+    pub fn from_arc(mat: Arc<Mat>) -> Self {
+        DenseGram { mat }
+    }
+
+    /// Parallel-build the unlabelled H for x.
+    pub fn build_gram(x: &Mat, kernel: KernelKind, threads: usize) -> Self {
+        Self::from_mat(full_gram_threaded(x, kernel, threads))
+    }
+
+    /// Parallel-build the labelled Q for (x, y).
+    pub fn build_q(x: &Mat, y: &[f64], kernel: KernelKind, threads: usize) -> Self {
+        Self::from_mat(full_q_threaded(x, y, kernel, threads))
+    }
+
+    /// The resident matrix (for consumers that need a dense `&Mat`,
+    /// e.g. the PJRT artifact runtime).
+    pub fn mat(&self) -> &Mat {
+        &self.mat
+    }
+
+    /// Share ownership of the resident matrix.
+    pub fn share(&self) -> Arc<Mat> {
+        Arc::clone(&self.mat)
+    }
+}
+
+impl KernelMatrix for DenseGram {
+    fn dims(&self) -> usize {
+        self.mat.rows
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.mat.get(i, i)
+    }
+
+    fn row(&self, i: usize) -> Row<'_> {
+        Row::Borrowed(self.mat.row(i))
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        self.mat.matvec(x, y)
+    }
+
+    fn power_eig_max(&self, iters: usize) -> f64 {
+        self.mat.power_eig_max(iters)
+    }
+}
+
+struct LruEntry {
+    data: Rc<[f64]>,
+    last_used: u64,
+}
+
+struct LruInner {
+    rows: HashMap<usize, LruEntry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Bounded-memory backend: rows computed on demand behind an LRU with a
+/// hard row budget (peak Q memory = `budget_rows · l · 8` bytes).
+///
+/// The RBF squared-norm vector and the diagonal are hoisted to
+/// construction ([`row_norms`]), so a row miss costs one O(l·d) pass of
+/// dot products — never the O(l·d) per-j norm recomputation of naive
+/// row mode.  Owns a private copy of the feature matrix (O(l·d) — small
+/// next to the O(l²) it avoids).  Single-threaded (`RefCell`); one
+/// instance per worker.
+pub struct LruRowCache {
+    x: Mat,
+    y: Option<Vec<f64>>,
+    kernel: KernelKind,
+    norms: Vec<f64>,
+    diag: Vec<f64>,
+    budget_rows: usize,
+    inner: RefCell<LruInner>,
+}
+
+impl LruRowCache {
+    /// Row-cached labelled Q = diag(y) K diag(y) for (x, y).
+    pub fn new_q(x: &Mat, y: &[f64], kernel: KernelKind, budget_rows: usize) -> Self {
+        assert_eq!(x.rows, y.len());
+        Self::new(x, Some(y.to_vec()), kernel, budget_rows)
+    }
+
+    /// Row-cached unlabelled H for x.
+    pub fn new_gram(x: &Mat, kernel: KernelKind, budget_rows: usize) -> Self {
+        Self::new(x, None, kernel, budget_rows)
+    }
+
+    fn new(x: &Mat, y: Option<Vec<f64>>, kernel: KernelKind, budget_rows: usize) -> Self {
+        let norms = row_norms(x);
+        let diag: Vec<f64> = (0..x.rows)
+            .map(|i| {
+                let base = match kernel {
+                    KernelKind::Linear => norms[i] + 1.0,
+                    KernelKind::Rbf { .. } => 1.0,
+                };
+                match &y {
+                    Some(y) => base * y[i] * y[i],
+                    None => base,
+                }
+            })
+            .collect();
+        LruRowCache {
+            x: x.clone(),
+            y,
+            kernel,
+            norms,
+            diag,
+            budget_rows: budget_rows.max(1),
+            inner: RefCell::new(LruInner {
+                rows: HashMap::new(),
+                clock: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// The configured row budget.
+    pub fn budget_rows(&self) -> usize {
+        self.budget_rows
+    }
+
+    /// Compute row i into `out` (no caching) — shared by `row` and the
+    /// streaming `matvec`.
+    fn compute_row(&self, i: usize, out: &mut [f64]) {
+        gram_row_hoisted(&self.x, &self.norms, i, self.kernel, out);
+        if let Some(y) = &self.y {
+            let yi = y[i];
+            for (o, &yj) in out.iter_mut().zip(y.iter()) {
+                *o = *o * yi * yj;
+            }
+        }
+    }
+}
+
+impl KernelMatrix for LruRowCache {
+    fn dims(&self) -> usize {
+        self.x.rows
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    fn row(&self, i: usize) -> Row<'_> {
+        let mut inner = self.inner.borrow_mut();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let cached = inner.rows.get_mut(&i).map(|e| {
+            e.last_used = clock;
+            Rc::clone(&e.data)
+        });
+        if let Some(rc) = cached {
+            inner.hits += 1;
+            return Row::Cached(rc);
+        }
+        inner.misses += 1;
+        let mut buf = vec![0.0; self.x.rows];
+        self.compute_row(i, &mut buf);
+        let data: Rc<[f64]> = buf.into();
+        while inner.rows.len() >= self.budget_rows {
+            let victim = inner
+                .rows
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("non-empty cache");
+            inner.rows.remove(&victim);
+        }
+        inner
+            .rows
+            .insert(i, LruEntry { data: Rc::clone(&data), last_used: clock });
+        Row::Cached(data)
+    }
+
+    /// Streaming matvec: reuses cached rows, computes the rest into a
+    /// scratch buffer *without* inserting them (a full matvec would
+    /// otherwise wipe the working set every screening step).
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let l = self.dims();
+        assert_eq!(x.len(), l);
+        assert_eq!(y.len(), l);
+        let mut scratch = vec![0.0; l];
+        for (i, yi) in y.iter_mut().enumerate() {
+            let cached = {
+                let inner = self.inner.borrow();
+                inner.rows.get(&i).map(|e| Rc::clone(&e.data))
+            };
+            *yi = match cached {
+                Some(r) => dot(&r, x),
+                None => {
+                    self.compute_row(i, &mut scratch);
+                    dot(&scratch, x)
+                }
+            };
+        }
+    }
+
+    /// Streaming fused pair of matvecs: one row materialisation serves
+    /// both products (halves the dominant cost of a screening step).
+    fn matvec2(&self, x1: &[f64], x2: &[f64], y1: &mut [f64], y2: &mut [f64]) {
+        let l = self.dims();
+        assert_eq!(x1.len(), l);
+        assert_eq!(x2.len(), l);
+        assert_eq!(y1.len(), l);
+        assert_eq!(y2.len(), l);
+        let mut scratch = vec![0.0; l];
+        for i in 0..l {
+            let cached = {
+                let inner = self.inner.borrow();
+                inner.rows.get(&i).map(|e| Rc::clone(&e.data))
+            };
+            match cached {
+                Some(r) => {
+                    y1[i] = dot(&r, x1);
+                    y2[i] = dot(&r, x2);
+                }
+                None => {
+                    self.compute_row(i, &mut scratch);
+                    y1[i] = dot(&scratch, x1);
+                    y2[i] = dot(&scratch, x2);
+                }
+            }
+        }
+    }
+
+    fn cache_stats(&self) -> (u64, u64, usize) {
+        let inner = self.inner.borrow();
+        (inner.hits, inner.misses, inner.rows.len())
+    }
+}
+
+/// How to materialise Q — the CLI-facing backend policy
+/// (`--gram dense|lru[:rows]|auto`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GramPolicy {
+    /// Dense at or below [`DENSE_AUTO_LIMIT`] rows, LRU above.
+    Auto,
+    /// Always the full parallel-built matrix.
+    Dense,
+    /// Always the bounded row cache with this row budget.
+    Lru { budget_rows: usize },
+}
+
+impl GramPolicy {
+    /// Parse `"auto"`, `"dense"`, `"lru"` or `"lru:<rows>"`.
+    pub fn parse(s: &str) -> Option<GramPolicy> {
+        match s {
+            "auto" => Some(GramPolicy::Auto),
+            "dense" => Some(GramPolicy::Dense),
+            "lru" => Some(GramPolicy::Lru { budget_rows: DEFAULT_LRU_ROWS }),
+            other => other
+                .strip_prefix("lru:")
+                .and_then(|b| b.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .map(|n| GramPolicy::Lru { budget_rows: n }),
+        }
+    }
+
+    /// Does this policy densify at l rows?  (The grid service uses this
+    /// to decide between the shared dense cache and per-worker LRU.)
+    pub fn use_dense(&self, l: usize) -> bool {
+        match *self {
+            GramPolicy::Auto => l <= DENSE_AUTO_LIMIT,
+            GramPolicy::Dense => true,
+            GramPolicy::Lru { .. } => false,
+        }
+    }
+
+    fn lru_budget(&self) -> usize {
+        match *self {
+            GramPolicy::Lru { budget_rows } => budget_rows,
+            _ => DEFAULT_LRU_ROWS,
+        }
+    }
+
+    /// Build the labelled-Q backend for (x, y) under this policy.
+    pub fn q(&self, x: &Mat, y: &[f64], kernel: KernelKind) -> QBackend {
+        if self.use_dense(x.rows) {
+            QBackend::Dense(DenseGram::build_q(
+                x,
+                y,
+                kernel,
+                default_build_threads(x.rows),
+            ))
+        } else {
+            QBackend::Lru(LruRowCache::new_q(x, y, kernel, self.lru_budget()))
+        }
+    }
+
+    /// Build the unlabelled-H backend for x under this policy.
+    pub fn gram(&self, x: &Mat, kernel: KernelKind) -> QBackend {
+        if self.use_dense(x.rows) {
+            QBackend::Dense(DenseGram::build_gram(
+                x,
+                kernel,
+                default_build_threads(x.rows),
+            ))
+        } else {
+            QBackend::Lru(LruRowCache::new_gram(x, kernel, self.lru_budget()))
+        }
+    }
+}
+
+/// An owned, policy-selected backend (what [`GramPolicy`] constructs).
+pub enum QBackend {
+    Dense(DenseGram),
+    Lru(LruRowCache),
+}
+
+impl QBackend {
+    /// The resident matrix, when this backend has one.
+    pub fn dense_mat(&self) -> Option<&Mat> {
+        match self {
+            QBackend::Dense(d) => Some(d.mat()),
+            QBackend::Lru(_) => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QBackend::Dense(_) => "dense",
+            QBackend::Lru(_) => "lru",
+        }
+    }
+}
+
+impl KernelMatrix for QBackend {
+    fn dims(&self) -> usize {
+        match self {
+            QBackend::Dense(d) => d.dims(),
+            QBackend::Lru(c) => c.dims(),
+        }
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        match self {
+            QBackend::Dense(d) => d.diag(i),
+            QBackend::Lru(c) => c.diag(i),
+        }
+    }
+
+    fn row(&self, i: usize) -> Row<'_> {
+        match self {
+            QBackend::Dense(d) => d.row(i),
+            QBackend::Lru(c) => c.row(i),
+        }
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            QBackend::Dense(d) => d.matvec(x, y),
+            QBackend::Lru(c) => c.matvec(x, y),
+        }
+    }
+
+    fn matvec2(&self, x1: &[f64], x2: &[f64], y1: &mut [f64], y2: &mut [f64]) {
+        match self {
+            QBackend::Dense(d) => d.matvec2(x1, x2, y1, y2),
+            QBackend::Lru(c) => c.matvec2(x1, x2, y1, y2),
+        }
+    }
+
+    fn power_eig_max(&self, iters: usize) -> f64 {
+        match self {
+            QBackend::Dense(d) => d.power_eig_max(iters),
+            QBackend::Lru(c) => c.power_eig_max(iters),
+        }
+    }
+
+    fn cache_stats(&self) -> (u64, u64, usize) {
+        match self {
+            QBackend::Dense(d) => d.cache_stats(),
+            QBackend::Lru(c) => c.cache_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{run_cases, Gen};
+
+    fn random_xy(g: &mut Gen, l: usize, d: usize) -> (Mat, Vec<f64>) {
+        let rows: Vec<Vec<f64>> = (0..l).map(|_| g.vec_f64(d, -2.0, 2.0)).collect();
+        let y: Vec<f64> =
+            (0..l).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        (Mat::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn lru_rows_match_dense_bit_for_bit() {
+        run_cases(8, 0xCAC4E, |g| {
+            let l = g.usize(5, 24);
+            let d = g.usize(1, 6);
+            let (x, y) = random_xy(g, l, d);
+            let gamma = g.f64(0.1, 2.0);
+            for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma }] {
+                let dense = DenseGram::build_q(&x, &y, kernel, 3);
+                let lru = LruRowCache::new_q(&x, &y, kernel, 4);
+                assert_eq!(dense.dims(), l);
+                assert_eq!(lru.dims(), l);
+                for i in 0..l {
+                    let r = lru.row(i);
+                    assert_eq!(&r[..], dense.mat().row(i), "row {i} ({kernel:?})");
+                    assert_eq!(
+                        lru.diag(i).to_bits(),
+                        dense.diag(i).to_bits(),
+                        "diag {i}"
+                    );
+                }
+                let v = g.vec_f64(l, -1.0, 1.0);
+                let mut a = vec![0.0; l];
+                let mut b = vec![0.0; l];
+                dense.matvec(&v, &mut a);
+                lru.matvec(&v, &mut b);
+                assert_eq!(a, b, "matvec ({kernel:?})");
+            }
+        });
+    }
+
+    #[test]
+    fn lru_gram_matches_dense_gram() {
+        let mut g = Gen::new(0x6A4);
+        let (x, _) = random_xy(&mut g, 15, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.7 };
+        let dense = DenseGram::build_gram(&x, kernel, 2);
+        let lru = LruRowCache::new_gram(&x, kernel, 5);
+        for i in 0..15 {
+            assert_eq!(&lru.row(i)[..], dense.mat().row(i));
+        }
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let mut g = Gen::new(0xE71C);
+        let (x, y) = random_xy(&mut g, 12, 3);
+        let lru = LruRowCache::new_q(&x, &y, KernelKind::Rbf { gamma: 0.5 }, 3);
+        for i in 0..12 {
+            let _ = lru.row(i);
+        }
+        let (hits, misses, resident) = lru.cache_stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 12);
+        assert!(resident <= 3, "resident={resident}");
+        // most-recent row is a hit
+        let _ = lru.row(11);
+        let (hits, _, _) = lru.cache_stats();
+        assert_eq!(hits, 1);
+        // oldest resident (9) is evicted before newer ones
+        let _ = lru.row(0); // miss: evicts 9 (10, 11 are newer)
+        let _ = lru.row(10);
+        let _ = lru.row(11);
+        let (hits, _, _) = lru.cache_stats();
+        assert_eq!(hits, 3, "rows 10 and 11 should have survived");
+    }
+
+    #[test]
+    fn evicted_row_handle_stays_valid() {
+        let mut g = Gen::new(0x0DD);
+        let (x, y) = random_xy(&mut g, 8, 2);
+        let lru = LruRowCache::new_q(&x, &y, KernelKind::Linear, 1);
+        let r0 = lru.row(0);
+        let r1 = lru.row(1); // budget 1: evicts row 0
+        let (_, _, resident) = lru.cache_stats();
+        assert_eq!(resident, 1);
+        // both handles still readable and distinct
+        assert_eq!(r0.len(), 8);
+        assert_eq!(r1.len(), 8);
+        assert_eq!(r0[0].to_bits(), lru.diag(0).to_bits());
+    }
+
+    #[test]
+    fn streaming_matvec_preserves_working_set() {
+        let mut g = Gen::new(0x3A7);
+        let (x, y) = random_xy(&mut g, 10, 2);
+        let lru = LruRowCache::new_q(&x, &y, KernelKind::Rbf { gamma: 1.0 }, 2);
+        let _ = lru.row(3);
+        let _ = lru.row(7);
+        let v = vec![0.1; 10];
+        let mut out = vec![0.0; 10];
+        lru.matvec(&v, &mut out);
+        let (_, _, resident) = lru.cache_stats();
+        // matvec reused the two cached rows and inserted nothing new
+        assert_eq!(resident, 2);
+        let r = lru.row(3);
+        assert_eq!(r.len(), 10);
+    }
+
+    #[test]
+    fn matvec2_matches_two_matvecs_on_both_backends() {
+        let mut g = Gen::new(0x2AB);
+        let (x, y) = random_xy(&mut g, 13, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.9 };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let lru = LruRowCache::new_q(&x, &y, kernel, 4);
+        let _ = lru.row(5); // mix cached and streamed rows
+        let v1 = g.vec_f64(13, -1.0, 1.0);
+        let v2 = g.vec_f64(13, -1.0, 1.0);
+        let mut a1 = vec![0.0; 13];
+        let mut a2 = vec![0.0; 13];
+        dense.matvec(&v1, &mut a1);
+        dense.matvec(&v2, &mut a2);
+        for km in [&dense as &dyn KernelMatrix, &lru as &dyn KernelMatrix] {
+            let mut b1 = vec![0.0; 13];
+            let mut b2 = vec![0.0; 13];
+            km.matvec2(&v1, &v2, &mut b1, &mut b2);
+            assert_eq!(a1, b1);
+            assert_eq!(a2, b2);
+        }
+    }
+
+    #[test]
+    fn quad_matches_explicit_matvec() {
+        let mut g = Gen::new(0x9AD);
+        let q = g.psd(7);
+        let a = g.vec_f64(7, -1.0, 1.0);
+        let b = g.vec_f64(7, -1.0, 1.0);
+        let mut qb = vec![0.0; 7];
+        Mat::matvec(&q, &b, &mut qb);
+        let expect = dot(&a, &qb);
+        let km: &dyn KernelMatrix = &q;
+        assert!((km.quad(&a, &b) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_eig_agrees_across_backends() {
+        let mut g = Gen::new(0x9E1);
+        let (x, y) = random_xy(&mut g, 14, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.6 };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let lru = LruRowCache::new_q(&x, &y, kernel, 4);
+        let a = dense.power_eig_max(40);
+        let b = lru.power_eig_max(40);
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(GramPolicy::parse("auto"), Some(GramPolicy::Auto));
+        assert_eq!(GramPolicy::parse("dense"), Some(GramPolicy::Dense));
+        assert_eq!(
+            GramPolicy::parse("lru"),
+            Some(GramPolicy::Lru { budget_rows: DEFAULT_LRU_ROWS })
+        );
+        assert_eq!(
+            GramPolicy::parse("lru:512"),
+            Some(GramPolicy::Lru { budget_rows: 512 })
+        );
+        assert_eq!(GramPolicy::parse("lru:0"), None);
+        assert_eq!(GramPolicy::parse("sparse"), None);
+    }
+
+    #[test]
+    fn policy_selects_backend() {
+        let mut g = Gen::new(0xB0);
+        let (x, y) = random_xy(&mut g, 10, 2);
+        let k = KernelKind::Linear;
+        assert_eq!(GramPolicy::Auto.q(&x, &y, k).name(), "dense");
+        assert_eq!(GramPolicy::Dense.q(&x, &y, k).name(), "dense");
+        let b = GramPolicy::Lru { budget_rows: 4 }.q(&x, &y, k);
+        assert_eq!(b.name(), "lru");
+        assert!(b.dense_mat().is_none());
+        assert_eq!(b.dims(), 10);
+    }
+
+    #[test]
+    fn mat_impl_delegates() {
+        let mut g = Gen::new(0x3A2);
+        let q = g.psd(5);
+        let km: &dyn KernelMatrix = &q;
+        assert_eq!(km.dims(), 5);
+        assert_eq!(km.diag(2).to_bits(), q.get(2, 2).to_bits());
+        assert_eq!(&km.row(1)[..], q.row(1));
+    }
+}

@@ -6,8 +6,13 @@
 //! γ = 1/(2σ²)).
 
 pub mod gram;
+pub mod matrix;
 
-pub use gram::{full_gram, full_q, gram_row, q_row};
+pub use gram::{
+    default_build_threads, full_gram, full_gram_threaded, full_q, full_q_threaded,
+    gram_row, gram_row_hoisted, q_row, row_norms,
+};
+pub use matrix::{DenseGram, GramPolicy, KernelMatrix, LruRowCache, QBackend};
 
 use crate::util::linalg::{dot, sq_dist};
 

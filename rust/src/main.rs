@@ -16,12 +16,14 @@
 use srbo::coordinator::grid::select_model;
 use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
 use srbo::data::{benchmark, split, synthetic, Dataset};
-use srbo::kernel::KernelKind;
+use srbo::kernel::matrix::{GramPolicy, KernelMatrix};
+use srbo::kernel::{default_build_threads, full_q_threaded, KernelKind};
 use srbo::runtime::Runtime;
 use srbo::stats::accuracy;
 use srbo::svm::nu::NuSvm;
 use srbo::util::cli::Args;
 use srbo::util::tsv::f;
+use srbo::util::Mat;
 use srbo::util::Timer;
 
 fn usage() -> ! {
@@ -36,6 +38,9 @@ fn usage() -> ! {
            --nu V            single nu for `train` (default 0.3)\n\
            --nu-from/--nu-to/--nu-step   path grid (default 0.1..0.5 step 0.02)\n\
            --solver S        dcdm|dcdm-paper|gqp (default dcdm)\n\
+           --gram G          dense|lru[:rows]|auto — Q backend (default auto:\n\
+                             parallel dense build below 8192 rows, bounded\n\
+                             LRU row cache above)\n\
            --no-screening    disable SRBO\n\
            --oneclass        OC-SVM family\n\
            --workers N       grid workers (default: cores)"
@@ -71,6 +76,17 @@ fn kernel_of(args: &Args) -> KernelKind {
         "rbf" => KernelKind::rbf_from_sigma(args.get_f64("sigma", 1.0)),
         other => {
             eprintln!("unknown kernel {other}");
+            usage()
+        }
+    }
+}
+
+fn gram_of(args: &Args) -> GramPolicy {
+    let s = args.get_or("gram", "auto");
+    match GramPolicy::parse(&s) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown gram backend {s} (want dense|lru[:rows]|auto)");
             usage()
         }
     }
@@ -141,6 +157,7 @@ fn cmd_path(args: &Args) {
     let mut cfg = PathConfig::new(nu_grid(args), kernel);
     cfg.solver = solver_of(args);
     cfg.screening = !args.flag("no-screening");
+    cfg.gram = gram_of(args);
     let t = Timer::start();
     let path = if args.flag("oneclass") {
         let pos = train.positives();
@@ -206,6 +223,7 @@ fn cmd_grid(args: &Args) {
         &sigmas,
         !args.flag("no-screening"),
         workers,
+        gram_of(args),
     );
     println!(
         "grid {}: {} arms in {:.2}s -> best kernel={:?} nu={:.3} acc={:.2}%",
@@ -228,25 +246,43 @@ fn cmd_datasets() {
     }
 }
 
-fn cmd_runtime() {
+fn cmd_runtime(args: &Args) {
     match Runtime::load_default() {
         Ok(rt) => {
             let mut names = rt.names();
             names.sort();
             println!("loaded {} artifacts: {}", names.len(), names.join(", "));
-            // smoke: decision artifact on random-ish data
+            // smoke: Q through the --gram backend selector vs the PJRT
+            // artifact (which needs a resident dense matrix).
             let d = synthetic::gaussians(64, 2.0, 7);
-            let q = srbo::kernel::full_q(&d.x, &d.y, KernelKind::Rbf { gamma: 0.5 });
+            let kernel = KernelKind::Rbf { gamma: 0.5 };
+            let backend = gram_of(args).q(&d.x, &d.y, kernel);
+            let dense_fallback;
+            let qmat: &Mat = match backend.dense_mat() {
+                Some(m) => m,
+                None => {
+                    dense_fallback = full_q_threaded(
+                        &d.x,
+                        &d.y,
+                        kernel,
+                        default_build_threads(d.len()),
+                    );
+                    &dense_fallback
+                }
+            };
             let v = vec![1.0 / d.len() as f64; d.len()];
-            let qv = rt.qmatvec(&q, &v).expect("qmatvec");
+            let qv = rt.qmatvec(qmat, &v).expect("qmatvec");
             let mut native = vec![0.0; d.len()];
-            q.matvec(&v, &mut native);
+            backend.matvec(&v, &mut native);
             let err = qv
                 .iter()
                 .zip(&native)
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0, f64::max);
-            println!("qmatvec artifact max |err| vs native: {err:.2e}");
+            println!(
+                "qmatvec artifact max |err| vs native ({} backend): {err:.2e}",
+                backend.name()
+            );
         }
         Err(e) => {
             eprintln!("runtime load failed: {e:#}");
@@ -262,7 +298,7 @@ fn main() {
         Some("path") => cmd_path(&args),
         Some("grid") => cmd_grid(&args),
         Some("datasets") => cmd_datasets(),
-        Some("runtime") => cmd_runtime(),
+        Some("runtime") => cmd_runtime(&args),
         _ => usage(),
     }
 }

@@ -17,6 +17,7 @@
 //! change), so pairwise steps are O(l) each.
 
 use super::{kkt_violation, ConstraintKind, QpProblem, SolveStats};
+use crate::kernel::matrix::KernelMatrix;
 use crate::qp::projection;
 
 /// DCDM configuration.
@@ -74,7 +75,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
         stats.sweeps += 1;
         let mut max_delta: f64 = 0.0;
         for i in 0..n {
-            let qii = p.q.get(i, i);
+            let qii = p.q.diag(i);
             if qii <= 1e-14 {
                 continue;
             }
@@ -88,7 +89,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
             if d.abs() > 0.0 {
                 // incremental gradient update: g += d * Q[:, i] (Q symmetric)
                 let qrow = p.q.row(i);
-                for (gk, &qik) in g.iter_mut().zip(qrow) {
+                for (gk, &qik) in g.iter_mut().zip(qrow.iter()) {
                     *gk += d * qik;
                 }
                 sum += d;
@@ -177,7 +178,7 @@ fn single_update(
     i: usize,
     sum_floor: Option<f64>,
 ) {
-    let qii = p.q.get(i, i);
+    let qii = p.q.diag(i);
     if qii <= 1e-14 {
         return;
     }
@@ -190,7 +191,7 @@ fn single_update(
     let d = new - alpha[i];
     if d != 0.0 {
         let qrow = p.q.row(i);
-        for (gk, &qik) in g.iter_mut().zip(qrow) {
+        for (gk, &qik) in g.iter_mut().zip(qrow.iter()) {
             *gk += d * qik;
         }
         *sum += d;
@@ -211,7 +212,10 @@ fn pair_update(
     if i == j || i == usize::MAX || j == usize::MAX {
         return;
     }
-    let curv = p.q.get(i, i) + p.q.get(j, j) - 2.0 * p.q.get(i, j);
+    // row i also supplies Q_ii and Q_ij; a bounded row cache keeps the
+    // handle valid even if fetching row j evicts it.
+    let qi = p.q.row(i);
+    let curv = qi[i] + p.q.diag(j) - 2.0 * qi[j];
     let dg = g[j] - g[i];
     let mut t = if curv > 1e-14 { dg / curv } else { dg.signum() * 1e30 };
     // box limits: 0 <= alpha_i + t <= ub_i, 0 <= alpha_j - t <= ub_j
@@ -220,8 +224,8 @@ fn pair_update(
     if t == 0.0 {
         return;
     }
-    let (qi, qj) = (p.q.row(i), p.q.row(j));
-    for ((gk, &qik), &qjk) in g.iter_mut().zip(qi).zip(qj) {
+    let qj = p.q.row(j);
+    for ((gk, &qik), &qjk) in g.iter_mut().zip(qi.iter()).zip(qj.iter()) {
         *gk += t * (qik - qjk);
     }
     alpha[i] += t;

@@ -8,6 +8,7 @@
 //! full O(l²) matvec — which is precisely why DCDM dominates it.
 
 use super::{kkt_violation, QpProblem, SolveStats};
+use crate::kernel::matrix::KernelMatrix;
 use crate::qp::projection;
 
 #[derive(Clone, Debug)]

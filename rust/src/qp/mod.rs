@@ -21,7 +21,7 @@ pub mod gqp;
 pub mod projection;
 pub mod reduced;
 
-use crate::util::Mat;
+use crate::kernel::matrix::KernelMatrix;
 
 /// The sum constraint variant.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -40,9 +40,11 @@ impl ConstraintKind {
     }
 }
 
-/// A dual QP instance (borrowed Q; the coordinator owns the Gram cache).
+/// A dual QP instance (borrowed Q behind the [`KernelMatrix`] trait —
+/// a dense `&Mat` coerces directly; the coordinator may pass a bounded
+/// row-cache backend instead).
 pub struct QpProblem<'a> {
-    pub q: &'a Mat,
+    pub q: &'a dyn KernelMatrix,
     /// Linear term f (None ⇒ zero) — nonzero for reduced problems.
     pub lin: Option<&'a [f64]>,
     pub ub: &'a [f64],
@@ -51,11 +53,11 @@ pub struct QpProblem<'a> {
 
 impl<'a> QpProblem<'a> {
     pub fn len(&self) -> usize {
-        self.q.rows
+        self.q.dims()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.q.rows == 0
+        self.q.dims() == 0
     }
 
     /// F(α) = 1/2 αᵀQα + fᵀα.

@@ -10,6 +10,7 @@
 //!
 //! (equality form for OC-SVM).  `combine` reassembles the full solution.
 
+use crate::kernel::matrix::KernelMatrix;
 use crate::screening::ScreenCode;
 use crate::util::Mat;
 
@@ -32,12 +33,12 @@ pub struct ReducedProblem {
 ///
 /// `codes[i]` fixes α_i = 0 (`Zero`), α_i = ub[i] (`Upper`), or keeps it.
 pub fn build(
-    q_full: &Mat,
+    q_full: &dyn KernelMatrix,
     ub_full: &[f64],
     constraint: ConstraintKind,
     codes: &[ScreenCode],
 ) -> ReducedProblem {
-    let l = q_full.rows;
+    let l = q_full.dims();
     assert_eq!(codes.len(), l);
     let mut keep = Vec::new();
     let mut fixed = Vec::new();
@@ -50,16 +51,15 @@ pub fn build(
     }
     let ns = keep.len();
     let mut q = Mat::zeros(ns, ns);
+    // One row fetch per survivor serves both Q_{S,S} and
+    // lin = Q_{S,D} α_D (only Upper-coded entries contribute) — a
+    // row-cache backend computes each row at most once.
+    let mut lin = vec![0.0; ns];
     for (a, &i) in keep.iter().enumerate() {
         let row = q_full.row(i);
         for (b, &j) in keep.iter().enumerate() {
             q.set(a, b, row[j]);
         }
-    }
-    // lin = Q_{S,D} α_D — only Upper-coded entries contribute.
-    let mut lin = vec![0.0; ns];
-    for (a, &i) in keep.iter().enumerate() {
-        let row = q_full.row(i);
         let mut s = 0.0;
         for &(j, v) in &fixed {
             if v != 0.0 {

@@ -11,7 +11,8 @@
 use crate::coordinator::path::{NuPath, PathConfig, SolverChoice};
 use crate::data::split::train_test_stratified;
 use crate::data::Dataset;
-use crate::kernel::{full_gram, full_q, KernelKind};
+use crate::kernel::matrix::DenseGram;
+use crate::kernel::{default_build_threads, KernelKind};
 use crate::stats::accuracy;
 use crate::svm::c::CSvm;
 use crate::svm::kde::Kde;
@@ -101,15 +102,21 @@ pub fn supervised_row(
     seed: u64,
 ) -> SupervisedRow {
     let (train, test) = train_test_stratified(d, 0.8, seed);
-    let q = full_q(&train.x, &train.y, kernel);
+    let q = DenseGram::build_q(
+        &train.x,
+        &train.y,
+        kernel,
+        default_build_threads(train.len()),
+    );
 
     // C-SVM over the paper's C grid.
     let c_grid: Vec<f64> = (-3..=8).map(|i| (2f64).powi(i)).collect();
     let t = Timer::start();
     let mut c_acc = f64::NEG_INFINITY;
     for &c in &c_grid {
-        let m = CSvm::train_with_q(&train.x, &train.y, &q, c, kernel, &Default::default())
-            .expect("C-SVM");
+        let m =
+            CSvm::train_with_q(&train.x, &train.y, q.mat(), c, kernel, &Default::default())
+                .expect("C-SVM");
         c_acc = c_acc.max(accuracy(&m.predict(&test.x), &test.y));
     }
     let c_time = t.secs() / c_grid.len() as f64;
@@ -119,14 +126,16 @@ pub fn supervised_row(
     cfg.solver = solver;
     cfg.screening = false;
     let t = Timer::start();
-    let p_off = NuPath::run_with_q(&q, &cfg, false, Default::default()).expect("path");
+    let p_off =
+        NuPath::run_with_matrix(&q, &cfg, false, Default::default()).expect("path");
     let nu_time_total = t.secs();
     let nu_acc = best_path_accuracy(&p_off, &train, &test, kernel);
 
     // SRBO path.
     cfg.screening = true;
     let t = Timer::start();
-    let p_on = NuPath::run_with_q(&q, &cfg, false, Default::default()).expect("path");
+    let p_on =
+        NuPath::run_with_matrix(&q, &cfg, false, Default::default()).expect("path");
     let srbo_time_total = t.secs();
     let srbo_acc = best_path_accuracy(&p_on, &train, &test, kernel);
 
@@ -161,20 +170,20 @@ pub struct UnsupervisedRow {
     pub speedup: f64,
 }
 
-/// Best AUC over an OC path.
+/// Best AUC over an OC path (against the caller's resident H).
 fn best_oc_auc(
     path: &NuPath,
     train: &Dataset,
     eval: &Dataset,
     kernel: KernelKind,
     nus: &[f64],
+    h: &crate::util::Mat,
 ) -> f64 {
-    let h = full_gram(&train.x, kernel);
     let mut best = f64::NEG_INFINITY;
     for (i, &nu) in nus.iter().enumerate() {
         let m = OcSvm::from_alpha(
             &train.x,
-            &h,
+            h,
             path.steps[i].alpha.clone(),
             nu,
             kernel,
@@ -202,7 +211,7 @@ pub fn unsupervised_row(
         .cloned()
         .filter(|&nu| nu * l as f64 > 1.5)
         .collect();
-    let h = full_gram(&train.x, kernel);
+    let h = DenseGram::build_gram(&train.x, kernel, default_build_threads(l));
 
     // KDE baseline: bandwidth grid like the paper's sigma grid.
     let t = Timer::start();
@@ -217,15 +226,17 @@ pub fn unsupervised_row(
     let mut cfg = PathConfig::new(nus.to_vec(), kernel);
     cfg.screening = false;
     let t = Timer::start();
-    let p_off = NuPath::run_with_q(&h, &cfg, true, Default::default()).expect("oc path");
+    let p_off =
+        NuPath::run_with_matrix(&h, &cfg, true, Default::default()).expect("oc path");
     let oc_time_total = t.secs();
-    let oc_auc = best_oc_auc(&p_off, &train, &test, kernel, &nus);
+    let oc_auc = best_oc_auc(&p_off, &train, &test, kernel, &nus, h.mat());
 
     cfg.screening = true;
     let t = Timer::start();
-    let p_on = NuPath::run_with_q(&h, &cfg, true, Default::default()).expect("oc path");
+    let p_on =
+        NuPath::run_with_matrix(&h, &cfg, true, Default::default()).expect("oc path");
     let srbo_time_total = t.secs();
-    let srbo_auc = best_oc_auc(&p_on, &train, &test, kernel, &nus);
+    let srbo_auc = best_oc_auc(&p_on, &train, &test, kernel, &nus, h.mat());
 
     UnsupervisedRow {
         name: d.name.clone(),
@@ -245,9 +256,15 @@ pub fn unsupervised_row(
 /// Per-ν remaining-instance curve (Fig. 6): percentage of samples kept.
 pub fn remaining_curve(d: &Dataset, kernel: KernelKind, nus: &[f64]) -> Vec<f64> {
     let (train, _) = train_test_stratified(d, 0.8, 3);
-    let q = full_q(&train.x, &train.y, kernel);
+    let q = DenseGram::build_q(
+        &train.x,
+        &train.y,
+        kernel,
+        default_build_threads(train.len()),
+    );
     let cfg = PathConfig::new(nus.to_vec(), kernel);
-    let path = NuPath::run_with_q(&q, &cfg, false, Default::default()).expect("path");
+    let path =
+        NuPath::run_with_matrix(&q, &cfg, false, Default::default()).expect("path");
     path.steps
         .iter()
         .map(|s| 100.0 - s.screening_ratio)
@@ -268,9 +285,15 @@ pub fn artificial_supervised(
     nus: &[f64],
 ) -> ArtificialResult {
     let (train, test) = train_test_stratified(d, 0.8, 5);
-    let q = full_q(&train.x, &train.y, kernel);
+    let q = DenseGram::build_q(
+        &train.x,
+        &train.y,
+        kernel,
+        default_build_threads(train.len()),
+    );
     let cfg = PathConfig::new(nus.to_vec(), kernel);
-    let path = NuPath::run_with_q(&q, &cfg, false, Default::default()).expect("path");
+    let path =
+        NuPath::run_with_matrix(&q, &cfg, false, Default::default()).expect("path");
     let acc = best_path_accuracy(&path, &train, &test, kernel);
     ArtificialResult {
         name: d.name.clone(),
@@ -287,10 +310,11 @@ pub fn artificial_oneclass(
     let train = d.positives();
     let l = train.len();
     let nus: Vec<f64> = nus.iter().cloned().filter(|&v| v * l as f64 > 1.5).collect();
-    let h = full_gram(&train.x, kernel);
+    let h = DenseGram::build_gram(&train.x, kernel, default_build_threads(l));
     let cfg = PathConfig::new(nus.clone(), kernel);
-    let path = NuPath::run_with_q(&h, &cfg, true, Default::default()).expect("path");
-    let auc = best_oc_auc(&path, &train, d, kernel, &nus);
+    let path =
+        NuPath::run_with_matrix(&h, &cfg, true, Default::default()).expect("path");
+    let auc = best_oc_auc(&path, &train, d, kernel, &nus, h.mat());
     ArtificialResult {
         name: d.name.clone(),
         accuracy_or_auc: auc,
@@ -309,12 +333,18 @@ pub fn solver_cell(
     seed: u64,
 ) -> (f64, f64) {
     let (train, test) = train_test_stratified(d, 0.8, seed);
-    let q = full_q(&train.x, &train.y, kernel);
+    let q = DenseGram::build_q(
+        &train.x,
+        &train.y,
+        kernel,
+        default_build_threads(train.len()),
+    );
     let mut cfg = PathConfig::new(nus.to_vec(), kernel);
     cfg.solver = solver;
     cfg.screening = screening;
     let t = Timer::start();
-    let path = NuPath::run_with_q(&q, &cfg, false, Default::default()).expect("path");
+    let path =
+        NuPath::run_with_matrix(&q, &cfg, false, Default::default()).expect("path");
     let secs = t.secs();
     let acc = best_path_accuracy(&path, &train, &test, kernel);
     (secs, acc)

@@ -8,10 +8,10 @@
 //! the restricted problem (27): coordinates that stayed feasible barely
 //! move; the projection + a few PG sweeps fix up the rest.
 
+use crate::kernel::matrix::KernelMatrix;
 use crate::qp::projection;
 use crate::qp::ConstraintKind;
 use crate::util::linalg::dot;
-use crate::util::Mat;
 
 /// The cheapest member of Δ: spread the mass shortfall ν₁ − Σα⁰ over the
 /// coordinates' headroom (used as PG warm start and as the fallback when
@@ -33,7 +33,7 @@ pub fn feasible(alpha0: &[f64], ub: &[f64], nu1: f64) -> Vec<f64> {
 }
 
 /// r(δ) = ¼ δᵀQδ + α⁰ᵀQδ — exposed for diagnostics and tests.
-pub fn radius_sq(q: &Mat, alpha0: &[f64], delta: &[f64]) -> f64 {
+pub fn radius_sq(q: &dyn KernelMatrix, alpha0: &[f64], delta: &[f64]) -> f64 {
     let l = alpha0.len();
     let mut qd = vec![0.0; l];
     q.matvec(delta, &mut qd);
@@ -42,7 +42,13 @@ pub fn radius_sq(q: &Mat, alpha0: &[f64], delta: &[f64]) -> f64 {
 
 /// Approximately optimal δ* of QPP (18) by `iters` projected-gradient
 /// sweeps on β = α⁰ + δ (ν-SVM inequality form).
-pub fn optimal(q: &Mat, alpha0: &[f64], ub: &[f64], nu1: f64, iters: usize) -> Vec<f64> {
+pub fn optimal(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    ub: &[f64],
+    nu1: f64,
+    iters: usize,
+) -> Vec<f64> {
     optimal_from(q, alpha0, ub, ConstraintKind::SumGe(nu1), None, iters, None)
 }
 
@@ -52,7 +58,7 @@ pub fn optimal(q: &Mat, alpha0: &[f64], ub: &[f64], nu1: f64, iters: usize) -> V
 /// when known — the path driver computes it once per Q instead of per
 /// step (40 power-iteration matvecs otherwise dominate the δ phase).
 pub fn optimal_from(
-    q: &Mat,
+    q: &dyn KernelMatrix,
     alpha0: &[f64],
     ub: &[f64],
     constraint: ConstraintKind,

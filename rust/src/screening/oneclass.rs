@@ -14,8 +14,8 @@
 //! of δ.
 
 use super::srbo::{self, ScreenResult};
+use crate::kernel::matrix::KernelMatrix;
 use crate::qp::ConstraintKind;
-use crate::util::Mat;
 
 /// The OC-SVM box bound 1/(νl).
 pub fn upper_bound(nu: f64, l: usize) -> f64 {
@@ -26,7 +26,7 @@ pub fn upper_bound(nu: f64, l: usize) -> f64 {
 /// Δ = {δ | eᵀ(α⁰+δ) = 1, 0 ≤ α⁰+δ ≤ 1/(ν_{k+1} l)}, optionally refined
 /// by `iters` bi-level PG sweeps (QPP 18 analogue).
 pub fn delta_for_step(
-    h: &Mat,
+    h: &dyn KernelMatrix,
     alpha0: &[f64],
     nu1: f64,
     iters: usize,
@@ -45,7 +45,12 @@ pub fn delta_for_step(
 }
 
 /// Apply the Table-II rule for the step to ν₁ = `nu1`.
-pub fn screen(h: &Mat, alpha0: &[f64], delta: &[f64], nu1: f64) -> ScreenResult {
+pub fn screen(
+    h: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    nu1: f64,
+) -> ScreenResult {
     // identical sphere + bracket machinery; the caller interprets Upper
     // as 1/(nu1 * l).
     srbo::screen(h, alpha0, delta, nu1)
@@ -57,6 +62,7 @@ mod tests {
     use crate::prop::run_cases;
     use crate::qp::{dcdm, QpProblem};
     use crate::screening::ScreenCode;
+    use crate::util::Mat;
 
     fn solve_oc(h: &Mat, nu: f64) -> Vec<f64> {
         let l = h.rows;

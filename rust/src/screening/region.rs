@@ -7,8 +7,8 @@
 //!   r          = cᵀc − w₀ᵀw₀       (radius²; clamped at 0 per |r|)
 //!   ‖Z_i‖      = √κ(x_i, x_i)      (from the Q diagonal)
 
+use crate::kernel::matrix::KernelMatrix;
 use crate::util::linalg::dot;
-use crate::util::Mat;
 
 /// Everything the rules need about the sphere, per path step.
 #[derive(Clone, Debug)]
@@ -25,22 +25,23 @@ pub struct Sphere {
 ///
 /// `q` is the labelled Gram matrix (or H for OC-SVM), `alpha0` the
 /// previous exact solution, `delta` a member of Δ (see [`super::delta`]).
-pub fn build(q: &Mat, alpha0: &[f64], delta: &[f64]) -> Sphere {
+pub fn build(q: &dyn KernelMatrix, alpha0: &[f64], delta: &[f64]) -> Sphere {
     let l = alpha0.len();
-    assert_eq!(q.rows, l);
+    assert_eq!(q.dims(), l);
     let v: Vec<f64> = alpha0
         .iter()
         .zip(delta)
         .map(|(&a, &d)| a + 0.5 * d)
         .collect();
+    // fused sweep: one row materialisation serves both Qv and Qα⁰
+    // (row-cache backends would otherwise compute every row twice).
     let mut qv = vec![0.0; l];
-    q.matvec(&v, &mut qv);
     let mut qa0 = vec![0.0; l];
-    q.matvec(alpha0, &mut qa0);
+    q.matvec2(&v, alpha0, &mut qv, &mut qa0);
     let ctc = dot(&v, &qv);
     let w0w0 = dot(alpha0, &qa0);
     let r = (ctc - w0w0).max(0.0);
-    let norms: Vec<f64> = (0..l).map(|i| q.get(i, i).max(0.0).sqrt()).collect();
+    let norms: Vec<f64> = (0..l).map(|i| q.diag(i).max(0.0).sqrt()).collect();
     Sphere { qv, sqrt_r: r.sqrt(), norms }
 }
 
@@ -72,6 +73,7 @@ mod tests {
     use crate::prop::run_cases;
     use crate::qp::projection::projected;
     use crate::qp::ConstraintKind;
+    use crate::util::Mat;
 
     /// Theorem 1 audit: for random PSD Q and *any* feasible δ, the true
     /// next optimum w₁ lies in the sphere — verified in w-space through

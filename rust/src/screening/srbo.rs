@@ -4,7 +4,7 @@
 use super::region::{self, Sphere};
 use super::rho::{self, RhoBounds};
 use super::ScreenCode;
-use crate::util::Mat;
+use crate::kernel::matrix::KernelMatrix;
 
 /// Outcome of one screening step.
 #[derive(Clone, Debug)]
@@ -20,7 +20,12 @@ pub struct ScreenResult {
 /// * `alpha0` — the *exact* dual optimum at ν_k (safety assumes this);
 /// * `delta` — a member of Δ (see [`super::delta`]);
 /// * `nu1` — the next parameter value.
-pub fn screen(q: &Mat, alpha0: &[f64], delta: &[f64], nu1: f64) -> ScreenResult {
+pub fn screen(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    nu1: f64,
+) -> ScreenResult {
     let sphere = region::build(q, alpha0, delta);
     screen_with_sphere(&sphere, nu1)
 }

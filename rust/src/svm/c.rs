@@ -6,7 +6,7 @@
 
 use super::KernelModel;
 use crate::bail;
-use crate::kernel::{full_q, KernelKind};
+use crate::kernel::{default_build_threads, full_q_threaded, KernelKind};
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::{ConstraintKind, QpProblem, SolveStats};
 use crate::stats::accuracy;
@@ -24,7 +24,7 @@ pub struct CSvm {
 
 impl CSvm {
     pub fn train(x: &Mat, y: &[f64], c: f64, kernel: KernelKind) -> Result<CSvm> {
-        let q = full_q(x, y, kernel);
+        let q = full_q_threaded(x, y, kernel, default_build_threads(x.rows));
         Self::train_with_q(x, y, &q, c, kernel, &DcdmOpts::default())
     }
 

@@ -2,7 +2,7 @@
 
 use super::KernelModel;
 use crate::bail;
-use crate::kernel::{full_q, KernelKind};
+use crate::kernel::{default_build_threads, full_q_threaded, KernelKind};
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::{ConstraintKind, QpProblem, SolveStats};
 use crate::stats::accuracy;
@@ -19,9 +19,10 @@ pub struct NuSvm {
 }
 
 impl NuSvm {
-    /// Train on (x, y) with the given ν and kernel (exact DCDM solve).
+    /// Train on (x, y) with the given ν and kernel (exact DCDM solve;
+    /// Q is built with the thread-parallel Gram builder).
     pub fn train(x: &Mat, y: &[f64], nu: f64, kernel: KernelKind) -> Result<NuSvm> {
-        let q = full_q(x, y, kernel);
+        let q = full_q_threaded(x, y, kernel, default_build_threads(x.rows));
         Self::train_with_q(x, y, &q, nu, kernel, None, &DcdmOpts::default())
     }
 
@@ -116,6 +117,7 @@ impl NuSvm {
 mod tests {
     use super::*;
     use crate::data::synthetic::gaussians;
+    use crate::kernel::full_q;
 
     #[test]
     fn separable_gaussians_high_accuracy() {

@@ -3,7 +3,7 @@
 
 use super::KernelModel;
 use crate::bail;
-use crate::kernel::{full_gram, KernelKind};
+use crate::kernel::{default_build_threads, full_gram_threaded, KernelKind};
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::{ConstraintKind, QpProblem, SolveStats};
 use crate::util::error::Result;
@@ -22,7 +22,7 @@ pub struct OcSvm {
 impl OcSvm {
     /// Train on `x` (normal data only) with parameter ν ∈ (0,1).
     pub fn train(x: &Mat, nu: f64, kernel: KernelKind) -> Result<OcSvm> {
-        let h = full_gram(x, kernel);
+        let h = full_gram_threaded(x, kernel, default_build_threads(x.rows));
         Self::train_with_h(x, &h, nu, kernel, None, &DcdmOpts::default())
     }
 

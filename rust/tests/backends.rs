@@ -1,0 +1,108 @@
+//! Kernel-matrix backend equivalence, end to end: a bounded
+//! `LruRowCache` Q must reproduce the dense-backend ν-path exactly —
+//! same screening decisions, same objectives — with resident Q memory
+//! capped by the configured row budget.
+
+use srbo::coordinator::path::{NuPath, PathConfig};
+use srbo::data::synthetic::gaussians;
+use srbo::kernel::matrix::{DenseGram, KernelMatrix, LruRowCache};
+use srbo::kernel::KernelKind;
+use srbo::qp::{ConstraintKind, QpProblem};
+
+fn nu_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+#[test]
+fn lru_backed_path_reproduces_dense_path() {
+    let d = gaussians(40, 2.5, 9); // l = 80
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.2, 0.34, 8);
+    let cfg = PathConfig::new(nus.clone(), kernel);
+
+    let dense = DenseGram::build_q(&d.x, &d.y, kernel, 4);
+    let budget = 16; // ≪ l = 80 rows
+    let lru = LruRowCache::new_q(&d.x, &d.y, kernel, budget);
+
+    let p_dense =
+        NuPath::run_with_matrix(&dense, &cfg, false, Default::default()).unwrap();
+    let p_lru =
+        NuPath::run_with_matrix(&lru, &cfg, false, Default::default()).unwrap();
+    assert_eq!(p_dense.steps.len(), p_lru.steps.len());
+
+    let l = d.len();
+    let ub = vec![1.0 / l as f64; l];
+    for (k, (sd, sl)) in p_dense.steps.iter().zip(&p_lru.steps).enumerate() {
+        // identical screening decisions at every grid point
+        assert_eq!(sd.codes, sl.codes, "screening codes differ at step {k}");
+        // identical objective (acceptance bound 1e-10; the backends are
+        // bit-identical so the gap should in fact be 0)
+        let p = QpProblem {
+            q: &dense,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(nus[k]),
+        };
+        let fd = p.objective(&sd.alpha);
+        let fl = p.objective(&sl.alpha);
+        assert!(
+            (fd - fl).abs() <= 1e-10,
+            "objective gap at step {k}: {fd} vs {fl}"
+        );
+        for (a, b) in sd.alpha.iter().zip(&sl.alpha) {
+            assert!((a - b).abs() <= 1e-12, "alpha diverged at step {k}");
+        }
+    }
+
+    // the row budget bounded resident Q memory throughout
+    let (_hits, misses, resident) = lru.cache_stats();
+    assert!(resident <= budget, "resident={resident} > budget={budget}");
+    assert!(misses > 0);
+}
+
+#[test]
+fn lru_backed_oneclass_path_reproduces_dense_path() {
+    let d = gaussians(40, 1.0, 4).positives();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.2, 0.5, 5);
+    let cfg = PathConfig::new(nus, kernel);
+
+    let dense = DenseGram::build_gram(&d.x, kernel, 4);
+    let lru = LruRowCache::new_gram(&d.x, kernel, 8);
+
+    let p_dense =
+        NuPath::run_with_matrix(&dense, &cfg, true, Default::default()).unwrap();
+    let p_lru =
+        NuPath::run_with_matrix(&lru, &cfg, true, Default::default()).unwrap();
+
+    for (k, (sd, sl)) in p_dense.steps.iter().zip(&p_lru.steps).enumerate() {
+        assert_eq!(sd.codes, sl.codes, "codes differ at step {k}");
+        for (a, b) in sd.alpha.iter().zip(&sl.alpha) {
+            assert!((a - b).abs() <= 1e-12, "alpha diverged at step {k}");
+        }
+        let sum: f64 = sl.alpha.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+    let (_, _, resident) = lru.cache_stats();
+    assert!(resident <= 8);
+}
+
+#[test]
+fn dense_mat_coerces_into_qp_problem() {
+    // the pre-abstraction call shape (&Mat as Q) still works verbatim
+    let d = gaussians(15, 2.0, 3);
+    let q = srbo::kernel::full_q(&d.x, &d.y, KernelKind::Linear);
+    let ub = vec![1.0 / d.len() as f64; d.len()];
+    let p = QpProblem {
+        q: &q,
+        lin: None,
+        ub: &ub,
+        constraint: ConstraintKind::SumGe(0.3),
+    };
+    assert_eq!(p.len(), d.len());
+    let (alpha, stats) = srbo::qp::dcdm::solve(&p, None, &Default::default());
+    assert!(p.is_feasible(&alpha, 1e-6));
+    assert!(stats.violation < 1e-5);
+}

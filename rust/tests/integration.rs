@@ -5,6 +5,7 @@ use srbo::coordinator::grid::select_model;
 use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
 use srbo::data::split::train_test_stratified;
 use srbo::data::{benchmark, synthetic};
+use srbo::kernel::matrix::GramPolicy;
 use srbo::kernel::KernelKind;
 use srbo::qp::{dcdm, gqp, ConstraintKind, QpProblem};
 use srbo::stats::{accuracy, roc_auc};
@@ -119,7 +120,7 @@ fn grid_search_finds_good_model_on_circle() {
     let d = synthetic::circle(60, 31);
     let (tr, te) = train_test_stratified(&d, 0.8, 32);
     let (kernel, _nu, acc, results) =
-        select_model(&tr, &te, grid(0.15, 0.4, 6), &[0.5, 1.0], true, 2);
+        select_model(&tr, &te, grid(0.15, 0.4, 6), &[0.5, 1.0], true, 2, GramPolicy::Auto);
     assert_eq!(results.len(), 3);
     assert!(matches!(kernel, KernelKind::Rbf { .. }), "circle needs rbf");
     assert!(acc > 90.0, "acc={acc}");
