@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all verify lint fmt bench-compile bench bench-gram aot clean
+.PHONY: all verify lint fmt bench-compile bench bench-gram bench-path aot clean
 
 all: verify
 
@@ -31,6 +31,11 @@ bench:
 # Gram-build scaling bench (threads × size grid) → BENCH_gram.json.
 bench-gram:
 	$(CARGO) bench --bench gram_build
+
+# Shard-parallel path bench (threads × size × backend grid) →
+# BENCH_path.json.  SRBO_BENCH_QUICK=1 runs the CI smoke grid.
+bench-path:
+	$(CARGO) bench --bench path_scale
 
 # Optional: export the L2 JAX/Pallas graphs to artifacts/*.hlo.txt.
 # Needs the Python toolchain (jax); the Rust `pjrt` feature consumes the

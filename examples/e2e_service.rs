@@ -16,7 +16,7 @@
 use srbo::coordinator::grid::select_model;
 use srbo::data::split::train_test_stratified;
 use srbo::data::{benchmark, Dataset};
-use srbo::kernel::matrix::GramPolicy;
+use srbo::kernel::matrix::{GramPolicy, Sharding};
 use srbo::kernel::KernelKind;
 use srbo::runtime::Runtime;
 use srbo::svm::nu::NuSvm;
@@ -41,13 +41,29 @@ fn main() -> srbo::Result<()> {
         let (train, test) = train_test_stratified(&d, 0.8, 7);
 
         let t = Timer::start();
-        let (kernel, nu, acc, _) =
-            select_model(&train, &test, nus.clone(), &sigmas, true, 2, GramPolicy::Auto);
+        let (kernel, nu, acc, _) = select_model(
+            &train,
+            &test,
+            nus.clone(),
+            &sigmas,
+            true,
+            2,
+            GramPolicy::Auto,
+            Sharding::Auto,
+        );
         let on_time = t.secs();
 
         let t = Timer::start();
-        let (_, _, acc_off, _) =
-            select_model(&train, &test, nus.clone(), &sigmas, false, 2, GramPolicy::Auto);
+        let (_, _, acc_off, _) = select_model(
+            &train,
+            &test,
+            nus.clone(),
+            &sigmas,
+            false,
+            2,
+            GramPolicy::Auto,
+            Sharding::Auto,
+        );
         let off_time = t.secs();
 
         total_screened_time += on_time;

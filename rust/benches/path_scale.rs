@@ -1,0 +1,99 @@
+//! §Perf shard-parallel path bench: full screened SRBO ν-paths over a
+//! threads × size grid, serial vs shard-parallel, for both the dense and
+//! the sharded-LRU kernel backends.  Prints medians and writes
+//! `BENCH_path.json` at the repo root (the perf trajectory — run via
+//! `make bench-path`).
+//!
+//! Knobs: `SRBO_SCALE` shrinks dataset sizes; `SRBO_BENCH_QUICK=1` runs
+//! a tiny smoke grid (CI uses it to keep the JSON emission honest).
+
+use srbo::bench_harness::{bench, scaled};
+use srbo::coordinator::path::{NuPath, PathConfig};
+use srbo::data::synthetic;
+use srbo::kernel::matrix::{GramPolicy, Sharding};
+use srbo::kernel::KernelKind;
+use srbo::util::tsv::Json;
+
+fn nu_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("SRBO_BENCH_QUICK").is_ok();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let sizes: &[usize] = if quick { &[64] } else { &[128, 256, 512] };
+    let thread_grid: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let nus = nu_grid(0.2, 0.32, if quick { 4 } else { 9 });
+    let (warmup, reps) = if quick { (0, 1) } else { (1, 3) };
+
+    let mut runs = Vec::new();
+    for &base in sizes {
+        let n = scaled(base); // per-class count; l = 2n
+        let d = synthetic::gaussians(n, 2.0, 42);
+        let l = d.len();
+        // dense policy sweep (the fits-in-memory regime), plus an LRU
+        // policy sweep at a budget ≪ l (the l ≫ memory regime).  Note
+        // the LRU policy's serial baseline runs the plain `LruRowCache`
+        // while threaded rows run `ShardedLruRowCache` — the per-run
+        // `backend` field records the actual implementation (the bench
+        // budgets divide evenly, so cache capacity stays equal).
+        let lru_budget = (l / 8).max(8);
+        let policies: [(&str, GramPolicy); 2] = [
+            ("dense", GramPolicy::Dense),
+            ("lru", GramPolicy::Lru { budget_rows: lru_budget }),
+        ];
+        for (name, gram) in policies {
+            let mut serial_median = f64::NAN;
+            for &threads in thread_grid {
+                let mut cfg = PathConfig::new(nus.clone(), kernel);
+                cfg.gram = gram;
+                cfg.shard = if threads == 1 {
+                    Sharding::Serial
+                } else {
+                    Sharding::Threads(threads)
+                };
+                let backend = gram.backend_name(l, cfg.shard);
+                let s = bench(&format!("path_{name}_l{l}_t{threads}"), warmup, reps, || {
+                    std::hint::black_box(
+                        NuPath::run(&d.x, &d.y, &cfg).expect("path failed"),
+                    );
+                });
+                if threads == 1 {
+                    serial_median = s.median_s;
+                }
+                let speedup = serial_median / s.median_s.max(1e-12);
+                println!("{}  speedup vs serial: {speedup:.2}x", s.human());
+                runs.push(Json::Obj(vec![
+                    ("policy".into(), Json::Str(name.into())),
+                    ("backend".into(), Json::Str(backend.into())),
+                    ("l".into(), Json::Num(l as f64)),
+                    ("threads".into(), Json::Num(threads as f64)),
+                    ("median_s".into(), Json::Num(s.median_s)),
+                    ("min_s".into(), Json::Num(s.min_s)),
+                    ("speedup_vs_serial".into(), Json::Num(speedup)),
+                ]));
+            }
+        }
+    }
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("path_scale".into())),
+        ("kernel".into(), Json::Str("rbf".into())),
+        ("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 })),
+        ("host_parallelism".into(), Json::Num(cores as f64)),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    let payload = doc.render() + "\n";
+    // anchor at the repo root (bench cwd is the package dir) so the
+    // perf-trajectory file lands in a stable, committable spot
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_path.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_path.json"));
+    std::fs::write(&out, &payload).expect("write BENCH_path.json");
+    println!("wrote {} (host parallelism {cores})", out.display());
+}

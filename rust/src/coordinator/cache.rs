@@ -74,9 +74,21 @@ impl GramCache {
 
     /// Get-or-compute the labelled Q for (x, y) (parallel build on miss).
     pub fn q(&self, key: QKey, x: &Mat, y: &[f64], kernel: KernelKind) -> Arc<Mat> {
-        self.get_or_insert(key, || {
-            full_q_threaded(x, y, kernel, default_build_threads(x.rows))
-        })
+        self.q_threaded(key, x, y, kernel, default_build_threads(x.rows))
+    }
+
+    /// [`Self::q`] with an explicit miss-build thread count — grid
+    /// workers pass their shard budget so `workers × build threads`
+    /// stays within the machine's parallelism.
+    pub fn q_threaded(
+        &self,
+        key: QKey,
+        x: &Mat,
+        y: &[f64],
+        kernel: KernelKind,
+        threads: usize,
+    ) -> Arc<Mat> {
+        self.get_or_insert(key, || full_q_threaded(x, y, kernel, threads.max(1)))
     }
 
     /// Get-or-compute the unlabelled H for x (parallel build on miss).
@@ -96,6 +108,18 @@ impl GramCache {
         kernel: KernelKind,
     ) -> DenseGram {
         DenseGram::from_arc(self.q(key, x, y, kernel))
+    }
+
+    /// [`Self::q_backend`] with an explicit miss-build thread count.
+    pub fn q_backend_threaded(
+        &self,
+        key: QKey,
+        x: &Mat,
+        y: &[f64],
+        kernel: KernelKind,
+        threads: usize,
+    ) -> DenseGram {
+        DenseGram::from_arc(self.q_threaded(key, x, y, kernel, threads))
     }
 
     /// Get-or-compute H, wrapped as a trait-backed dense backend.
@@ -208,6 +232,20 @@ mod tests {
         let a = cache.q(QKey::new("b", k, true), &d.x, &d.y, k);
         let b = cache.q_backend(QKey::new("b", k, true), &d.x, &d.y, k);
         assert!(Arc::ptr_eq(&a, &b.share()));
+    }
+
+    #[test]
+    fn threaded_build_shares_entry_and_matches() {
+        let cache = GramCache::new(64 << 20);
+        let d = gaussians(12, 1.0, 9);
+        let k = KernelKind::Rbf { gamma: 0.7 };
+        let key = QKey::new("t", k, true);
+        let a = cache.q_threaded(key.clone(), &d.x, &d.y, k, 3);
+        let b = cache.q(key, &d.x, &d.y, k); // hit — same entry
+        assert!(Arc::ptr_eq(&a, &b));
+        // threaded miss-build is bit-identical to the serial builder
+        let serial = crate::kernel::full_q(&d.x, &d.y, k);
+        assert_eq!(*a, serial);
     }
 
     #[test]

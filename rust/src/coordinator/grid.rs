@@ -12,7 +12,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::coordinator::cache::{GramCache, QKey};
 use crate::coordinator::path::{NuPath, PathConfig};
 use crate::data::Dataset;
-use crate::kernel::matrix::GramPolicy;
+use crate::kernel::matrix::{GramPolicy, Sharding};
 use crate::kernel::KernelKind;
 use crate::stats::accuracy;
 use crate::svm::nu::NuSvm;
@@ -114,11 +114,30 @@ impl Default for GridSearch {
 }
 
 impl GridSearch {
+    /// Worker count that saturates the machine without oversubscribing
+    /// when each job itself fans out over `shard_threads` workers: the
+    /// product `workers × shard_threads` never exceeds
+    /// `available_parallelism` (floored at one worker).
+    pub fn workers_for(shard_threads: usize) -> usize {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        (cores / shard_threads.max(1)).max(1)
+    }
+
     /// Run all jobs; results come back in completion order.
     pub fn run(&self, jobs: Vec<Job>) -> Vec<JobResult> {
         let queue = Arc::new(Queue::new(self.queue_cap));
         let results = Arc::new(Mutex::new(Vec::new()));
         let in_flight = Arc::new(AtomicUsize::new(jobs.len()));
+        // per-worker thread budget for cache-miss Gram builds, so that
+        // workers × build threads also stays within the machine's
+        // parallelism (the sweep threads are capped by the caller via
+        // workers_for)
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let build_cap = (cores / self.workers.max(1)).max(1);
         std::thread::scope(|scope| {
             for _ in 0..self.workers.max(1) {
                 let queue = Arc::clone(&queue);
@@ -127,7 +146,7 @@ impl GridSearch {
                 let in_flight = Arc::clone(&in_flight);
                 scope.spawn(move || {
                     while let Some(job) = queue.pop() {
-                        let r = run_job(&cache, &job);
+                        let r = run_job(&cache, &job, build_cap);
                         results.lock().unwrap().push(r);
                         in_flight.fetch_sub(1, Ordering::SeqCst);
                     }
@@ -142,17 +161,21 @@ impl GridSearch {
     }
 }
 
-fn run_job(cache: &GramCache, job: &Job) -> JobResult {
+fn run_job(cache: &GramCache, job: &Job, build_cap: usize) -> JobResult {
     let t = Timer::start();
     let d = &job.dataset;
     // Dense-policy jobs share Q through the Gram cache; bounded-memory
-    // jobs get a per-worker LRU backend (Q never materialises).
+    // jobs get a per-worker (sharded when the path shards) row cache —
+    // Q never materialises.  Cache-miss builds use the job's build
+    // thread budget (so explicitly-serial jobs stay serial end to end),
+    // clamped to the pool's per-worker share of the cores.
     let path = if job.cfg.gram.use_dense(d.x.rows) {
         let key = QKey::new(&format!("{}#{}", d.name, job.tag), job.kernel, true);
-        let q = cache.q_backend(key, &d.x, &d.y, job.kernel);
+        let build = job.cfg.shard.build_threads(d.x.rows).min(build_cap);
+        let q = cache.q_backend_threaded(key, &d.x, &d.y, job.kernel, build);
         NuPath::run_with_matrix(&q, &job.cfg, false, Default::default())
     } else {
-        let q = job.cfg.gram.q(&d.x, &d.y, job.kernel);
+        let q = job.cfg.gram.q_sharded(&d.x, &d.y, job.kernel, job.cfg.shard);
         NuPath::run_with_matrix(&q, &job.cfg, false, Default::default())
     }
     .expect("path failed");
@@ -186,6 +209,10 @@ fn run_job(cache: &GramCache, job: &Job) -> JobResult {
 
 /// Convenience: full supervised model selection for one dataset —
 /// ν grid × σ grid, returns the best (kernel, ν, accuracy).
+///
+/// When `shard` makes jobs fan out internally, the requested worker
+/// count is capped so `workers × shard threads` never oversubscribes
+/// `available_parallelism` (see [`GridSearch::workers_for`]).
 pub fn select_model(
     train: &Dataset,
     test: &Dataset,
@@ -194,6 +221,7 @@ pub fn select_model(
     screening: bool,
     workers: usize,
     gram: GramPolicy,
+    shard: Sharding,
 ) -> (KernelKind, f64, f64, Vec<JobResult>) {
     let mut jobs = Vec::new();
     let train = Arc::new(train.clone());
@@ -204,6 +232,7 @@ pub fn select_model(
         let mut cfg = PathConfig::new(nus.clone(), kernel);
         cfg.screening = screening;
         cfg.gram = gram;
+        cfg.shard = shard;
         jobs.push(Job {
             dataset: Arc::clone(&train),
             test: Arc::clone(&test),
@@ -212,6 +241,12 @@ pub fn select_model(
             tag: format!("{}/{:?}", train.name, kernel),
         });
     }
+    let shard_threads = shard.resolve(train.x.rows);
+    let workers = if shard_threads > 1 {
+        workers.max(1).min(GridSearch::workers_for(shard_threads))
+    } else {
+        workers.max(1)
+    };
     let gs = GridSearch { workers, ..Default::default() };
     let results = gs.run(jobs);
     let mut best = (KernelKind::Linear, 0.0, f64::NEG_INFINITY);
@@ -237,8 +272,16 @@ mod tests {
     fn single_worker_runs_all_jobs() {
         let d = gaussians(30, 2.0, 1);
         let (tr, te) = train_test_stratified(&d, 0.8, 2);
-        let (_, _, best_acc, results) =
-            select_model(&tr, &te, nus(), &[1.0], true, 1, GramPolicy::Auto);
+        let (_, _, best_acc, results) = select_model(
+            &tr,
+            &te,
+            nus(),
+            &[1.0],
+            true,
+            1,
+            GramPolicy::Auto,
+            Sharding::Serial,
+        );
         assert_eq!(results.len(), 2); // linear + 1 rbf
         assert!(best_acc > 80.0, "acc={best_acc}");
     }
@@ -247,8 +290,16 @@ mod tests {
     fn multi_worker_matches_job_count() {
         let d = gaussians(25, 2.0, 3);
         let (tr, te) = train_test_stratified(&d, 0.8, 4);
-        let (_, _, _, results) =
-            select_model(&tr, &te, nus(), &[0.5, 2.0], true, 4, GramPolicy::Auto);
+        let (_, _, _, results) = select_model(
+            &tr,
+            &te,
+            nus(),
+            &[0.5, 2.0],
+            true,
+            4,
+            GramPolicy::Auto,
+            Sharding::Auto,
+        );
         assert_eq!(results.len(), 3);
         for r in &results {
             assert_eq!(r.curve.len(), 4);
@@ -259,8 +310,16 @@ mod tests {
     fn lru_policy_grid_matches_dense() {
         let d = gaussians(25, 2.0, 7);
         let (tr, te) = train_test_stratified(&d, 0.8, 2);
-        let (_, _, acc_d, _) =
-            select_model(&tr, &te, nus(), &[1.0], true, 2, GramPolicy::Dense);
+        let (_, _, acc_d, _) = select_model(
+            &tr,
+            &te,
+            nus(),
+            &[1.0],
+            true,
+            2,
+            GramPolicy::Dense,
+            Sharding::Serial,
+        );
         let (_, _, acc_l, _) = select_model(
             &tr,
             &te,
@@ -269,11 +328,28 @@ mod tests {
             true,
             2,
             GramPolicy::Lru { budget_rows: 8 },
+            Sharding::Threads(2),
         );
-        // bit-identical backends ⇒ identical best accuracy (nu/kernel
-        // tie-breaks depend on worker completion order, so compare the
-        // order-independent quantity)
+        // bit-identical backends (dense serial vs sharded-LRU parallel)
+        // ⇒ identical best accuracy (nu/kernel tie-breaks depend on
+        // worker completion order, so compare the order-independent
+        // quantity)
         assert_eq!(acc_d, acc_l);
+    }
+
+    #[test]
+    fn workers_never_oversubscribe_with_sharded_jobs() {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        assert_eq!(GridSearch::workers_for(1), cores.max(1));
+        for t in [1usize, 2, 4, 16] {
+            let w = GridSearch::workers_for(t);
+            assert!(w >= 1);
+            // the product never exceeds the cores (unless a single
+            // sharded job alone already does)
+            assert!(w * t <= cores || w == 1, "w={w} t={t} cores={cores}");
+        }
     }
 
     #[test]

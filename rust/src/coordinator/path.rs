@@ -15,7 +15,7 @@
 //! generic QP solver (Fig. 8 / Table VIII).
 
 use crate::bail;
-use crate::kernel::matrix::{GramPolicy, KernelMatrix};
+use crate::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use crate::kernel::KernelKind;
 use crate::qp::dcdm::{self, DcdmOpts};
 use crate::qp::gqp::{self, GqpOpts};
@@ -55,6 +55,10 @@ pub struct PathConfig {
     /// How `run`/`run_oneclass` materialise Q: parallel dense build or
     /// bounded LRU row cache (`run_with_q` callers bypass this).
     pub gram: GramPolicy,
+    /// How the per-step phases (δ refinement, screening sweep, reduced
+    /// gather) fan out over row shards (`--threads auto|serial|N`).
+    /// Results are bit-identical to the serial path for any setting.
+    pub shard: Sharding,
 }
 
 impl PathConfig {
@@ -67,6 +71,7 @@ impl PathConfig {
             delta_iters: 30,
             eps: 1e-8,
             gram: GramPolicy::Auto,
+            shard: Sharding::Auto,
         }
     }
 
@@ -135,7 +140,7 @@ impl NuPath {
         cfg.validate()?;
         let mut times = PhaseTimes::new();
         let mut t = Timer::start();
-        let q = cfg.gram.q(x, y, cfg.kernel);
+        let q = cfg.gram.q_sharded(x, y, cfg.kernel, cfg.shard);
         times.add("gram", t.lap());
         Self::run_with_matrix(&q, cfg, false, times)
     }
@@ -151,7 +156,7 @@ impl NuPath {
         }
         let mut times = PhaseTimes::new();
         let mut t = Timer::start();
-        let h = cfg.gram.gram(x, cfg.kernel);
+        let h = cfg.gram.gram_sharded(x, cfg.kernel, cfg.shard);
         times.add("gram", t.lap());
         Self::run_with_matrix(&h, cfg, true, times)
     }
@@ -175,6 +180,10 @@ impl NuPath {
     ) -> Result<NuPath> {
         cfg.validate()?;
         let l = q.dims();
+        // Shard-parallel worker count for every per-step phase.  All
+        // parallel sweeps are bit-identical to their serial forms, so
+        // this only changes wall-clock, never the path.
+        let threads = cfg.shard.resolve(l);
         let ub_for = |nu: f64| -> Vec<f64> {
             if oneclass_mode {
                 vec![oneclass::upper_bound(nu, l); l]
@@ -195,7 +204,11 @@ impl NuPath {
         let mut t = Timer::start();
 
         // One-time Lipschitz estimate shared by every δ refinement step.
-        let lip = if cfg.screening { Some(q.power_eig_max(40)) } else { None };
+        let lip = if cfg.screening {
+            Some(q.par_power_eig_max(40, threads))
+        } else {
+            None
+        };
 
         // Step 1 (Initialization): full solve at nu_0.
         let nu0 = cfg.nus[0];
@@ -219,7 +232,6 @@ impl NuPath {
         let mut prev_delta: Option<Vec<f64>> = None;
         for k in 0..cfg.nus.len() - 1 {
             let nu_next = cfg.nus[k + 1];
-            let alpha_k = steps[k].alpha.clone();
             let ub_next = ub_for(nu_next);
 
             if !cfg.screening {
@@ -243,11 +255,16 @@ impl NuPath {
                 continue;
             }
 
+            // Borrow the previous step's α in place — the phases below
+            // only read it, and its last use (the warm start) ends the
+            // borrow before the new step is pushed.
+            let alpha_k: &[f64] = &steps[k].alpha;
+
             // Step 2a: delta via the warm-started restricted problem (27).
             let iters = if k == 0 { cfg.delta_iters } else { cfg.delta_iters / 4 + 1 };
             let d = delta::optimal_from(
                 q,
-                &alpha_k,
+                alpha_k,
                 &ub_next,
                 if oneclass_mode {
                     ConstraintKind::SumEq(1.0)
@@ -257,16 +274,24 @@ impl NuPath {
                 prev_delta.as_deref(),
                 iters,
                 lip,
+                threads,
             );
             times.add("delta", t.lap());
 
-            // Step 2b: screen.
-            let res = srbo::screen(q, &alpha_k, &d, nu_next);
+            // Step 2b: screen (shard-parallel sphere + code sweeps).
+            let res = srbo::screen_threaded(q, alpha_k, &d, nu_next, threads);
             times.add("screen", t.lap());
 
-            // Step 3: reduced solve (warm-started at the survivors).
-            let red = reduced::build(q, &ub_next, constraint_for(nu_next), &res.codes);
-            let warm = red.restrict(&alpha_k);
+            // Step 3: reduced solve (warm-started at the survivors; the
+            // survivor-row gather is shard-parallel).
+            let red = reduced::build_threaded(
+                q,
+                &ub_next,
+                constraint_for(nu_next),
+                &res.codes,
+                threads,
+            );
+            let warm = red.restrict(alpha_k);
             let (alpha_s, stats) = if red.is_empty() {
                 (Vec::new(), SolveStats::default())
             } else {

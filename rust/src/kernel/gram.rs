@@ -81,6 +81,62 @@ pub fn full_gram(x: &Mat, kernel: KernelKind) -> Mat {
     k
 }
 
+/// Diagonal of Q = diag(y) K diag(y) (or of plain K when `y` is `None`)
+/// from the hoisted norms — the single diag kernel behind every
+/// row-cache backend, so backends cannot drift from the full builders
+/// (K_ii = ‖x_i‖² + 1 for linear, 1 for RBF; × y_i² when labelled).
+pub(crate) fn hoisted_diag(
+    norms: &[f64],
+    y: Option<&[f64]>,
+    kernel: KernelKind,
+) -> Vec<f64> {
+    (0..norms.len())
+        .map(|i| {
+            let base = match kernel {
+                KernelKind::Linear => norms[i] + 1.0,
+                KernelKind::Rbf { .. } => 1.0,
+            };
+            match y {
+                Some(y) => base * y[i] * y[i],
+                None => base,
+            }
+        })
+        .collect()
+}
+
+/// Row i of Q = diag(y) K diag(y) with the norms hoisted by the caller
+/// (`y = None` ⇒ a plain K row) — the single row kernel behind every
+/// row-cache backend ([`gram_row_hoisted`] plus the label scaling).
+pub(crate) fn labelled_row_hoisted(
+    x: &Mat,
+    norms: &[f64],
+    y: Option<&[f64]>,
+    i: usize,
+    kernel: KernelKind,
+    out: &mut [f64],
+) {
+    gram_row_hoisted(x, norms, i, kernel, out);
+    if let Some(y) = y {
+        let yi = y[i];
+        for (o, &yj) in out.iter_mut().zip(y.iter()) {
+            *o = *o * yi * yj;
+        }
+    }
+}
+
+/// Balanced contiguous `[start, end)` ranges splitting `l` rows into
+/// `parts` shards: shard s owns rows `s·l/parts .. (s+1)·l/parts`.
+///
+/// This is the deterministic partition every shard-parallel sweep uses
+/// (parallel matvec, the screening code sweep, the reduced gather, the
+/// sharded row cache): each output element is computed independently and
+/// merged back in shard order, so results never depend on the worker
+/// count.  `parts` is clamped to `[1, l]` so no range is empty.
+pub fn shard_ranges(l: usize, parts: usize) -> Vec<(usize, usize)> {
+    let p = parts.max(1).min(l.max(1));
+    (0..p).map(|s| (s * l / p, (s + 1) * l / p)).collect()
+}
+
 /// Worker count for parallel Gram builds: the machine's parallelism,
 /// capped so tiny matrices don't pay thread-spawn overhead.
 pub fn default_build_threads(l: usize) -> usize {
@@ -317,6 +373,21 @@ mod tests {
         assert_eq!(default_build_threads(0), 1);
         assert_eq!(default_build_threads(100), 1);
         assert!(default_build_threads(100_000) >= 1);
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        for (l, parts) in [(10, 3), (7, 7), (5, 9), (1, 4), (0, 2), (100, 1)] {
+            let ranges = shard_ranges(l, parts);
+            assert!(!ranges.is_empty() || l == 0 || parts == 0);
+            let mut next = 0;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, next, "gap at {lo} (l={l} parts={parts})");
+                assert!(hi > lo || l == 0, "empty range (l={l} parts={parts})");
+                next = hi;
+            }
+            assert_eq!(next, l, "ranges must cover 0..{l}");
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The kernel-matrix abstraction layer: a [`KernelMatrix`] trait over
 //! which every Q consumer (QP solvers, screening, the path coordinator)
-//! operates, with two interchangeable backends.
+//! operates, with interchangeable backends.
 //!
 //! # Backends and when to pick each
 //!
@@ -29,18 +29,33 @@
 //! while borrowed (the pairwise solver holds two rows at once).
 //!
 //! `LruRowCache` uses single-threaded interior mutability ([`RefCell`] +
-//! [`Rc`]); share one per worker thread, not across threads.  Dense
-//! backends wrap [`Arc<Mat>`] and share freely.
+//! [`Rc`]); share one per worker thread, not across threads.  For the
+//! shard-parallel path there is [`ShardedLruRowCache`]: rows are
+//! partitioned contiguously across shards, each shard holds its own
+//! bounded LRU behind its own mutex, and the parallel sweeps assign
+//! whole shards to workers so the hot path never takes a cross-shard
+//! lock.  Dense backends wrap [`Arc<Mat>`] and share freely.
+//!
+//! # Shard-parallel entry points
+//!
+//! Every backend exposes `par_matvec` / `par_matvec2` / `par_quad` /
+//! `par_power_eig_max` alongside the serial methods.  The parallel
+//! sweeps compute each output element with exactly the same arithmetic
+//! as the serial ones and write it to a disjoint slot (reductions — the
+//! final dot products — stay serial), so results are **bit-identical**
+//! for any thread count.  [`Sharding`] is the CLI-facing policy
+//! (`--threads auto|serial|N`) that the path coordinator resolves into a
+//! worker count.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::ops::Deref;
 use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::gram::{
     default_build_threads, full_gram_threaded, full_q_threaded, gram_row_hoisted,
-    row_norms,
+    hoisted_diag, labelled_row_hoisted, row_norms, shard_ranges,
 };
 use super::KernelKind;
 use crate::util::linalg::{dot, norm2};
@@ -52,11 +67,13 @@ pub const DENSE_AUTO_LIMIT: usize = 8192;
 /// Default row budget for the LRU backend (≈ budget·l·8 bytes resident).
 pub const DEFAULT_LRU_ROWS: usize = 1024;
 
-/// A borrowed or cache-held Q row.  Derefs to `[f64]`; the `Cached`
-/// variant keeps the row alive across later evictions.
+/// A borrowed or cache-held Q row.  Derefs to `[f64]`; the `Cached` and
+/// `Shared` variants keep the row alive across later evictions (`Shared`
+/// is the thread-safe handle the sharded cache hands out).
 pub enum Row<'a> {
     Borrowed(&'a [f64]),
     Cached(Rc<[f64]>),
+    Shared(Arc<[f64]>),
 }
 
 impl Deref for Row<'_> {
@@ -67,6 +84,81 @@ impl Deref for Row<'_> {
         match self {
             Row::Borrowed(s) => s,
             Row::Cached(rc) => rc,
+            Row::Shared(arc) => arc,
+        }
+    }
+}
+
+/// Minimum rows per worker before [`Sharding::Auto`] adds a thread
+/// (below this, thread-spawn overhead beats the O(l·d) row work).
+pub const SHARD_MIN_ROWS: usize = 256;
+
+/// Hard floor on rows per worker even for an explicit
+/// [`Sharding::Threads`] request: a per-sweep `thread::scope` spawn
+/// costs tens of µs, so a worker must own at least this many rows for
+/// the fan-out to ever pay for itself.  Kept small so explicit thread
+/// counts stay honoured on test-sized problems; [`SHARD_MIN_ROWS`]
+/// applies the stricter production bound under `Auto`.
+pub const MIN_ROWS_PER_WORKER: usize = 8;
+
+/// How the per-step path phases (δ refinement, screening sweep, reduced
+/// gather) fan out over row shards — the CLI-facing `--threads` policy.
+///
+/// Whatever this resolves to, results are bit-identical to the serial
+/// path: the parallel sweeps only repartition elementwise work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// One worker per core, capped at l / [`SHARD_MIN_ROWS`].
+    Auto,
+    /// Fully serial (the baseline the benches compare against).
+    Serial,
+    /// This many workers, floored to ≥ [`MIN_ROWS_PER_WORKER`] rows
+    /// per worker so a fan-out always has work to amortise the spawn.
+    Threads(usize),
+}
+
+impl Sharding {
+    /// Parse `"auto"`, `"serial"`, `"<N>"` or `"threads:<N>"`.
+    pub fn parse(s: &str) -> Option<Sharding> {
+        match s {
+            "auto" => Some(Sharding::Auto),
+            "serial" => Some(Sharding::Serial),
+            other => other
+                .strip_prefix("threads:")
+                .unwrap_or(other)
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n > 0)
+                .map(|n| if n == 1 { Sharding::Serial } else { Sharding::Threads(n) }),
+        }
+    }
+
+    /// Effective worker count for an l-row problem.
+    pub fn resolve(&self, l: usize) -> usize {
+        match *self {
+            Sharding::Serial => 1,
+            Sharding::Threads(n) => {
+                n.max(1).min((l / MIN_ROWS_PER_WORKER).max(1))
+            }
+            Sharding::Auto => {
+                let cores = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1);
+                cores.min((l / SHARD_MIN_ROWS).max(1))
+            }
+        }
+    }
+
+    /// Thread count for the one-time O(l²·d) Gram *build* under this
+    /// policy.  A build does far more work per row than a path sweep,
+    /// so `Auto` keeps the denser [`default_build_threads`] bound
+    /// (l/128) the builders always used; `Serial` stays serial end to
+    /// end and explicit counts resolve as for the sweeps.
+    pub fn build_threads(&self, l: usize) -> usize {
+        match *self {
+            Sharding::Serial => 1,
+            Sharding::Threads(_) => self.resolve(l),
+            Sharding::Auto => default_build_threads(l),
         }
     }
 }
@@ -117,8 +209,58 @@ pub trait KernelMatrix {
     }
 
     /// Largest eigenvalue by power iteration (PG step sizes).  The
-    /// default mirrors [`Mat::power_eig_max`] exactly so backends agree.
+    /// default delegates to the single loop in
+    /// [`KernelMatrix::par_power_eig_max`] (which mirrors
+    /// [`Mat::power_eig_max`] exactly) so backends agree.
     fn power_eig_max(&self, iters: usize) -> f64 {
+        self.par_power_eig_max(iters, 1)
+    }
+
+    /// (hits, misses, resident rows) — dense backends report zeros.
+    fn cache_stats(&self) -> (u64, u64, usize) {
+        (0, 0, 0)
+    }
+
+    /// y = Q x with the row sweep fanned out over `threads` workers.
+    ///
+    /// Every y_i is computed by exactly the same arithmetic as
+    /// [`KernelMatrix::matvec`] and written to a disjoint slot, so the
+    /// result is bit-identical to the serial sweep for any thread count.
+    /// The default falls back to the serial sweep; thread-safe backends
+    /// override it.
+    fn par_matvec(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        let _ = threads;
+        self.matvec(x, y);
+    }
+
+    /// Fused (Q x1, Q x2), shard-parallel (see [`Self::par_matvec`]).
+    fn par_matvec2(
+        &self,
+        x1: &[f64],
+        x2: &[f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        threads: usize,
+    ) {
+        let _ = threads;
+        self.matvec2(x1, x2, y1, y2);
+    }
+
+    /// aᵀ Q b through the parallel matvec.  The final dot stays serial
+    /// so the accumulation order — hence the bits — match
+    /// [`KernelMatrix::quad`].
+    fn par_quad(&self, a: &[f64], b: &[f64], threads: usize) -> f64 {
+        let mut qb = vec![0.0; self.dims()];
+        self.par_matvec(b, &mut qb, threads);
+        dot(a, &qb)
+    }
+
+    /// [`KernelMatrix::power_eig_max`] with the per-iteration matvec
+    /// fanned out — the ONE power-iteration loop behind both entry
+    /// points (serial normalisation, so bits never depend on the thread
+    /// count).  Beware when overriding `power_eig_max`: this default
+    /// must keep matching it bit for bit.
+    fn par_power_eig_max(&self, iters: usize, threads: usize) -> f64 {
         let n = self.dims();
         if n == 0 {
             return 0.0;
@@ -127,7 +269,7 @@ pub trait KernelMatrix {
         let mut av = vec![0.0; n];
         let mut lambda = 0.0;
         for _ in 0..iters {
-            self.matvec(&v, &mut av);
+            self.par_matvec(&v, &mut av, threads);
             let nrm = norm2(&av);
             if nrm < 1e-300 {
                 return 0.0;
@@ -140,10 +282,83 @@ pub trait KernelMatrix {
         lambda
     }
 
-    /// (hits, misses, resident rows) — dense backends report zeros.
-    fn cache_stats(&self) -> (u64, u64, usize) {
-        (0, 0, 0)
+    /// A thread-shareable view of this backend, when it has one (dense
+    /// and sharded backends do; the single-threaded [`LruRowCache`] does
+    /// not).  Callers use it for caller-side row fan-out — e.g. the
+    /// reduced-problem gather — and fall back to a serial sweep on
+    /// `None`.
+    fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
+        None
     }
+}
+
+/// Shard-parallel row sweep over a resident dense matrix (shared by the
+/// [`Mat`] and [`DenseGram`] backends): contiguous row ranges, one scoped
+/// worker each, each y_i written exactly as the serial sweep computes it.
+fn mat_par_matvec(m: &Mat, x: &[f64], y: &mut [f64], threads: usize) {
+    let l = m.rows;
+    assert_eq!(x.len(), m.cols);
+    assert_eq!(y.len(), l);
+    let t = threads.max(1).min(l.max(1));
+    if t <= 1 {
+        m.matvec(x, y);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = y;
+        for (start, end) in shard_ranges(l, t) {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+            rest = tail;
+            s.spawn(move || {
+                for (k, yi) in chunk.iter_mut().enumerate() {
+                    *yi = dot(m.row(start + k), x);
+                }
+            });
+        }
+    });
+}
+
+/// Fused shard-parallel pair of dense row sweeps (one row read serves
+/// both products, exactly like the serial `matvec2`).
+fn mat_par_matvec2(
+    m: &Mat,
+    x1: &[f64],
+    x2: &[f64],
+    y1: &mut [f64],
+    y2: &mut [f64],
+    threads: usize,
+) {
+    let l = m.rows;
+    assert_eq!(x1.len(), m.cols);
+    assert_eq!(x2.len(), m.cols);
+    assert_eq!(y1.len(), l);
+    assert_eq!(y2.len(), l);
+    let t = threads.max(1).min(l.max(1));
+    if t <= 1 {
+        for i in 0..l {
+            let r = m.row(i);
+            y1[i] = dot(r, x1);
+            y2[i] = dot(r, x2);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut r1 = y1;
+        let mut r2 = y2;
+        for (start, end) in shard_ranges(l, t) {
+            let (c1, t1) = std::mem::take(&mut r1).split_at_mut(end - start);
+            let (c2, t2) = std::mem::take(&mut r2).split_at_mut(end - start);
+            r1 = t1;
+            r2 = t2;
+            s.spawn(move || {
+                for k in 0..c1.len() {
+                    let r = m.row(start + k);
+                    c1[k] = dot(r, x1);
+                    c2[k] = dot(r, x2);
+                }
+            });
+        }
+    });
 }
 
 /// A resident `Mat` is itself a dense kernel-matrix backend, so every
@@ -168,6 +383,25 @@ impl KernelMatrix for Mat {
 
     fn power_eig_max(&self, iters: usize) -> f64 {
         Mat::power_eig_max(self, iters)
+    }
+
+    fn par_matvec(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        mat_par_matvec(self, x, y, threads)
+    }
+
+    fn par_matvec2(
+        &self,
+        x1: &[f64],
+        x2: &[f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        threads: usize,
+    ) {
+        mat_par_matvec2(self, x1, x2, y1, y2, threads)
+    }
+
+    fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
+        Some(self)
     }
 }
 
@@ -229,6 +463,25 @@ impl KernelMatrix for DenseGram {
     fn power_eig_max(&self, iters: usize) -> f64 {
         self.mat.power_eig_max(iters)
     }
+
+    fn par_matvec(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        mat_par_matvec(&self.mat, x, y, threads)
+    }
+
+    fn par_matvec2(
+        &self,
+        x1: &[f64],
+        x2: &[f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        threads: usize,
+    ) {
+        mat_par_matvec2(&self.mat, x1, x2, y1, y2, threads)
+    }
+
+    fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
+        Some(self)
+    }
 }
 
 struct LruEntry {
@@ -276,18 +529,7 @@ impl LruRowCache {
 
     fn new(x: &Mat, y: Option<Vec<f64>>, kernel: KernelKind, budget_rows: usize) -> Self {
         let norms = row_norms(x);
-        let diag: Vec<f64> = (0..x.rows)
-            .map(|i| {
-                let base = match kernel {
-                    KernelKind::Linear => norms[i] + 1.0,
-                    KernelKind::Rbf { .. } => 1.0,
-                };
-                match &y {
-                    Some(y) => base * y[i] * y[i],
-                    None => base,
-                }
-            })
-            .collect();
+        let diag = hoisted_diag(&norms, y.as_deref(), kernel);
         LruRowCache {
             x: x.clone(),
             y,
@@ -312,13 +554,7 @@ impl LruRowCache {
     /// Compute row i into `out` (no caching) — shared by `row` and the
     /// streaming `matvec`.
     fn compute_row(&self, i: usize, out: &mut [f64]) {
-        gram_row_hoisted(&self.x, &self.norms, i, self.kernel, out);
-        if let Some(y) = &self.y {
-            let yi = y[i];
-            for (o, &yj) in out.iter_mut().zip(y.iter()) {
-                *o = *o * yi * yj;
-            }
-        }
+        labelled_row_hoisted(&self.x, &self.norms, self.y.as_deref(), i, self.kernel, out);
     }
 }
 
@@ -419,6 +655,345 @@ impl KernelMatrix for LruRowCache {
     }
 }
 
+struct ShardEntry {
+    data: Arc<[f64]>,
+    last_used: u64,
+}
+
+struct ShardInner {
+    rows: HashMap<usize, ShardEntry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Thread-safe bounded-memory backend for the shard-parallel path: rows
+/// are partitioned into contiguous shards (same [`shard_ranges`]
+/// partition as every parallel sweep), each shard holding its own
+/// bounded LRU behind its own mutex.  The parallel sweeps assign whole
+/// shards to workers, so on the hot path a worker only ever takes its
+/// own shard's (uncontended) lock — there is no cross-shard locking.
+/// Arbitrary-index access (`row(i)` from the reduced gather) locks the
+/// owning shard and stays correct from any thread.
+///
+/// Entry arithmetic is shared with every other backend
+/// ([`gram_row_hoisted`]), so rows are bit-identical to [`DenseGram`]
+/// and [`LruRowCache`].  Peak Q memory is at most
+/// `budget_rows · l · 8` bytes: the shard count is capped at the budget
+/// and each shard holds at most ⌊budget / shards⌋ rows.
+pub struct ShardedLruRowCache {
+    x: Mat,
+    y: Option<Vec<f64>>,
+    kernel: KernelKind,
+    norms: Vec<f64>,
+    diag: Vec<f64>,
+    budget_per_shard: usize,
+    /// Shard s owns rows `bounds[s]..bounds[s+1]` (strictly increasing).
+    bounds: Vec<usize>,
+    shards: Vec<Mutex<ShardInner>>,
+}
+
+impl ShardedLruRowCache {
+    /// Sharded row-cached labelled Q = diag(y) K diag(y) for (x, y).
+    /// `budget_rows` is the *total* row budget, split across `shards`.
+    pub fn new_q(
+        x: &Mat,
+        y: &[f64],
+        kernel: KernelKind,
+        budget_rows: usize,
+        shards: usize,
+    ) -> Self {
+        assert_eq!(x.rows, y.len());
+        Self::new(x, Some(y.to_vec()), kernel, budget_rows, shards)
+    }
+
+    /// Sharded row-cached unlabelled H for x.
+    pub fn new_gram(x: &Mat, kernel: KernelKind, budget_rows: usize, shards: usize) -> Self {
+        Self::new(x, None, kernel, budget_rows, shards)
+    }
+
+    fn new(
+        x: &Mat,
+        y: Option<Vec<f64>>,
+        kernel: KernelKind,
+        budget_rows: usize,
+        shards: usize,
+    ) -> Self {
+        let norms = row_norms(x);
+        let diag = hoisted_diag(&norms, y.as_deref(), kernel);
+        let l = x.rows;
+        // Shard count is additionally capped at the row budget so the
+        // total resident capacity (ns · budget_per_shard) never exceeds
+        // the configured budget — the bounded-memory contract survives
+        // any worker count.
+        let ns = shards.max(1).min(l.max(1)).min(budget_rows.max(1));
+        let bounds: Vec<usize> = (0..=ns).map(|s| s * l / ns).collect();
+        let budget_per_shard = (budget_rows.max(1) / ns).max(1);
+        let shards = (0..ns)
+            .map(|_| {
+                Mutex::new(ShardInner {
+                    rows: HashMap::new(),
+                    clock: 0,
+                    hits: 0,
+                    misses: 0,
+                })
+            })
+            .collect();
+        ShardedLruRowCache {
+            x: x.clone(),
+            y,
+            kernel,
+            norms,
+            diag,
+            budget_per_shard,
+            bounds,
+            shards,
+        }
+    }
+
+    /// Number of LRU shards (≤ the construction-time worker count).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard row budget (total budget ÷ shards, floored — so
+    /// `shard_count() · budget_per_shard()` never exceeds the total).
+    pub fn budget_per_shard(&self) -> usize {
+        self.budget_per_shard
+    }
+
+    fn shard_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.x.rows);
+        self.bounds.partition_point(|&b| b <= i) - 1
+    }
+
+    /// Compute row i into `out` (no caching) — shared by the cache fill
+    /// and the streaming sweeps.
+    fn compute_row(&self, i: usize, out: &mut [f64]) {
+        labelled_row_hoisted(&self.x, &self.norms, self.y.as_deref(), i, self.kernel, out);
+    }
+
+    /// Cache peek without stats/LRU updates (the streaming sweeps, like
+    /// [`LruRowCache::matvec`], reuse resident rows but never insert).
+    fn cached(&self, i: usize) -> Option<Arc<[f64]>> {
+        let inner = self.shards[self.shard_of(i)].lock().unwrap();
+        inner.rows.get(&i).map(|e| Arc::clone(&e.data))
+    }
+
+    /// Get-or-insert through the owning shard's LRU.  The row is
+    /// computed outside the lock so cross-shard readers (reduced gather)
+    /// never wait on an O(l·d) fill.
+    fn shard_row(&self, i: usize) -> Arc<[f64]> {
+        let s = self.shard_of(i);
+        {
+            let mut inner = self.shards[s].lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(e) = inner.rows.get_mut(&i) {
+                e.last_used = clock;
+                let data = Arc::clone(&e.data);
+                inner.hits += 1;
+                return data;
+            }
+            inner.misses += 1;
+        }
+        let mut buf = vec![0.0; self.x.rows];
+        self.compute_row(i, &mut buf);
+        let data: Arc<[f64]> = buf.into();
+        let mut inner = self.shards[s].lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        // a concurrent cross-shard reader (reduced gather) may have
+        // filled this row while we computed it — reuse theirs instead
+        // of evicting a resident row for a duplicate insert
+        if let Some(e) = inner.rows.get_mut(&i) {
+            e.last_used = clock;
+            return Arc::clone(&e.data);
+        }
+        while inner.rows.len() >= self.budget_per_shard {
+            let victim = inner
+                .rows
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("non-empty shard");
+            inner.rows.remove(&victim);
+        }
+        inner
+            .rows
+            .insert(i, ShardEntry { data: Arc::clone(&data), last_used: clock });
+        data
+    }
+
+    /// Group shards round-robin onto `t` workers together with the
+    /// matching contiguous slice of each output vector.
+    fn group_slices<'y>(
+        &self,
+        y: &'y mut [f64],
+        t: usize,
+    ) -> Vec<Vec<(usize, &'y mut [f64])>> {
+        let mut groups: Vec<Vec<(usize, &'y mut [f64])>> =
+            (0..t).map(|_| Vec::new()).collect();
+        let mut rest = y;
+        for s in 0..self.shards.len() {
+            let len = self.bounds[s + 1] - self.bounds[s];
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            groups[s % t].push((s, chunk));
+        }
+        groups
+    }
+}
+
+impl KernelMatrix for ShardedLruRowCache {
+    fn dims(&self) -> usize {
+        self.x.rows
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    fn row(&self, i: usize) -> Row<'_> {
+        Row::Shared(self.shard_row(i))
+    }
+
+    /// Serial streaming matvec (same policy as [`LruRowCache::matvec`]:
+    /// reuse resident rows, compute the rest without inserting).
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let l = self.dims();
+        assert_eq!(x.len(), l);
+        assert_eq!(y.len(), l);
+        let mut scratch = vec![0.0; l];
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = match self.cached(i) {
+                Some(r) => dot(&r, x),
+                None => {
+                    self.compute_row(i, &mut scratch);
+                    dot(&scratch, x)
+                }
+            };
+        }
+    }
+
+    fn matvec2(&self, x1: &[f64], x2: &[f64], y1: &mut [f64], y2: &mut [f64]) {
+        let l = self.dims();
+        assert_eq!(x1.len(), l);
+        assert_eq!(x2.len(), l);
+        assert_eq!(y1.len(), l);
+        assert_eq!(y2.len(), l);
+        let mut scratch = vec![0.0; l];
+        for i in 0..l {
+            match self.cached(i) {
+                Some(r) => {
+                    y1[i] = dot(&r, x1);
+                    y2[i] = dot(&r, x2);
+                }
+                None => {
+                    self.compute_row(i, &mut scratch);
+                    y1[i] = dot(&scratch, x1);
+                    y2[i] = dot(&scratch, x2);
+                }
+            }
+        }
+    }
+
+    /// Shard-parallel streaming matvec: whole shards are assigned to
+    /// workers, so each worker only takes its own shards' locks.
+    fn par_matvec(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        let l = self.dims();
+        assert_eq!(x.len(), l);
+        assert_eq!(y.len(), l);
+        let t = threads.max(1).min(self.shards.len());
+        if t <= 1 {
+            return self.matvec(x, y);
+        }
+        let groups = self.group_slices(y, t);
+        std::thread::scope(|scope| {
+            for group in groups {
+                scope.spawn(move || {
+                    let mut scratch = vec![0.0; l];
+                    for (s, chunk) in group {
+                        let lo = self.bounds[s];
+                        for (k, yi) in chunk.iter_mut().enumerate() {
+                            let i = lo + k;
+                            *yi = match self.cached(i) {
+                                Some(r) => dot(&r, x),
+                                None => {
+                                    self.compute_row(i, &mut scratch);
+                                    dot(&scratch, x)
+                                }
+                            };
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    fn par_matvec2(
+        &self,
+        x1: &[f64],
+        x2: &[f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        threads: usize,
+    ) {
+        let l = self.dims();
+        assert_eq!(x1.len(), l);
+        assert_eq!(x2.len(), l);
+        assert_eq!(y1.len(), l);
+        assert_eq!(y2.len(), l);
+        let t = threads.max(1).min(self.shards.len());
+        if t <= 1 {
+            return self.matvec2(x1, x2, y1, y2);
+        }
+        let g1 = self.group_slices(y1, t);
+        let g2 = self.group_slices(y2, t);
+        std::thread::scope(|scope| {
+            for (group1, group2) in g1.into_iter().zip(g2) {
+                scope.spawn(move || {
+                    let mut scratch = vec![0.0; l];
+                    for ((s, c1), (_, c2)) in group1.into_iter().zip(group2) {
+                        let lo = self.bounds[s];
+                        for k in 0..c1.len() {
+                            let i = lo + k;
+                            match self.cached(i) {
+                                Some(r) => {
+                                    c1[k] = dot(&r, x1);
+                                    c2[k] = dot(&r, x2);
+                                }
+                                None => {
+                                    self.compute_row(i, &mut scratch);
+                                    c1[k] = dot(&scratch, x1);
+                                    c2[k] = dot(&scratch, x2);
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    fn cache_stats(&self) -> (u64, u64, usize) {
+        let mut hits = 0;
+        let mut misses = 0;
+        let mut resident = 0;
+        for shard in &self.shards {
+            let inner = shard.lock().unwrap();
+            hits += inner.hits;
+            misses += inner.misses;
+            resident += inner.rows.len();
+        }
+        (hits, misses, resident)
+    }
+
+    fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
+        Some(self)
+    }
+}
+
 /// How to materialise Q — the CLI-facing backend policy
 /// (`--gram dense|lru[:rows]|auto`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -489,12 +1064,80 @@ impl GramPolicy {
             QBackend::Lru(LruRowCache::new_gram(x, kernel, self.lru_budget()))
         }
     }
+
+    /// Build the labelled-Q backend for a shard-parallel path: dense
+    /// policies build with [`Sharding::build_threads`] workers (so
+    /// `Serial` really is serial end to end while `Auto` keeps the
+    /// builders' denser thread bound), LRU policies get a
+    /// [`ShardedLruRowCache`] with one LRU shard per resolved sweep
+    /// worker.  All choices are entry-wise bit-identical.
+    pub fn q_sharded(
+        &self,
+        x: &Mat,
+        y: &[f64],
+        kernel: KernelKind,
+        shard: Sharding,
+    ) -> QBackend {
+        let l = x.rows;
+        if self.use_dense(l) {
+            QBackend::Dense(DenseGram::build_q(x, y, kernel, shard.build_threads(l)))
+        } else {
+            let t = shard.resolve(l);
+            if t > 1 {
+                QBackend::Sharded(ShardedLruRowCache::new_q(
+                    x,
+                    y,
+                    kernel,
+                    self.lru_budget(),
+                    t,
+                ))
+            } else {
+                QBackend::Lru(LruRowCache::new_q(x, y, kernel, self.lru_budget()))
+            }
+        }
+    }
+
+    /// The backend implementation [`Self::q_sharded`] /
+    /// [`Self::gram_sharded`] select for an l-row problem under `shard`
+    /// — the label benches and telemetry record, kept next to the
+    /// selection so it cannot drift from it.
+    pub fn backend_name(&self, l: usize, shard: Sharding) -> &'static str {
+        if self.use_dense(l) {
+            "dense"
+        } else if shard.resolve(l) > 1 {
+            "sharded-lru"
+        } else {
+            "lru"
+        }
+    }
+
+    /// Build the unlabelled-H backend for a shard-parallel path (see
+    /// [`Self::q_sharded`]).
+    pub fn gram_sharded(&self, x: &Mat, kernel: KernelKind, shard: Sharding) -> QBackend {
+        let l = x.rows;
+        if self.use_dense(l) {
+            QBackend::Dense(DenseGram::build_gram(x, kernel, shard.build_threads(l)))
+        } else {
+            let t = shard.resolve(l);
+            if t > 1 {
+                QBackend::Sharded(ShardedLruRowCache::new_gram(
+                    x,
+                    kernel,
+                    self.lru_budget(),
+                    t,
+                ))
+            } else {
+                QBackend::Lru(LruRowCache::new_gram(x, kernel, self.lru_budget()))
+            }
+        }
+    }
 }
 
 /// An owned, policy-selected backend (what [`GramPolicy`] constructs).
 pub enum QBackend {
     Dense(DenseGram),
     Lru(LruRowCache),
+    Sharded(ShardedLruRowCache),
 }
 
 impl QBackend {
@@ -502,7 +1145,7 @@ impl QBackend {
     pub fn dense_mat(&self) -> Option<&Mat> {
         match self {
             QBackend::Dense(d) => Some(d.mat()),
-            QBackend::Lru(_) => None,
+            QBackend::Lru(_) | QBackend::Sharded(_) => None,
         }
     }
 
@@ -510,6 +1153,7 @@ impl QBackend {
         match self {
             QBackend::Dense(_) => "dense",
             QBackend::Lru(_) => "lru",
+            QBackend::Sharded(_) => "sharded-lru",
         }
     }
 }
@@ -519,6 +1163,7 @@ impl KernelMatrix for QBackend {
         match self {
             QBackend::Dense(d) => d.dims(),
             QBackend::Lru(c) => c.dims(),
+            QBackend::Sharded(c) => c.dims(),
         }
     }
 
@@ -526,6 +1171,7 @@ impl KernelMatrix for QBackend {
         match self {
             QBackend::Dense(d) => d.diag(i),
             QBackend::Lru(c) => c.diag(i),
+            QBackend::Sharded(c) => c.diag(i),
         }
     }
 
@@ -533,6 +1179,7 @@ impl KernelMatrix for QBackend {
         match self {
             QBackend::Dense(d) => d.row(i),
             QBackend::Lru(c) => c.row(i),
+            QBackend::Sharded(c) => c.row(i),
         }
     }
 
@@ -540,6 +1187,7 @@ impl KernelMatrix for QBackend {
         match self {
             QBackend::Dense(d) => d.matvec(x, y),
             QBackend::Lru(c) => c.matvec(x, y),
+            QBackend::Sharded(c) => c.matvec(x, y),
         }
     }
 
@@ -547,6 +1195,7 @@ impl KernelMatrix for QBackend {
         match self {
             QBackend::Dense(d) => d.matvec2(x1, x2, y1, y2),
             QBackend::Lru(c) => c.matvec2(x1, x2, y1, y2),
+            QBackend::Sharded(c) => c.matvec2(x1, x2, y1, y2),
         }
     }
 
@@ -554,6 +1203,7 @@ impl KernelMatrix for QBackend {
         match self {
             QBackend::Dense(d) => d.power_eig_max(iters),
             QBackend::Lru(c) => c.power_eig_max(iters),
+            QBackend::Sharded(c) => c.power_eig_max(iters),
         }
     }
 
@@ -561,6 +1211,38 @@ impl KernelMatrix for QBackend {
         match self {
             QBackend::Dense(d) => d.cache_stats(),
             QBackend::Lru(c) => c.cache_stats(),
+            QBackend::Sharded(c) => c.cache_stats(),
+        }
+    }
+
+    fn par_matvec(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        match self {
+            QBackend::Dense(d) => d.par_matvec(x, y, threads),
+            QBackend::Lru(c) => c.par_matvec(x, y, threads),
+            QBackend::Sharded(c) => c.par_matvec(x, y, threads),
+        }
+    }
+
+    fn par_matvec2(
+        &self,
+        x1: &[f64],
+        x2: &[f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        threads: usize,
+    ) {
+        match self {
+            QBackend::Dense(d) => d.par_matvec2(x1, x2, y1, y2, threads),
+            QBackend::Lru(c) => c.par_matvec2(x1, x2, y1, y2, threads),
+            QBackend::Sharded(c) => c.par_matvec2(x1, x2, y1, y2, threads),
+        }
+    }
+
+    fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
+        match self {
+            QBackend::Dense(d) => Some(d),
+            QBackend::Lru(_) => None,
+            QBackend::Sharded(c) => Some(c),
         }
     }
 }
@@ -761,5 +1443,214 @@ mod tests {
         assert_eq!(km.dims(), 5);
         assert_eq!(km.diag(2).to_bits(), q.get(2, 2).to_bits());
         assert_eq!(&km.row(1)[..], q.row(1));
+    }
+
+    #[test]
+    fn sharding_parse_and_resolve() {
+        assert_eq!(Sharding::parse("auto"), Some(Sharding::Auto));
+        assert_eq!(Sharding::parse("serial"), Some(Sharding::Serial));
+        assert_eq!(Sharding::parse("1"), Some(Sharding::Serial));
+        assert_eq!(Sharding::parse("4"), Some(Sharding::Threads(4)));
+        assert_eq!(Sharding::parse("threads:8"), Some(Sharding::Threads(8)));
+        assert_eq!(Sharding::parse("0"), None);
+        assert_eq!(Sharding::parse("fast"), None);
+        assert_eq!(Sharding::Serial.resolve(10_000), 1);
+        assert_eq!(Sharding::Threads(4).resolve(10_000), 4);
+        // every worker must own at least MIN_ROWS_PER_WORKER rows
+        assert_eq!(Sharding::Threads(64).resolve(8), 1);
+        assert_eq!(
+            Sharding::Threads(64).resolve(64 * MIN_ROWS_PER_WORKER),
+            64
+        );
+        assert_eq!(Sharding::Threads(4).resolve(2 * MIN_ROWS_PER_WORKER), 2);
+        assert_eq!(Sharding::Threads(2).resolve(0), 1);
+        // auto stays serial on tiny problems
+        assert_eq!(Sharding::Auto.resolve(SHARD_MIN_ROWS - 1), 1);
+        assert!(Sharding::Auto.resolve(1_000_000) >= 1);
+    }
+
+    #[test]
+    fn sharded_rows_match_dense_bit_for_bit() {
+        run_cases(6, 0x54A2D, |g| {
+            let l = g.usize(5, 30);
+            let d = g.usize(1, 5);
+            let (x, y) = random_xy(g, l, d);
+            let gamma = g.f64(0.1, 2.0);
+            let shards = g.usize(1, 6);
+            for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma }] {
+                let dense = DenseGram::build_q(&x, &y, kernel, 3);
+                let sharded = ShardedLruRowCache::new_q(&x, &y, kernel, 8, shards);
+                assert_eq!(sharded.dims(), l);
+                for i in 0..l {
+                    let r = sharded.row(i);
+                    assert_eq!(&r[..], dense.mat().row(i), "row {i} ({kernel:?})");
+                    assert_eq!(
+                        sharded.diag(i).to_bits(),
+                        dense.diag(i).to_bits(),
+                        "diag {i}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sharded_eviction_respects_total_budget() {
+        let mut g = Gen::new(0x5B1);
+        let (x, y) = random_xy(&mut g, 24, 3);
+        let budget = 6;
+        let shards = 3;
+        let c = ShardedLruRowCache::new_q(&x, &y, KernelKind::Rbf { gamma: 0.4 }, budget, shards);
+        assert_eq!(c.shard_count(), shards);
+        for i in 0..24 {
+            let _ = c.row(i);
+        }
+        let (hits, misses, resident) = c.cache_stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 24);
+        assert!(
+            resident <= shards * c.budget_per_shard(),
+            "resident={resident}"
+        );
+        // the most recent row of each shard is still a hit
+        let _ = c.row(23);
+        let (hits, _, _) = c.cache_stats();
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn par_sweeps_bit_identical_across_backends_and_threads() {
+        run_cases(6, 0xB17B17, |g| {
+            let l = g.usize(4, 40);
+            let d = g.usize(1, 5);
+            let (x, y) = random_xy(g, l, d);
+            let kernel = KernelKind::Rbf { gamma: g.f64(0.1, 1.5) };
+            let dense = DenseGram::build_q(&x, &y, kernel, 2);
+            let lru = LruRowCache::new_q(&x, &y, kernel, 4);
+            let sharded = ShardedLruRowCache::new_q(&x, &y, kernel, 8, 3);
+            let _ = sharded.row(l / 2); // mix cached + streamed rows
+            let v1 = g.vec_f64(l, -1.0, 1.0);
+            let v2 = g.vec_f64(l, -1.0, 1.0);
+            let mut want1 = vec![0.0; l];
+            let mut want2 = vec![0.0; l];
+            dense.matvec(&v1, &mut want1);
+            dense.matvec(&v2, &mut want2);
+            let want_q = dense.quad(&v1, &v2);
+            let want_eig = dense.power_eig_max(25);
+            let backends: [&dyn KernelMatrix; 3] = [&dense, &lru, &sharded];
+            for km in backends {
+                for threads in [1usize, 2, 4] {
+                    let mut a = vec![0.0; l];
+                    km.par_matvec(&v1, &mut a, threads);
+                    assert_eq!(a, want1, "par_matvec threads={threads}");
+                    let mut b1 = vec![0.0; l];
+                    let mut b2 = vec![0.0; l];
+                    km.par_matvec2(&v1, &v2, &mut b1, &mut b2, threads);
+                    assert_eq!(b1, want1, "par_matvec2 threads={threads}");
+                    assert_eq!(b2, want2, "par_matvec2 threads={threads}");
+                    assert_eq!(
+                        km.par_quad(&v1, &v2, threads).to_bits(),
+                        want_q.to_bits(),
+                        "par_quad threads={threads}"
+                    );
+                    assert_eq!(
+                        km.par_power_eig_max(25, threads).to_bits(),
+                        want_eig.to_bits(),
+                        "par_power_eig threads={threads}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn as_sync_views() {
+        let mut g = Gen::new(0xA5);
+        let (x, y) = random_xy(&mut g, 10, 2);
+        let k = KernelKind::Linear;
+        let dense = DenseGram::build_q(&x, &y, k, 2);
+        let lru = LruRowCache::new_q(&x, &y, k, 4);
+        let sharded = ShardedLruRowCache::new_q(&x, &y, k, 4, 2);
+        assert!(dense.as_sync().is_some());
+        assert!(lru.as_sync().is_none());
+        assert!(sharded.as_sync().is_some());
+        assert!(QBackend::Lru(lru).as_sync().is_none());
+        assert!(QBackend::Sharded(sharded).as_sync().is_some());
+    }
+
+    #[test]
+    fn policy_selects_sharded_backend() {
+        let mut g = Gen::new(0xB1);
+        let (x, y) = random_xy(&mut g, 32, 2);
+        let k = KernelKind::Linear;
+        let pol = GramPolicy::Lru { budget_rows: 8 };
+        assert_eq!(pol.q_sharded(&x, &y, k, Sharding::Serial).name(), "lru");
+        assert_eq!(
+            pol.q_sharded(&x, &y, k, Sharding::Threads(3)).name(),
+            "sharded-lru"
+        );
+        assert_eq!(
+            GramPolicy::Dense.q_sharded(&x, &y, k, Sharding::Threads(3)).name(),
+            "dense"
+        );
+        assert_eq!(
+            pol.gram_sharded(&x, k, Sharding::Threads(2)).name(),
+            "sharded-lru"
+        );
+        // tiny problems fall back to the plain LRU (per-worker work floor)
+        let (xs, ys) = random_xy(&mut g, MIN_ROWS_PER_WORKER - 1, 2);
+        assert_eq!(
+            pol.q_sharded(&xs, &ys, k, Sharding::Threads(8)).name(),
+            "lru"
+        );
+        // backend_name predicts exactly what q_sharded builds
+        for shard in [Sharding::Serial, Sharding::Threads(3), Sharding::Auto] {
+            for p in [pol, GramPolicy::Dense, GramPolicy::Auto] {
+                assert_eq!(
+                    p.backend_name(32, shard),
+                    p.q_sharded(&x, &y, k, shard).name(),
+                    "{p:?} {shard:?}"
+                );
+            }
+        }
+        // sharded backend reproduces the dense entries through the policy
+        let b = pol.q_sharded(&x, &y, k, Sharding::Threads(3));
+        let dense = GramPolicy::Dense.q(&x, &y, k);
+        for i in 0..32 {
+            assert_eq!(&b.row(i)[..], &dense.row(i)[..]);
+        }
+    }
+
+    #[test]
+    fn shard_capacity_never_exceeds_budget() {
+        let mut g = Gen::new(0xCAB);
+        let (x, y) = random_xy(&mut g, 20, 2);
+        // more shards than budget rows: shard count collapses to the
+        // budget so total capacity stays bounded
+        let c = ShardedLruRowCache::new_q(&x, &y, KernelKind::Linear, 4, 16);
+        assert_eq!(c.shard_count(), 4);
+        assert_eq!(c.budget_per_shard(), 1);
+        for i in 0..20 {
+            let _ = c.row(i);
+        }
+        let (_, _, resident) = c.cache_stats();
+        assert!(resident <= 4, "resident={resident} > budget");
+        // uneven split floors: 3 shards × ⌊7/3⌋ = 6 ≤ 7
+        let c2 = ShardedLruRowCache::new_q(&x, &y, KernelKind::Linear, 7, 3);
+        assert_eq!(c2.shard_count(), 3);
+        assert_eq!(c2.budget_per_shard(), 2);
+    }
+
+    #[test]
+    fn build_threads_policy() {
+        assert_eq!(Sharding::Serial.build_threads(100_000), 1);
+        assert_eq!(
+            Sharding::Threads(4).build_threads(10_000),
+            Sharding::Threads(4).resolve(10_000)
+        );
+        assert_eq!(
+            Sharding::Auto.build_threads(10_000),
+            super::default_build_threads(10_000)
+        );
     }
 }

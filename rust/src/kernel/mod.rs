@@ -10,9 +10,12 @@ pub mod matrix;
 
 pub use gram::{
     default_build_threads, full_gram, full_gram_threaded, full_q, full_q_threaded,
-    gram_row, gram_row_hoisted, q_row, row_norms,
+    gram_row, gram_row_hoisted, q_row, row_norms, shard_ranges,
 };
-pub use matrix::{DenseGram, GramPolicy, KernelMatrix, LruRowCache, QBackend};
+pub use matrix::{
+    DenseGram, GramPolicy, KernelMatrix, LruRowCache, QBackend, ShardedLruRowCache,
+    Sharding,
+};
 
 use crate::util::linalg::{dot, sq_dist};
 

@@ -16,7 +16,7 @@
 use srbo::coordinator::grid::select_model;
 use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
 use srbo::data::{benchmark, split, synthetic, Dataset};
-use srbo::kernel::matrix::{GramPolicy, KernelMatrix};
+use srbo::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use srbo::kernel::{default_build_threads, full_q_threaded, KernelKind};
 use srbo::runtime::Runtime;
 use srbo::stats::accuracy;
@@ -41,6 +41,10 @@ fn usage() -> ! {
            --gram G          dense|lru[:rows]|auto — Q backend (default auto:\n\
                              parallel dense build below 8192 rows, bounded\n\
                              LRU row cache above)\n\
+           --threads T       auto|serial|N — shard-parallel path phases\n\
+                             (default auto: one worker per core, capped by\n\
+                             problem size; results are bit-identical to\n\
+                             serial for any setting)\n\
            --no-screening    disable SRBO\n\
            --oneclass        OC-SVM family\n\
            --workers N       grid workers (default: cores)"
@@ -87,6 +91,17 @@ fn gram_of(args: &Args) -> GramPolicy {
         Some(p) => p,
         None => {
             eprintln!("unknown gram backend {s} (want dense|lru[:rows]|auto)");
+            usage()
+        }
+    }
+}
+
+fn shard_of(args: &Args) -> Sharding {
+    let s = args.get_or("threads", "auto");
+    match Sharding::parse(&s) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown thread policy {s} (want auto|serial|N)");
             usage()
         }
     }
@@ -158,20 +173,24 @@ fn cmd_path(args: &Args) {
     cfg.solver = solver_of(args);
     cfg.screening = !args.flag("no-screening");
     cfg.gram = gram_of(args);
+    cfg.shard = shard_of(args);
     let t = Timer::start();
-    let path = if args.flag("oneclass") {
+    let (path, l) = if args.flag("oneclass") {
         let pos = train.positives();
-        NuPath::run_oneclass(&pos.x, &cfg).expect("path failed")
+        let l = pos.len();
+        (NuPath::run_oneclass(&pos.x, &cfg).expect("path failed"), l)
     } else {
-        NuPath::run(&train.x, &train.y, &cfg).expect("path failed")
+        let l = train.len();
+        (NuPath::run(&train.x, &train.y, &cfg).expect("path failed"), l)
     };
     let total = t.secs();
     println!(
-        "path {} kernel={} screening={} solver={:?}: {} grid points in {:.3}s",
+        "path {} kernel={} screening={} solver={:?} threads={}: {} grid points in {:.3}s",
         d.name,
         kernel.name(),
         cfg.screening,
         cfg.solver,
+        cfg.shard.resolve(l),
         path.steps.len(),
         total
     );
@@ -224,6 +243,7 @@ fn cmd_grid(args: &Args) {
         !args.flag("no-screening"),
         workers,
         gram_of(args),
+        shard_of(args),
     );
     println!(
         "grid {}: {} arms in {:.2}s -> best kernel={:?} nu={:.3} acc={:.2}%",

@@ -38,6 +38,24 @@ pub fn build(
     constraint: ConstraintKind,
     codes: &[ScreenCode],
 ) -> ReducedProblem {
+    build_threaded(q_full, ub_full, constraint, codes, 1)
+}
+
+/// [`build`] with the survivor-row gather fanned out over `threads`
+/// workers when the backend is thread-shareable
+/// ([`KernelMatrix::as_sync`]).  Each worker fills a contiguous block of
+/// reduced rows; every entry is a plain copy (and `lin` a
+/// fixed-iteration-order sum) of the same full-matrix row the serial
+/// gather reads, so the reduced problem is bit-identical for any thread
+/// count.  Survivor indices are ascending, so contiguous survivor
+/// blocks map to (mostly) disjoint shards of a sharded row cache.
+pub fn build_threaded(
+    q_full: &dyn KernelMatrix,
+    ub_full: &[f64],
+    constraint: ConstraintKind,
+    codes: &[ScreenCode],
+    threads: usize,
+) -> ReducedProblem {
     let l = q_full.dims();
     assert_eq!(codes.len(), l);
     let mut keep = Vec::new();
@@ -53,20 +71,49 @@ pub fn build(
     let mut q = Mat::zeros(ns, ns);
     // One row fetch per survivor serves both Q_{S,S} and
     // lin = Q_{S,D} α_D (only Upper-coded entries contribute) — a
-    // row-cache backend computes each row at most once.
+    // row-cache backend computes each row at most once.  Both the serial
+    // and the parallel branch go through [`gather_row`], so their
+    // arithmetic cannot diverge.
     let mut lin = vec![0.0; ns];
-    for (a, &i) in keep.iter().enumerate() {
-        let row = q_full.row(i);
-        for (b, &j) in keep.iter().enumerate() {
-            q.set(a, b, row[j]);
+    // Same per-worker work floor as every other fan-out in the engine:
+    // late path steps can screen down to a handful of survivors, where
+    // spawning `threads` workers to copy a few tiny rows costs more
+    // than the gather itself.
+    let t = threads
+        .max(1)
+        .min((ns / crate::kernel::matrix::MIN_ROWS_PER_WORKER).max(1));
+    let sync_q = if t > 1 { q_full.as_sync() } else { None };
+    match sync_q {
+        Some(qs) => {
+            std::thread::scope(|scope| {
+                let keep = &keep;
+                let fixed = &fixed;
+                let mut qrest: &mut [f64] = &mut q.data;
+                let mut lrest: &mut [f64] = &mut lin;
+                for (start, end) in crate::kernel::shard_ranges(ns, t) {
+                    let (qc, qt) =
+                        std::mem::take(&mut qrest).split_at_mut((end - start) * ns);
+                    let (lc, lt) = std::mem::take(&mut lrest).split_at_mut(end - start);
+                    qrest = qt;
+                    lrest = lt;
+                    scope.spawn(move || {
+                        for k in 0..lc.len() {
+                            let i = keep[start + k];
+                            let qrow = &mut qc[k * ns..(k + 1) * ns];
+                            lc[k] = gather_row(qs, keep, fixed, i, qrow);
+                        }
+                    });
+                }
+            });
         }
-        let mut s = 0.0;
-        for &(j, v) in &fixed {
-            if v != 0.0 {
-                s += row[j] * v;
+        None => {
+            let mut qrest: &mut [f64] = &mut q.data;
+            for (a, &i) in keep.iter().enumerate() {
+                let (qrow, qt) = std::mem::take(&mut qrest).split_at_mut(ns);
+                qrest = qt;
+                lin[a] = gather_row(q_full, &keep, &fixed, i, qrow);
             }
         }
-        lin[a] = s;
     }
     let fixed_sum: f64 = fixed.iter().map(|&(_, v)| v).sum();
     let constraint = match constraint {
@@ -75,6 +122,31 @@ pub fn build(
     };
     let ub = keep.iter().map(|&i| ub_full[i]).collect();
     ReducedProblem { keep, fixed, q, lin, ub, constraint }
+}
+
+/// Gather one survivor's reduced row: copy Q_{i, keep} into `qrow` and
+/// return its `lin` contribution Σ_{j ∈ fixed} Q_ij · α_j.  The single
+/// implementation behind both the serial and the shard-parallel branch
+/// of [`build_threaded`] (a `&(dyn KernelMatrix + Sync)` coerces to the
+/// plain trait object here).
+fn gather_row(
+    q_full: &dyn KernelMatrix,
+    keep: &[usize],
+    fixed: &[(usize, f64)],
+    i: usize,
+    qrow: &mut [f64],
+) -> f64 {
+    let row = q_full.row(i);
+    for (b, &j) in keep.iter().enumerate() {
+        qrow[b] = row[j];
+    }
+    let mut s = 0.0;
+    for &(j, v) in fixed {
+        if v != 0.0 {
+            s += row[j] * v;
+        }
+    }
+    s
 }
 
 impl ReducedProblem {
@@ -194,6 +266,70 @@ mod tests {
             (f_full - f_rec).abs() < 1e-7,
             "objectives differ: {f_full} vs {f_rec}"
         );
+    }
+
+    #[test]
+    fn threaded_gather_bit_identical_to_serial() {
+        use crate::kernel::matrix::{DenseGram, ShardedLruRowCache};
+        use crate::kernel::KernelKind;
+        use crate::prop::run_cases;
+        run_cases(8, 0x6A74E, |g| {
+            let l = g.usize(24, 72);
+            let d = g.usize(1, 4);
+            let rows: Vec<Vec<f64>> = (0..l).map(|_| g.vec_f64(d, -2.0, 2.0)).collect();
+            let x = crate::util::Mat::from_rows(&rows);
+            let y: Vec<f64> =
+                (0..l).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+            let kernel = KernelKind::Rbf { gamma: g.f64(0.2, 1.5) };
+            let ub = vec![1.0 / l as f64; l];
+            let codes: Vec<ScreenCode> = (0..l)
+                .map(|_| match g.usize(0, 2) {
+                    0 => Keep,
+                    1 => Zero,
+                    _ => Upper,
+                })
+                .collect();
+            let dense = DenseGram::build_q(&x, &y, kernel, 2);
+            let sharded = ShardedLruRowCache::new_q(&x, &y, kernel, 6, 3);
+            let serial =
+                build(&dense, &ub, ConstraintKind::SumGe(0.4), &codes);
+            for threads in [2usize, 4] {
+                for km in [&dense as &dyn crate::kernel::KernelMatrix, &sharded] {
+                    let par = build_threaded(
+                        km,
+                        &ub,
+                        ConstraintKind::SumGe(0.4),
+                        &codes,
+                        threads,
+                    );
+                    assert_eq!(par.keep, serial.keep);
+                    assert_eq!(par.fixed, serial.fixed);
+                    assert_eq!(par.constraint, serial.constraint);
+                    assert_eq!(par.q.data.len(), serial.q.data.len());
+                    for (a, b) in par.q.data.iter().zip(&serial.q.data) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "q entry differs");
+                    }
+                    for (a, b) in par.lin.iter().zip(&serial.lin) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "lin differs");
+                    }
+                }
+            }
+        });
+        // deterministic all-Keep case: ns = l = 40 survivors guarantees
+        // the fan-out clears the per-worker work floor (t = 4)
+        let mut g = crate::prop::Gen::new(0x11AA);
+        let rows: Vec<Vec<f64>> = (0..40).map(|_| g.vec_f64(3, -1.0, 1.0)).collect();
+        let x = crate::util::Mat::from_rows(&rows);
+        let y: Vec<f64> = (0..40).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        let kernel = KernelKind::Rbf { gamma: 0.6 };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let ub = vec![1.0 / 40.0; 40];
+        let codes = vec![Keep; 40];
+        let serial = build(&dense, &ub, ConstraintKind::SumGe(0.3), &codes);
+        let par = build_threaded(&dense, &ub, ConstraintKind::SumGe(0.3), &codes, 4);
+        for (a, b) in par.q.data.iter().zip(&serial.q.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -34,9 +34,20 @@ pub fn feasible(alpha0: &[f64], ub: &[f64], nu1: f64) -> Vec<f64> {
 
 /// r(δ) = ¼ δᵀQδ + α⁰ᵀQδ — exposed for diagnostics and tests.
 pub fn radius_sq(q: &dyn KernelMatrix, alpha0: &[f64], delta: &[f64]) -> f64 {
+    radius_sq_threaded(q, alpha0, delta, 1)
+}
+
+/// [`radius_sq`] with the matvec fanned out over `threads` shard workers
+/// (bit-identical to the serial form — the dots stay serial).
+pub fn radius_sq_threaded(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    threads: usize,
+) -> f64 {
     let l = alpha0.len();
     let mut qd = vec![0.0; l];
-    q.matvec(delta, &mut qd);
+    q.par_matvec(delta, &mut qd, threads);
     0.25 * dot(delta, &qd) + dot(alpha0, &qd)
 }
 
@@ -49,7 +60,7 @@ pub fn optimal(
     nu1: f64,
     iters: usize,
 ) -> Vec<f64> {
-    optimal_from(q, alpha0, ub, ConstraintKind::SumGe(nu1), None, iters, None)
+    optimal_from(q, alpha0, ub, ConstraintKind::SumGe(nu1), None, iters, None, 1)
 }
 
 /// Warm-started restricted update (Eq. 27): seed β from the previous δ.
@@ -57,6 +68,10 @@ pub fn optimal(
 /// `lip` is the (upper bound on the) largest eigenvalue of Q; pass it
 /// when known — the path driver computes it once per Q instead of per
 /// step (40 power-iteration matvecs otherwise dominate the δ phase).
+///
+/// `threads` fans the per-sweep gradient matvec (the O(l²) cost of this
+/// phase) out over shard workers; every projection and reduction stays
+/// serial, so the returned δ is bit-identical for any thread count.
 pub fn optimal_from(
     q: &dyn KernelMatrix,
     alpha0: &[f64],
@@ -65,6 +80,7 @@ pub fn optimal_from(
     prev_delta: Option<&[f64]>,
     iters: usize,
     lip: Option<f64>,
+    threads: usize,
 ) -> Vec<f64> {
     let l = alpha0.len();
     let mut beta: Vec<f64> = match prev_delta {
@@ -81,7 +97,7 @@ pub fn optimal_from(
     if iters == 0 {
         return beta.iter().zip(alpha0).map(|(b, a)| b - a).collect();
     }
-    let lip = lip.unwrap_or_else(|| q.power_eig_max(40)).max(1e-12);
+    let lip = lip.unwrap_or_else(|| q.par_power_eig_max(40, threads)).max(1e-12);
     let step = 2.0 / lip; // gradient is (1/2) Q (β + α⁰) ⇒ L = λmax/2
     let mut g = vec![0.0; l];
     let mut tmp = vec![0.0; l];
@@ -90,14 +106,14 @@ pub fn optimal_from(
         for (t, (&b, &a)) in tmp.iter_mut().zip(beta.iter().zip(alpha0)) {
             *t = b + a;
         }
-        q.matvec(&tmp, &mut g);
+        q.par_matvec(&tmp, &mut g, threads);
         for (b, gi) in beta.iter_mut().zip(&g) {
             *b -= step * 0.5 * gi;
         }
         projection::project(&mut beta, ub, constraint);
         // cheap stall check every sweep
         let delta: Vec<f64> = beta.iter().zip(alpha0).map(|(b, a)| b - a).collect();
-        let r = radius_sq(q, alpha0, &delta);
+        let r = radius_sq_threaded(q, alpha0, &delta, threads);
         if (prev_r - r).abs() < 1e-14 {
             break;
         }
@@ -181,10 +197,41 @@ mod tests {
             Some(&cold),
             10,
             None,
+            1,
         );
         let r_cold = radius_sq(&q, &a0, &cold);
         let r_warm = radius_sq(&q, &a0, &warm);
         assert!(r_warm <= r_cold + 1e-9);
+    }
+
+    #[test]
+    fn threaded_refinement_bit_identical_to_serial() {
+        run_cases(8, 0xDE17A, |g| {
+            let n = g.usize(6, 30);
+            let q = g.psd(n);
+            let ub = vec![1.0 / n as f64; n];
+            let nu0 = g.f64(0.1, 0.4);
+            let nu1 = nu0 + g.f64(0.02, 0.2);
+            let p0 = crate::qp::QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: crate::qp::ConstraintKind::SumGe(nu0),
+            };
+            let (a0, _) = crate::qp::dcdm::solve(&p0, None, &Default::default());
+            let c = crate::qp::ConstraintKind::SumGe(nu1);
+            let serial = optimal_from(&q, &a0, &ub, c, None, 25, None, 1);
+            for threads in [2usize, 4] {
+                let par = optimal_from(&q, &a0, &ub, c, None, 25, None, threads);
+                for (s, p) in serial.iter().zip(&par) {
+                    assert_eq!(s.to_bits(), p.to_bits(), "threads={threads}");
+                }
+                assert_eq!(
+                    radius_sq(&q, &a0, &serial).to_bits(),
+                    radius_sq_threaded(&q, &a0, &par, threads).to_bits()
+                );
+            }
+        });
     }
 
     #[test]

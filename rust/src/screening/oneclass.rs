@@ -31,6 +31,18 @@ pub fn delta_for_step(
     nu1: f64,
     iters: usize,
 ) -> Vec<f64> {
+    delta_for_step_threaded(h, alpha0, nu1, iters, 1)
+}
+
+/// [`delta_for_step`] with the PG gradient matvecs fanned out over
+/// `threads` shard workers (bit-identical for any thread count).
+pub fn delta_for_step_threaded(
+    h: &dyn KernelMatrix,
+    alpha0: &[f64],
+    nu1: f64,
+    iters: usize,
+    threads: usize,
+) -> Vec<f64> {
     let l = alpha0.len();
     let ub = vec![upper_bound(nu1, l); l];
     super::delta::optimal_from(
@@ -41,6 +53,7 @@ pub fn delta_for_step(
         None,
         iters,
         None,
+        threads,
     )
 }
 
@@ -51,9 +64,21 @@ pub fn screen(
     delta: &[f64],
     nu1: f64,
 ) -> ScreenResult {
+    screen_threaded(h, alpha0, delta, nu1, 1)
+}
+
+/// [`screen`] with the sphere sweep and code sweep shard-parallel (see
+/// [`srbo::screen_threaded`] — identical machinery, H for Q).
+pub fn screen_threaded(
+    h: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    nu1: f64,
+    threads: usize,
+) -> ScreenResult {
     // identical sphere + bracket machinery; the caller interprets Upper
     // as 1/(nu1 * l).
-    srbo::screen(h, alpha0, delta, nu1)
+    srbo::screen_threaded(h, alpha0, delta, nu1, threads)
 }
 
 #[cfg(test)]

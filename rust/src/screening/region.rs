@@ -26,6 +26,20 @@ pub struct Sphere {
 /// `q` is the labelled Gram matrix (or H for OC-SVM), `alpha0` the
 /// previous exact solution, `delta` a member of Δ (see [`super::delta`]).
 pub fn build(q: &dyn KernelMatrix, alpha0: &[f64], delta: &[f64]) -> Sphere {
+    build_threaded(q, alpha0, delta, 1)
+}
+
+/// [`build`] with the dominant O(l²) row sweep fanned out over `threads`
+/// shard workers.  The fused matvec2 computes each element exactly as
+/// the serial sweep does and the reductions (cᵀQv, α⁰ᵀQα⁰) plus the O(l)
+/// diagonal pass stay serial, so the sphere is bit-identical to the
+/// serial build for any thread count.
+pub fn build_threaded(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    threads: usize,
+) -> Sphere {
     let l = alpha0.len();
     assert_eq!(q.dims(), l);
     let v: Vec<f64> = alpha0
@@ -37,7 +51,7 @@ pub fn build(q: &dyn KernelMatrix, alpha0: &[f64], delta: &[f64]) -> Sphere {
     // (row-cache backends would otherwise compute every row twice).
     let mut qv = vec![0.0; l];
     let mut qa0 = vec![0.0; l];
-    q.matvec2(&v, alpha0, &mut qv, &mut qa0);
+    q.par_matvec2(&v, alpha0, &mut qv, &mut qa0, threads);
     let ctc = dot(&v, &qv);
     let w0w0 = dot(alpha0, &qa0);
     let r = (ctc - w0w0).max(0.0);

@@ -26,8 +26,23 @@ pub fn screen(
     delta: &[f64],
     nu1: f64,
 ) -> ScreenResult {
-    let sphere = region::build(q, alpha0, delta);
-    screen_with_sphere(&sphere, nu1)
+    screen_threaded(q, alpha0, delta, nu1, 1)
+}
+
+/// [`screen`] with both phases shard-parallel: the sphere's O(l²) fused
+/// row sweep and the O(l) per-sample code sweep fan out over `threads`
+/// workers.  Each code depends only on its own index and the chunks are
+/// merged back in shard order, so the result is bit-identical to the
+/// serial rule for any thread count.
+pub fn screen_threaded(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    nu1: f64,
+    threads: usize,
+) -> ScreenResult {
+    let sphere = region::build_threaded(q, alpha0, delta, threads);
+    screen_with_sphere_threaded(&sphere, nu1, threads)
 }
 
 /// Same, reusing a precomputed sphere (the coordinator shares it with
@@ -40,6 +55,21 @@ pub fn screen(
 /// `GUARD_REL · max|qv|` beyond the bound before screening — vanishing
 /// against real screening margins, decisive against noise (DESIGN.md §6).
 pub fn screen_with_sphere(sphere: &Sphere, nu1: f64) -> ScreenResult {
+    screen_with_sphere_threaded(sphere, nu1, 1)
+}
+
+/// Minimum samples per worker before the code sweep fans out.  The
+/// sweep is O(l) float compares (~ns each), so a worker needs ~10⁵
+/// samples before it amortises a scoped spawn + join and the merge copy
+/// — far above the 256-row floor of the O(l·d) row sweeps.
+pub const PAR_CODES_MIN: usize = 1 << 16;
+
+/// [`screen_with_sphere`] with the per-sample code sweep shard-parallel.
+pub fn screen_with_sphere_threaded(
+    sphere: &Sphere,
+    nu1: f64,
+    threads: usize,
+) -> ScreenResult {
     let l = sphere.len();
     let rho = rho::bounds(sphere, nu1, l);
     // Guard: |qv|-relative term covers scale noise; GUARD_ABS covers the
@@ -50,9 +80,8 @@ pub fn screen_with_sphere(sphere: &Sphere, nu1: f64) -> ScreenResult {
     // this floor decides correctness; see DESIGN.md §6.
     let scale_qv = sphere.qv.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
     let guard = GUARD_REL * scale_qv + GUARD_ABS;
-    let mut codes = Vec::with_capacity(l);
-    for i in 0..l {
-        let code = if sphere.lower(i) > rho.upper + guard {
+    let code_for = |i: usize| {
+        if sphere.lower(i) > rho.upper + guard {
             // inf Z_i w > rho_upper >= rho*  ⇒  i ∈ R ⇒ α_i = 0   (Eq. 22)
             ScreenCode::Zero
         } else if sphere.upper(i) < rho.lower - guard {
@@ -60,9 +89,27 @@ pub fn screen_with_sphere(sphere: &Sphere, nu1: f64) -> ScreenResult {
             ScreenCode::Upper
         } else {
             ScreenCode::Keep
-        };
-        codes.push(code);
-    }
+        }
+    };
+    let t = threads.max(1).min((l / PAR_CODES_MIN).max(1));
+    let codes: Vec<ScreenCode> = if t <= 1 {
+        (0..l).map(code_for).collect()
+    } else {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = crate::kernel::shard_ranges(l, t)
+                .into_iter()
+                .map(|(lo, hi)| {
+                    let code_for = &code_for;
+                    s.spawn(move || (lo..hi).map(code_for).collect::<Vec<_>>())
+                })
+                .collect();
+            let mut codes = Vec::with_capacity(l);
+            for h in handles {
+                codes.extend(h.join().expect("screen worker panicked"));
+            }
+            codes
+        })
+    };
     ScreenResult { codes, rho, sqrt_r: sphere.sqrt_r }
 }
 
@@ -146,6 +193,30 @@ mod tests {
         let res = screen(&q, &a0, &delta, nu1);
         let screened = res.codes.iter().filter(|c| c.is_screened()).count();
         assert!(screened > 0, "expected some screening on easy data");
+    }
+
+    #[test]
+    fn parallel_code_sweep_matches_serial_above_threshold() {
+        // a synthetic sphere (no kernel needed) big enough that the
+        // threaded sweep actually fans out: l ≥ 2·PAR_CODES_MIN gives
+        // two workers at threads = 2.
+        use crate::screening::region::Sphere;
+        let l = 2 * PAR_CODES_MIN + 123;
+        let mut g = crate::prop::Gen::new(0xC0DE5);
+        let qv = g.vec_f64(l, -2.0, 2.0);
+        let norms = g.vec_f64(l, 0.1, 1.5);
+        let sphere = Sphere { qv, sqrt_r: 0.05, norms };
+        let serial = screen_with_sphere(&sphere, 0.3);
+        for threads in [2usize, 4, 7] {
+            let par = screen_with_sphere_threaded(&sphere, 0.3, threads);
+            assert_eq!(serial.codes, par.codes, "threads={threads}");
+            assert_eq!(serial.rho.upper.to_bits(), par.rho.upper.to_bits());
+            assert_eq!(serial.rho.lower.to_bits(), par.rho.lower.to_bits());
+        }
+        // the random sphere should produce a mix of codes, so the
+        // equality above is not vacuous
+        assert!(serial.codes.iter().any(|c| c.is_screened()));
+        assert!(serial.codes.iter().any(|c| !c.is_screened()));
     }
 
     #[test]

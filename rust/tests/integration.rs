@@ -119,8 +119,16 @@ fn oc_svm_and_kde_both_detect_anomalies() {
 fn grid_search_finds_good_model_on_circle() {
     let d = synthetic::circle(60, 31);
     let (tr, te) = train_test_stratified(&d, 0.8, 32);
-    let (kernel, _nu, acc, results) =
-        select_model(&tr, &te, grid(0.15, 0.4, 6), &[0.5, 1.0], true, 2, GramPolicy::Auto);
+    let (kernel, _nu, acc, results) = select_model(
+        &tr,
+        &te,
+        grid(0.15, 0.4, 6),
+        &[0.5, 1.0],
+        true,
+        2,
+        GramPolicy::Auto,
+        srbo::kernel::matrix::Sharding::Auto,
+    );
     assert_eq!(results.len(), 3);
     assert!(matches!(kernel, KernelKind::Rbf { .. }), "circle needs rbf");
     assert!(acc > 90.0, "acc={acc}");

@@ -1,0 +1,164 @@
+//! Shard-parallel vs serial equivalence, end to end: for any thread
+//! count, the parallel path engine must produce **bit-identical**
+//! results — identical `ScreenCode` vectors, bit-identical α, and
+//! matvec/quad agreement — for both the dense and the sharded-LRU
+//! kernel backends, supervised and one-class.
+
+use srbo::coordinator::path::{NuPath, PathConfig};
+use srbo::data::synthetic::gaussians;
+use srbo::kernel::matrix::{
+    DenseGram, GramPolicy, KernelMatrix, Sharding, ShardedLruRowCache,
+};
+use srbo::kernel::KernelKind;
+use srbo::prop::run_cases;
+
+fn nu_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+fn assert_paths_bit_identical(a: &NuPath, b: &NuPath, ctx: &str) {
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (k, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(sa.codes, sb.codes, "{ctx}: codes differ at step {k}");
+        assert_eq!(sa.alpha.len(), sb.alpha.len());
+        for (i, (x, y)) in sa.alpha.iter().zip(&sb.alpha).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: alpha[{i}] differs at step {k}: {x} vs {y}"
+            );
+        }
+        assert_eq!(
+            sa.screening_ratio.to_bits(),
+            sb.screening_ratio.to_bits(),
+            "{ctx}: ratio differs at step {k}"
+        );
+    }
+}
+
+/// Supervised ν-SVM path: dense and sharded-LRU backends, threads 1/2/4,
+/// all bit-identical to the fully serial path.
+#[test]
+fn supervised_path_bit_identical_across_threads() {
+    run_cases(4, 0x5AA4D, |g| {
+        let n = g.usize(20, 35);
+        let sep = g.f64(1.5, 3.0);
+        let d = gaussians(n, sep, g.usize(1, 1000) as u64);
+        let kernel = KernelKind::Rbf { gamma: g.f64(0.2, 1.0) };
+        let nus = nu_grid(0.2, 0.32, 5);
+        for gram in [GramPolicy::Dense, GramPolicy::Lru { budget_rows: 8 }] {
+            let mut serial_cfg = PathConfig::new(nus.clone(), kernel);
+            serial_cfg.gram = gram;
+            serial_cfg.shard = Sharding::Serial;
+            let serial = NuPath::run(&d.x, &d.y, &serial_cfg).unwrap();
+            for threads in [2usize, 4] {
+                let mut cfg = PathConfig::new(nus.clone(), kernel);
+                cfg.gram = gram;
+                cfg.shard = Sharding::Threads(threads);
+                let par = NuPath::run(&d.x, &d.y, &cfg).unwrap();
+                assert_paths_bit_identical(
+                    &serial,
+                    &par,
+                    &format!("{gram:?} threads={threads}"),
+                );
+            }
+        }
+    });
+}
+
+/// One-class path: same guarantee on the unlabelled H.
+#[test]
+fn oneclass_path_bit_identical_across_threads() {
+    let d = gaussians(40, 1.0, 11).positives();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.2, 0.5, 5);
+    for gram in [GramPolicy::Dense, GramPolicy::Lru { budget_rows: 8 }] {
+        let mut serial_cfg = PathConfig::new(nus.clone(), kernel);
+        serial_cfg.gram = gram;
+        serial_cfg.shard = Sharding::Serial;
+        let serial = NuPath::run_oneclass(&d.x, &serial_cfg).unwrap();
+        for threads in [2usize, 4] {
+            let mut cfg = PathConfig::new(nus.clone(), kernel);
+            cfg.gram = gram;
+            cfg.shard = Sharding::Threads(threads);
+            let par = NuPath::run_oneclass(&d.x, &cfg).unwrap();
+            assert_paths_bit_identical(
+                &serial,
+                &par,
+                &format!("oneclass {gram:?} threads={threads}"),
+            );
+            let sum: f64 = par.steps.last().unwrap().alpha.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+}
+
+/// The parallel kernel entry points agree with the serial ones bit for
+/// bit on both thread-safe backends, for threads ∈ {1, 2, 4}.
+#[test]
+fn par_matvec_and_quad_agree_across_backends() {
+    run_cases(6, 0x3A7B, |g| {
+        let n = g.usize(10, 50);
+        let dfeat = g.usize(1, 5);
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|_| g.vec_f64(dfeat, -2.0, 2.0)).collect();
+        let x = srbo::util::Mat::from_rows(&rows);
+        let y: Vec<f64> =
+            (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        let kernel = KernelKind::Rbf { gamma: g.f64(0.2, 1.5) };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let sharded = ShardedLruRowCache::new_q(&x, &y, kernel, 8, 4);
+        let v1 = g.vec_f64(n, -1.0, 1.0);
+        let v2 = g.vec_f64(n, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        dense.matvec(&v1, &mut want);
+        let want_quad = dense.quad(&v1, &v2);
+        for km in [&dense as &dyn KernelMatrix, &sharded] {
+            for threads in [1usize, 2, 4] {
+                let mut got = vec![0.0; n];
+                km.par_matvec(&v1, &mut got, threads);
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "matvec t={threads}");
+                }
+                assert_eq!(
+                    km.par_quad(&v1, &v2, threads).to_bits(),
+                    want_quad.to_bits(),
+                    "quad t={threads}"
+                );
+            }
+        }
+    });
+}
+
+/// A sharded-LRU-backed parallel path reproduces the dense serial path
+/// while keeping resident rows within the total budget.
+#[test]
+fn sharded_lru_path_matches_dense_within_budget() {
+    let d = gaussians(40, 2.5, 9); // l = 80
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.2, 0.34, 6);
+    let cfg = PathConfig::new(nus.clone(), kernel);
+
+    let dense = DenseGram::build_q(&d.x, &d.y, kernel, 4);
+    let budget = 16; // ≪ l = 80 rows in total
+    let shards = 4;
+    let sharded = ShardedLruRowCache::new_q(&d.x, &d.y, kernel, budget, shards);
+
+    let p_dense =
+        NuPath::run_with_matrix(&dense, &cfg, false, Default::default()).unwrap();
+    let mut par_cfg = cfg.clone();
+    par_cfg.shard = Sharding::Threads(shards);
+    let p_sharded =
+        NuPath::run_with_matrix(&sharded, &par_cfg, false, Default::default())
+            .unwrap();
+
+    assert_paths_bit_identical(&p_dense, &p_sharded, "sharded-lru vs dense");
+    let (_hits, misses, resident) = sharded.cache_stats();
+    assert!(misses > 0);
+    assert!(
+        resident <= shards * sharded.budget_per_shard(),
+        "resident={resident} exceeds total budget"
+    );
+}
