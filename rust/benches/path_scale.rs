@@ -36,16 +36,20 @@ fn main() {
         let n = scaled(base); // per-class count; l = 2n
         let d = synthetic::gaussians(n, 2.0, 42);
         let l = d.len();
-        // dense policy sweep (the fits-in-memory regime), plus an LRU
-        // policy sweep at a budget ≪ l (the l ≫ memory regime).  Note
-        // the LRU policy's serial baseline runs the plain `LruRowCache`
-        // while threaded rows run `ShardedLruRowCache` — the per-run
-        // `backend` field records the actual implementation (the bench
-        // budgets divide evenly, so cache capacity stays equal).
+        // dense policy sweep (the fits-in-memory regime), an LRU policy
+        // sweep at a budget ≪ l (the l ≫ memory regime), and a stream
+        // policy sweep (x itself out of core: spilled to a temp feature
+        // store, Gram rows streamed from disk behind the same bounded
+        // cache).  Note the bounded policies' serial baselines run the
+        // plain `LruRowCache` while threaded rows run
+        // `ShardedLruRowCache` — the per-run `backend` field records
+        // the actual implementation (the bench budgets divide evenly,
+        // so cache capacity stays equal).
         let lru_budget = (l / 8).max(8);
-        let policies: [(&str, GramPolicy); 2] = [
+        let policies: [(&str, GramPolicy); 3] = [
             ("dense", GramPolicy::Dense),
             ("lru", GramPolicy::Lru { budget_rows: lru_budget }),
+            ("stream", GramPolicy::Stream { budget_rows: lru_budget }),
         ];
         for (name, gram) in policies {
             let mut serial_median = f64::NAN;
@@ -57,7 +61,7 @@ fn main() {
                 } else {
                     Sharding::Threads(threads)
                 };
-                let backend = gram.backend_name(l, cfg.shard);
+                let backend = gram.backend_name(l, d.dim(), cfg.shard);
                 let s = bench(&format!("path_{name}_l{l}_t{threads}"), warmup, reps, || {
                     std::hint::black_box(
                         NuPath::run(&d.x, &d.y, &cfg).expect("path failed"),

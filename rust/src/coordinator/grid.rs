@@ -11,6 +11,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::cache::{GramCache, QKey};
 use crate::coordinator::path::{NuPath, PathConfig};
+use crate::data::store::{FeatureStore, FileStore};
 use crate::data::Dataset;
 use crate::kernel::matrix::{GramPolicy, Sharding};
 use crate::kernel::KernelKind;
@@ -26,6 +27,10 @@ pub struct Job {
     pub kernel: KernelKind,
     pub cfg: PathConfig,
     pub tag: String,
+    /// Pre-spilled feature store shared by every out-of-core job of
+    /// this grid (one temp file for the whole search instead of one
+    /// per job); `None` keeps x resident.
+    pub store: Option<Arc<dyn FeatureStore>>,
 }
 
 /// Per-job outcome.
@@ -175,7 +180,14 @@ fn run_job(cache: &GramCache, job: &Job, build_cap: usize) -> JobResult {
         let q = cache.q_backend_threaded(key, &d.x, &d.y, job.kernel, build);
         NuPath::run_with_matrix(&q, &job.cfg, false, Default::default())
     } else {
-        let q = job.cfg.gram.q_sharded(&d.x, &d.y, job.kernel, job.cfg.shard);
+        // out-of-core jobs stream Q rows from the grid's shared spilled
+        // store; others build their own per-worker resident row cache
+        let q = match &job.store {
+            Some(store) => {
+                job.cfg.gram.q_streaming(Arc::clone(store), &d.y, job.kernel, job.cfg.shard)
+            }
+            None => job.cfg.gram.q_sharded(&d.x, &d.y, job.kernel, job.cfg.shard),
+        };
         NuPath::run_with_matrix(&q, &job.cfg, false, Default::default())
     }
     .expect("path failed");
@@ -226,6 +238,17 @@ pub fn select_model(
     let mut jobs = Vec::new();
     let train = Arc::new(train.clone());
     let test = Arc::new(test.clone());
+    // Out-of-core policies spill x ONCE for the whole grid (every arm
+    // streams the same rows) instead of a duplicate temp store per job;
+    // a failed spill falls back to per-job resident row caches.
+    let store: Option<Arc<dyn FeatureStore>> =
+        if gram.use_stream(train.x.rows, train.x.cols) {
+            FileStore::spill(&train.x, None)
+                .ok()
+                .map(|s| Arc::new(s) as Arc<dyn FeatureStore>)
+        } else {
+            None
+        };
     let mut kernels = vec![KernelKind::Linear];
     kernels.extend(sigmas.iter().map(|&s| KernelKind::rbf_from_sigma(s)));
     for kernel in kernels {
@@ -239,6 +262,7 @@ pub fn select_model(
             kernel,
             cfg,
             tag: format!("{}/{:?}", train.name, kernel),
+            store: store.clone(),
         });
     }
     let shard_threads = shard.resolve(train.x.rows);
@@ -335,6 +359,18 @@ mod tests {
         // worker completion order, so compare the order-independent
         // quantity)
         assert_eq!(acc_d, acc_l);
+        // stream policy: one shared spilled store, same bits again
+        let (_, _, acc_s, _) = select_model(
+            &tr,
+            &te,
+            nus(),
+            &[1.0],
+            true,
+            2,
+            GramPolicy::Stream { budget_rows: 8 },
+            Sharding::Threads(2),
+        );
+        assert_eq!(acc_d, acc_s);
     }
 
     #[test]
@@ -362,6 +398,7 @@ mod tests {
             kernel: KernelKind::Linear,
             cfg: PathConfig::new(nus(), KernelKind::Linear),
             tag: tag.to_string(),
+            store: None,
         };
         // same tag -> same cache key -> 1 miss, 1 hit
         let _ = gs.run(vec![mk_job("same"), mk_job("same")]);

@@ -2,7 +2,10 @@
 //!
 //! Real benchmark files dropped under `data/real/<Name>.libsvm` (or
 //! `.csv` with the label in the last column) override the synthetic
-//! mimics in `data::benchmark`.
+//! mimics in `data::benchmark`.  Parse errors carry the line (and for
+//! CSV, the column) of the offending token, and the path-aware loaders
+//! ([`load_path`] / [`load_real`]) prefix the file path — a bad row in
+//! a million-line file is findable from the message alone.
 
 use std::fs;
 use std::path::Path;
@@ -25,7 +28,7 @@ pub fn parse_libsvm(text: &str) -> Result<Dataset> {
         let mut parts = line.split_whitespace();
         let label: f64 = parts
             .next()
-            .context("missing label")?
+            .with_context(|| format!("missing label at line {}", lineno + 1))?
             .parse()
             .with_context(|| format!("bad label at line {}", lineno + 1))?;
         let label = if label > 0.0 { 1.0 } else { -1.0 };
@@ -34,8 +37,12 @@ pub fn parse_libsvm(text: &str) -> Result<Dataset> {
             let (i, v) = tok
                 .split_once(':')
                 .with_context(|| format!("bad feature '{tok}' at line {}", lineno + 1))?;
-            let i: usize = i.parse()?;
-            let v: f64 = v.parse()?;
+            let i: usize = i
+                .parse()
+                .with_context(|| format!("bad feature index '{tok}' at line {}", lineno + 1))?;
+            let v: f64 = v
+                .parse()
+                .with_context(|| format!("bad feature value '{tok}' at line {}", lineno + 1))?;
             if i == 0 {
                 bail!("LIBSVM indices are 1-based (line {})", lineno + 1);
             }
@@ -71,10 +78,14 @@ pub fn parse_csv(text: &str) -> Result<Dataset> {
         if lineno == 0 && cells[0].parse::<f64>().is_err() {
             continue;
         }
-        let vals: Result<Vec<f64>, _> =
-            cells.iter().map(|c| c.trim().parse::<f64>()).collect();
-        let vals =
-            vals.with_context(|| format!("bad number at line {}", lineno + 1))?;
+        let mut vals = Vec::with_capacity(cells.len());
+        for (col, cell) in cells.iter().enumerate() {
+            let cell = cell.trim();
+            let v: f64 = cell.parse().with_context(|| {
+                format!("bad number '{cell}' at line {} column {}", lineno + 1, col + 1)
+            })?;
+            vals.push(v);
+        }
         if vals.len() < 2 {
             bail!("need >= 1 feature + label at line {}", lineno + 1);
         }
@@ -88,22 +99,30 @@ pub fn parse_csv(text: &str) -> Result<Dataset> {
     Ok(Dataset::new("csv", Mat::from_rows(&rows), y))
 }
 
+/// Load a dataset file, choosing the parser by extension (`.csv` is
+/// dense CSV; anything else is LIBSVM).  Read *and* parse errors are
+/// prefixed with the file path, and parse errors keep their line (and
+/// column) context from the parsers above.
+pub fn load_path(path: &Path) -> Result<Dataset> {
+    let text =
+        fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let is_csv = path.extension().and_then(|e| e.to_str()) == Some("csv");
+    let parsed = if is_csv { parse_csv(&text) } else { parse_libsvm(&text) };
+    parsed.with_context(|| format!("parse {}", path.display()))
+}
+
 /// Try to load a real data set for a benchmark name.
 pub fn load_real(name: &str) -> Result<Dataset> {
     let base = Path::new("data").join("real");
-    let libsvm = base.join(format!("{name}.libsvm"));
-    if libsvm.exists() {
-        let mut d = parse_libsvm(&fs::read_to_string(&libsvm)?)?;
-        d.name = name.to_string();
-        return Ok(d);
+    for ext in ["libsvm", "csv"] {
+        let path = base.join(format!("{name}.{ext}"));
+        if path.exists() {
+            let mut d = load_path(&path)?;
+            d.name = name.to_string();
+            return Ok(d);
+        }
     }
-    let csv = base.join(format!("{name}.csv"));
-    if csv.exists() {
-        let mut d = parse_csv(&fs::read_to_string(&csv)?)?;
-        d.name = name.to_string();
-        return Ok(d);
-    }
-    bail!("no real file for {name}")
+    bail!("no real file for {name} under {}", base.display())
 }
 
 #[cfg(test)]
@@ -148,5 +167,47 @@ mod tests {
     #[test]
     fn load_real_missing_is_err() {
         assert!(load_real("DefinitelyNotADataset").is_err());
+    }
+
+    #[test]
+    fn libsvm_errors_pin_line_and_token() {
+        let e = parse_libsvm("+1 1:0.5\n-1 2:oops\n").unwrap_err();
+        assert_eq!(e.msg(), "bad feature value '2:oops' at line 2: invalid float literal");
+        let e = parse_libsvm("+1 1:0.5\n-1 x:1.0\n").unwrap_err();
+        assert!(e.msg().starts_with("bad feature index 'x:1.0' at line 2"), "{e}");
+        let e = parse_libsvm("nolabel 1:0.5\n").unwrap_err();
+        assert!(e.msg().starts_with("bad label at line 1"), "{e}");
+        let e = parse_libsvm("# comment\n+1 0:1.0\n").unwrap_err();
+        assert_eq!(e.msg(), "LIBSVM indices are 1-based (line 2)");
+    }
+
+    #[test]
+    fn csv_errors_pin_line_and_column() {
+        let e = parse_csv("1.0,2.0,1\n3.0,oops,0\n").unwrap_err();
+        assert_eq!(e.msg(), "bad number 'oops' at line 2 column 2: invalid float literal");
+    }
+
+    #[test]
+    fn load_path_prefixes_the_file_path() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("srbo-loader-test-{}.libsvm", std::process::id()));
+        fs::write(&path, "+1 1:0.5\n-1 2:bad\n").unwrap();
+        let e = load_path(&path).unwrap_err();
+        assert!(e.msg().contains(path.to_str().unwrap()), "{e} should name the file");
+        assert!(e.msg().contains("at line 2"), "{e} should pin the line");
+        let csv = dir.join(format!("srbo-loader-test-{}.csv", std::process::id()));
+        fs::write(&csv, "1.0,2.0,1\nx,1.0,0\n").unwrap();
+        let e = load_path(&csv).unwrap_err();
+        assert!(e.msg().contains(csv.to_str().unwrap()), "{e}");
+        assert!(e.msg().contains("line 2 column 1"), "{e}");
+        // a good file round-trips through the path loader
+        fs::write(&path, "+1 1:0.5\n-1 2:2.0\n").unwrap();
+        let d = load_path(&path).unwrap();
+        assert_eq!(d.len(), 2);
+        // missing files name the path too
+        let e = load_path(Path::new("/definitely/not/here.libsvm")).unwrap_err();
+        assert!(e.msg().contains("/definitely/not/here.libsvm"), "{e}");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(&csv);
     }
 }

@@ -1,12 +1,16 @@
 //! Datasets: the paper's 6 artificial sets, a Table-III-mimic benchmark
-//! fleet, an MNIST-like generator, and on-disk loaders (LIBSVM/CSV) for
-//! dropping in real data.
+//! fleet, an MNIST-like generator, on-disk loaders (LIBSVM/CSV) for
+//! dropping in real data, and the out-of-core feature store behind the
+//! streaming kernel backend.
 
 pub mod benchmark;
 pub mod loader;
 pub mod mnist_like;
 pub mod split;
+pub mod store;
 pub mod synthetic;
+
+pub use store::{FeatureStore, FileStore, MemStore};
 
 use crate::util::Mat;
 

@@ -1,0 +1,557 @@
+//! The out-of-core feature store: a [`FeatureStore`] trait over which the
+//! streaming Gram backend ([`crate::kernel::matrix::StreamingGram`]) reads
+//! feature rows, with two implementations:
+//!
+//! * [`MemStore`] — wraps the resident [`Mat`] (plus its precomputed
+//!   squared row norms), so every in-memory call site lifts into the
+//!   store world with a `MemStore::new(x)`/`From<Mat>`.
+//! * [`FileStore`] — a chunked-read binary format on disk.  The feature
+//!   matrix never becomes resident: rows are read page-wise through
+//!   `File::seek`, and a pool of per-thread reader handles means sharded
+//!   sweeps never serialize on a single file offset.  Squared row norms
+//!   (the RBF hoist) are precomputed into the header at write time, so
+//!   opening a store costs O(l) — not a full O(l·d) data pass.
+//!
+//! # On-disk layout (`.fsb`, all integers/floats little-endian)
+//!
+//! ```text
+//! offset  size      field
+//! 0       8         magic "SRBOFS01"
+//! 8       8         l  (rows, u64, ≥ 1)
+//! 16      8         d  (features per row, u64, ≥ 1)
+//! 24      8         flags (u64; bit 0 = labels present)
+//! 32      8·l       squared row norms ‖x_i‖² (f64)
+//! …       8·l       labels in {+1,−1} (f64; only when flagged)
+//! …       8·l·d     row-major feature data (f64)
+//! ```
+//!
+//! [`FileStore::open`] validates the magic, the header fields, the exact
+//! file size, and that every norm is finite — truncated, corrupt, or
+//! NaN-norm files surface a [`SrboError`](crate::util::error::SrboError)
+//! instead of a panic (pinned by the property tests below).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::bail;
+use crate::kernel::gram::row_norms;
+use crate::util::error::{Context, Result};
+use crate::util::Mat;
+
+/// Magic bytes opening every feature-store file.
+pub const STORE_MAGIC: [u8; 8] = *b"SRBOFS01";
+
+/// Header flag bit: a label vector follows the norms.
+const FLAG_LABELS: u64 = 1;
+
+/// Fixed-size header bytes before the norms block.
+const HEADER_BYTES: u64 = 32;
+
+/// Read access to an l×d feature matrix, resident or out of core.
+///
+/// All methods take `&self` and implementations are `Send + Sync`:
+/// the shard-parallel Gram sweeps read rows from many workers at once.
+/// `norms()` returns the *precomputed* squared row norms ‖x_i‖² — the
+/// RBF hoist every row-mode backend shares — so implementations must
+/// produce them with the same arithmetic as
+/// [`row_norms`](crate::kernel::gram::row_norms) to keep kernel entries
+/// bit-identical across backends.
+pub trait FeatureStore: Send + Sync {
+    /// Number of feature rows (l).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Features per row (d).
+    fn dim(&self) -> usize;
+
+    /// Precomputed squared row norms ‖x_i‖².
+    fn norms(&self) -> &[f64];
+
+    /// Copy row i into `out` (length d).
+    fn row_into(&self, i: usize, out: &mut [f64]);
+
+    /// Copy rows `lo..hi` into `out` (length (hi−lo)·d, row-major) —
+    /// the chunked page read the streaming Gram sweeps are built on.
+    fn rows_into(&self, lo: usize, hi: usize, out: &mut [f64]);
+
+    /// Row i as an owned vector (allocating convenience over
+    /// [`Self::row_into`]).
+    fn row(&self, i: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.row_into(i, &mut out);
+        out
+    }
+
+    /// Materialise the whole store as a resident [`Mat`] in chunked
+    /// page reads — one pass over the file, for consumers that
+    /// explicitly want the dense regime (8·l·d bytes is smaller than
+    /// the 8·l² Q they are about to build).
+    fn to_mat(&self) -> Mat {
+        let (l, d) = (self.len(), self.dim());
+        let mut x = Mat::zeros(l, d);
+        let mut lo = 0;
+        while lo < l {
+            let hi = (lo + 1024).min(l);
+            self.rows_into(lo, hi, &mut x.data[lo * d..hi * d]);
+            lo = hi;
+        }
+        x
+    }
+}
+
+/// Resident-memory store: the existing [`Mat`] plus hoisted norms.
+pub struct MemStore {
+    x: Mat,
+    norms: Vec<f64>,
+}
+
+impl MemStore {
+    pub fn new(x: Mat) -> Self {
+        let norms = row_norms(&x);
+        MemStore { x, norms }
+    }
+
+    /// The wrapped feature matrix.
+    pub fn mat(&self) -> &Mat {
+        &self.x
+    }
+}
+
+impl From<Mat> for MemStore {
+    fn from(x: Mat) -> Self {
+        MemStore::new(x)
+    }
+}
+
+impl From<&Mat> for MemStore {
+    fn from(x: &Mat) -> Self {
+        MemStore::new(x.clone())
+    }
+}
+
+impl FeatureStore for MemStore {
+    fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    fn row_into(&self, i: usize, out: &mut [f64]) {
+        out.copy_from_slice(self.x.row(i));
+    }
+
+    fn rows_into(&self, lo: usize, hi: usize, out: &mut [f64]) {
+        let d = self.x.cols;
+        out.copy_from_slice(&self.x.data[lo * d..hi * d]);
+    }
+}
+
+/// Monotone tag for spill-file names (unique within the process; the
+/// pid disambiguates across processes).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Out-of-core store: feature rows read page-wise from the binary
+/// format, norms (and optional labels) resident from the header.
+///
+/// Reader handles live in a pool: a concurrent `row_into`/`rows_into`
+/// pops a handle (or opens a fresh one when every pooled handle is in
+/// use), seeks and reads *outside* any lock, and returns the handle —
+/// so N sharded workers stream through N independent file offsets and
+/// never serialize on one descriptor.
+pub struct FileStore {
+    path: PathBuf,
+    rows: usize,
+    dim: usize,
+    norms: Vec<f64>,
+    labels: Option<Vec<f64>>,
+    data_off: u64,
+    pool: Mutex<Vec<File>>,
+    /// Spill files are deleted on drop; opened files never are.
+    temp: bool,
+}
+
+impl FileStore {
+    /// Serialize (x, y) into the binary format at `path`, returning the
+    /// total bytes written.  Norms are computed here once (the same
+    /// [`row_norms`] arithmetic as every resident backend) so readers
+    /// get the RBF hoist for free.
+    pub fn write(path: &Path, x: &Mat, y: Option<&[f64]>) -> Result<u64> {
+        if x.rows == 0 || x.cols == 0 {
+            bail!("feature store needs l ≥ 1 and d ≥ 1 (got {}×{})", x.rows, x.cols);
+        }
+        if let Some(y) = y {
+            if y.len() != x.rows {
+                bail!("label length {} != rows {}", y.len(), x.rows);
+            }
+        }
+        let norms = row_norms(x);
+        let file = File::create(path)
+            .with_context(|| format!("create feature store {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        let mut written = || -> std::io::Result<()> {
+            w.write_all(&STORE_MAGIC)?;
+            w.write_all(&(x.rows as u64).to_le_bytes())?;
+            w.write_all(&(x.cols as u64).to_le_bytes())?;
+            let flags = if y.is_some() { FLAG_LABELS } else { 0 };
+            w.write_all(&flags.to_le_bytes())?;
+            for n in &norms {
+                w.write_all(&n.to_le_bytes())?;
+            }
+            if let Some(y) = y {
+                for v in y {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            for v in &x.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            w.flush()
+        };
+        written().with_context(|| format!("write feature store {}", path.display()))?;
+        let blocks = 1 + u64::from(y.is_some());
+        Ok(HEADER_BYTES + 8 * (x.rows as u64) * (blocks + x.cols as u64))
+    }
+
+    /// Open and validate a feature-store file.  Truncated files, bad
+    /// magic/header fields, size mismatches, and non-finite norms all
+    /// return errors — readers can trust `len`/`dim`/`norms` afterwards.
+    pub fn open(path: &Path) -> Result<FileStore> {
+        let mut file =
+            File::open(path).with_context(|| format!("open feature store {}", path.display()))?;
+        let ctx = |what: &str| format!("{}: {what}", path.display());
+        let mut header = [0u8; HEADER_BYTES as usize];
+        file.read_exact(&mut header)
+            .with_context(|| ctx("truncated header (want 32 bytes)"))?;
+        if header[..8] != STORE_MAGIC {
+            bail!("{}: bad magic (not a SRBOFS01 feature store)", path.display());
+        }
+        let word = |k: usize| u64::from_le_bytes(header[8 * k..8 * (k + 1)].try_into().unwrap());
+        let (l64, d64, flags) = (word(1), word(2), word(3));
+        if l64 == 0 || d64 == 0 {
+            bail!("{}: empty store (l={l64}, d={d64})", path.display());
+        }
+        if flags & !FLAG_LABELS != 0 {
+            bail!("{}: unknown header flags {flags:#x}", path.display());
+        }
+        let has_labels = flags & FLAG_LABELS != 0;
+        let blocks = 1 + u64::from(has_labels);
+        let payload = 8u64
+            .checked_mul(l64)
+            .and_then(|b| b.checked_mul(blocks + d64))
+            .unwrap_or(u64::MAX);
+        let want_size = HEADER_BYTES.checked_add(payload).unwrap_or(u64::MAX);
+        let actual = file.metadata().with_context(|| ctx("stat failed"))?.len();
+        if actual != want_size {
+            bail!(
+                "{}: size mismatch — header promises {want_size} bytes (l={l64}, d={d64}, \
+                 labels={has_labels}), file has {actual} (truncated or corrupt)",
+                path.display()
+            );
+        }
+        let (l, d) = (l64 as usize, d64 as usize);
+        let mut norms = vec![0.0; l];
+        read_f64s(&mut file, HEADER_BYTES, &mut norms).with_context(|| ctx("read norms"))?;
+        if let Some(i) = norms.iter().position(|n| !n.is_finite()) {
+            bail!("{}: non-finite squared norm at row {i} ({})", path.display(), norms[i]);
+        }
+        let labels = if has_labels {
+            let mut y = vec![0.0; l];
+            read_f64s(&mut file, HEADER_BYTES + 8 * l64, &mut y)
+                .with_context(|| ctx("read labels"))?;
+            if let Some(i) = y.iter().position(|&v| v != 1.0 && v != -1.0) {
+                bail!("{}: label at row {i} is {} (want ±1)", path.display(), y[i]);
+            }
+            Some(y)
+        } else {
+            None
+        };
+        Ok(FileStore {
+            path: path.to_path_buf(),
+            rows: l,
+            dim: d,
+            norms,
+            labels,
+            data_off: HEADER_BYTES + 8 * l64 * blocks,
+            pool: Mutex::new(vec![file]),
+            temp: false,
+        })
+    }
+
+    /// Spill a resident matrix into a fresh temp-dir store (what
+    /// [`GramPolicy`](crate::kernel::matrix::GramPolicy) does for
+    /// `--gram stream` runs that start from in-memory data).  The file
+    /// is deleted when the returned store is dropped.
+    pub fn spill(x: &Mat, y: Option<&[f64]>) -> Result<FileStore> {
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("srbo-spill-{}-{seq}.fsb", std::process::id()));
+        Self::write(&path, x, y)?;
+        let mut store = Self::open(&path)?;
+        store.temp = true;
+        Ok(store)
+    }
+
+    /// The backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Labels stored alongside the features, when the writer had them.
+    pub fn labels(&self) -> Option<&[f64]> {
+        self.labels.as_deref()
+    }
+
+    /// Run `f` with a pooled reader handle (popped outside the read, so
+    /// concurrent callers each hold their own descriptor and offset).
+    fn with_reader<R>(&self, f: impl FnOnce(&mut File) -> std::io::Result<R>) -> R {
+        let pooled = self.pool.lock().unwrap().pop();
+        let mut file = match pooled {
+            Some(f) => f,
+            None => File::open(&self.path).unwrap_or_else(|e| {
+                panic!("feature store {}: reopen failed: {e}", self.path.display())
+            }),
+        };
+        let out = f(&mut file).unwrap_or_else(|e| {
+            panic!("feature store {}: read failed: {e}", self.path.display())
+        });
+        self.pool.lock().unwrap().push(file);
+        out
+    }
+}
+
+impl Drop for FileStore {
+    fn drop(&mut self) {
+        if self.temp {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+impl FeatureStore for FileStore {
+    fn len(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    fn row_into(&self, i: usize, out: &mut [f64]) {
+        self.rows_into(i, i + 1, out);
+    }
+
+    fn rows_into(&self, lo: usize, hi: usize, out: &mut [f64]) {
+        assert!(lo <= hi && hi <= self.rows, "row range {lo}..{hi} of {}", self.rows);
+        assert_eq!(out.len(), (hi - lo) * self.dim);
+        if lo == hi {
+            return;
+        }
+        let off = self.data_off + 8 * (lo as u64) * (self.dim as u64);
+        self.with_reader(|file| read_f64s(file, off, out));
+    }
+}
+
+/// Seek to `off` and decode `out.len()` little-endian f64s through a
+/// fixed page buffer (so a chunk read never doubles its own footprint).
+fn read_f64s(file: &mut File, off: u64, out: &mut [f64]) -> std::io::Result<()> {
+    file.seek(SeekFrom::Start(off))?;
+    let mut page = [0u8; 8192];
+    let mut k = 0;
+    while k < out.len() {
+        let take = ((out.len() - k) * 8).min(page.len());
+        file.read_exact(&mut page[..take])?;
+        for bytes in page[..take].chunks_exact(8) {
+            out[k] = f64::from_le_bytes(bytes.try_into().unwrap());
+            k += 1;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{run_cases, Gen};
+
+    /// Unique temp path for a test file (removed by each test).
+    fn tmp(tag: &str) -> PathBuf {
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("srbo-test-{}-{tag}-{seq}.fsb", std::process::id()))
+    }
+
+    fn random_mat(g: &mut Gen, l: usize, d: usize) -> Mat {
+        let rows: Vec<Vec<f64>> = (0..l).map(|_| g.vec_f64(d, -3.0, 3.0)).collect();
+        Mat::from_rows(&rows)
+    }
+
+    #[test]
+    fn roundtrip_matches_memstore_bit_for_bit() {
+        run_cases(8, 0xF57, |g| {
+            let l = g.usize(1, 20);
+            let d = g.usize(1, 7);
+            let x = random_mat(g, l, d);
+            let y: Vec<f64> = (0..l).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+            let with_labels = g.bool();
+            let path = tmp("roundtrip");
+            FileStore::write(&path, &x, with_labels.then_some(y.as_slice())).unwrap();
+            let fs = FileStore::open(&path).unwrap();
+            let mem = MemStore::new(x.clone());
+            assert_eq!(fs.len(), mem.len());
+            assert_eq!(fs.dim(), mem.dim());
+            for (a, b) in fs.norms().iter().zip(mem.norms()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "norms differ");
+            }
+            match fs.labels() {
+                Some(lab) => {
+                    assert!(with_labels);
+                    assert_eq!(lab, &y[..]);
+                }
+                None => assert!(!with_labels),
+            }
+            // single-row and chunked reads both reproduce the data exactly
+            for i in 0..l {
+                assert_eq!(fs.row(i), mem.row(i), "row {i}");
+            }
+            let lo = g.usize(0, l - 1);
+            let hi = g.usize(lo + 1, l);
+            let mut a = vec![0.0; (hi - lo) * d];
+            let mut b = vec![0.0; (hi - lo) * d];
+            fs.rows_into(lo, hi, &mut a);
+            mem.rows_into(lo, hi, &mut b);
+            assert_eq!(a, b, "rows {lo}..{hi}");
+            drop(fs);
+            let _ = fs::remove_file(&path);
+        });
+    }
+
+    #[test]
+    fn concurrent_readers_share_the_store() {
+        let mut g = Gen::new(0xC0C);
+        let x = random_mat(&mut g, 24, 5);
+        let path = tmp("par");
+        FileStore::write(&path, &x, None).unwrap();
+        let fs = FileStore::open(&path).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let fs = &fs;
+                let x = &x;
+                s.spawn(move || {
+                    for i in (t..24).step_by(4) {
+                        assert_eq!(fs.row(i), x.row(i), "row {i}");
+                    }
+                });
+            }
+        });
+        drop(fs);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn spill_cleans_up_on_drop() {
+        let mut g = Gen::new(0x5B);
+        let x = random_mat(&mut g, 6, 2);
+        let store = FileStore::spill(&x, None).unwrap();
+        let path = store.path().to_path_buf();
+        assert!(path.exists());
+        assert_eq!(store.row(3), x.row(3));
+        drop(store);
+        assert!(!path.exists(), "spill file should be removed on drop");
+    }
+
+    #[test]
+    fn corrupt_files_error_instead_of_panicking() {
+        let mut g = Gen::new(0xBAD);
+        let x = random_mat(&mut g, 5, 3);
+        let path = tmp("corrupt");
+        FileStore::write(&path, &x, None).unwrap();
+        let good = fs::read(&path).unwrap();
+
+        // truncated mid-data
+        fs::write(&path, &good[..good.len() - 9]).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("truncated") || e.msg().contains("size mismatch"), "{e}");
+        assert!(e.msg().contains(path.to_str().unwrap()), "{e} should name the file");
+
+        // truncated inside the header
+        fs::write(&path, &good[..16]).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("truncated header"), "{e}");
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        fs::write(&path, &bad).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("bad magic"), "{e}");
+
+        // unknown flag bits
+        let mut bad = good.clone();
+        bad[24] = 0x06;
+        fs::write(&path, &bad).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("unknown header flags"), "{e}");
+
+        // zero-row header
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&0u64.to_le_bytes());
+        fs::write(&path, &bad).unwrap();
+        assert!(FileStore::open(&path).is_err());
+
+        // NaN norm
+        let mut bad = good.clone();
+        bad[32..40].copy_from_slice(&f64::NAN.to_le_bytes());
+        fs::write(&path, &bad).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("non-finite squared norm at row 0"), "{e}");
+
+        // trailing garbage is a size mismatch, not silently ignored
+        let mut bad = good.clone();
+        bad.push(0);
+        fs::write(&path, &bad).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("size mismatch"), "{e}");
+
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bad_labels_rejected() {
+        let mut g = Gen::new(0x1AB);
+        let x = random_mat(&mut g, 4, 2);
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let path = tmp("labels");
+        FileStore::write(&path, &x, Some(&y)).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        // patch label 0 (offset 32 + 8·l norms) to an invalid value
+        let off = 32 + 8 * 4;
+        bytes[off..off + 8].copy_from_slice(&0.5f64.to_le_bytes());
+        fs::write(&path, &bytes).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("label at row 0"), "{e}");
+        // mismatched label length is rejected at write time
+        assert!(FileStore::write(&path, &x, Some(&[1.0])).is_err());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_empty_writes() {
+        assert!(FileStore::write(&tmp("empty"), &Mat::zeros(0, 3), None).is_err());
+        assert!(FileStore::write(&tmp("empty2"), &Mat::zeros(3, 0), None).is_err());
+    }
+}

@@ -18,6 +18,25 @@ pub fn row_norms(x: &Mat) -> Vec<f64> {
     (0..x.rows).map(|i| dot(x.row(i), x.row(i))).collect()
 }
 
+/// One Gram entry κ(x_i, x_j) from two feature rows and their hoisted
+/// squared norms (`ni`/`nj` are only read for RBF; pass 0.0 for linear).
+///
+/// This is the SINGLE entry kernel behind every row-mode backend —
+/// resident ([`gram_row_hoisted`]) and out-of-core
+/// ([`crate::kernel::matrix::StreamingGram`]) — and its arithmetic is
+/// identical to [`full_gram`]'s, so backends stay bit-identical no
+/// matter where the rows come from.
+#[inline]
+pub fn kernel_entry_hoisted(kernel: KernelKind, xi: &[f64], xj: &[f64], ni: f64, nj: f64) -> f64 {
+    match kernel {
+        KernelKind::Linear => dot(xi, xj) + 1.0,
+        KernelKind::Rbf { gamma } => {
+            let d = (ni + nj - 2.0 * dot(xi, xj)).max(0.0);
+            (-gamma * d).exp()
+        }
+    }
+}
+
 /// One row of K(X, X) with the squared-norm vector hoisted by the
 /// caller (row-mode backends compute `norms` once, not per row).
 ///
@@ -36,14 +55,13 @@ pub fn gram_row_hoisted(
     match kernel {
         KernelKind::Linear => {
             for (j, o) in out.iter_mut().enumerate() {
-                *o = dot(xi, x.row(j)) + 1.0;
+                *o = kernel_entry_hoisted(kernel, xi, x.row(j), 0.0, 0.0);
             }
         }
-        KernelKind::Rbf { gamma } => {
+        KernelKind::Rbf { .. } => {
             let ni = norms[i];
             for (j, o) in out.iter_mut().enumerate() {
-                let d = (ni + norms[j] - 2.0 * dot(xi, x.row(j))).max(0.0);
-                *o = (-gamma * d).exp();
+                *o = kernel_entry_hoisted(kernel, xi, x.row(j), ni, norms[j]);
             }
         }
     }

@@ -20,8 +20,15 @@
 //!   LRU worst case (budget < l ⇒ every access misses) and degrade to
 //!   streaming recomputation — correct, memory-bounded, but O(l²·d)
 //!   per sweep, which is the price of not holding Q.
+//! * [`StreamingGram`] — rows computed from a
+//!   [`FeatureStore`](crate::data::store::FeatureStore), so *x itself*
+//!   is out of core: peak resident feature memory is one read chunk,
+//!   not l·d.  Compose with either LRU cache
+//!   ([`LruRowCache::new_streaming`] /
+//!   [`ShardedLruRowCache::new_streaming`], the `--gram stream[:rows]`
+//!   policy) so hot rows stay resident.
 //!
-//! Both backends produce **bit-identical** entries (they share the
+//! All backends produce **bit-identical** entries (they share the
 //! per-row kernel in [`crate::kernel::gram`]), so swapping backends
 //! never changes screening decisions or solver iterates — only time and
 //! memory.  [`Row`] handles returned by `row()` are refcounted for the
@@ -55,9 +62,10 @@ use std::sync::{Arc, Mutex};
 
 use super::gram::{
     default_build_threads, full_gram_threaded, full_q_threaded, gram_row_hoisted,
-    hoisted_diag, labelled_row_hoisted, row_norms, shard_ranges,
+    hoisted_diag, kernel_entry_hoisted, labelled_row_hoisted, row_norms, shard_ranges,
 };
 use super::KernelKind;
+use crate::data::store::{FeatureStore, FileStore};
 use crate::util::linalg::{dot, norm2};
 use crate::util::Mat;
 
@@ -66,6 +74,15 @@ pub const DENSE_AUTO_LIMIT: usize = 8192;
 
 /// Default row budget for the LRU backend (≈ budget·l·8 bytes resident).
 pub const DEFAULT_LRU_ROWS: usize = 1024;
+
+/// Default feature rows per streamed chunk read (peak resident x for a
+/// streaming sweep is `chunk · d · 8` bytes plus one row).
+pub const DEFAULT_STREAM_CHUNK: usize = 256;
+
+/// Auto policy: once Q is already past [`DENSE_AUTO_LIMIT`], spill x to
+/// a temp feature store and stream Gram rows from disk when the feature
+/// matrix itself (8·l·d bytes) exceeds this budget.
+pub const STREAM_AUTO_X_BYTES: usize = 1 << 30;
 
 /// A borrowed or cache-held Q row.  Derefs to `[f64]`; the `Cached` and
 /// `Shared` variants keep the row alive across later evictions (`Shared`
@@ -484,6 +501,265 @@ impl KernelMatrix for DenseGram {
     }
 }
 
+/// Out-of-core backend: Q rows computed on demand from a
+/// [`FeatureStore`], never holding x (or Q) resident.  Each row is
+/// produced by streaming the store in `chunk_rows`-row pages, so peak
+/// resident feature memory is `chunk_rows · d · 8` bytes plus one row —
+/// bounded by the chunk size, not l·d.
+///
+/// Entry arithmetic goes through [`kernel_entry_hoisted`] with the
+/// store's precomputed norms, so entries are **bit-identical** to every
+/// resident backend.  Thread-safe and `Sync` (the store hands each
+/// concurrent reader its own handle), so the shard-parallel sweeps fan
+/// out directly; it also composes with the bounded caches —
+/// [`LruRowCache::new_streaming`] / [`ShardedLruRowCache::new_streaming`]
+/// put an LRU in front of exactly this row computation.
+pub struct StreamingGram {
+    store: Arc<dyn FeatureStore>,
+    y: Option<Vec<f64>>,
+    kernel: KernelKind,
+    diag: Vec<f64>,
+    chunk_rows: usize,
+}
+
+impl StreamingGram {
+    /// Streaming labelled Q = diag(y) K diag(y) over the store's rows.
+    pub fn new_q(
+        store: Arc<dyn FeatureStore>,
+        y: &[f64],
+        kernel: KernelKind,
+        chunk_rows: usize,
+    ) -> Self {
+        assert_eq!(store.len(), y.len());
+        Self::new(store, Some(y.to_vec()), kernel, chunk_rows)
+    }
+
+    /// Streaming unlabelled H over the store's rows.
+    pub fn new_gram(store: Arc<dyn FeatureStore>, kernel: KernelKind, chunk_rows: usize) -> Self {
+        Self::new(store, None, kernel, chunk_rows)
+    }
+
+    fn new(
+        store: Arc<dyn FeatureStore>,
+        y: Option<Vec<f64>>,
+        kernel: KernelKind,
+        chunk_rows: usize,
+    ) -> Self {
+        let diag = hoisted_diag(store.norms(), y.as_deref(), kernel);
+        StreamingGram { store, y, kernel, diag, chunk_rows: chunk_rows.max(1) }
+    }
+
+    /// The backing feature store.
+    pub fn store(&self) -> &Arc<dyn FeatureStore> {
+        &self.store
+    }
+
+    /// Rows per streamed page read.
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Compute row i of Q into `out` (allocating scratch; the sweeps
+    /// below hoist their buffers via [`Self::compute_row_with`]).
+    pub fn compute_row(&self, i: usize, out: &mut [f64]) {
+        let d = self.store.dim();
+        let mut xi = vec![0.0; d];
+        let mut page = vec![0.0; self.page_len()];
+        self.compute_row_with(i, out, &mut xi, &mut page);
+    }
+
+    /// Length of the chunk page buffer a sweep should hoist.
+    fn page_len(&self) -> usize {
+        self.chunk_rows.min(self.store.len()) * self.store.dim()
+    }
+
+    /// Row computation with caller-hoisted scratch: `xi` holds row i
+    /// (length d), `page` one chunk of rows (length [`Self::page_len`]).
+    fn compute_row_with(&self, i: usize, out: &mut [f64], xi: &mut [f64], page: &mut [f64]) {
+        let l = self.store.len();
+        let d = self.store.dim();
+        debug_assert_eq!(out.len(), l);
+        self.store.row_into(i, xi);
+        let norms = self.store.norms();
+        let ni = norms[i];
+        let mut lo = 0;
+        while lo < l {
+            let hi = (lo + self.chunk_rows).min(l);
+            let block = &mut page[..(hi - lo) * d];
+            self.store.rows_into(lo, hi, block);
+            for (k, o) in out[lo..hi].iter_mut().enumerate() {
+                let xj = &block[k * d..(k + 1) * d];
+                *o = kernel_entry_hoisted(self.kernel, xi, xj, ni, norms[lo + k]);
+            }
+            lo = hi;
+        }
+        // same label scaling expression as `labelled_row_hoisted`
+        if let Some(y) = &self.y {
+            let yi = y[i];
+            for (o, &yj) in out.iter_mut().zip(y.iter()) {
+                *o = *o * yi * yj;
+            }
+        }
+    }
+
+    /// Serial row sweep over `rows`, writing `y1[i] = q_i·x1` (and
+    /// `y2[i] = q_i·x2` when given) — one row materialisation serves
+    /// both products, exactly like the resident backends' fused sweeps.
+    fn sweep(
+        &self,
+        start: usize,
+        x1: &[f64],
+        x2: Option<&[f64]>,
+        y1: &mut [f64],
+        mut y2: Option<&mut [f64]>,
+    ) {
+        let mut scratch = vec![0.0; self.store.len()];
+        let mut xi = vec![0.0; self.store.dim()];
+        let mut page = vec![0.0; self.page_len()];
+        for (k, o1) in y1.iter_mut().enumerate() {
+            self.compute_row_with(start + k, &mut scratch, &mut xi, &mut page);
+            *o1 = dot(&scratch, x1);
+            if let (Some(x2), Some(y2)) = (x2, y2.as_deref_mut()) {
+                y2[k] = dot(&scratch, x2);
+            }
+        }
+    }
+}
+
+impl KernelMatrix for StreamingGram {
+    fn dims(&self) -> usize {
+        self.store.len()
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        self.diag[i]
+    }
+
+    fn row(&self, i: usize) -> Row<'_> {
+        let mut buf = vec![0.0; self.dims()];
+        self.compute_row(i, &mut buf);
+        Row::Shared(buf.into())
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let l = self.dims();
+        assert_eq!(x.len(), l);
+        assert_eq!(y.len(), l);
+        self.sweep(0, x, None, y, None);
+    }
+
+    fn matvec2(&self, x1: &[f64], x2: &[f64], y1: &mut [f64], y2: &mut [f64]) {
+        let l = self.dims();
+        assert_eq!(x1.len(), l);
+        assert_eq!(x2.len(), l);
+        assert_eq!(y1.len(), l);
+        assert_eq!(y2.len(), l);
+        self.sweep(0, x1, Some(x2), y1, Some(y2));
+    }
+
+    fn par_matvec(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        let l = self.dims();
+        assert_eq!(x.len(), l);
+        assert_eq!(y.len(), l);
+        let t = threads.max(1).min(l.max(1));
+        if t <= 1 {
+            return self.matvec(x, y);
+        }
+        std::thread::scope(|s| {
+            let mut rest = y;
+            for (start, end) in shard_ranges(l, t) {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                s.spawn(move || self.sweep(start, x, None, chunk, None));
+            }
+        });
+    }
+
+    fn par_matvec2(
+        &self,
+        x1: &[f64],
+        x2: &[f64],
+        y1: &mut [f64],
+        y2: &mut [f64],
+        threads: usize,
+    ) {
+        let l = self.dims();
+        assert_eq!(x1.len(), l);
+        assert_eq!(x2.len(), l);
+        assert_eq!(y1.len(), l);
+        assert_eq!(y2.len(), l);
+        let t = threads.max(1).min(l.max(1));
+        if t <= 1 {
+            return self.matvec2(x1, x2, y1, y2);
+        }
+        std::thread::scope(|s| {
+            let mut r1 = y1;
+            let mut r2 = y2;
+            for (start, end) in shard_ranges(l, t) {
+                let (c1, t1) = std::mem::take(&mut r1).split_at_mut(end - start);
+                let (c2, t2) = std::mem::take(&mut r2).split_at_mut(end - start);
+                r1 = t1;
+                r2 = t2;
+                s.spawn(move || self.sweep(start, x1, Some(x2), c1, Some(c2)));
+            }
+        });
+    }
+
+    fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
+        Some(self)
+    }
+}
+
+/// The on-demand Q-row engine behind the bounded caches: either the
+/// resident feature matrix or an out-of-core [`StreamingGram`].  One
+/// implementation per source keeps rows bit-identical across every
+/// cache that wraps them.
+enum RowEngine {
+    Mem {
+        x: Mat,
+        y: Option<Vec<f64>>,
+        kernel: KernelKind,
+        norms: Vec<f64>,
+        diag: Vec<f64>,
+    },
+    Stream(StreamingGram),
+}
+
+impl RowEngine {
+    fn mem(x: &Mat, y: Option<Vec<f64>>, kernel: KernelKind) -> Self {
+        let norms = row_norms(x);
+        let diag = hoisted_diag(&norms, y.as_deref(), kernel);
+        RowEngine::Mem { x: x.clone(), y, kernel, norms, diag }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            RowEngine::Mem { x, .. } => x.rows,
+            RowEngine::Stream(sg) => sg.dims(),
+        }
+    }
+
+    fn diag(&self, i: usize) -> f64 {
+        match self {
+            RowEngine::Mem { diag, .. } => diag[i],
+            RowEngine::Stream(sg) => KernelMatrix::diag(sg, i),
+        }
+    }
+
+    fn compute_row(&self, i: usize, out: &mut [f64]) {
+        match self {
+            RowEngine::Mem { x, y, kernel, norms, .. } => {
+                labelled_row_hoisted(x, norms, y.as_deref(), i, *kernel, out)
+            }
+            RowEngine::Stream(sg) => sg.compute_row(i, out),
+        }
+    }
+
+    fn out_of_core(&self) -> bool {
+        matches!(self, RowEngine::Stream(_))
+    }
+}
+
 struct LruEntry {
     data: Rc<[f64]>,
     last_used: u64,
@@ -502,15 +778,13 @@ struct LruInner {
 /// The RBF squared-norm vector and the diagonal are hoisted to
 /// construction ([`row_norms`]), so a row miss costs one O(l·d) pass of
 /// dot products — never the O(l·d) per-j norm recomputation of naive
-/// row mode.  Owns a private copy of the feature matrix (O(l·d) — small
-/// next to the O(l²) it avoids).  Single-threaded (`RefCell`); one
+/// row mode.  The row engine is either a private copy of the feature
+/// matrix (O(l·d) — small next to the O(l²) it avoids) or, via
+/// [`Self::new_streaming`], an out-of-core [`StreamingGram`] — then x
+/// never becomes resident at all.  Single-threaded (`RefCell`); one
 /// instance per worker.
 pub struct LruRowCache {
-    x: Mat,
-    y: Option<Vec<f64>>,
-    kernel: KernelKind,
-    norms: Vec<f64>,
-    diag: Vec<f64>,
+    engine: RowEngine,
     budget_rows: usize,
     inner: RefCell<LruInner>,
 }
@@ -519,23 +793,25 @@ impl LruRowCache {
     /// Row-cached labelled Q = diag(y) K diag(y) for (x, y).
     pub fn new_q(x: &Mat, y: &[f64], kernel: KernelKind, budget_rows: usize) -> Self {
         assert_eq!(x.rows, y.len());
-        Self::new(x, Some(y.to_vec()), kernel, budget_rows)
+        Self::with_engine(RowEngine::mem(x, Some(y.to_vec()), kernel), budget_rows)
     }
 
     /// Row-cached unlabelled H for x.
     pub fn new_gram(x: &Mat, kernel: KernelKind, budget_rows: usize) -> Self {
-        Self::new(x, None, kernel, budget_rows)
+        Self::with_engine(RowEngine::mem(x, None, kernel), budget_rows)
     }
 
-    fn new(x: &Mat, y: Option<Vec<f64>>, kernel: KernelKind, budget_rows: usize) -> Self {
-        let norms = row_norms(x);
-        let diag = hoisted_diag(&norms, y.as_deref(), kernel);
+    /// Put this bounded LRU in front of an out-of-core streaming
+    /// backend: rows come off the feature store on a miss, and neither
+    /// x nor Q is ever resident beyond `budget_rows · l · 8` bytes plus
+    /// the stream chunk.
+    pub fn new_streaming(sg: StreamingGram, budget_rows: usize) -> Self {
+        Self::with_engine(RowEngine::Stream(sg), budget_rows)
+    }
+
+    fn with_engine(engine: RowEngine, budget_rows: usize) -> Self {
         LruRowCache {
-            x: x.clone(),
-            y,
-            kernel,
-            norms,
-            diag,
+            engine,
             budget_rows: budget_rows.max(1),
             inner: RefCell::new(LruInner {
                 rows: HashMap::new(),
@@ -551,20 +827,25 @@ impl LruRowCache {
         self.budget_rows
     }
 
+    /// Whether rows come from an out-of-core feature store.
+    pub fn out_of_core(&self) -> bool {
+        self.engine.out_of_core()
+    }
+
     /// Compute row i into `out` (no caching) — shared by `row` and the
     /// streaming `matvec`.
     fn compute_row(&self, i: usize, out: &mut [f64]) {
-        labelled_row_hoisted(&self.x, &self.norms, self.y.as_deref(), i, self.kernel, out);
+        self.engine.compute_row(i, out);
     }
 }
 
 impl KernelMatrix for LruRowCache {
     fn dims(&self) -> usize {
-        self.x.rows
+        self.engine.len()
     }
 
     fn diag(&self, i: usize) -> f64 {
-        self.diag[i]
+        self.engine.diag(i)
     }
 
     fn row(&self, i: usize) -> Row<'_> {
@@ -580,7 +861,7 @@ impl KernelMatrix for LruRowCache {
             return Row::Cached(rc);
         }
         inner.misses += 1;
-        let mut buf = vec![0.0; self.x.rows];
+        let mut buf = vec![0.0; self.engine.len()];
         self.compute_row(i, &mut buf);
         let data: Rc<[f64]> = buf.into();
         while inner.rows.len() >= self.budget_rows {
@@ -680,13 +961,11 @@ struct ShardInner {
 /// ([`gram_row_hoisted`]), so rows are bit-identical to [`DenseGram`]
 /// and [`LruRowCache`].  Peak Q memory is at most
 /// `budget_rows · l · 8` bytes: the shard count is capped at the budget
-/// and each shard holds at most ⌊budget / shards⌋ rows.
+/// and each shard holds at most ⌊budget / shards⌋ rows.  Like the
+/// serial cache, the row engine is the resident feature matrix or
+/// (via [`Self::new_streaming`]) an out-of-core [`StreamingGram`].
 pub struct ShardedLruRowCache {
-    x: Mat,
-    y: Option<Vec<f64>>,
-    kernel: KernelKind,
-    norms: Vec<f64>,
-    diag: Vec<f64>,
+    engine: RowEngine,
     budget_per_shard: usize,
     /// Shard s owns rows `bounds[s]..bounds[s+1]` (strictly increasing).
     bounds: Vec<usize>,
@@ -704,24 +983,23 @@ impl ShardedLruRowCache {
         shards: usize,
     ) -> Self {
         assert_eq!(x.rows, y.len());
-        Self::new(x, Some(y.to_vec()), kernel, budget_rows, shards)
+        Self::with_engine(RowEngine::mem(x, Some(y.to_vec()), kernel), budget_rows, shards)
     }
 
     /// Sharded row-cached unlabelled H for x.
     pub fn new_gram(x: &Mat, kernel: KernelKind, budget_rows: usize, shards: usize) -> Self {
-        Self::new(x, None, kernel, budget_rows, shards)
+        Self::with_engine(RowEngine::mem(x, None, kernel), budget_rows, shards)
     }
 
-    fn new(
-        x: &Mat,
-        y: Option<Vec<f64>>,
-        kernel: KernelKind,
-        budget_rows: usize,
-        shards: usize,
-    ) -> Self {
-        let norms = row_norms(x);
-        let diag = hoisted_diag(&norms, y.as_deref(), kernel);
-        let l = x.rows;
+    /// Sharded bounded cache in front of an out-of-core streaming
+    /// backend (see [`LruRowCache::new_streaming`]); each worker's
+    /// misses stream from its own feature-store reader handle.
+    pub fn new_streaming(sg: StreamingGram, budget_rows: usize, shards: usize) -> Self {
+        Self::with_engine(RowEngine::Stream(sg), budget_rows, shards)
+    }
+
+    fn with_engine(engine: RowEngine, budget_rows: usize, shards: usize) -> Self {
+        let l = engine.len();
         // Shard count is additionally capped at the row budget so the
         // total resident capacity (ns · budget_per_shard) never exceeds
         // the configured budget — the bounded-memory contract survives
@@ -739,16 +1017,12 @@ impl ShardedLruRowCache {
                 })
             })
             .collect();
-        ShardedLruRowCache {
-            x: x.clone(),
-            y,
-            kernel,
-            norms,
-            diag,
-            budget_per_shard,
-            bounds,
-            shards,
-        }
+        ShardedLruRowCache { engine, budget_per_shard, bounds, shards }
+    }
+
+    /// Whether rows come from an out-of-core feature store.
+    pub fn out_of_core(&self) -> bool {
+        self.engine.out_of_core()
     }
 
     /// Number of LRU shards (≤ the construction-time worker count).
@@ -763,14 +1037,14 @@ impl ShardedLruRowCache {
     }
 
     fn shard_of(&self, i: usize) -> usize {
-        debug_assert!(i < self.x.rows);
+        debug_assert!(i < self.engine.len());
         self.bounds.partition_point(|&b| b <= i) - 1
     }
 
     /// Compute row i into `out` (no caching) — shared by the cache fill
     /// and the streaming sweeps.
     fn compute_row(&self, i: usize, out: &mut [f64]) {
-        labelled_row_hoisted(&self.x, &self.norms, self.y.as_deref(), i, self.kernel, out);
+        self.engine.compute_row(i, out);
     }
 
     /// Cache peek without stats/LRU updates (the streaming sweeps, like
@@ -797,7 +1071,7 @@ impl ShardedLruRowCache {
             }
             inner.misses += 1;
         }
-        let mut buf = vec![0.0; self.x.rows];
+        let mut buf = vec![0.0; self.engine.len()];
         self.compute_row(i, &mut buf);
         let data: Arc<[f64]> = buf.into();
         let mut inner = self.shards[s].lock().unwrap();
@@ -847,11 +1121,11 @@ impl ShardedLruRowCache {
 
 impl KernelMatrix for ShardedLruRowCache {
     fn dims(&self) -> usize {
-        self.x.rows
+        self.engine.len()
     }
 
     fn diag(&self, i: usize) -> f64 {
-        self.diag[i]
+        self.engine.diag(i)
     }
 
     fn row(&self, i: usize) -> Row<'_> {
@@ -995,29 +1269,41 @@ impl KernelMatrix for ShardedLruRowCache {
 }
 
 /// How to materialise Q — the CLI-facing backend policy
-/// (`--gram dense|lru[:rows]|auto`).
+/// (`--gram dense|lru[:rows]|stream[:rows]|auto`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GramPolicy {
-    /// Dense at or below [`DENSE_AUTO_LIMIT`] rows, LRU above.
+    /// Dense at or below [`DENSE_AUTO_LIMIT`] rows; above it the
+    /// bounded row cache, spilling x out of core once the feature
+    /// matrix itself passes [`STREAM_AUTO_X_BYTES`].
     Auto,
     /// Always the full parallel-built matrix.
     Dense,
     /// Always the bounded row cache with this row budget.
     Lru { budget_rows: usize },
+    /// Out of core: spill x to a temp feature store and stream Gram
+    /// rows from disk behind a bounded row cache of this budget —
+    /// neither Q nor x stays resident.
+    Stream { budget_rows: usize },
 }
 
 impl GramPolicy {
-    /// Parse `"auto"`, `"dense"`, `"lru"` or `"lru:<rows>"`.
+    /// Parse `"auto"`, `"dense"`, `"lru[:<rows>]"` or `"stream[:<rows>]"`.
     pub fn parse(s: &str) -> Option<GramPolicy> {
+        let budget = |rest: &str| rest.parse::<usize>().ok().filter(|&n| n > 0);
         match s {
             "auto" => Some(GramPolicy::Auto),
             "dense" => Some(GramPolicy::Dense),
             "lru" => Some(GramPolicy::Lru { budget_rows: DEFAULT_LRU_ROWS }),
-            other => other
-                .strip_prefix("lru:")
-                .and_then(|b| b.parse::<usize>().ok())
-                .filter(|&n| n > 0)
-                .map(|n| GramPolicy::Lru { budget_rows: n }),
+            "stream" => Some(GramPolicy::Stream { budget_rows: DEFAULT_LRU_ROWS }),
+            other => {
+                if let Some(rest) = other.strip_prefix("lru:") {
+                    budget(rest).map(|n| GramPolicy::Lru { budget_rows: n })
+                } else if let Some(rest) = other.strip_prefix("stream:") {
+                    budget(rest).map(|n| GramPolicy::Stream { budget_rows: n })
+                } else {
+                    None
+                }
+            }
         }
     }
 
@@ -1027,50 +1313,108 @@ impl GramPolicy {
         match *self {
             GramPolicy::Auto => l <= DENSE_AUTO_LIMIT,
             GramPolicy::Dense => true,
-            GramPolicy::Lru { .. } => false,
+            GramPolicy::Lru { .. } | GramPolicy::Stream { .. } => false,
+        }
+    }
+
+    /// Does this policy take the feature matrix out of core for an
+    /// l×d problem?  `Stream` always does; `Auto` once Q is past the
+    /// dense limit *and* x itself (8·l·d bytes) is past
+    /// [`STREAM_AUTO_X_BYTES`].
+    pub fn use_stream(&self, l: usize, d: usize) -> bool {
+        match *self {
+            GramPolicy::Stream { .. } => true,
+            GramPolicy::Auto => {
+                !self.use_dense(l) && l.saturating_mul(d).saturating_mul(8) > STREAM_AUTO_X_BYTES
+            }
+            GramPolicy::Dense | GramPolicy::Lru { .. } => false,
         }
     }
 
     fn lru_budget(&self) -> usize {
         match *self {
-            GramPolicy::Lru { budget_rows } => budget_rows,
+            GramPolicy::Lru { budget_rows } | GramPolicy::Stream { budget_rows } => budget_rows,
             _ => DEFAULT_LRU_ROWS,
+        }
+    }
+
+    /// The one backend constructor behind `q`/`gram`/`q_sharded`/
+    /// `gram_sharded`: dense when the policy densifies, otherwise a
+    /// bounded row cache whose engine is the resident matrix or — for
+    /// streaming selections — a spilled temp feature store.  Every
+    /// choice is entry-wise bit-identical; only time and memory differ.
+    fn build(
+        &self,
+        x: &Mat,
+        y: Option<&[f64]>,
+        kernel: KernelKind,
+        build_threads: usize,
+        sweep_threads: usize,
+    ) -> QBackend {
+        let l = x.rows;
+        if self.use_dense(l) {
+            let mat = match y {
+                Some(y) => full_q_threaded(x, y, kernel, build_threads),
+                None => full_gram_threaded(x, kernel, build_threads),
+            };
+            return QBackend::Dense(DenseGram::from_mat(mat));
+        }
+        let budget = self.lru_budget();
+        if self.use_stream(l, x.cols) {
+            // Spill failure (unwritable temp dir, disk full) falls
+            // through to the resident caches below: identical entries,
+            // only the memory goal degrades.
+            if let Ok(store) = FileStore::spill(x, None) {
+                let store: Arc<dyn FeatureStore> = Arc::new(store);
+                let sg = match y {
+                    Some(y) => StreamingGram::new_q(store, y, kernel, DEFAULT_STREAM_CHUNK),
+                    None => StreamingGram::new_gram(store, kernel, DEFAULT_STREAM_CHUNK),
+                };
+                return Self::wrap_streaming(sg, budget, sweep_threads);
+            }
+        }
+        if sweep_threads > 1 {
+            QBackend::Sharded(match y {
+                Some(y) => ShardedLruRowCache::new_q(x, y, kernel, budget, sweep_threads),
+                None => ShardedLruRowCache::new_gram(x, kernel, budget, sweep_threads),
+            })
+        } else {
+            QBackend::Lru(match y {
+                Some(y) => LruRowCache::new_q(x, y, kernel, budget),
+                None => LruRowCache::new_gram(x, kernel, budget),
+            })
+        }
+    }
+
+    /// Compose a streaming backend with the bounded caches: one LRU
+    /// shard per sweep worker when the path fans out, the serial cache
+    /// otherwise.
+    fn wrap_streaming(sg: StreamingGram, budget_rows: usize, sweep_threads: usize) -> QBackend {
+        if sweep_threads > 1 {
+            QBackend::Sharded(ShardedLruRowCache::new_streaming(sg, budget_rows, sweep_threads))
+        } else {
+            QBackend::Lru(LruRowCache::new_streaming(sg, budget_rows))
         }
     }
 
     /// Build the labelled-Q backend for (x, y) under this policy.
     pub fn q(&self, x: &Mat, y: &[f64], kernel: KernelKind) -> QBackend {
-        if self.use_dense(x.rows) {
-            QBackend::Dense(DenseGram::build_q(
-                x,
-                y,
-                kernel,
-                default_build_threads(x.rows),
-            ))
-        } else {
-            QBackend::Lru(LruRowCache::new_q(x, y, kernel, self.lru_budget()))
-        }
+        self.build(x, Some(y), kernel, default_build_threads(x.rows), 1)
     }
 
     /// Build the unlabelled-H backend for x under this policy.
     pub fn gram(&self, x: &Mat, kernel: KernelKind) -> QBackend {
-        if self.use_dense(x.rows) {
-            QBackend::Dense(DenseGram::build_gram(
-                x,
-                kernel,
-                default_build_threads(x.rows),
-            ))
-        } else {
-            QBackend::Lru(LruRowCache::new_gram(x, kernel, self.lru_budget()))
-        }
+        self.build(x, None, kernel, default_build_threads(x.rows), 1)
     }
 
     /// Build the labelled-Q backend for a shard-parallel path: dense
     /// policies build with [`Sharding::build_threads`] workers (so
     /// `Serial` really is serial end to end while `Auto` keeps the
-    /// builders' denser thread bound), LRU policies get a
+    /// builders' denser thread bound), bounded policies get a
     /// [`ShardedLruRowCache`] with one LRU shard per resolved sweep
-    /// worker.  All choices are entry-wise bit-identical.
+    /// worker (rows streamed from a spilled feature store when the
+    /// policy takes x out of core).  All choices are entry-wise
+    /// bit-identical.
     pub fn q_sharded(
         &self,
         x: &Mat,
@@ -1079,55 +1423,70 @@ impl GramPolicy {
         shard: Sharding,
     ) -> QBackend {
         let l = x.rows;
-        if self.use_dense(l) {
-            QBackend::Dense(DenseGram::build_q(x, y, kernel, shard.build_threads(l)))
-        } else {
-            let t = shard.resolve(l);
-            if t > 1 {
-                QBackend::Sharded(ShardedLruRowCache::new_q(
-                    x,
-                    y,
-                    kernel,
-                    self.lru_budget(),
-                    t,
-                ))
-            } else {
-                QBackend::Lru(LruRowCache::new_q(x, y, kernel, self.lru_budget()))
-            }
-        }
-    }
-
-    /// The backend implementation [`Self::q_sharded`] /
-    /// [`Self::gram_sharded`] select for an l-row problem under `shard`
-    /// — the label benches and telemetry record, kept next to the
-    /// selection so it cannot drift from it.
-    pub fn backend_name(&self, l: usize, shard: Sharding) -> &'static str {
-        if self.use_dense(l) {
-            "dense"
-        } else if shard.resolve(l) > 1 {
-            "sharded-lru"
-        } else {
-            "lru"
-        }
+        self.build(x, Some(y), kernel, shard.build_threads(l), shard.resolve(l))
     }
 
     /// Build the unlabelled-H backend for a shard-parallel path (see
     /// [`Self::q_sharded`]).
     pub fn gram_sharded(&self, x: &Mat, kernel: KernelKind, shard: Sharding) -> QBackend {
         let l = x.rows;
+        self.build(x, None, kernel, shard.build_threads(l), shard.resolve(l))
+    }
+
+    /// Labelled-Q backend over an already-open feature store (the
+    /// `path --store` flow — x stays out of core in the bounded
+    /// regimes).  Dense policies load x once ([`FeatureStore::to_mat`],
+    /// one chunked file pass — 8·l·d bytes, smaller than the 8·l² Q
+    /// being built) and run the parallel resident builder; bounded
+    /// policies cache streamed rows.  Either way the entries equal the
+    /// resident builders' bit for bit.
+    pub fn q_streaming(
+        &self,
+        store: Arc<dyn FeatureStore>,
+        y: &[f64],
+        kernel: KernelKind,
+        shard: Sharding,
+    ) -> QBackend {
+        let l = store.len();
         if self.use_dense(l) {
-            QBackend::Dense(DenseGram::build_gram(x, kernel, shard.build_threads(l)))
+            let x = store.to_mat();
+            return QBackend::Dense(DenseGram::build_q(&x, y, kernel, shard.build_threads(l)));
+        }
+        let sg = StreamingGram::new_q(store, y, kernel, DEFAULT_STREAM_CHUNK);
+        Self::wrap_streaming(sg, self.lru_budget(), shard.resolve(l))
+    }
+
+    /// Unlabelled-H backend over an already-open feature store (see
+    /// [`Self::q_streaming`]).
+    pub fn gram_streaming(
+        &self,
+        store: Arc<dyn FeatureStore>,
+        kernel: KernelKind,
+        shard: Sharding,
+    ) -> QBackend {
+        let l = store.len();
+        if self.use_dense(l) {
+            let x = store.to_mat();
+            return QBackend::Dense(DenseGram::build_gram(&x, kernel, shard.build_threads(l)));
+        }
+        let sg = StreamingGram::new_gram(store, kernel, DEFAULT_STREAM_CHUNK);
+        Self::wrap_streaming(sg, self.lru_budget(), shard.resolve(l))
+    }
+
+    /// The backend implementation [`Self::q_sharded`] /
+    /// [`Self::gram_sharded`] select for an l×d problem under `shard`
+    /// — the label benches and telemetry record, kept next to the
+    /// selection so it cannot drift from it (modulo the spill-failure
+    /// fallback, which is exceptional).
+    pub fn backend_name(&self, l: usize, d: usize, shard: Sharding) -> &'static str {
+        if self.use_dense(l) {
+            "dense"
         } else {
-            let t = shard.resolve(l);
-            if t > 1 {
-                QBackend::Sharded(ShardedLruRowCache::new_gram(
-                    x,
-                    kernel,
-                    self.lru_budget(),
-                    t,
-                ))
-            } else {
-                QBackend::Lru(LruRowCache::new_gram(x, kernel, self.lru_budget()))
+            match (self.use_stream(l, d), shard.resolve(l) > 1) {
+                (true, true) => "stream-sharded-lru",
+                (true, false) => "stream-lru",
+                (false, true) => "sharded-lru",
+                (false, false) => "lru",
             }
         }
     }
@@ -1138,6 +1497,10 @@ pub enum QBackend {
     Dense(DenseGram),
     Lru(LruRowCache),
     Sharded(ShardedLruRowCache),
+    /// Uncached out-of-core streaming (every row access recomputes from
+    /// the feature store) — the conformance baseline the cached
+    /// streaming compositions are checked against.
+    Stream(StreamingGram),
 }
 
 impl QBackend {
@@ -1145,15 +1508,18 @@ impl QBackend {
     pub fn dense_mat(&self) -> Option<&Mat> {
         match self {
             QBackend::Dense(d) => Some(d.mat()),
-            QBackend::Lru(_) | QBackend::Sharded(_) => None,
+            QBackend::Lru(_) | QBackend::Sharded(_) | QBackend::Stream(_) => None,
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             QBackend::Dense(_) => "dense",
+            QBackend::Lru(c) if c.out_of_core() => "stream-lru",
             QBackend::Lru(_) => "lru",
+            QBackend::Sharded(c) if c.out_of_core() => "stream-sharded-lru",
             QBackend::Sharded(_) => "sharded-lru",
+            QBackend::Stream(_) => "stream",
         }
     }
 }
@@ -1164,6 +1530,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.dims(),
             QBackend::Lru(c) => c.dims(),
             QBackend::Sharded(c) => c.dims(),
+            QBackend::Stream(s) => s.dims(),
         }
     }
 
@@ -1172,6 +1539,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.diag(i),
             QBackend::Lru(c) => c.diag(i),
             QBackend::Sharded(c) => c.diag(i),
+            QBackend::Stream(s) => s.diag(i),
         }
     }
 
@@ -1180,6 +1548,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.row(i),
             QBackend::Lru(c) => c.row(i),
             QBackend::Sharded(c) => c.row(i),
+            QBackend::Stream(s) => s.row(i),
         }
     }
 
@@ -1188,6 +1557,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.matvec(x, y),
             QBackend::Lru(c) => c.matvec(x, y),
             QBackend::Sharded(c) => c.matvec(x, y),
+            QBackend::Stream(s) => s.matvec(x, y),
         }
     }
 
@@ -1196,6 +1566,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.matvec2(x1, x2, y1, y2),
             QBackend::Lru(c) => c.matvec2(x1, x2, y1, y2),
             QBackend::Sharded(c) => c.matvec2(x1, x2, y1, y2),
+            QBackend::Stream(s) => s.matvec2(x1, x2, y1, y2),
         }
     }
 
@@ -1204,6 +1575,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.power_eig_max(iters),
             QBackend::Lru(c) => c.power_eig_max(iters),
             QBackend::Sharded(c) => c.power_eig_max(iters),
+            QBackend::Stream(s) => s.power_eig_max(iters),
         }
     }
 
@@ -1212,6 +1584,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.cache_stats(),
             QBackend::Lru(c) => c.cache_stats(),
             QBackend::Sharded(c) => c.cache_stats(),
+            QBackend::Stream(s) => s.cache_stats(),
         }
     }
 
@@ -1220,6 +1593,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.par_matvec(x, y, threads),
             QBackend::Lru(c) => c.par_matvec(x, y, threads),
             QBackend::Sharded(c) => c.par_matvec(x, y, threads),
+            QBackend::Stream(s) => s.par_matvec(x, y, threads),
         }
     }
 
@@ -1235,6 +1609,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => d.par_matvec2(x1, x2, y1, y2, threads),
             QBackend::Lru(c) => c.par_matvec2(x1, x2, y1, y2, threads),
             QBackend::Sharded(c) => c.par_matvec2(x1, x2, y1, y2, threads),
+            QBackend::Stream(s) => s.par_matvec2(x1, x2, y1, y2, threads),
         }
     }
 
@@ -1243,6 +1618,7 @@ impl KernelMatrix for QBackend {
             QBackend::Dense(d) => Some(d),
             QBackend::Lru(_) => None,
             QBackend::Sharded(c) => Some(c),
+            QBackend::Stream(s) => Some(s),
         }
     }
 }
@@ -1418,7 +1794,16 @@ mod tests {
             GramPolicy::parse("lru:512"),
             Some(GramPolicy::Lru { budget_rows: 512 })
         );
+        assert_eq!(
+            GramPolicy::parse("stream"),
+            Some(GramPolicy::Stream { budget_rows: DEFAULT_LRU_ROWS })
+        );
+        assert_eq!(
+            GramPolicy::parse("stream:64"),
+            Some(GramPolicy::Stream { budget_rows: 64 })
+        );
         assert_eq!(GramPolicy::parse("lru:0"), None);
+        assert_eq!(GramPolicy::parse("stream:0"), None);
         assert_eq!(GramPolicy::parse("sparse"), None);
     }
 
@@ -1604,10 +1989,11 @@ mod tests {
             "lru"
         );
         // backend_name predicts exactly what q_sharded builds
+        let stream_pol = GramPolicy::Stream { budget_rows: 8 };
         for shard in [Sharding::Serial, Sharding::Threads(3), Sharding::Auto] {
-            for p in [pol, GramPolicy::Dense, GramPolicy::Auto] {
+            for p in [pol, GramPolicy::Dense, GramPolicy::Auto, stream_pol] {
                 assert_eq!(
-                    p.backend_name(32, shard),
+                    p.backend_name(32, 2, shard),
                     p.q_sharded(&x, &y, k, shard).name(),
                     "{p:?} {shard:?}"
                 );
@@ -1652,5 +2038,142 @@ mod tests {
             Sharding::Auto.build_threads(10_000),
             super::default_build_threads(10_000)
         );
+    }
+
+    use crate::data::store::MemStore;
+
+    fn stream_q(x: &Mat, y: &[f64], kernel: KernelKind, chunk: usize) -> StreamingGram {
+        let store: Arc<dyn FeatureStore> = Arc::new(FileStore::spill(x, None).unwrap());
+        StreamingGram::new_q(store, y, kernel, chunk)
+    }
+
+    #[test]
+    fn streaming_rows_match_dense_bit_for_bit() {
+        run_cases(6, 0x57BEA, |g| {
+            let l = g.usize(4, 28);
+            let d = g.usize(1, 5);
+            let (x, y) = random_xy(g, l, d);
+            let gamma = g.f64(0.1, 2.0);
+            // chunk sizes below, at, and above l all chunk correctly
+            let chunk = g.usize(1, l + 3);
+            for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma }] {
+                let dense = DenseGram::build_q(&x, &y, kernel, 3);
+                let sg = stream_q(&x, &y, kernel, chunk);
+                assert_eq!(sg.dims(), l);
+                for i in 0..l {
+                    let r = sg.row(i);
+                    assert_eq!(&r[..], dense.mat().row(i), "row {i} ({kernel:?} chunk={chunk})");
+                    assert_eq!(sg.diag(i).to_bits(), dense.diag(i).to_bits(), "diag {i}");
+                }
+                let v1 = g.vec_f64(l, -1.0, 1.0);
+                let v2 = g.vec_f64(l, -1.0, 1.0);
+                let mut want1 = vec![0.0; l];
+                let mut want2 = vec![0.0; l];
+                dense.matvec(&v1, &mut want1);
+                dense.matvec(&v2, &mut want2);
+                for threads in [1usize, 2, 4] {
+                    let mut a = vec![0.0; l];
+                    sg.par_matvec(&v1, &mut a, threads);
+                    assert_eq!(a, want1, "par_matvec t={threads}");
+                    let mut b1 = vec![0.0; l];
+                    let mut b2 = vec![0.0; l];
+                    sg.par_matvec2(&v1, &v2, &mut b1, &mut b2, threads);
+                    assert_eq!(b1, want1, "par_matvec2 t={threads}");
+                    assert_eq!(b2, want2, "par_matvec2 t={threads}");
+                }
+                assert_eq!(
+                    sg.power_eig_max(25).to_bits(),
+                    dense.power_eig_max(25).to_bits(),
+                    "power iteration"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn streaming_gram_over_memstore_matches_filestore() {
+        let mut g = Gen::new(0x5EE);
+        let (x, _) = random_xy(&mut g, 17, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.8 };
+        let mem: Arc<dyn FeatureStore> = Arc::new(MemStore::new(x.clone()));
+        let file: Arc<dyn FeatureStore> = Arc::new(FileStore::spill(&x, None).unwrap());
+        let a = StreamingGram::new_gram(mem, kernel, 4);
+        let b = StreamingGram::new_gram(file, kernel, 4);
+        for i in 0..17 {
+            assert_eq!(&a.row(i)[..], &b.row(i)[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_caches_match_dense_within_budget() {
+        let mut g = Gen::new(0x5CA);
+        let (x, y) = random_xy(&mut g, 26, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.6 };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let lru = LruRowCache::new_streaming(stream_q(&x, &y, kernel, 5), 4);
+        let sharded = ShardedLruRowCache::new_streaming(stream_q(&x, &y, kernel, 5), 8, 3);
+        assert!(lru.out_of_core());
+        assert!(sharded.out_of_core());
+        for i in 0..26 {
+            assert_eq!(&lru.row(i)[..], dense.mat().row(i), "lru row {i}");
+            assert_eq!(&sharded.row(i)[..], dense.mat().row(i), "sharded row {i}");
+        }
+        let (_, misses, resident) = lru.cache_stats();
+        assert!(misses > 0);
+        assert!(resident <= 4, "resident={resident}");
+        let (_, _, resident) = sharded.cache_stats();
+        assert!(resident <= 3 * sharded.budget_per_shard());
+        // cached re-reads hit without touching the store again
+        let _ = lru.row(25);
+        let (hits, _, _) = lru.cache_stats();
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn stream_policy_composes_with_caches() {
+        let mut g = Gen::new(0x57C);
+        let (x, y) = random_xy(&mut g, 32, 2);
+        let k = KernelKind::Linear;
+        let pol = GramPolicy::Stream { budget_rows: 8 };
+        assert!(!pol.use_dense(32));
+        assert!(pol.use_stream(32, 2));
+        assert_eq!(pol.q_sharded(&x, &y, k, Sharding::Serial).name(), "stream-lru");
+        assert_eq!(
+            pol.q_sharded(&x, &y, k, Sharding::Threads(3)).name(),
+            "stream-sharded-lru"
+        );
+        let dense = GramPolicy::Dense.q(&x, &y, k);
+        let b = pol.q_sharded(&x, &y, k, Sharding::Threads(3));
+        for i in 0..32 {
+            assert_eq!(&b.row(i)[..], &dense.row(i)[..], "row {i}");
+        }
+        // auto only goes out of core when x itself is past the budget
+        assert!(!GramPolicy::Auto.use_stream(DENSE_AUTO_LIMIT + 1, 2));
+        let huge_d = STREAM_AUTO_X_BYTES / (8 * (DENSE_AUTO_LIMIT + 1)) + 1;
+        assert!(GramPolicy::Auto.use_stream(DENSE_AUTO_LIMIT + 1, huge_d));
+        assert!(!GramPolicy::Auto.use_stream(DENSE_AUTO_LIMIT, huge_d));
+    }
+
+    #[test]
+    fn streaming_backends_over_open_store() {
+        let mut g = Gen::new(0x0CF);
+        let (x, y) = random_xy(&mut g, 20, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.9 };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let store: Arc<dyn FeatureStore> = Arc::new(FileStore::spill(&x, None).unwrap());
+        // dense policy materialises the full matrix from streamed rows
+        let q = GramPolicy::Dense.q_streaming(Arc::clone(&store), &y, kernel, Sharding::Serial);
+        assert_eq!(q.name(), "dense");
+        assert_eq!(q.dense_mat().unwrap(), dense.mat());
+        // bounded policy caches streamed rows
+        let pol = GramPolicy::Stream { budget_rows: 4 };
+        let q2 = pol.q_streaming(Arc::clone(&store), &y, kernel, Sharding::Threads(2));
+        assert_eq!(q2.name(), "stream-sharded-lru");
+        for i in 0..20 {
+            assert_eq!(&q2.row(i)[..], dense.mat().row(i), "row {i}");
+        }
+        let h = pol.gram_streaming(store, kernel, Sharding::Serial);
+        assert_eq!(h.name(), "stream-lru");
+        assert_eq!(h.dims(), 20);
     }
 }

@@ -4,33 +4,43 @@
 //!   train      train one ν-SVM / OC-SVM on a dataset (screened path)
 //!   path       run a full SRBO ν-path and print screening telemetry
 //!   grid       grid-search (ν × σ) model selection via the coordinator
+//!   convert    write a libsvm/csv file into the binary feature store
 //!   datasets   list the built-in Table-III benchmark fleet
 //!   runtime    load + smoke-test the PJRT artifacts
 //!
 //! Examples:
 //!   srbo path --dataset gauss2 --kernel rbf --sigma 1.0 --nu-from 0.1 \
 //!        --nu-to 0.5 --nu-step 0.02
+//!   srbo convert --input data/real/Banknote.libsvm --output banknote.fsb
+//!   srbo path --store banknote.fsb --gram stream:512 --threads 4
 //!   srbo grid --dataset Banknote --scale 0.2
 //!   srbo runtime
 
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
 use srbo::coordinator::grid::select_model;
 use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
-use srbo::data::{benchmark, split, synthetic, Dataset};
+use srbo::data::store::{FeatureStore, FileStore};
+use srbo::data::{benchmark, loader, split, synthetic, Dataset};
 use srbo::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use srbo::kernel::{default_build_threads, full_q_threaded, KernelKind};
 use srbo::runtime::Runtime;
 use srbo::stats::accuracy;
 use srbo::svm::nu::NuSvm;
 use srbo::util::cli::Args;
+use srbo::util::timer::PhaseTimes;
 use srbo::util::tsv::f;
 use srbo::util::Mat;
 use srbo::util::Timer;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: srbo <train|path|grid|datasets|runtime> [options]\n\
+        "usage: srbo <train|path|grid|convert|datasets|runtime> [options]\n\
          common options:\n\
            --dataset NAME    gauss1|gauss2|gauss5|circle|exclusive|spiral|<TableIII name>\n\
+           --store FILE      run `path` straight off a .fsb feature store\n\
+                             (out of core — x never loads into memory)\n\
            --scale S         shrink benchmark sizes (default 0.2)\n\
            --seed N          RNG seed (default 42)\n\
            --kernel K        linear|rbf (default rbf)\n\
@@ -38,16 +48,20 @@ fn usage() -> ! {
            --nu V            single nu for `train` (default 0.3)\n\
            --nu-from/--nu-to/--nu-step   path grid (default 0.1..0.5 step 0.02)\n\
            --solver S        dcdm|dcdm-paper|gqp (default dcdm)\n\
-           --gram G          dense|lru[:rows]|auto — Q backend (default auto:\n\
-                             parallel dense build below 8192 rows, bounded\n\
-                             LRU row cache above)\n\
+           --gram G          dense|lru[:rows]|stream[:rows]|auto — Q backend\n\
+                             (default auto: parallel dense build below 8192\n\
+                             rows, bounded LRU row cache above, out-of-core\n\
+                             streaming once x itself exceeds 1 GiB)\n\
            --threads T       auto|serial|N — shard-parallel path phases\n\
                              (default auto: one worker per core, capped by\n\
                              problem size; results are bit-identical to\n\
                              serial for any setting)\n\
            --no-screening    disable SRBO\n\
            --oneclass        OC-SVM family\n\
-           --workers N       grid workers (default: cores)"
+           --workers N       grid workers (default: cores)\n\
+         convert options:\n\
+           --input FILE      source .libsvm/.csv file (required)\n\
+           --output FILE     target feature store (default: input with .fsb)"
     );
     std::process::exit(2);
 }
@@ -90,7 +104,7 @@ fn gram_of(args: &Args) -> GramPolicy {
     match GramPolicy::parse(&s) {
         Some(p) => p,
         None => {
-            eprintln!("unknown gram backend {s} (want dense|lru[:rows]|auto)");
+            eprintln!("unknown gram backend {s} (want dense|lru[:rows]|stream[:rows]|auto)");
             usage()
         }
     }
@@ -165,7 +179,117 @@ fn cmd_train(args: &Args) {
     }
 }
 
+/// `path --store FILE`: the out-of-core flow — the feature store is
+/// opened, never loaded; Q rows stream from disk through the policy's
+/// backend.  Supervised when the store carries labels (unless
+/// `--oneclass` forces the H family); prints the same telemetry as the
+/// in-memory path plus the backend's cache counters.
+fn cmd_path_store(args: &Args, store_path: &str) {
+    let store = FileStore::open(Path::new(store_path)).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let labels = store.labels().map(<[f64]>::to_vec);
+    let l = store.len();
+    let kernel = kernel_of(args);
+    let mut cfg = PathConfig::new(nu_grid(args), kernel);
+    cfg.solver = solver_of(args);
+    cfg.screening = !args.flag("no-screening");
+    cfg.gram = gram_of(args);
+    cfg.shard = shard_of(args);
+    let oneclass = args.flag("oneclass") || labels.is_none();
+    if oneclass {
+        // mirror the in-memory flow: OC-SVM trains on the positive
+        // class only, and `NuPath::run_oneclass` requires nu·l > 1 —
+        // run_with_matrix alone enforces neither.
+        if labels.is_some() {
+            eprintln!(
+                "--oneclass with a labelled store would train on BOTH classes; \
+                 convert the positive rows only (OC-SVM trains on positives)"
+            );
+            std::process::exit(2);
+        }
+        if let Some(&nu_min) = cfg.nus.first() {
+            if nu_min * l as f64 <= 1.0 {
+                eprintln!("nu*l must exceed 1 for OC-SVM (nu_min={nu_min}, l={l})");
+                std::process::exit(2);
+            }
+        }
+    }
+    let store: Arc<dyn FeatureStore> = Arc::new(store);
+    let mut times = PhaseTimes::new();
+    let mut t = Timer::start();
+    let backend = match (&labels, oneclass) {
+        (Some(y), false) => cfg.gram.q_streaming(store, y, kernel, cfg.shard),
+        _ => cfg.gram.gram_streaming(store, kernel, cfg.shard),
+    };
+    times.add("gram", t.lap());
+    let wall = Timer::start();
+    let path = NuPath::run_with_matrix(&backend, &cfg, oneclass, times)
+        .expect("path failed");
+    let (hits, misses, resident) = backend.cache_stats();
+    println!(
+        "path store={store_path} l={l} backend={} kernel={} screening={} threads={}: \
+         {} grid points in {:.3}s",
+        backend.name(),
+        kernel.name(),
+        cfg.screening,
+        cfg.shard.resolve(l),
+        path.steps.len(),
+        wall.secs()
+    );
+    println!(
+        "  avg screening ratio {:.2}%  row cache: {hits} hits / {misses} misses / \
+         {resident} resident  phase times: {}",
+        path.avg_screening_ratio(),
+        path.metrics
+            .times
+            .entries()
+            .iter()
+            .map(|(k, v)| format!("{k}={}", f(*v, 3)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+}
+
+fn cmd_convert(args: &Args) {
+    let input = match args.get("input") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            eprintln!("convert needs --input FILE");
+            usage()
+        }
+    };
+    let d = loader::load_path(&input).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let output = args
+        .get("output")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| input.with_extension("fsb"));
+    let bytes = FileStore::write(&output, &d.x, Some(&d.y)).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    // re-open to prove the file validates end to end
+    let store = FileStore::open(&output).unwrap_or_else(|e| {
+        eprintln!("verification failed: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "wrote {}: l={} d={} labels={} norms=precomputed ({bytes} bytes)",
+        output.display(),
+        store.len(),
+        store.dim(),
+        store.labels().is_some()
+    );
+}
+
 fn cmd_path(args: &Args) {
+    if let Some(store_path) = args.get("store") {
+        return cmd_path_store(args, store_path);
+    }
     let d = load_dataset(args);
     let (train, test) = split::train_test_stratified(&d, 0.8, args.get_u64("seed", 42));
     let kernel = kernel_of(args);
@@ -317,6 +441,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("path") => cmd_path(&args),
         Some("grid") => cmd_grid(&args),
+        Some("convert") => cmd_convert(&args),
         Some("datasets") => cmd_datasets(),
         Some("runtime") => cmd_runtime(&args),
         _ => usage(),

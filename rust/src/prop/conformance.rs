@@ -1,0 +1,216 @@
+//! The backend-conformance harness: ONE shared invariant suite that any
+//! pair of [`KernelMatrix`] implementations can be run through, so every
+//! present and future backend inherits the bit-identity contract for
+//! free instead of growing its own ad-hoc test file.
+//!
+//! Two layers:
+//!
+//! * [`assert_matrix_conformance`] — entry-level: bit-identical
+//!   `diag`/`row`/`matvec`/`matvec2`/`quad` plus all `par_*` entry
+//!   points across threads {1, 2, 4}.
+//! * [`assert_path_conformance`] — end-to-end: a full SRBO ν-path on
+//!   the candidate reproduces the serial reference path's screening
+//!   codes and α bit for bit.
+//!
+//! [`build_backend`] constructs any named backend over the same (x, y)
+//! — `rust/tests/conformance.rs` instantiates the full backend matrix
+//! {`Mat`, `DenseGram`, `LruRowCache`, `ShardedLruRowCache`,
+//! `StreamingGram`, cached-streaming compositions} × {supervised,
+//! one-class}.  The `SRBO_TEST_GRAM` environment override
+//! ([`env_gram`] / [`backends_under_test`]) lets CI re-run the
+//! conformance and safety suites once per gram policy.
+
+use std::sync::Arc;
+
+use crate::bail;
+use crate::coordinator::path::{NuPath, PathConfig};
+use crate::data::store::{FeatureStore, FileStore};
+use crate::kernel::matrix::{
+    DenseGram, KernelMatrix, LruRowCache, QBackend, ShardedLruRowCache, Sharding,
+    StreamingGram,
+};
+use crate::kernel::KernelKind;
+use crate::prop::Gen;
+use crate::util::error::Result;
+use crate::util::Mat;
+
+/// Backend kinds [`build_backend`] understands — the full conformance
+/// matrix (`dense` = `DenseGram`, `lru` = `LruRowCache`, `sharded` =
+/// `ShardedLruRowCache`, `stream` = uncached `StreamingGram` over a
+/// spilled `FileStore`, and the two cached-streaming compositions).
+pub const BACKENDS: [&str; 6] =
+    ["dense", "lru", "sharded", "stream", "stream-lru", "stream-sharded"];
+
+/// The gram policy selected by `SRBO_TEST_GRAM`
+/// (`dense|lru|sharded|stream`), if any.  Unknown values panic so CI
+/// matrix typos surface instead of silently testing nothing.
+pub fn env_gram() -> Option<&'static str> {
+    match std::env::var("SRBO_TEST_GRAM") {
+        Ok(v) => Some(match v.as_str() {
+            "dense" => "dense",
+            "lru" => "lru",
+            "sharded" => "sharded",
+            "stream" => "stream",
+            other => panic!("SRBO_TEST_GRAM={other} (want dense|lru|sharded|stream)"),
+        }),
+        Err(_) => None,
+    }
+}
+
+/// Backend kinds the conformance suite instantiates this run: the full
+/// [`BACKENDS`] matrix by default, or the `SRBO_TEST_GRAM` selection
+/// (`stream` implies its cached compositions too — they share the
+/// policy).
+pub fn backends_under_test() -> Vec<&'static str> {
+    match env_gram() {
+        Some("stream") => vec!["stream", "stream-lru", "stream-sharded"],
+        Some(one) => vec![one],
+        None => BACKENDS.to_vec(),
+    }
+}
+
+/// Construct the named backend over (x, y) — `y: None` builds the
+/// unlabelled H (one-class family).  Streaming kinds spill x into a
+/// temp [`FileStore`] first, so they exercise the real on-disk path.
+pub fn build_backend(
+    kind: &str,
+    x: &Mat,
+    y: Option<&[f64]>,
+    kernel: KernelKind,
+    budget_rows: usize,
+    shards: usize,
+    chunk_rows: usize,
+) -> Result<QBackend> {
+    let streaming = || -> Result<StreamingGram> {
+        let store: Arc<dyn FeatureStore> = Arc::new(FileStore::spill(x, None)?);
+        Ok(match y {
+            Some(y) => StreamingGram::new_q(store, y, kernel, chunk_rows),
+            None => StreamingGram::new_gram(store, kernel, chunk_rows),
+        })
+    };
+    Ok(match kind {
+        "dense" => QBackend::Dense(match y {
+            Some(y) => DenseGram::build_q(x, y, kernel, 2),
+            None => DenseGram::build_gram(x, kernel, 2),
+        }),
+        "lru" => QBackend::Lru(match y {
+            Some(y) => LruRowCache::new_q(x, y, kernel, budget_rows),
+            None => LruRowCache::new_gram(x, kernel, budget_rows),
+        }),
+        "sharded" => QBackend::Sharded(match y {
+            Some(y) => ShardedLruRowCache::new_q(x, y, kernel, budget_rows, shards),
+            None => ShardedLruRowCache::new_gram(x, kernel, budget_rows, shards),
+        }),
+        "stream" => QBackend::Stream(streaming()?),
+        "stream-lru" => QBackend::Lru(LruRowCache::new_streaming(streaming()?, budget_rows)),
+        "stream-sharded" => {
+            QBackend::Sharded(ShardedLruRowCache::new_streaming(streaming()?, budget_rows, shards))
+        }
+        other => bail!("unknown conformance backend '{other}' (want one of {BACKENDS:?})"),
+    })
+}
+
+fn assert_bits(want: &[f64], got: &[f64], what: &str, ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: {what} length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: {what}[{i}] differs: {a} vs {b}");
+    }
+}
+
+/// Assert that `got` reproduces `want` bit for bit on every
+/// [`KernelMatrix`] entry point: `diag`, `row`, `matvec`, `matvec2`,
+/// `quad`, `power_eig_max`, and the `par_*` forms for threads
+/// {1, 2, 4}.  Probe vectors come from `g`, so property runners get a
+/// fresh probe per case while failures stay reproducible by seed.
+pub fn assert_matrix_conformance(
+    want: &dyn KernelMatrix,
+    got: &dyn KernelMatrix,
+    g: &mut Gen,
+    ctx: &str,
+) {
+    let l = want.dims();
+    assert_eq!(got.dims(), l, "{ctx}: dims");
+    for i in 0..l {
+        assert_eq!(
+            want.diag(i).to_bits(),
+            got.diag(i).to_bits(),
+            "{ctx}: diag[{i}] differs: {} vs {}",
+            want.diag(i),
+            got.diag(i)
+        );
+        assert_bits(&want.row(i), &got.row(i), &format!("row[{i}]"), ctx);
+    }
+    let v1 = g.vec_f64(l, -1.0, 1.0);
+    let v2 = g.vec_f64(l, -1.0, 1.0);
+    let mut want1 = vec![0.0; l];
+    let mut want2 = vec![0.0; l];
+    want.matvec(&v1, &mut want1);
+    want.matvec(&v2, &mut want2);
+    let want_quad = want.quad(&v1, &v2);
+    let want_eig = want.power_eig_max(20);
+
+    let mut got1 = vec![0.0; l];
+    got.matvec(&v1, &mut got1);
+    assert_bits(&want1, &got1, "matvec", ctx);
+    let mut f1 = vec![0.0; l];
+    let mut f2 = vec![0.0; l];
+    got.matvec2(&v1, &v2, &mut f1, &mut f2);
+    assert_bits(&want1, &f1, "matvec2.1", ctx);
+    assert_bits(&want2, &f2, "matvec2.2", ctx);
+    assert_eq!(got.quad(&v1, &v2).to_bits(), want_quad.to_bits(), "{ctx}: quad");
+    assert_eq!(
+        got.power_eig_max(20).to_bits(),
+        want_eig.to_bits(),
+        "{ctx}: power_eig_max"
+    );
+    for threads in [1usize, 2, 4] {
+        let tctx = format!("{ctx} t={threads}");
+        let mut p1 = vec![0.0; l];
+        got.par_matvec(&v1, &mut p1, threads);
+        assert_bits(&want1, &p1, "par_matvec", &tctx);
+        let mut q1 = vec![0.0; l];
+        let mut q2 = vec![0.0; l];
+        got.par_matvec2(&v1, &v2, &mut q1, &mut q2, threads);
+        assert_bits(&want1, &q1, "par_matvec2.1", &tctx);
+        assert_bits(&want2, &q2, "par_matvec2.2", &tctx);
+        assert_eq!(
+            got.par_quad(&v1, &v2, threads).to_bits(),
+            want_quad.to_bits(),
+            "{tctx}: par_quad"
+        );
+        assert_eq!(
+            got.par_power_eig_max(20, threads).to_bits(),
+            want_eig.to_bits(),
+            "{tctx}: par_power_eig_max"
+        );
+    }
+}
+
+/// Assert that a full SRBO ν-path over `got` (run under `cfg`, which may
+/// fan out over threads) reproduces the *serial* reference path over
+/// `want`: identical `ScreenCode` vectors, bit-identical α and
+/// screening ratios at every grid point.
+pub fn assert_path_conformance(
+    want: &dyn KernelMatrix,
+    got: &dyn KernelMatrix,
+    cfg: &PathConfig,
+    oneclass: bool,
+    ctx: &str,
+) {
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.shard = Sharding::Serial;
+    let a = NuPath::run_with_matrix(want, &ref_cfg, oneclass, Default::default())
+        .unwrap_or_else(|e| panic!("{ctx}: reference path failed: {e}"));
+    let b = NuPath::run_with_matrix(got, cfg, oneclass, Default::default())
+        .unwrap_or_else(|e| panic!("{ctx}: candidate path failed: {e}"));
+    assert_eq!(a.steps.len(), b.steps.len(), "{ctx}: step count");
+    for (k, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(sa.codes, sb.codes, "{ctx}: screening codes differ at step {k}");
+        assert_bits(&sa.alpha, &sb.alpha, &format!("alpha@step{k}"), ctx);
+        assert_eq!(
+            sa.screening_ratio.to_bits(),
+            sb.screening_ratio.to_bits(),
+            "{ctx}: screening ratio differs at step {k}"
+        );
+    }
+}

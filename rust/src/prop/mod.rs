@@ -1,5 +1,6 @@
 //! Minimal property-based testing framework (proptest is not in the
-//! offline crate set).
+//! offline crate set).  The [`conformance`] submodule hosts the shared
+//! kernel-backend conformance harness built on top of it.
 //!
 //! Provides seeded generators and an N-case runner with first-failure
 //! reporting including the case seed, so failures are reproducible:
@@ -11,6 +12,8 @@
 //!     assert!(v.iter().all(|x| x.abs() <= 1.0));
 //! });
 //! ```
+
+pub mod conformance;
 
 use crate::util::rng::Rng;
 

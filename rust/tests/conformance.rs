@@ -1,0 +1,141 @@
+//! The backend-conformance suite: every kernel-matrix backend —
+//! {`Mat` (reference), `DenseGram`, `LruRowCache`, `ShardedLruRowCache`,
+//! `StreamingGram` over a `FileStore`, and the cached-streaming
+//! compositions} × {supervised, one-class} — must be bit-identical on
+//! every trait entry point AND along a full SRBO ν-path (same screening
+//! codes, bit-identical α) for threads {1, 2, 4}.
+//!
+//! `SRBO_TEST_GRAM={dense,lru,sharded,stream}` narrows the matrix to
+//! one backend family; CI uses it to run this suite (and safety.rs)
+//! once per gram policy.
+
+use srbo::coordinator::path::PathConfig;
+use srbo::data::synthetic::gaussians;
+use srbo::kernel::matrix::Sharding;
+use srbo::kernel::{full_gram, full_q, KernelKind};
+use srbo::prop::conformance::{
+    assert_matrix_conformance, assert_path_conformance, backends_under_test, build_backend,
+};
+use srbo::prop::{run_cases, Gen};
+use srbo::util::Mat;
+
+fn random_xy(g: &mut Gen, l: usize, d: usize) -> (Mat, Vec<f64>) {
+    let rows: Vec<Vec<f64>> = (0..l).map(|_| g.vec_f64(d, -2.0, 2.0)).collect();
+    let y: Vec<f64> = (0..l).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+    (Mat::from_rows(&rows), y)
+}
+
+fn nu_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Entry-level conformance, supervised Q: random shapes, both kernels,
+/// a chunk size small enough that streaming really chunks.
+#[test]
+fn supervised_backends_conform_on_entries() {
+    run_cases(3, 0xC04F, |g| {
+        let l = g.usize(10, 26);
+        let d = g.usize(1, 4);
+        let (x, y) = random_xy(g, l, d);
+        let gamma = g.f64(0.2, 1.5);
+        for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma }] {
+            // the plain resident Mat is the reference backend
+            let reference = full_q(&x, &y, kernel);
+            for kind in backends_under_test() {
+                let got = build_backend(kind, &x, Some(&y), kernel, 5, 3, 4).unwrap();
+                assert_matrix_conformance(
+                    &reference,
+                    &got,
+                    g,
+                    &format!("{kind}/{kernel:?}/l={l}"),
+                );
+            }
+        }
+    });
+}
+
+/// Entry-level conformance, one-class H (unlabelled).
+#[test]
+fn oneclass_backends_conform_on_entries() {
+    run_cases(3, 0x0C04F, |g| {
+        let l = g.usize(10, 24);
+        let d = g.usize(1, 4);
+        let (x, _) = random_xy(g, l, d);
+        let kernel = KernelKind::Rbf { gamma: g.f64(0.2, 1.5) };
+        let reference = full_gram(&x, kernel);
+        for kind in backends_under_test() {
+            let got = build_backend(kind, &x, None, kernel, 5, 3, 4).unwrap();
+            assert_matrix_conformance(&reference, &got, g, &format!("oc/{kind}/l={l}"));
+        }
+    });
+}
+
+/// End-to-end path conformance, supervised: each backend reproduces the
+/// serial dense reference path bit for bit across threads {1, 2, 4} —
+/// including `StreamingGram` over a spilled `FileStore` with a chunk
+/// size ≪ l, the acceptance case for the out-of-core layer.
+#[test]
+fn supervised_paths_conform_across_threads() {
+    let d = gaussians(32, 2.5, 21); // l = 64
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.2, 0.32, 5);
+    let reference = full_q(&d.x, &d.y, kernel);
+    for kind in backends_under_test() {
+        for threads in [1usize, 2, 4] {
+            let mut cfg = PathConfig::new(nus.clone(), kernel);
+            cfg.shard = if threads == 1 {
+                Sharding::Serial
+            } else {
+                Sharding::Threads(threads)
+            };
+            let got = build_backend(kind, &d.x, Some(&d.y), kernel, 12, threads.max(2), 7)
+                .unwrap();
+            assert_path_conformance(
+                &reference,
+                &got,
+                &cfg,
+                false,
+                &format!("{kind} t={threads}"),
+            );
+        }
+    }
+}
+
+/// End-to-end path conformance, one-class.
+#[test]
+fn oneclass_paths_conform_across_threads() {
+    let d = gaussians(36, 1.0, 13).positives();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.25, 0.5, 4);
+    let reference = full_gram(&d.x, kernel);
+    for kind in backends_under_test() {
+        for threads in [1usize, 2, 4] {
+            let mut cfg = PathConfig::new(nus.clone(), kernel);
+            cfg.shard = if threads == 1 {
+                Sharding::Serial
+            } else {
+                Sharding::Threads(threads)
+            };
+            let got = build_backend(kind, &d.x, None, kernel, 10, threads.max(2), 5).unwrap();
+            assert_path_conformance(
+                &reference,
+                &got,
+                &cfg,
+                true,
+                &format!("oc/{kind} t={threads}"),
+            );
+        }
+    }
+}
+
+/// The harness itself must reject unknown backend names (CI matrix
+/// typos surface instead of testing nothing).
+#[test]
+fn unknown_backend_kind_is_an_error() {
+    let mut g = Gen::new(0xE7);
+    let (x, y) = random_xy(&mut g, 8, 2);
+    let e = build_backend("mmap", &x, Some(&y), KernelKind::Linear, 4, 2, 4).unwrap_err();
+    assert!(e.msg().contains("unknown conformance backend"), "{e}");
+}

@@ -2,11 +2,21 @@
 //! produces the SAME classifier as the unscreened path — identical
 //! objectives at every grid point and identical predictions — across
 //! datasets, kernels, grids, and both model families.
+//!
+//! The Q backend the paths run over is selectable via
+//! `SRBO_TEST_GRAM={dense,lru,sharded,stream}` (default dense): CI runs
+//! this suite once per gram policy, so the safety claim is audited over
+//! the bounded caches and the out-of-core streaming backend too.
+
+use std::sync::Arc;
 
 use srbo::coordinator::metrics::SafetyAudit;
 use srbo::coordinator::path::{NuPath, PathConfig};
+use srbo::data::store::{FeatureStore, FileStore};
 use srbo::data::{benchmark, synthetic, Dataset};
+use srbo::kernel::matrix::{Sharding, StreamingGram};
 use srbo::kernel::{full_gram, full_q, KernelKind};
+use srbo::prop::conformance::{build_backend, env_gram};
 use srbo::qp::ConstraintKind;
 use srbo::screening::oneclass;
 
@@ -16,12 +26,17 @@ fn grid(a: f64, b: f64, n: usize) -> Vec<f64> {
 
 fn audit_supervised(d: &Dataset, kernel: KernelKind, nus: Vec<f64>) -> SafetyAudit {
     let q = full_q(&d.x, &d.y, kernel);
+    // run both paths over the env-selected backend (dense by default);
+    // the audit's objective/score math always uses the dense Q
+    let backend =
+        build_backend(env_gram().unwrap_or("dense"), &d.x, Some(&d.y), kernel, 24, 2, 16)
+            .unwrap();
     let mut on = PathConfig::new(nus.clone(), kernel);
     on.screening = true;
     let mut off = on.clone();
     off.screening = false;
-    let p_on = NuPath::run_with_q(&q, &on, false, Default::default()).unwrap();
-    let p_off = NuPath::run_with_q(&q, &off, false, Default::default()).unwrap();
+    let p_on = NuPath::run_with_matrix(&backend, &on, false, Default::default()).unwrap();
+    let p_off = NuPath::run_with_matrix(&backend, &off, false, Default::default()).unwrap();
     let l = d.len();
     let alphas = |p: &NuPath| -> Vec<Vec<f64>> {
         p.steps.iter().map(|s| s.alpha.clone()).collect()
@@ -95,13 +110,15 @@ fn oneclass_screening_is_safe_end_to_end() {
     let d = synthetic::oneclass_gaussians(100, -1.0, 8).positives();
     let kernel = KernelKind::Rbf { gamma: 0.5 };
     let h = full_gram(&d.x, kernel);
+    let backend =
+        build_backend(env_gram().unwrap_or("dense"), &d.x, None, kernel, 24, 2, 16).unwrap();
     let nus = grid(0.25, 0.5, 10);
     let mut on = PathConfig::new(nus.clone(), kernel);
     on.screening = true;
     let mut off = on.clone();
     off.screening = false;
-    let p_on = NuPath::run_with_q(&h, &on, true, Default::default()).unwrap();
-    let p_off = NuPath::run_with_q(&h, &off, true, Default::default()).unwrap();
+    let p_on = NuPath::run_with_matrix(&backend, &on, true, Default::default()).unwrap();
+    let p_off = NuPath::run_with_matrix(&backend, &off, true, Default::default()).unwrap();
     let l = d.len();
     let audit = SafetyAudit::compare(
         &h,
@@ -156,4 +173,53 @@ fn screening_with_dense_paper_grid_is_safe_and_effective() {
         },
     );
     assert!(audit.is_safe(1e-6), "obj gap {}", audit.max_objective_gap);
+}
+
+/// Streaming-mode safety audit: with Q backed by `StreamingGram` over
+/// an on-disk `FileStore` (x never resident, rows streamed in chunks,
+/// shard-parallel screened path), the screened path still reproduces
+/// the unscreened one exactly.
+#[test]
+fn streaming_backed_screening_is_safe() {
+    let d = synthetic::gaussians(50, 2.0, 12); // l = 100
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let q = full_q(&d.x, &d.y, kernel);
+    let store: Arc<dyn FeatureStore> = Arc::new(FileStore::spill(&d.x, None).unwrap());
+    let sg = StreamingGram::new_q(store, &d.y, kernel, 16); // chunk ≪ l
+    let nus = grid(0.2, 0.4, 9);
+    let mut on = PathConfig::new(nus.clone(), kernel);
+    on.screening = true;
+    on.shard = Sharding::Threads(2);
+    let mut off = on.clone();
+    off.screening = false;
+    let p_on = NuPath::run_with_matrix(&sg, &on, false, Default::default()).unwrap();
+    let p_off = NuPath::run_with_matrix(&sg, &off, false, Default::default()).unwrap();
+    let l = d.len();
+    let audit = SafetyAudit::compare(
+        &q,
+        &nus,
+        |_| vec![1.0 / l as f64; l],
+        ConstraintKind::SumGe,
+        &p_on.steps.iter().map(|s| s.alpha.clone()).collect::<Vec<_>>(),
+        &p_off.steps.iter().map(|s| s.alpha.clone()).collect::<Vec<_>>(),
+        |a| {
+            let mut s = vec![0.0; l];
+            q.matvec(a, &mut s);
+            s
+        },
+    );
+    assert!(
+        audit.is_safe(1e-6),
+        "obj gap {} preds {}",
+        audit.max_objective_gap,
+        audit.predictions_match
+    );
+    // and the streamed screened path equals the dense screened path
+    let p_dense = NuPath::run_with_matrix(&q, &on, false, Default::default()).unwrap();
+    for (k, (sa, sb)) in p_dense.steps.iter().zip(&p_on.steps).enumerate() {
+        assert_eq!(sa.codes, sb.codes, "codes differ at step {k}");
+        for (a, b) in sa.alpha.iter().zip(&sb.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits(), "alpha differs at step {k}");
+        }
+    }
 }
