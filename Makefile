@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all verify lint fmt bench-compile bench bench-gram bench-path aot clean
+.PHONY: all verify lint fmt bench-compile bench bench-gram bench-path bench-dcdm aot clean
 
 all: verify
 
@@ -36,6 +36,11 @@ bench-gram:
 # BENCH_path.json.  SRBO_BENCH_QUICK=1 runs the CI smoke grid.
 bench-path:
 	$(CARGO) bench --bench path_scale
+
+# DCDM solver bench (size × shrink × selection × backend grid) →
+# BENCH_dcdm.json.  SRBO_BENCH_QUICK=1 runs the CI smoke grid.
+bench-dcdm:
+	$(CARGO) bench --bench dcdm_scale
 
 # Optional: export the L2 JAX/Pallas graphs to artifacts/*.hlo.txt.
 # Needs the Python toolchain (jax); the Rust `pjrt` feature consumes the

@@ -18,6 +18,7 @@ use srbo::data::split::train_test_stratified;
 use srbo::data::{benchmark, Dataset};
 use srbo::kernel::matrix::{GramPolicy, Sharding};
 use srbo::kernel::KernelKind;
+use srbo::qp::dcdm::DcdmTuning;
 use srbo::runtime::Runtime;
 use srbo::svm::nu::NuSvm;
 use srbo::util::Timer;
@@ -50,6 +51,7 @@ fn main() -> srbo::Result<()> {
             2,
             GramPolicy::Auto,
             Sharding::Auto,
+            DcdmTuning::default(),
         );
         let on_time = t.secs();
 
@@ -63,6 +65,7 @@ fn main() -> srbo::Result<()> {
             2,
             GramPolicy::Auto,
             Sharding::Auto,
+            DcdmTuning::default(),
         );
         let off_time = t.secs();
 

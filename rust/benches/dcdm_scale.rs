@@ -1,0 +1,113 @@
+//! §Perf DCDM solver bench: direct ν-SVM dual solves over a size ×
+//! {shrink on/off} × {second/first-order selection} × backend grid, so
+//! the solver finally has a perf trajectory alongside the path bench.
+//! Prints medians plus the solver's own work counters (sweeps, pair
+//! steps, rows touched, smallest active set) and writes
+//! `BENCH_dcdm.json` at the repo root (run via `make bench-dcdm`).
+//!
+//! Knobs: `SRBO_SCALE` shrinks dataset sizes; `SRBO_BENCH_QUICK=1` runs
+//! a tiny smoke grid (CI uses it to keep the JSON emission honest).
+
+use srbo::bench_harness::{bench, scaled};
+use srbo::data::synthetic;
+use srbo::kernel::matrix::{GramPolicy, QBackend};
+use srbo::kernel::KernelKind;
+use srbo::qp::dcdm::{self, DcdmOpts};
+use srbo::qp::{ConstraintKind, QpProblem, SolveStats};
+use srbo::util::tsv::Json;
+
+fn main() {
+    let quick = std::env::var("SRBO_BENCH_QUICK").is_ok();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let sizes: &[usize] = if quick { &[64] } else { &[128, 256, 512] };
+    let (warmup, reps) = if quick { (0, 1) } else { (1, 3) };
+    let nu = 0.3;
+
+    let mut runs = Vec::new();
+    for &base in sizes {
+        let n = scaled(base); // per-class count; l = 2n
+        let d = synthetic::gaussians(n, 2.0, 42);
+        let l = d.len();
+        let ub = vec![1.0 / l as f64; l];
+        // dense (the fits-in-memory regime) and a bounded LRU at a
+        // budget ≪ l (the l ≫ memory regime, where O(active) gathers
+        // shine because dead columns never materialise)
+        let lru_budget = (l / 8).max(8);
+        let backends: [(&str, QBackend); 2] = [
+            ("dense", GramPolicy::Dense.q(&d.x, &d.y, kernel)),
+            (
+                "lru",
+                GramPolicy::Lru { budget_rows: lru_budget }.q(&d.x, &d.y, kernel),
+            ),
+        ];
+        for (bname, q) in &backends {
+            for (sel, second_order) in [("second", true), ("first", false)] {
+                for (shr, shrinking) in [("on", true), ("off", false)] {
+                    let opts = DcdmOpts { shrinking, second_order, ..DcdmOpts::default() };
+                    let p = QpProblem {
+                        q,
+                        lin: None,
+                        ub: &ub,
+                        constraint: ConstraintKind::SumGe(nu),
+                    };
+                    let mut last: Option<SolveStats> = None;
+                    let s = bench(
+                        &format!("dcdm_l{l}_{bname}_{sel}_shrink-{shr}"),
+                        warmup,
+                        reps,
+                        || {
+                            let (alpha, stats) = dcdm::solve(&p, None, &opts);
+                            std::hint::black_box(&alpha);
+                            last = Some(stats);
+                        },
+                    );
+                    let st = last.expect("at least one rep ran");
+                    let min_active = st.min_active().unwrap_or(l);
+                    println!(
+                        "{}  sweeps={} pairs={} rows={} min_active={min_active}",
+                        s.human(),
+                        st.sweeps,
+                        st.pair_steps,
+                        st.rows_touched,
+                    );
+                    runs.push(Json::Obj(vec![
+                        ("l".into(), Json::Num(l as f64)),
+                        ("backend".into(), Json::Str((*bname).into())),
+                        ("selection".into(), Json::Str(sel.into())),
+                        ("shrinking".into(), Json::Bool(shrinking)),
+                        ("median_s".into(), Json::Num(s.median_s)),
+                        ("min_s".into(), Json::Num(s.min_s)),
+                        ("sweeps".into(), Json::Num(st.sweeps as f64)),
+                        ("pair_steps".into(), Json::Num(st.pair_steps as f64)),
+                        ("rows_touched".into(), Json::Num(st.rows_touched as f64)),
+                        ("min_active".into(), Json::Num(min_active as f64)),
+                        ("shrink_events".into(), Json::Num(st.shrink_events as f64)),
+                        ("unshrink_events".into(), Json::Num(st.unshrink_events as f64)),
+                        ("objective".into(), Json::Num(st.objective)),
+                        ("violation".into(), Json::Num(st.violation)),
+                    ]));
+                }
+            }
+        }
+    }
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("dcdm_scale".into())),
+        ("kernel".into(), Json::Str("rbf".into())),
+        ("nu".into(), Json::Num(nu)),
+        ("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 })),
+        ("host_parallelism".into(), Json::Num(cores as f64)),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    let payload = doc.render() + "\n";
+    // anchor at the repo root (bench cwd is the package dir) so the
+    // perf-trajectory file lands in a stable, committable spot
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_dcdm.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_dcdm.json"));
+    std::fs::write(&out, &payload).expect("write BENCH_dcdm.json");
+    println!("wrote {} (host parallelism {cores})", out.display());
+}

@@ -15,6 +15,7 @@ use crate::data::store::{FeatureStore, FileStore};
 use crate::data::Dataset;
 use crate::kernel::matrix::{GramPolicy, Sharding};
 use crate::kernel::KernelKind;
+use crate::qp::dcdm::DcdmTuning;
 use crate::stats::accuracy;
 use crate::svm::nu::NuSvm;
 use crate::util::timer::Timer;
@@ -234,6 +235,7 @@ pub fn select_model(
     workers: usize,
     gram: GramPolicy,
     shard: Sharding,
+    dcdm: DcdmTuning,
 ) -> (KernelKind, f64, f64, Vec<JobResult>) {
     let mut jobs = Vec::new();
     let train = Arc::new(train.clone());
@@ -256,6 +258,7 @@ pub fn select_model(
         cfg.screening = screening;
         cfg.gram = gram;
         cfg.shard = shard;
+        cfg.dcdm = dcdm;
         jobs.push(Job {
             dataset: Arc::clone(&train),
             test: Arc::clone(&test),
@@ -305,6 +308,7 @@ mod tests {
             1,
             GramPolicy::Auto,
             Sharding::Serial,
+            DcdmTuning::default(),
         );
         assert_eq!(results.len(), 2); // linear + 1 rbf
         assert!(best_acc > 80.0, "acc={best_acc}");
@@ -323,6 +327,7 @@ mod tests {
             4,
             GramPolicy::Auto,
             Sharding::Auto,
+            DcdmTuning::default(),
         );
         assert_eq!(results.len(), 3);
         for r in &results {
@@ -343,6 +348,7 @@ mod tests {
             2,
             GramPolicy::Dense,
             Sharding::Serial,
+            DcdmTuning::default(),
         );
         let (_, _, acc_l, _) = select_model(
             &tr,
@@ -353,6 +359,7 @@ mod tests {
             2,
             GramPolicy::Lru { budget_rows: 8 },
             Sharding::Threads(2),
+            DcdmTuning::default(),
         );
         // bit-identical backends (dense serial vs sharded-LRU parallel)
         // ⇒ identical best accuracy (nu/kernel tie-breaks depend on
@@ -369,6 +376,7 @@ mod tests {
             2,
             GramPolicy::Stream { budget_rows: 8 },
             Sharding::Threads(2),
+            DcdmTuning::default(),
         );
         assert_eq!(acc_d, acc_s);
     }

@@ -13,15 +13,37 @@ pub struct PathMetrics {
     pub reduced_sizes: Vec<usize>,
     pub total_sweeps: usize,
     pub total_pair_steps: usize,
+    /// Shrink passes (across every solve of the path) that retired
+    /// coordinates from the DCDM active set.
+    pub total_shrink_events: usize,
+    /// Unshrink + gradient-reconstruction passes across every solve.
+    pub total_unshrink_events: usize,
+    /// Q rows materialised / gathered by the solvers' hot loops.
+    pub total_rows_touched: u64,
+    /// Smallest solver active set seen across all solves (`None` until
+    /// a shrinking-aware solver reports one).
+    pub min_active: Option<usize>,
 }
 
 impl PathMetrics {
+    /// Fold one solve's telemetry into the per-path solver counters
+    /// (called for every solve: init, baseline and reduced).
+    pub fn record_solver(&mut self, stats: &SolveStats) {
+        self.total_sweeps += stats.sweeps;
+        self.total_pair_steps += stats.pair_steps;
+        self.total_shrink_events += stats.shrink_events;
+        self.total_unshrink_events += stats.unshrink_events;
+        self.total_rows_touched += stats.rows_touched;
+        if let Some(m) = stats.min_active() {
+            self.min_active = Some(self.min_active.map_or(m, |c| c.min(m)));
+        }
+    }
+
     pub fn record_step(&mut self, ratio: f64, reduced_size: usize, stats: &SolveStats) {
         self.screened_steps += 1;
         self.ratio_sum += ratio;
         self.reduced_sizes.push(reduced_size);
-        self.total_sweeps += stats.sweeps;
-        self.total_pair_steps += stats.pair_steps;
+        self.record_solver(stats);
     }
 
     pub fn avg_ratio(&self) -> f64 {
@@ -107,6 +129,30 @@ mod tests {
         assert_eq!(m.avg_ratio(), 60.0);
         assert_eq!(m.total_sweeps, 6);
         assert_eq!(m.reduced_sizes, vec![10, 6]);
+    }
+
+    #[test]
+    fn solver_counters_aggregate_across_solves() {
+        let mut m = PathMetrics::default();
+        let s1 = SolveStats {
+            shrink_events: 2,
+            unshrink_events: 1,
+            rows_touched: 100,
+            active_trajectory: vec![50, 20, 50],
+            ..Default::default()
+        };
+        let s2 = SolveStats {
+            rows_touched: 10,
+            active_trajectory: vec![30, 12, 30],
+            ..Default::default()
+        };
+        m.record_solver(&s1);
+        m.record_step(40.0, 8, &s2);
+        assert_eq!(m.total_shrink_events, 2);
+        assert_eq!(m.total_unshrink_events, 1);
+        assert_eq!(m.total_rows_touched, 110);
+        assert_eq!(m.min_active, Some(12));
+        assert_eq!(m.screened_steps, 1);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use crate::bail;
 use crate::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use crate::kernel::KernelKind;
-use crate::qp::dcdm::{self, DcdmOpts};
+use crate::qp::dcdm::{self, DcdmTuning};
 use crate::qp::gqp::{self, GqpOpts};
 use crate::qp::{reduced, ConstraintKind, QpProblem, SolveStats};
 use crate::screening::{self, delta, oneclass, srbo, ScreenCode};
@@ -59,6 +59,10 @@ pub struct PathConfig {
     /// gather) fan out over row shards (`--threads auto|serial|N`).
     /// Results are bit-identical to the serial path for any setting.
     pub shard: Sharding,
+    /// DCDM shrinking/selection knobs (`--no-shrink`, `--shrink-every`,
+    /// `--first-order`).  Shrinking changes per-iteration cost only:
+    /// the solver still terminates at the exact optimum.
+    pub dcdm: DcdmTuning,
 }
 
 impl PathConfig {
@@ -72,6 +76,7 @@ impl PathConfig {
             eps: 1e-8,
             gram: GramPolicy::Auto,
             shard: Sharding::Auto,
+            dcdm: DcdmTuning::default(),
         }
     }
 
@@ -116,16 +121,11 @@ fn solve_qp(
     warm: Option<&[f64]>,
     choice: SolverChoice,
     eps: f64,
+    tuning: DcdmTuning,
 ) -> (Vec<f64>, SolveStats) {
     match choice {
-        SolverChoice::Dcdm => {
-            dcdm::solve(p, warm, &DcdmOpts { eps, ..DcdmOpts::default() })
-        }
-        SolverChoice::DcdmPaper => dcdm::solve(
-            p,
-            warm,
-            &DcdmOpts { eps, paper_mode: true, ..DcdmOpts::default() },
-        ),
+        SolverChoice::Dcdm => dcdm::solve(p, warm, &tuning.opts(eps, false)),
+        SolverChoice::DcdmPaper => dcdm::solve(p, warm, &tuning.opts(eps, true)),
         SolverChoice::Gqp => {
             gqp::solve(p, warm, &GqpOpts { eps, ..GqpOpts::default() })
         }
@@ -219,8 +219,9 @@ impl NuPath {
             ub: &ub0,
             constraint: constraint_for(nu0),
         };
-        let (alpha0, stats0) = solve_qp(&p0, None, cfg.solver, cfg.eps);
+        let (alpha0, stats0) = solve_qp(&p0, None, cfg.solver, cfg.eps, cfg.dcdm);
         times.add("solve", t.lap());
+        metrics.record_solver(&stats0);
         steps.push(PathStep {
             nu: nu0,
             alpha: alpha0,
@@ -243,8 +244,9 @@ impl NuPath {
                     ub: &ub_next,
                     constraint: constraint_for(nu_next),
                 };
-                let (a, stats) = solve_qp(&p, None, cfg.solver, cfg.eps);
+                let (a, stats) = solve_qp(&p, None, cfg.solver, cfg.eps, cfg.dcdm);
                 times.add("solve", t.lap());
+                metrics.record_solver(&stats);
                 steps.push(PathStep {
                     nu: nu_next,
                     alpha: a,
@@ -295,7 +297,7 @@ impl NuPath {
             let (alpha_s, stats) = if red.is_empty() {
                 (Vec::new(), SolveStats::default())
             } else {
-                solve_qp(&red.as_qp(), Some(&warm), cfg.solver, cfg.eps)
+                solve_qp(&red.as_qp(), Some(&warm), cfg.solver, cfg.eps, cfg.dcdm)
             };
             // Step 4: combine.
             let alpha_next = red.combine(&alpha_s, l);
@@ -441,6 +443,39 @@ mod tests {
                 assert!((x - y).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn shrink_off_path_matches_default_objectives() {
+        let d = gaussians(40, 2.0, 6);
+        let kernel = KernelKind::Rbf { gamma: 0.7 };
+        let nus = grid(0.2, 0.35, 5);
+        let on = PathConfig::new(nus.clone(), kernel);
+        let mut off = on.clone();
+        off.dcdm.shrinking = false;
+        let p_on = NuPath::run(&d.x, &d.y, &on).unwrap();
+        let p_off = NuPath::run(&d.x, &d.y, &off).unwrap();
+        let q = full_q(&d.x, &d.y, kernel);
+        let l = d.len();
+        let ub = vec![1.0 / l as f64; l];
+        for k in 0..nus.len() {
+            let p = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(on.nus[k]),
+            };
+            let (f1, f2) = (p.objective(p_on.alpha(k)), p.objective(p_off.alpha(k)));
+            assert!(
+                (f1 - f2).abs() <= 1e-6 * (1.0 + f1.abs()),
+                "step {k}: {f1} vs {f2}"
+            );
+        }
+        // the shrink-off runs must not report shrink telemetry
+        assert_eq!(p_off.metrics.total_shrink_events, 0);
+        assert_eq!(p_off.metrics.total_unshrink_events, 0);
+        // solver counters cover every solve, including the init step
+        assert!(p_on.metrics.total_rows_touched >= l as u64);
     }
 
     #[test]

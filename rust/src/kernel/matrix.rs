@@ -225,6 +225,38 @@ pub trait KernelMatrix {
         dot(a, &qb)
     }
 
+    /// Gather row i restricted to `idx` (ascending indices):
+    /// `out[k] = Q[i, idx[k]]`.  The shrinking DCDM's hot entry point —
+    /// its O(|active|) sweeps and pair steps fetch exactly the live
+    /// columns through this.  The default materialises the full row
+    /// (free for resident backends, and the bounded LRU caches *want*
+    /// it: the gathered row joins the working set and later gathers hit
+    /// O(1)); [`StreamingGram`] overrides it to compute only the
+    /// requested entries so dead columns never stream off disk.
+    /// Entries must be bit-identical to `row(i)` on every backend.
+    fn row_gather(&self, i: usize, idx: &[usize], out: &mut [f64]) {
+        assert_eq!(idx.len(), out.len());
+        let r = self.row(i);
+        for (o, &j) in out.iter_mut().zip(idx) {
+            *o = r[j];
+        }
+    }
+
+    /// vᵀ Q[idx, idx] v — the quadratic form restricted to `idx`
+    /// (`v[k]` pairs with `idx[k]`), via one [`Self::row_gather`] per
+    /// index.  The solver's sparse objective uses it so a screened
+    /// solve pays O(nnz²) entry work instead of the full O(l²) matvec.
+    fn quad_active(&self, v: &[f64], idx: &[usize]) -> f64 {
+        assert_eq!(v.len(), idx.len());
+        let mut row = vec![0.0; idx.len()];
+        let mut acc = 0.0;
+        for (k, &i) in idx.iter().enumerate() {
+            self.row_gather(i, idx, &mut row);
+            acc += v[k] * dot(&row, v);
+        }
+        acc
+    }
+
     /// Largest eigenvalue by power iteration (PG step sizes).  The
     /// default delegates to the single loop in
     /// [`KernelMatrix::par_power_eig_max`] (which mirrors
@@ -655,6 +687,32 @@ impl KernelMatrix for StreamingGram {
         assert_eq!(y1.len(), l);
         assert_eq!(y2.len(), l);
         self.sweep(0, x1, Some(x2), y1, Some(y2));
+    }
+
+    /// Out-of-core active gather: reads x_i plus one stored row per
+    /// requested index — O(|idx|·d) I/O instead of streaming the whole
+    /// store for a row the caller would mostly discard.  Entry
+    /// arithmetic (and the label-scaling expression) is exactly
+    /// [`Self::compute_row`]'s, so gathered entries stay bit-identical
+    /// to full-row entries.
+    fn row_gather(&self, i: usize, idx: &[usize], out: &mut [f64]) {
+        assert_eq!(idx.len(), out.len());
+        let d = self.store.dim();
+        let norms = self.store.norms();
+        let mut xi = vec![0.0; d];
+        let mut xj = vec![0.0; d];
+        self.store.row_into(i, &mut xi);
+        let ni = norms[i];
+        for (o, &j) in out.iter_mut().zip(idx) {
+            self.store.row_into(j, &mut xj);
+            *o = kernel_entry_hoisted(self.kernel, &xi, &xj, ni, norms[j]);
+        }
+        if let Some(y) = &self.y {
+            let yi = y[i];
+            for (o, &j) in out.iter_mut().zip(idx) {
+                *o = *o * yi * y[j];
+            }
+        }
     }
 
     fn par_matvec(&self, x: &[f64], y: &mut [f64], threads: usize) {
@@ -1570,6 +1628,24 @@ impl KernelMatrix for QBackend {
         }
     }
 
+    fn row_gather(&self, i: usize, idx: &[usize], out: &mut [f64]) {
+        match self {
+            QBackend::Dense(d) => d.row_gather(i, idx, out),
+            QBackend::Lru(c) => c.row_gather(i, idx, out),
+            QBackend::Sharded(c) => c.row_gather(i, idx, out),
+            QBackend::Stream(s) => s.row_gather(i, idx, out),
+        }
+    }
+
+    fn quad_active(&self, v: &[f64], idx: &[usize]) -> f64 {
+        match self {
+            QBackend::Dense(d) => d.quad_active(v, idx),
+            QBackend::Lru(c) => c.quad_active(v, idx),
+            QBackend::Sharded(c) => c.quad_active(v, idx),
+            QBackend::Stream(s) => s.quad_active(v, idx),
+        }
+    }
+
     fn power_eig_max(&self, iters: usize) -> f64 {
         match self {
             QBackend::Dense(d) => d.power_eig_max(iters),
@@ -1754,6 +1830,45 @@ mod tests {
             km.matvec2(&v1, &v2, &mut b1, &mut b2);
             assert_eq!(a1, b1);
             assert_eq!(a2, b2);
+        }
+    }
+
+    #[test]
+    fn row_gather_and_quad_active_match_rows_across_backends() {
+        use crate::data::store::MemStore;
+        let mut g = Gen::new(0x6A7);
+        let (x, y) = random_xy(&mut g, 14, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.8 };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let lru = LruRowCache::new_q(&x, &y, kernel, 4);
+        let sharded = ShardedLruRowCache::new_q(&x, &y, kernel, 6, 3);
+        let store: Arc<dyn FeatureStore> = Arc::new(MemStore::new(x.clone()));
+        let stream = StreamingGram::new_q(store, &y, kernel, 4);
+        let idx: Vec<usize> = vec![1, 4, 5, 9, 13];
+        let v = g.vec_f64(idx.len(), -1.0, 1.0);
+        let mut want = vec![0.0; idx.len()];
+        let mut got = vec![0.0; idx.len()];
+        let expect_quad = dense.quad_active(&v, &idx);
+        for i in 0..14 {
+            dense.row_gather(i, &idx, &mut want);
+            // gathered entries equal the full row's entries
+            let r = dense.row(i);
+            for (k, &j) in idx.iter().enumerate() {
+                assert_eq!(want[k].to_bits(), r[j].to_bits(), "gather vs row at {i}");
+            }
+            for km in [&lru as &dyn KernelMatrix, &sharded, &stream] {
+                km.row_gather(i, &idx, &mut got);
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row_gather differs at {i}");
+                }
+            }
+        }
+        for km in [&lru as &dyn KernelMatrix, &sharded, &stream] {
+            assert_eq!(
+                km.quad_active(&v, &idx).to_bits(),
+                expect_quad.to_bits(),
+                "quad_active differs"
+            );
         }
     }
 

@@ -25,6 +25,7 @@ use srbo::data::store::{FeatureStore, FileStore};
 use srbo::data::{benchmark, loader, split, synthetic, Dataset};
 use srbo::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use srbo::kernel::{default_build_threads, full_q_threaded, KernelKind};
+use srbo::qp::dcdm::DcdmTuning;
 use srbo::runtime::Runtime;
 use srbo::stats::accuracy;
 use srbo::svm::nu::NuSvm;
@@ -48,6 +49,13 @@ fn usage() -> ! {
            --nu V            single nu for `train` (default 0.3)\n\
            --nu-from/--nu-to/--nu-step   path grid (default 0.1..0.5 step 0.02)\n\
            --solver S        dcdm|dcdm-paper|gqp (default dcdm)\n\
+           --no-shrink       disable DCDM active-set shrinking (shrinking\n\
+                             is default-on and exact: the solver unshrinks\n\
+                             and re-checks all coordinates before it\n\
+                             declares convergence)\n\
+           --shrink-every N  sweeps between shrink passes (default 4)\n\
+           --first-order     first-order MVP pair selection (default:\n\
+                             second-order, curvature-normalised gain)\n\
            --gram G          dense|lru[:rows]|stream[:rows]|auto — Q backend\n\
                              (default auto: parallel dense build below 8192\n\
                              rows, bounded LRU row cache above, out-of-core\n\
@@ -121,6 +129,14 @@ fn shard_of(args: &Args) -> Sharding {
     }
 }
 
+fn dcdm_of(args: &Args) -> DcdmTuning {
+    DcdmTuning {
+        shrinking: !args.flag("no-shrink"),
+        shrink_every: args.get_usize("shrink-every", DcdmTuning::default().shrink_every),
+        second_order: !args.flag("first-order"),
+    }
+}
+
 fn solver_of(args: &Args) -> SolverChoice {
     match args.get_or("solver", "dcdm").as_str() {
         "dcdm" => SolverChoice::Dcdm,
@@ -131,6 +147,19 @@ fn solver_of(args: &Args) -> SolverChoice {
             usage()
         }
     }
+}
+
+/// Per-path solver telemetry line (shrinking active-set counters).
+fn solver_telemetry(m: &srbo::coordinator::metrics::PathMetrics) -> String {
+    format!(
+        "sweeps={} pair_steps={} shrink={} unshrink={} rows_touched={} min_active={}",
+        m.total_sweeps,
+        m.total_pair_steps,
+        m.total_shrink_events,
+        m.total_unshrink_events,
+        m.total_rows_touched,
+        m.min_active.map_or_else(|| "-".to_string(), |v| v.to_string()),
+    )
 }
 
 fn nu_grid(args: &Args) -> Vec<f64> {
@@ -197,6 +226,7 @@ fn cmd_path_store(args: &Args, store_path: &str) {
     cfg.screening = !args.flag("no-screening");
     cfg.gram = gram_of(args);
     cfg.shard = shard_of(args);
+    cfg.dcdm = dcdm_of(args);
     let oneclass = args.flag("oneclass") || labels.is_none();
     if oneclass {
         // mirror the in-memory flow: OC-SVM trains on the positive
@@ -250,6 +280,7 @@ fn cmd_path_store(args: &Args, store_path: &str) {
             .collect::<Vec<_>>()
             .join(" ")
     );
+    println!("  solver: {}", solver_telemetry(&path.metrics));
 }
 
 fn cmd_convert(args: &Args) {
@@ -298,6 +329,7 @@ fn cmd_path(args: &Args) {
     cfg.screening = !args.flag("no-screening");
     cfg.gram = gram_of(args);
     cfg.shard = shard_of(args);
+    cfg.dcdm = dcdm_of(args);
     let t = Timer::start();
     let (path, l) = if args.flag("oneclass") {
         let pos = train.positives();
@@ -329,6 +361,7 @@ fn cmd_path(args: &Args) {
             .collect::<Vec<_>>()
             .join(" ")
     );
+    println!("  solver: {}", solver_telemetry(&path.metrics));
     if !args.flag("oneclass") {
         // accuracy along the path
         let mut best = (0.0, 0.0);
@@ -368,6 +401,7 @@ fn cmd_grid(args: &Args) {
         workers,
         gram_of(args),
         shard_of(args),
+        dcdm_of(args),
     );
     println!(
         "grid {}: {} arms in {:.2}s -> best kernel={:?} nu={:.3} acc={:.2}%",

@@ -149,6 +149,35 @@ pub fn assert_matrix_conformance(
     let want_quad = want.quad(&v1, &v2);
     let want_eig = want.power_eig_max(20);
 
+    // active-set entry points: row_gather must reproduce the row slice
+    // and quad_active the restricted quadratic form, bit for bit (the
+    // shrinking DCDM depends on both being backend-independent)
+    let mut idx: Vec<usize> = (0..l).filter(|_| g.bool()).collect();
+    if idx.is_empty() {
+        idx.push(0);
+    }
+    let vs = g.vec_f64(idx.len(), -1.0, 1.0);
+    let mut want_gather = vec![0.0; idx.len()];
+    let mut got_gather = vec![0.0; idx.len()];
+    for i in 0..l {
+        want.row_gather(i, &idx, &mut want_gather);
+        got.row_gather(i, &idx, &mut got_gather);
+        assert_bits(&want_gather, &got_gather, &format!("row_gather[{i}]"), ctx);
+        let r = want.row(i);
+        for (k, &j) in idx.iter().enumerate() {
+            assert_eq!(
+                want_gather[k].to_bits(),
+                r[j].to_bits(),
+                "{ctx}: row_gather[{i}][{k}] disagrees with row"
+            );
+        }
+    }
+    assert_eq!(
+        got.quad_active(&vs, &idx).to_bits(),
+        want.quad_active(&vs, &idx).to_bits(),
+        "{ctx}: quad_active"
+    );
+
     let mut got1 = vec![0.0; l];
     got.matvec(&v1, &mut got1);
     assert_bits(&want1, &got1, "matvec", ctx);

@@ -1,36 +1,90 @@
-//! DCDM — the paper's Algorithm 2 plus an SMO-style pairwise phase.
+//! DCDM — the paper's Algorithm 2 plus an SMO-style pairwise phase,
+//! rebuilt around a LIBSVM-style **shrinking active set**.
 //!
 //! **Paper mode** reproduces Algorithm 2 verbatim: sequential sweeps of
 //! exact single-coordinate minimisation with the running lower bound
 //! lb_i = max(0, ν − Σ_{k≠i} α_k).  On the active constraint eᵀα = ν this
 //! converges to a *coordinate-wise* stationary point which may not be the
 //! global optimum (DESIGN.md §6) — matching the accuracy wobbles the
-//! paper itself reports for DCDM in Table VIII.
+//! paper itself reports for DCDM in Table VIII.  Shrinking is never
+//! applied in paper mode: the PJRT artifact cross-check
+//! (`rust/tests/runtime_artifacts.rs`) pins the verbatim sweep iterates.
 //!
 //! **Exact mode** (default) appends maximal-violating-pair updates that
 //! move mass along e_i − e_j (sum-preserving), restoring convergence to
 //! the true optimum — which the screening rule's safety proof requires of
 //! the previous path point α⁰.
 //!
-//! Complexity: a sweep costs O(l²) against a resident Q; the gradient
-//! vector g = Qα + f is maintained incrementally (O(l) per coordinate
-//! change), so pairwise steps are O(l) each.
+//! # Shrinking
+//!
+//! Most coordinates of a ν-SVM dual sit at a bound at the optimum — the
+//! same sparsity safe screening exploits.  The solver therefore keeps an
+//! **active set**: every `shrink_every` sweeps (and periodically during
+//! the pairwise phase) coordinates that the running KKT multiplier
+//! bracket proves pinned at 0 or ub leave the working set.  Sweeps, MVP
+//! scans and incremental gradient updates then iterate only the active
+//! indices — O(|active|) per update instead of O(l) — fetching Q entries
+//! through [`KernelMatrix::row_gather`] so bounded/streaming backends
+//! never materialise the dead columns.  The bracket is a heuristic that
+//! drifts as the iterate moves, so before convergence is declared the
+//! solver always **unshrinks**: the full gradient is reconstructed from
+//! the support (O(nnz·l) row fetches, not an O(l²) matvec) and the
+//! phases re-run over all l coordinates.  Exact mode thus terminates at
+//! the same optimum as the unshrunk solver — only the per-iteration cost
+//! changes.  Everything is deterministic and backend-independent: the
+//! active order is always ascending and gathered entries are
+//! bit-identical to full-row entries on every backend.
+//!
+//! **Pair selection** is second-order by default: given the steepest
+//! ascent coordinate i, the partner j maximises the curvature-normalised
+//! gain (g_j − g_i)² / (Q_ii + Q_jj − 2Q_ij) over the active descent
+//! candidates (WSS2, Fan et al. 2005), which cuts pair-step counts on
+//! ill-conditioned duals; `second_order: false` restores the plain
+//! first-order argmax(g_dn − g_up) rule.
+//!
+//! Complexity: a sweep costs O(|active|²) worth of gathered entries
+//! against any backend; the gradient g = Qα + f is maintained
+//! incrementally over the active set (O(|active|) per coordinate
+//! change), so pairwise steps are O(|active|) each.
 
-use super::{kkt_violation, ConstraintKind, QpProblem, SolveStats};
+use super::{ConstraintKind, QpProblem, SolveStats};
 use crate::kernel::matrix::KernelMatrix;
 use crate::qp::projection;
+
+/// α-to-bound tolerance shared by the MVP scans and the shrink rule.
+const BOUND_TOL: f64 = 1e-12;
+
+/// Curvature floor below which a pair direction is treated as flat.
+const CURV_FLOOR: f64 = 1e-14;
+
+/// Pair steps per `shrink_every` between shrink passes in the pairwise
+/// phase.  A shrink pass is O(|active|) — the same as one pair step — so
+/// this keeps shrink overhead at a few percent while still retiring
+/// freshly-pinned coordinates promptly.
+const PAIR_STEPS_PER_SHRINK: usize = 10;
 
 /// DCDM configuration.
 #[derive(Clone, Debug)]
 pub struct DcdmOpts {
     /// KKT tolerance (the paper's ε).
     pub eps: f64,
-    /// Hard cap on coordinate sweeps.
+    /// Hard cap on coordinate sweeps (across all unshrink rounds).
     pub max_sweeps: usize,
-    /// Hard cap on pairwise steps after the sweep phase.
+    /// Hard cap on pairwise steps (across all unshrink rounds).
     pub max_pair_steps: usize,
-    /// Verbatim Algorithm 2 (no pairwise phase).
+    /// Verbatim Algorithm 2 (no pairwise phase, no shrinking).
     pub paper_mode: bool,
+    /// LIBSVM-style active-set shrinking (exact mode only).  Exactness
+    /// is unaffected: convergence is only declared after an unshrink +
+    /// full-gradient reconstruction pass confirms it on all l
+    /// coordinates.
+    pub shrinking: bool,
+    /// Sweeps between shrink passes in Phase 1 (also scales the
+    /// pair-phase shrink cadence via [`PAIR_STEPS_PER_SHRINK`]).
+    pub shrink_every: usize,
+    /// Curvature-aware (second-order) pair selection; `false` restores
+    /// the first-order maximal-violating-pair rule.
+    pub second_order: bool,
 }
 
 impl Default for DcdmOpts {
@@ -40,6 +94,45 @@ impl Default for DcdmOpts {
             max_sweeps: 200,
             max_pair_steps: 200_000,
             paper_mode: false,
+            shrinking: true,
+            shrink_every: 4,
+            second_order: true,
+        }
+    }
+}
+
+/// The shrinking/selection knobs as a plain `Copy` bundle, so
+/// [`PathConfig`](crate::coordinator::path::PathConfig), the grid
+/// service and the CLI can thread them through without owning a full
+/// [`DcdmOpts`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DcdmTuning {
+    pub shrinking: bool,
+    pub shrink_every: usize,
+    pub second_order: bool,
+}
+
+impl Default for DcdmTuning {
+    fn default() -> Self {
+        let d = DcdmOpts::default();
+        DcdmTuning {
+            shrinking: d.shrinking,
+            shrink_every: d.shrink_every,
+            second_order: d.second_order,
+        }
+    }
+}
+
+impl DcdmTuning {
+    /// Materialise full solver options at this tolerance.
+    pub fn opts(&self, eps: f64, paper_mode: bool) -> DcdmOpts {
+        DcdmOpts {
+            eps,
+            paper_mode,
+            shrinking: self.shrinking,
+            shrink_every: self.shrink_every,
+            second_order: self.second_order,
+            ..DcdmOpts::default()
         }
     }
 }
@@ -60,127 +153,231 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
     };
     projection::project(&mut alpha, p.ub, p.constraint);
 
-    // maintained gradient g = Qα + f
+    // Maintained gradient g = Qα + f — exact on the active set at all
+    // times; entries of shrunk coordinates go stale and are rebuilt by
+    // the unshrink reconstruction.
     let mut g = vec![0.0; n];
     p.gradient(&alpha, &mut g);
     let mut sum: f64 = alpha.iter().sum();
 
-    let mut stats = SolveStats::default();
+    let mut stats = SolveStats {
+        rows_touched: n as u64, // the initial full-gradient matvec
+        active_trajectory: vec![n],
+        ..SolveStats::default()
+    };
 
-    // Phase 1: Algorithm 2 sweeps.  Equality-constrained duals (OC-SVM)
-    // admit no single-coordinate moves — the pairwise phase does all the
-    // work there.
+    let shrinking = opts.shrinking && !opts.paper_mode;
+    let shrink_every = opts.shrink_every.max(1);
+    let pair_shrink_interval = shrink_every.saturating_mul(PAIR_STEPS_PER_SHRINK);
+
+    let mut active: Vec<usize> = (0..n).collect();
+    // row-gather scratch (first |active| slots are live)
+    let mut qi = vec![0.0; n];
+    let mut qj = vec![0.0; n];
+
+    // Phase 1 exists only for inequality duals: equality-constrained
+    // duals (OC-SVM) admit no single-coordinate moves — the pairwise
+    // phase does all the work there.
     let sweeps_enabled = matches!(p.constraint, ConstraintKind::SumGe(_));
-    for _sweep in 0..if sweeps_enabled { opts.max_sweeps } else { 0 } {
-        stats.sweeps += 1;
-        let mut max_delta: f64 = 0.0;
-        for i in 0..n {
-            let qii = p.q.diag(i);
-            if qii <= 1e-14 {
-                continue;
-            }
-            let lb = match p.constraint {
-                ConstraintKind::SumGe(nu) => (nu - (sum - alpha[i])).max(0.0),
-                ConstraintKind::SumEq(_) => unreachable!(),
-            };
-            let ub = p.ub[i].max(lb);
-            let new = (alpha[i] - g[i] / qii).clamp(lb, ub);
-            let d = new - alpha[i];
-            if d.abs() > 0.0 {
-                // incremental gradient update: g += d * Q[:, i] (Q symmetric)
-                let qrow = p.q.row(i);
-                for (gk, &qik) in g.iter_mut().zip(qrow.iter()) {
-                    *gk += d * qik;
-                }
-                sum += d;
-                alpha[i] = new;
+    let mut sweeps_left = if sweeps_enabled { opts.max_sweeps } else { 0 };
+    let mut pairs_left = opts.max_pair_steps;
+
+    loop {
+        // ---- Phase 1: Algorithm-2 sweeps over the active set ----
+        let mut sweeps_since_shrink = 0;
+        while sweeps_left > 0 {
+            sweeps_left -= 1;
+            stats.sweeps += 1;
+            let mut max_delta: f64 = 0.0;
+            for a in 0..active.len() {
+                let i = active[a];
+                let d = single_update(
+                    p,
+                    &active,
+                    &mut alpha,
+                    &mut g,
+                    &mut sum,
+                    i,
+                    Some(target),
+                    &mut qi,
+                    &mut stats,
+                );
                 max_delta = max_delta.max(d.abs());
             }
-        }
-        if max_delta < opts.eps {
-            break;
-        }
-    }
-
-    // Phase 2: pairwise (SMO) refinement — exact mode, and always for
-    // equality-constrained duals (they have no other update direction).
-    if !opts.paper_mode || !sweeps_enabled {
-        let tol = 1e-12;
-        for _ in 0..opts.max_pair_steps {
-            // maximal violating pair: i = argmin g over "can increase",
-            // j = argmax g over "can decrease".
-            let mut i_up = usize::MAX;
-            let mut g_up = f64::INFINITY;
-            let mut j_dn = usize::MAX;
-            let mut g_dn = f64::NEG_INFINITY;
-            for k in 0..n {
-                if alpha[k] < p.ub[k] - tol && g[k] < g_up {
-                    g_up = g[k];
-                    i_up = k;
-                }
-                if alpha[k] > tol && g[k] > g_dn {
-                    g_dn = g[k];
-                    j_dn = k;
-                }
-            }
-            let slack = match p.constraint {
-                ConstraintKind::SumGe(nu) => sum > nu + 1e-12,
-                ConstraintKind::SumEq(_) => false,
-            };
-            // candidate moves and their first-order improvements
-            let pair_gain = if i_up != usize::MAX && j_dn != usize::MAX {
-                g_dn - g_up
-            } else {
-                0.0
-            };
-            let single_up_gain = if i_up != usize::MAX { -g_up } else { 0.0 };
-            let single_dn_gain = if slack && j_dn != usize::MAX { g_dn } else { 0.0 };
-            let best = pair_gain.max(single_up_gain).max(single_dn_gain);
-            if best < opts.eps {
+            if max_delta < opts.eps {
                 break;
             }
-            stats.pair_steps += 1;
-            if single_up_gain >= pair_gain && single_up_gain >= single_dn_gain {
-                // plain coordinate increase (always feasible for SumGe;
-                // for SumEq singles never win because g_up<0 implies the
-                // pair move dominates… guard anyway)
-                if matches!(p.constraint, ConstraintKind::SumEq(_)) {
-                    pair_update(p, &mut alpha, &mut g, &mut sum, i_up, j_dn);
-                } else {
-                    single_update(p, &mut alpha, &mut g, &mut sum, i_up, None);
-                }
-            } else if single_dn_gain >= pair_gain {
-                single_update(p, &mut alpha, &mut g, &mut sum, j_dn, {
-                    // do not let the decrease dip below the constraint
-                    match p.constraint {
-                        ConstraintKind::SumGe(nu) => Some(nu),
-                        ConstraintKind::SumEq(_) => None,
-                    }
-                });
-            } else {
-                pair_update(p, &mut alpha, &mut g, &mut sum, i_up, j_dn);
+            sweeps_since_shrink += 1;
+            if shrinking && sweeps_since_shrink >= shrink_every {
+                sweeps_since_shrink = 0;
+                shrink(p, &mut active, &alpha, &g, &mut stats);
             }
         }
+
+        // ---- Phase 2: pairwise (MVP) refinement over the active set —
+        // exact mode, and always for equality-constrained duals (they
+        // have no other update direction). ----
+        if !opts.paper_mode || !sweeps_enabled {
+            let mut steps_since_shrink = 0;
+            while pairs_left > 0 {
+                // maximal violating pair over the active set:
+                // i = argmin g over "can increase", j = argmax g over
+                // "can decrease".
+                let mut i_up = usize::MAX;
+                let mut g_up = f64::INFINITY;
+                let mut j_dn = usize::MAX;
+                let mut g_dn = f64::NEG_INFINITY;
+                for &k in &active {
+                    if alpha[k] < p.ub[k] - BOUND_TOL && g[k] < g_up {
+                        g_up = g[k];
+                        i_up = k;
+                    }
+                    if alpha[k] > BOUND_TOL && g[k] > g_dn {
+                        g_dn = g[k];
+                        j_dn = k;
+                    }
+                }
+                let slack = match p.constraint {
+                    ConstraintKind::SumGe(nu) => sum > nu + 1e-12,
+                    ConstraintKind::SumEq(_) => false,
+                };
+                // candidate moves and their first-order improvements
+                let pair_gain = if i_up != usize::MAX && j_dn != usize::MAX {
+                    g_dn - g_up
+                } else {
+                    0.0
+                };
+                let single_up_gain = if i_up != usize::MAX { -g_up } else { 0.0 };
+                let single_dn_gain = if slack && j_dn != usize::MAX { g_dn } else { 0.0 };
+                let best = pair_gain.max(single_up_gain).max(single_dn_gain);
+                if best < opts.eps {
+                    break;
+                }
+                pairs_left -= 1;
+                stats.pair_steps += 1;
+                let moved = if single_up_gain >= pair_gain && single_up_gain >= single_dn_gain {
+                    if matches!(p.constraint, ConstraintKind::SumEq(_)) {
+                        // singles are infeasible under the equality
+                        // constraint — fall back to the pair direction
+                        pair_step(
+                            p,
+                            &active,
+                            &mut alpha,
+                            &mut g,
+                            i_up,
+                            j_dn,
+                            g_up,
+                            opts.second_order,
+                            &mut qi,
+                            &mut qj,
+                            &mut stats,
+                        )
+                    } else {
+                        single_update(
+                            p,
+                            &active,
+                            &mut alpha,
+                            &mut g,
+                            &mut sum,
+                            i_up,
+                            None,
+                            &mut qi,
+                            &mut stats,
+                        )
+                    }
+                } else if single_dn_gain >= pair_gain {
+                    single_update(
+                        p,
+                        &active,
+                        &mut alpha,
+                        &mut g,
+                        &mut sum,
+                        j_dn,
+                        // do not let the decrease dip below the constraint
+                        match p.constraint {
+                            ConstraintKind::SumGe(nu) => Some(nu),
+                            ConstraintKind::SumEq(_) => None,
+                        },
+                        &mut qi,
+                        &mut stats,
+                    )
+                } else {
+                    pair_step(
+                        p,
+                        &active,
+                        &mut alpha,
+                        &mut g,
+                        i_up,
+                        j_dn,
+                        g_up,
+                        opts.second_order,
+                        &mut qi,
+                        &mut qj,
+                        &mut stats,
+                    )
+                };
+                if moved == 0.0 {
+                    // Zero progress: the selected move is fully clipped
+                    // by the box (or the pair degenerates).  Rescanning
+                    // would pick the same direction forever — stop the
+                    // phase; the unshrink check below decides whether
+                    // the iterate is optimal.
+                    stats.stalled_pair_steps += 1;
+                    break;
+                }
+                steps_since_shrink += 1;
+                if shrinking && steps_since_shrink >= pair_shrink_interval {
+                    steps_since_shrink = 0;
+                    shrink(p, &mut active, &alpha, &g, &mut stats);
+                }
+            }
+        }
+
+        // ---- Unshrink: mandatory before convergence can be declared.
+        // If the set is already full (never shrank, or the previous
+        // round's reconstruction re-converged without re-shrinking) the
+        // optimum is certified on all coordinates and we are done. ----
+        if !shrinking || active.len() == n {
+            break;
+        }
+        stats.unshrink_events += 1;
+        reconstruct_gradient(p, &alpha, &mut g, &mut stats);
+        active = (0..n).collect();
+        stats.active_trajectory.push(n);
     }
 
-    stats.violation = kkt_violation(p, &alpha);
-    stats.objective = p.objective(&alpha);
+    // Final violation from a freshly recomputed gradient — an
+    // *independent* certificate of the maintained-g stopping rule (after
+    // ~10⁵ incremental updates the maintained vector has drifted by
+    // rounding; certifying on it would let the telemetry overstate
+    // convergence).  One O(l²) matvec, once per solve.
+    stats.violation = super::kkt_violation(p, &alpha);
+    stats.rows_touched += n as u64;
+    let objective = objective_sparse(p, &alpha, &mut stats);
+    stats.objective = objective;
     (alpha, stats)
 }
 
-/// Exact minimisation along coordinate i within its box (and optionally
-/// above the sum floor).
+/// Exact minimisation along coordinate i within its box (optionally
+/// keeping the sum above `sum_floor`), with the incremental gradient
+/// update restricted to the active set.  ONE implementation serves both
+/// the Phase-1 sweeps (floor = ν) and the pairwise phase's single moves,
+/// so the clamp/lb arithmetic cannot diverge between them.  Returns the
+/// signed step taken (0.0 ⇒ no move).
 fn single_update(
     p: &QpProblem,
+    active: &[usize],
     alpha: &mut [f64],
     g: &mut [f64],
     sum: &mut f64,
     i: usize,
     sum_floor: Option<f64>,
-) {
+    qbuf: &mut [f64],
+    stats: &mut SolveStats,
+) -> f64 {
     let qii = p.q.diag(i);
     if qii <= 1e-14 {
-        return;
+        return 0.0;
     }
     let mut lb = 0.0f64;
     if let Some(floor) = sum_floor {
@@ -190,53 +387,211 @@ fn single_update(
     let new = (alpha[i] - g[i] / qii).clamp(lb, ub);
     let d = new - alpha[i];
     if d != 0.0 {
-        let qrow = p.q.row(i);
-        for (gk, &qik) in g.iter_mut().zip(qrow.iter()) {
-            *gk += d * qik;
+        stats.rows_touched += 1;
+        if active.len() == g.len() {
+            // full active set: plain row sweep (dense backends borrow
+            // the resident row; streaming takes its chunked fast path)
+            let qrow = p.q.row(i);
+            for (gk, &qik) in g.iter_mut().zip(qrow.iter()) {
+                *gk += d * qik;
+            }
+        } else {
+            let row = &mut qbuf[..active.len()];
+            p.q.row_gather(i, active, row);
+            for (&k, &qik) in active.iter().zip(row.iter()) {
+                g[k] += d * qik;
+            }
         }
         *sum += d;
         alpha[i] = new;
     }
+    d
 }
 
-/// Exact minimisation along e_i − e_j (sum preserved): step
+/// One pairwise step along e_i − e_j (sum-preserving): exact step
 /// t* = (g_j − g_i) / (Q_ii + Q_jj − 2 Q_ij), clipped to the box.
-fn pair_update(
+/// `j_first` is the first-order maximal-violating j; with
+/// `second_order` the step instead picks j maximising the
+/// curvature-normalised gain (g_j − g_up)² / curv over the active
+/// descent candidates, reusing the row-i fetch for both selection and
+/// update.  Returns the signed mass moved (0.0 ⇒ fully clipped or
+/// degenerate).
+fn pair_step(
     p: &QpProblem,
+    active: &[usize],
     alpha: &mut [f64],
     g: &mut [f64],
-    sum: &mut f64,
     i: usize,
-    j: usize,
-) {
-    if i == j || i == usize::MAX || j == usize::MAX {
-        return;
+    j_first: usize,
+    g_up: f64,
+    second_order: bool,
+    qi: &mut [f64],
+    qj: &mut [f64],
+    stats: &mut SolveStats,
+) -> f64 {
+    if i == usize::MAX || j_first == usize::MAX {
+        return 0.0;
     }
-    // row i also supplies Q_ii and Q_ij; a bounded row cache keeps the
-    // handle valid even if fetching row j evicts it.
-    let qi = p.q.row(i);
-    let curv = qi[i] + p.q.diag(j) - 2.0 * qi[j];
+    let m = active.len();
+    let full = m == alpha.len();
+    // row i over the active set serves selection, curvature and the
+    // gradient update with a single fetch; a bounded row cache keeps
+    // the handle valid even if fetching row j evicts it.
+    let ri_handle;
+    let ri: &[f64] = if full {
+        ri_handle = p.q.row(i);
+        &ri_handle
+    } else {
+        p.q.row_gather(i, active, &mut qi[..m]);
+        &qi[..m]
+    };
+    stats.rows_touched += 1;
+    let qii = p.q.diag(i);
+    let mut j = j_first;
+    if second_order {
+        // WSS2: maximise dg²/curv among the active descent candidates;
+        // ties break to the lowest index, so selection is deterministic.
+        let mut best_gain = f64::NEG_INFINITY;
+        let mut best_j = usize::MAX;
+        for (a, &k) in active.iter().enumerate() {
+            if k != i && alpha[k] > BOUND_TOL && g[k] > g_up {
+                let dg = g[k] - g_up;
+                let curv = (qii + p.q.diag(k) - 2.0 * ri[a]).max(CURV_FLOOR);
+                let gain = dg * dg / curv;
+                if gain > best_gain {
+                    best_gain = gain;
+                    best_j = k;
+                }
+            }
+        }
+        if best_j != usize::MAX {
+            j = best_j;
+        }
+    }
+    if i == j {
+        return 0.0;
+    }
+    // position of j in the active order (active is ascending)
+    let pj = if full {
+        j
+    } else {
+        match active.binary_search(&j) {
+            Ok(a) => a,
+            Err(_) => return 0.0, // j not active — cannot happen; stay safe
+        }
+    };
+    let curv = qii + p.q.diag(j) - 2.0 * ri[pj];
     let dg = g[j] - g[i];
-    let mut t = if curv > 1e-14 { dg / curv } else { dg.signum() * 1e30 };
+    let mut t = if curv > CURV_FLOOR { dg / curv } else { dg.signum() * 1e30 };
     // box limits: 0 <= alpha_i + t <= ub_i, 0 <= alpha_j - t <= ub_j
     t = t.min(p.ub[i] - alpha[i]).min(alpha[j]);
     t = t.max(-alpha[i]).max(alpha[j] - p.ub[j]);
     if t == 0.0 {
-        return;
+        return 0.0;
     }
-    let qj = p.q.row(j);
-    for ((gk, &qik), &qjk) in g.iter_mut().zip(qi.iter()).zip(qj.iter()) {
-        *gk += t * (qik - qjk);
+    stats.rows_touched += 1;
+    if full {
+        let rj = p.q.row(j);
+        for ((gk, &qik), &qjk) in g.iter_mut().zip(ri.iter()).zip(rj.iter()) {
+            *gk += t * (qik - qjk);
+        }
+    } else {
+        let rj = &mut qj[..m];
+        p.q.row_gather(j, active, rj);
+        for ((&k, &qik), &qjk) in active.iter().zip(ri.iter()).zip(rj.iter()) {
+            g[k] += t * (qik - qjk);
+        }
     }
     alpha[i] += t;
     alpha[j] -= t;
-    let _ = sum; // unchanged by construction
+    t
+}
+
+/// Retire provably-pinned coordinates from the active set.  With
+/// multiplier bracket [m_up, m_dn] estimated over the current active
+/// set, a coordinate at 0 can only re-enter a feasible descent
+/// direction if its gradient undercuts the bracket (or 0, for the
+/// inequality dual's always-feasible single increases), and
+/// symmetrically at ub.  The bracket is a running estimate, so shrinking
+/// is a heuristic accelerator — exactness is restored by the mandatory
+/// unshrink pass in [`solve`].  Never removes a coordinate the current
+/// sweep could still move.
+fn shrink(
+    p: &QpProblem,
+    active: &mut Vec<usize>,
+    alpha: &[f64],
+    g: &[f64],
+    stats: &mut SolveStats,
+) {
+    let mut m_up = f64::INFINITY;
+    let mut m_dn = f64::NEG_INFINITY;
+    for &k in active.iter() {
+        if alpha[k] < p.ub[k] - BOUND_TOL {
+            m_up = m_up.min(g[k]);
+        }
+        if alpha[k] > BOUND_TOL {
+            m_dn = m_dn.max(g[k]);
+        }
+    }
+    // For the inequality dual single moves exist too: increases improve
+    // when g < 0 (always feasible) and decreases when g > 0 (given sum
+    // slack), so the gates include 0; the equality dual only has pairs.
+    let (lo_gate, hi_gate) = match p.constraint {
+        ConstraintKind::SumGe(_) => (m_dn.max(0.0), m_up.min(0.0)),
+        ConstraintKind::SumEq(_) => (m_dn, m_up),
+    };
+    let before = active.len();
+    active.retain(|&k| {
+        let at_lo = alpha[k] <= BOUND_TOL;
+        let at_hi = alpha[k] >= p.ub[k] - BOUND_TOL;
+        !((at_lo && g[k] > lo_gate) || (at_hi && g[k] < hi_gate))
+    });
+    if active.len() < before {
+        stats.shrink_events += 1;
+        stats.active_trajectory.push(active.len());
+    }
+}
+
+/// Rebuild g = Qα + f from scratch by accumulating the support rows —
+/// O(nnz·l) row fetches instead of the O(l²) full matvec (Q symmetric:
+/// column j = row j).  Runs at every unshrink event.
+fn reconstruct_gradient(p: &QpProblem, alpha: &[f64], g: &mut [f64], stats: &mut SolveStats) {
+    match p.lin {
+        Some(f) => g.copy_from_slice(f),
+        None => g.fill(0.0),
+    }
+    for (j, &aj) in alpha.iter().enumerate() {
+        if aj != 0.0 {
+            stats.rows_touched += 1;
+            let row = p.q.row(j);
+            for (gk, &qjk) in g.iter_mut().zip(row.iter()) {
+                *gk += aj * qjk;
+            }
+        }
+    }
+}
+
+/// F(α) through [`KernelMatrix::quad_active`] over the support of α:
+/// O(nnz) row gathers of O(nnz) entries each, instead of the full
+/// O(l²) matvec the dense objective pays — after screening the support
+/// is a fraction of l.
+fn objective_sparse(p: &QpProblem, alpha: &[f64], stats: &mut SolveStats) -> f64 {
+    let support: Vec<usize> = (0..alpha.len()).filter(|&i| alpha[i] != 0.0).collect();
+    let a_s: Vec<f64> = support.iter().map(|&i| alpha[i]).collect();
+    stats.rows_touched += support.len() as u64;
+    let quad = 0.5 * p.q.quad_active(&a_s, &support);
+    let lin = p
+        .lin
+        .map(|f| crate::util::linalg::dot(f, alpha))
+        .unwrap_or(0.0);
+    quad + lin
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::prop::run_cases;
+    use crate::qp::kkt_violation;
     use crate::util::Mat;
 
     fn eye(n: usize) -> Mat {
@@ -285,7 +640,7 @@ mod tests {
 
     #[test]
     fn linear_term_shifts_solution() {
-        // min 1/2|a|^2 + f.a with f = (-1, 0), box [0,1], no sum floor
+        // min 1/2|a|^2 + f.a with f = (-2, 0), box [0,1], no sum floor
         // ⇒ a = (1, 0)  (coordinate 0 driven to its cap)
         let q = eye(2);
         let f = vec![-2.0, 0.0];
@@ -314,7 +669,10 @@ mod tests {
             constraint: ConstraintKind::SumGe(0.4),
         };
         let opts = DcdmOpts { paper_mode: true, ..DcdmOpts::default() };
-        let (a, _) = solve(&p, None, &opts);
+        let (a, stats) = solve(&p, None, &opts);
+        // paper mode never shrinks
+        assert_eq!(stats.shrink_events, 0);
+        assert_eq!(stats.unshrink_events, 0);
         // a further sweep must not move
         let (a2, _) = solve(&p, Some(&a), &DcdmOpts { max_sweeps: 1, ..opts });
         for (x, y) in a.iter().zip(&a2) {
@@ -382,5 +740,166 @@ mod tests {
         for (x, y) in a_cold.iter().zip(&a_warm) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    /// Shrink-on vs shrink-off must agree to solver accuracy on random
+    /// PSD problems, both constraint kinds, with and without linear
+    /// terms — the acceptance invariant of the shrinking rebuild.
+    #[test]
+    fn shrinking_matches_unshrunk_on_random_psd() {
+        run_cases(24, 0x5412, |g| {
+            let n = g.usize(6, 28);
+            let q = g.psd(n);
+            let ub = vec![1.5 / n as f64; n];
+            let cap = ub.iter().sum::<f64>() * 0.9;
+            let target = g.f64(0.05, 0.8).min(cap);
+            let kind = if g.bool() {
+                ConstraintKind::SumGe(target)
+            } else {
+                ConstraintKind::SumEq(target)
+            };
+            let lin: Option<Vec<f64>> =
+                if g.bool() { Some(g.vec_f64(n, -0.5, 0.5)) } else { None };
+            let p = QpProblem { q: &q, lin: lin.as_deref(), ub: &ub, constraint: kind };
+            // tight eps so the two ε-KKT optima sit within the 1e-9
+            // objective-gap acceptance band
+            let on = DcdmOpts {
+                shrinking: true,
+                shrink_every: g.usize(1, 6),
+                eps: 1e-10,
+                ..DcdmOpts::default()
+            };
+            let off = DcdmOpts { shrinking: false, eps: 1e-10, ..DcdmOpts::default() };
+            let (a_on, s_on) = solve(&p, None, &on);
+            let (a_off, s_off) = solve(&p, None, &off);
+            assert!(p.is_feasible(&a_on, 1e-8), "shrink-on infeasible");
+            assert!(p.is_feasible(&a_off, 1e-8), "shrink-off infeasible");
+            let (f_on, f_off) = (p.objective(&a_on), p.objective(&a_off));
+            assert!(
+                (f_on - f_off).abs() <= 1e-9 * (1.0 + f_off.abs()),
+                "objective gap: {f_on} vs {f_off} (n={n}, {kind:?})"
+            );
+            assert!(kkt_violation(&p, &a_on) < 1e-6, "shrink-on kkt");
+            assert!(kkt_violation(&p, &a_off) < 1e-6, "shrink-off kkt");
+            let _ = (s_on, s_off);
+        });
+    }
+
+    /// Second-order and first-order pair selection land on the same
+    /// objective (different iterates, same optimum).
+    #[test]
+    fn second_order_selection_matches_first_order_objective() {
+        run_cases(16, 0x2E40, |g| {
+            let n = g.usize(5, 24);
+            let q = g.psd(n);
+            let ub = vec![1.5 / n as f64; n];
+            let cap = ub.iter().sum::<f64>() * 0.9;
+            let target = g.f64(0.05, 0.7).min(cap);
+            let kind = if g.bool() {
+                ConstraintKind::SumGe(target)
+            } else {
+                ConstraintKind::SumEq(target)
+            };
+            let p = QpProblem { q: &q, lin: None, ub: &ub, constraint: kind };
+            let (a2, _) = solve(
+                &p,
+                None,
+                &DcdmOpts { second_order: true, eps: 1e-10, ..DcdmOpts::default() },
+            );
+            let (a1, _) = solve(
+                &p,
+                None,
+                &DcdmOpts { second_order: false, eps: 1e-10, ..DcdmOpts::default() },
+            );
+            let (f2, f1) = (p.objective(&a2), p.objective(&a1));
+            assert!(
+                (f2 - f1).abs() <= 1e-9 * (1.0 + f1.abs()),
+                "selection-dependent objective: {f2} vs {f1}"
+            );
+            assert!(kkt_violation(&p, &a2) < 1e-6);
+        });
+    }
+
+    /// Regression for the pairwise-phase stall: at a point where the
+    /// best-scoring move is degenerate (SumEq with nothing able to
+    /// decrease), the old loop rescanned until `max_pair_steps`; the
+    /// zero-progress guard must stop after one abandoned step.
+    #[test]
+    fn fully_clipped_pair_terminates_without_rescanning() {
+        let q = eye(3);
+        let f = vec![-1.0, -0.5, 0.0];
+        let ub = vec![1.0; 3];
+        let p = QpProblem {
+            q: &q,
+            lin: Some(&f),
+            ub: &ub,
+            constraint: ConstraintKind::SumEq(0.0),
+        };
+        let (a, stats) = solve(&p, None, &DcdmOpts::default());
+        assert!(a.iter().all(|&v| v == 0.0), "{a:?}");
+        assert!(
+            stats.pair_steps <= 2,
+            "stalled loop rescanned: {} pair steps",
+            stats.pair_steps
+        );
+        assert!(stats.stalled_pair_steps >= 1);
+    }
+
+    /// A problem engineered so half the coordinates pin at 0: shrinking
+    /// must retire them, record the telemetry, and still match the
+    /// unshrunk solution exactly after the mandatory unshrink pass.
+    #[test]
+    fn shrinking_records_telemetry_and_stays_exact() {
+        let n = 40;
+        let q = eye(n);
+        // a strong positive linear term pins coordinates 10..40 at zero
+        let f: Vec<f64> = (0..n).map(|i| if i < 10 { 0.0 } else { 1.0 }).collect();
+        let ub = vec![1.0 / n as f64; n];
+        let p = QpProblem {
+            q: &q,
+            lin: Some(&f),
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(0.2),
+        };
+        let opts = DcdmOpts { shrink_every: 1, ..DcdmOpts::default() };
+        let (a_on, stats) = solve(&p, None, &opts);
+        assert_eq!(stats.active_trajectory.first(), Some(&n));
+        assert!(stats.shrink_events >= 1, "never shrank: {stats:?}");
+        assert!(stats.unshrink_events >= 1, "converged without unshrink");
+        assert!(stats.min_active().unwrap() < n);
+        assert!(stats.rows_touched >= n as u64);
+        let (a_off, _) =
+            solve(&p, None, &DcdmOpts { shrinking: false, ..DcdmOpts::default() });
+        let (f_on, f_off) = (p.objective(&a_on), p.objective(&a_off));
+        assert!(
+            (f_on - f_off).abs() <= 1e-9 * (1.0 + f_off.abs()),
+            "{f_on} vs {f_off}"
+        );
+        assert!(kkt_violation(&p, &a_on) < 1e-8);
+    }
+
+    /// The reported sparse objective must agree with the dense
+    /// `QpProblem::objective` evaluation.
+    #[test]
+    fn sparse_objective_matches_dense_objective() {
+        run_cases(12, 0x0B1, |g| {
+            let n = g.usize(4, 20);
+            let q = g.psd(n);
+            let ub = vec![1.5 / n as f64; n];
+            let target = g.f64(0.1, 0.6).min(ub.iter().sum::<f64>() * 0.9);
+            let p = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(target),
+            };
+            let (a, stats) = solve(&p, None, &DcdmOpts::default());
+            let dense = p.objective(&a);
+            assert!(
+                (stats.objective - dense).abs() <= 1e-10 * (1.0 + dense.abs()),
+                "sparse {} vs dense {dense}",
+                stats.objective
+            );
+        });
     }
 }

@@ -106,6 +106,18 @@ pub fn kkt_violation(p: &QpProblem, alpha: &[f64]) -> f64 {
     let n = alpha.len();
     let mut g = vec![0.0; n];
     p.gradient(alpha, &mut g);
+    violation_with_gradient(p, alpha, &g)
+}
+
+/// [`kkt_violation`] against a caller-supplied gradient g = Qα + f —
+/// the shared core of the KKT check, for callers that already hold a
+/// (trustworthy) gradient and want to skip the O(l²) recomputation.
+/// Note the shrinking DCDM deliberately does NOT certify its final
+/// iterate this way: its maintained gradient drives the stopping rule,
+/// so the reported violation comes from a fresh [`kkt_violation`] as an
+/// independent certificate.
+pub fn violation_with_gradient(p: &QpProblem, alpha: &[f64], g: &[f64]) -> f64 {
+    let n = alpha.len();
     let tol = 1e-10;
     let sum: f64 = alpha.iter().sum();
     // m_up: min gradient over coordinates that can increase;
@@ -150,12 +162,48 @@ pub fn kkt_violation(p: &QpProblem, alpha: &[f64]) -> f64 {
 }
 
 /// Solver telemetry for metrics / EXPERIMENTS.md.
+///
+/// The shrinking DCDM additionally reports its per-phase counters: how
+/// often the active set shrank/was rebuilt, how many Q rows (full or
+/// active-gathered) the hot loops materialised, and the active-set size
+/// trajectory itself.  Solvers without an active set (GQP) leave those
+/// at their defaults.
 #[derive(Clone, Debug, Default)]
 pub struct SolveStats {
     pub sweeps: usize,
     pub pair_steps: usize,
     pub violation: f64,
     pub objective: f64,
+    /// Shrink passes that actually retired coordinates.
+    pub shrink_events: usize,
+    /// Unshrink + full-gradient-reconstruction passes (≥ 1 whenever the
+    /// solver ever shrank — convergence is only declared on the full
+    /// coordinate set).
+    pub unshrink_events: usize,
+    /// Q-row materialisations / active-set gathers across all phases
+    /// (the initial full-gradient matvec counts as l rows) — the
+    /// backend-independent work metric `dcdm_scale` records.
+    pub rows_touched: u64,
+    /// |active| after the initial activation and after every shrink /
+    /// unshrink event — the active-set size trajectory.
+    pub active_trajectory: Vec<usize>,
+    /// Pairwise steps abandoned because the selected move was fully
+    /// clipped by the box: zero progress makes the phase stop instead
+    /// of rescanning until `max_pair_steps`.
+    pub stalled_pair_steps: usize,
+}
+
+impl SolveStats {
+    /// Smallest active-set size the solver worked on (`None` when the
+    /// solver does not track an active set).
+    pub fn min_active(&self) -> Option<usize> {
+        self.active_trajectory.iter().copied().min()
+    }
+
+    /// Active-set size at termination (`None` without an active set).
+    pub fn final_active(&self) -> Option<usize> {
+        self.active_trajectory.last().copied()
+    }
 }
 
 #[cfg(test)]

@@ -130,6 +130,25 @@ fn oneclass_paths_conform_across_threads() {
     }
 }
 
+/// The unshrunk solver must conform across backends too (the shrinking
+/// default is exercised by every other path test): with
+/// `dcdm.shrinking = false` each backend still reproduces the serial
+/// dense reference path bit for bit.
+#[test]
+fn supervised_paths_conform_with_shrinking_disabled() {
+    let d = gaussians(28, 2.5, 33); // l = 56
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.2, 0.3, 4);
+    let reference = full_q(&d.x, &d.y, kernel);
+    for kind in backends_under_test() {
+        let mut cfg = PathConfig::new(nus.clone(), kernel);
+        cfg.dcdm.shrinking = false;
+        cfg.shard = Sharding::Threads(2);
+        let got = build_backend(kind, &d.x, Some(&d.y), kernel, 10, 2, 6).unwrap();
+        assert_path_conformance(&reference, &got, &cfg, false, &format!("no-shrink/{kind}"));
+    }
+}
+
 /// The harness itself must reject unknown backend names (CI matrix
 /// typos surface instead of testing nothing).
 #[test]

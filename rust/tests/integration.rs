@@ -128,6 +128,7 @@ fn grid_search_finds_good_model_on_circle() {
         2,
         GramPolicy::Auto,
         srbo::kernel::matrix::Sharding::Auto,
+        srbo::qp::dcdm::DcdmTuning::default(),
     );
     assert_eq!(results.len(), 3);
     assert!(matches!(kernel, KernelKind::Rbf { .. }), "circle needs rbf");

@@ -226,6 +226,51 @@ fn prop_rule_solver_independent() {
     });
 }
 
+/// Shrinking invariance along full screened paths: the shrink-on and
+/// shrink-off DCDM give the same objective at every grid point on
+/// random datasets and kernels (the solver-level 1e-9 invariant is
+/// pinned in `qp::dcdm`; end-to-end the gap compounds only through
+/// eps-level warm-start/screening flutter).
+#[test]
+fn prop_shrinking_objective_invariant_on_paths() {
+    run_cases(6, 0x54A1, |g| {
+        let d = srbo::data::synthetic::gaussians(
+            g.usize(18, 30),
+            g.f64(1.5, 3.0),
+            g.rng().next_u64(),
+        );
+        let kernel = if g.bool() {
+            KernelKind::Linear
+        } else {
+            KernelKind::Rbf { gamma: g.f64(0.3, 1.5) }
+        };
+        let q = full_q(&d.x, &d.y, kernel);
+        let nu0 = g.f64(0.2, 0.35);
+        let nus: Vec<f64> = (0..5).map(|i| nu0 + 0.02 * i as f64).collect();
+        let on = PathConfig::new(nus.clone(), kernel);
+        let mut off = on.clone();
+        off.dcdm.shrinking = false;
+        let p_on = NuPath::run_with_q(&q, &on, false, Default::default()).unwrap();
+        let p_off = NuPath::run_with_q(&q, &off, false, Default::default()).unwrap();
+        let l = d.len();
+        let ub = vec![1.0 / l as f64; l];
+        for k in 0..nus.len() {
+            let p = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nus[k]),
+            };
+            let (fa, fb) =
+                (p.objective(&p_on.steps[k].alpha), p.objective(&p_off.steps[k].alpha));
+            assert!(
+                (fa - fb).abs() < 1e-6 * (1.0 + fa.abs()),
+                "shrink-dependent objective at {k}: {fa} vs {fb}"
+            );
+        }
+    });
+}
+
 /// Screening rule emits only valid codes and the ratio statistic agrees
 /// with the codes.
 #[test]

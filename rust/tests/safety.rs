@@ -175,6 +175,73 @@ fn screening_with_dense_paper_grid_is_safe_and_effective() {
     assert!(audit.is_safe(1e-6), "obj gap {}", audit.max_objective_gap);
 }
 
+/// Shrinking-solver safety audit: with DCDM active-set shrinking
+/// explicitly enabled (the default), the screened path must reproduce
+/// BOTH the unscreened path and the shrink-off screened path at every
+/// grid point — the shrinking rebuild may change per-iteration cost
+/// only, never the optimum.  Runs over the `SRBO_TEST_GRAM` backend so
+/// the CI policy matrix audits shrinking on every kernel backend.
+#[test]
+fn screening_with_shrinking_solver_is_safe_and_matches_unshrunk() {
+    let d = synthetic::gaussians(60, 2.0, 17);
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let q = full_q(&d.x, &d.y, kernel);
+    let backend =
+        build_backend(env_gram().unwrap_or("dense"), &d.x, Some(&d.y), kernel, 24, 2, 16)
+            .unwrap();
+    let nus = grid(0.2, 0.4, 9);
+    let mut on = PathConfig::new(nus.clone(), kernel);
+    on.screening = true;
+    on.dcdm.shrinking = true; // explicit: this audit is about shrinking
+    let mut off_screen = on.clone();
+    off_screen.screening = false;
+    let mut no_shrink = on.clone();
+    no_shrink.dcdm.shrinking = false;
+    let p_on = NuPath::run_with_matrix(&backend, &on, false, Default::default()).unwrap();
+    let p_off = NuPath::run_with_matrix(&backend, &off_screen, false, Default::default()).unwrap();
+    let p_ns = NuPath::run_with_matrix(&backend, &no_shrink, false, Default::default()).unwrap();
+    let l = d.len();
+    let alphas = |p: &NuPath| -> Vec<Vec<f64>> {
+        p.steps.iter().map(|s| s.alpha.clone()).collect()
+    };
+    let scores = |a: &[f64]| {
+        let mut s = vec![0.0; l];
+        q.matvec(a, &mut s);
+        s
+    };
+    let vs_unscreened = SafetyAudit::compare(
+        &q,
+        &nus,
+        |_| vec![1.0 / l as f64; l],
+        ConstraintKind::SumGe,
+        &alphas(&p_on),
+        &alphas(&p_off),
+        &scores,
+    );
+    assert!(
+        vs_unscreened.is_safe(1e-6),
+        "screened+shrinking vs unscreened: obj gap {}",
+        vs_unscreened.max_objective_gap
+    );
+    let vs_unshrunk = SafetyAudit::compare(
+        &q,
+        &nus,
+        |_| vec![1.0 / l as f64; l],
+        ConstraintKind::SumGe,
+        &alphas(&p_on),
+        &alphas(&p_ns),
+        &scores,
+    );
+    assert!(
+        vs_unshrunk.is_safe(1e-6),
+        "shrinking vs unshrunk solver: obj gap {}",
+        vs_unshrunk.max_objective_gap
+    );
+    // and the solver telemetry flows through the path metrics
+    assert!(p_on.metrics.total_rows_touched > 0, "solver telemetry missing");
+    assert_eq!(p_ns.metrics.total_shrink_events, 0);
+}
+
 /// Streaming-mode safety audit: with Q backed by `StreamingGram` over
 /// an on-disk `FileStore` (x never resident, rows streamed in chunks,
 /// shard-parallel screened path), the screened path still reproduces
