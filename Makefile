@@ -3,13 +3,29 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all verify lint fmt bench-compile bench bench-gram bench-path bench-dcdm aot clean
+.PHONY: all verify verify-matrix lint fmt bench-compile bench bench-gram bench-path bench-dcdm aot clean
 
 all: verify
 
 # Tier-1 verify (verbatim — keep in sync with ROADMAP.md and CI).
+# NOTE: this is the tier-1 gate only; CI additionally fans the
+# conformance + safety suites over every gram policy × gap-screening
+# toggle.  Run `make verify-matrix` to reproduce that locally.
 verify:
 	$(CARGO) build --release && $(CARGO) test -q
+	@echo "tier-1 OK — run 'make verify-matrix' for the CI gram × dynamic matrix"
+
+# Local mirror of CI's gram-matrix job: the conformance + safety suites
+# once per kernel-matrix policy, each with gap-safe dynamic screening
+# forced on and off (8 runs).
+verify-matrix:
+	@set -e; for g in dense lru sharded stream; do \
+		for dyn in on off; do \
+			echo "== SRBO_TEST_GRAM=$$g SRBO_TEST_DYNAMIC=$$dyn =="; \
+			SRBO_TEST_GRAM=$$g SRBO_TEST_DYNAMIC=$$dyn \
+				$(CARGO) test -q --test conformance --test safety; \
+		done; \
+	done
 
 # Lint gate: formatting + clippy with warnings denied.
 lint:

@@ -1,8 +1,9 @@
 //! §Perf DCDM solver bench: direct ν-SVM dual solves over a size ×
-//! {shrink on/off} × {second/first-order selection} × backend grid, so
-//! the solver finally has a perf trajectory alongside the path bench.
-//! Prints medians plus the solver's own work counters (sweeps, pair
-//! steps, rows touched, smallest active set) and writes
+//! {shrink on/off} × {gap-screen on/off} × {second/first-order
+//! selection} × backend grid, so the solver finally has a perf
+//! trajectory alongside the path bench.  Prints medians plus the
+//! solver's own work counters (sweeps, pair steps, rows touched,
+//! smallest active set, gap rounds/retired) and writes
 //! `BENCH_dcdm.json` at the repo root (run via `make bench-dcdm`).
 //!
 //! Knobs: `SRBO_SCALE` shrinks dataset sizes; `SRBO_BENCH_QUICK=1` runs
@@ -46,49 +47,63 @@ fn main() {
         for (bname, q) in &backends {
             for (sel, second_order) in [("second", true), ("first", false)] {
                 for (shr, shrinking) in [("on", true), ("off", false)] {
-                    let opts = DcdmOpts { shrinking, second_order, ..DcdmOpts::default() };
-                    let p = QpProblem {
-                        q,
-                        lin: None,
-                        ub: &ub,
-                        constraint: ConstraintKind::SumGe(nu),
-                    };
-                    let mut last: Option<SolveStats> = None;
-                    let s = bench(
-                        &format!("dcdm_l{l}_{bname}_{sel}_shrink-{shr}"),
-                        warmup,
-                        reps,
-                        || {
-                            let (alpha, stats) = dcdm::solve(&p, None, &opts);
-                            std::hint::black_box(&alpha);
-                            last = Some(stats);
-                        },
-                    );
-                    let st = last.expect("at least one rep ran");
-                    let min_active = st.min_active().unwrap_or(l);
-                    println!(
-                        "{}  sweeps={} pairs={} rows={} min_active={min_active}",
-                        s.human(),
-                        st.sweeps,
-                        st.pair_steps,
-                        st.rows_touched,
-                    );
-                    runs.push(Json::Obj(vec![
-                        ("l".into(), Json::Num(l as f64)),
-                        ("backend".into(), Json::Str((*bname).into())),
-                        ("selection".into(), Json::Str(sel.into())),
-                        ("shrinking".into(), Json::Bool(shrinking)),
-                        ("median_s".into(), Json::Num(s.median_s)),
-                        ("min_s".into(), Json::Num(s.min_s)),
-                        ("sweeps".into(), Json::Num(st.sweeps as f64)),
-                        ("pair_steps".into(), Json::Num(st.pair_steps as f64)),
-                        ("rows_touched".into(), Json::Num(st.rows_touched as f64)),
-                        ("min_active".into(), Json::Num(min_active as f64)),
-                        ("shrink_events".into(), Json::Num(st.shrink_events as f64)),
-                        ("unshrink_events".into(), Json::Num(st.unshrink_events as f64)),
-                        ("objective".into(), Json::Num(st.objective)),
-                        ("violation".into(), Json::Num(st.violation)),
-                    ]));
+                    for (gp, gap_screening) in [("on", true), ("off", false)] {
+                        let opts = DcdmOpts {
+                            shrinking,
+                            second_order,
+                            gap_screening,
+                            ..DcdmOpts::default()
+                        };
+                        let p = QpProblem {
+                            q,
+                            lin: None,
+                            ub: &ub,
+                            constraint: ConstraintKind::SumGe(nu),
+                        };
+                        let mut last: Option<SolveStats> = None;
+                        let s = bench(
+                            &format!("dcdm_l{l}_{bname}_{sel}_shrink-{shr}_gap-{gp}"),
+                            warmup,
+                            reps,
+                            || {
+                                let (alpha, stats) = dcdm::solve(&p, None, &opts);
+                                std::hint::black_box(&alpha);
+                                last = Some(stats);
+                            },
+                        );
+                        let st = last.expect("at least one rep ran");
+                        let min_active = st.min_active().unwrap_or(l);
+                        println!(
+                            "{}  sweeps={} pairs={} rows={} min_active={min_active} \
+                             gap_rounds={} gap_retired={}",
+                            s.human(),
+                            st.sweeps,
+                            st.pair_steps,
+                            st.rows_touched,
+                            st.gap_rounds,
+                            st.gap_retired(),
+                        );
+                        runs.push(Json::Obj(vec![
+                            ("l".into(), Json::Num(l as f64)),
+                            ("backend".into(), Json::Str((*bname).into())),
+                            ("selection".into(), Json::Str(sel.into())),
+                            ("shrinking".into(), Json::Bool(shrinking)),
+                            ("gap_screening".into(), Json::Bool(gap_screening)),
+                            ("median_s".into(), Json::Num(s.median_s)),
+                            ("min_s".into(), Json::Num(s.min_s)),
+                            ("sweeps".into(), Json::Num(st.sweeps as f64)),
+                            ("pair_steps".into(), Json::Num(st.pair_steps as f64)),
+                            ("rows_touched".into(), Json::Num(st.rows_touched as f64)),
+                            ("min_active".into(), Json::Num(min_active as f64)),
+                            ("shrink_events".into(), Json::Num(st.shrink_events as f64)),
+                            ("unshrink_events".into(), Json::Num(st.unshrink_events as f64)),
+                            ("gap_rounds".into(), Json::Num(st.gap_rounds as f64)),
+                            ("gap_retired".into(), Json::Num(st.gap_retired() as f64)),
+                            ("final_gap".into(), Json::Num(st.final_gap)),
+                            ("objective".into(), Json::Num(st.objective)),
+                            ("violation".into(), Json::Num(st.violation)),
+                        ]));
+                    }
                 }
             }
         }

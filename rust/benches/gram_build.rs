@@ -1,7 +1,8 @@
 //! §Perf Gram-build scaling bench: serial vs `std::thread::scope`
 //! parallel full-Q construction over a threads × size grid.  Prints
 //! medians and writes `BENCH_gram.json` (the perf trajectory — run via
-//! `make bench-gram`; `SRBO_SCALE` shrinks sizes for smoke runs).
+//! `make bench-gram`; `SRBO_SCALE` shrinks sizes and
+//! `SRBO_BENCH_QUICK=1` runs a tiny smoke grid for CI).
 
 use srbo::bench_harness::{bench, scaled};
 use srbo::data::synthetic;
@@ -9,18 +10,21 @@ use srbo::kernel::{full_gram_threaded, KernelKind};
 use srbo::util::tsv::Json;
 
 fn main() {
+    let quick = std::env::var("SRBO_BENCH_QUICK").is_ok();
     let kernel = KernelKind::Rbf { gamma: 0.5 };
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
+    let sizes: &[usize] = if quick { &[64] } else { &[128, 256, 512] };
+    let (warmup, reps) = if quick { (0, 1) } else { (1, 3) };
     let mut runs = Vec::new();
-    for &base in &[128usize, 256, 512] {
+    for &base in sizes {
         let n = scaled(base); // per-class count; l = 2n
         let d = synthetic::gaussians(n, 2.0, 42);
         let l = d.len();
         let mut serial_median = f64::NAN;
         for &threads in &[1usize, 2, 4, 8] {
-            let s = bench(&format!("gram_rbf_l{l}_t{threads}"), 1, 3, || {
+            let s = bench(&format!("gram_rbf_l{l}_t{threads}"), warmup, reps, || {
                 std::hint::black_box(full_gram_threaded(&d.x, kernel, threads));
             });
             if threads == 1 {
@@ -40,6 +44,7 @@ fn main() {
     let doc = Json::Obj(vec![
         ("bench".into(), Json::Str("gram_build".into())),
         ("kernel".into(), Json::Str("rbf".into())),
+        ("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 })),
         ("host_parallelism".into(), Json::Num(cores as f64)),
         ("runs".into(), Json::Arr(runs)),
     ]);

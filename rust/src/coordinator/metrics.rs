@@ -23,6 +23,15 @@ pub struct PathMetrics {
     /// Smallest solver active set seen across all solves (`None` until
     /// a shrinking-aware solver reports one).
     pub min_active: Option<usize>,
+    /// Coordinates permanently retired by gap-safe dynamic screening,
+    /// summed across every solve of the path.
+    pub total_gap_retired: usize,
+    /// Gap-screening evaluations (refinement iterations included) across
+    /// every solve.
+    pub total_gap_rounds: usize,
+    /// Largest final duality gap any solve reported — a path-level
+    /// convergence-quality indicator (0.0 when gap screening never ran).
+    pub max_final_gap: f64,
 }
 
 impl PathMetrics {
@@ -37,6 +46,9 @@ impl PathMetrics {
         if let Some(m) = stats.min_active() {
             self.min_active = Some(self.min_active.map_or(m, |c| c.min(m)));
         }
+        self.total_gap_retired += stats.gap_retired();
+        self.total_gap_rounds += stats.gap_rounds;
+        self.max_final_gap = self.max_final_gap.max(stats.final_gap);
     }
 
     pub fn record_step(&mut self, ratio: f64, reduced_size: usize, stats: &SolveStats) {
@@ -139,11 +151,17 @@ mod tests {
             unshrink_events: 1,
             rows_touched: 100,
             active_trajectory: vec![50, 20, 50],
+            gap_retired_idx: vec![3, 7],
+            gap_rounds: 4,
+            final_gap: 1e-9,
             ..Default::default()
         };
         let s2 = SolveStats {
             rows_touched: 10,
             active_trajectory: vec![30, 12, 30],
+            gap_retired_idx: vec![1],
+            gap_rounds: 1,
+            final_gap: 5e-8,
             ..Default::default()
         };
         m.record_solver(&s1);
@@ -153,6 +171,9 @@ mod tests {
         assert_eq!(m.total_rows_touched, 110);
         assert_eq!(m.min_active, Some(12));
         assert_eq!(m.screened_steps, 1);
+        assert_eq!(m.total_gap_retired, 3);
+        assert_eq!(m.total_gap_rounds, 5);
+        assert_eq!(m.max_final_gap, 5e-8);
     }
 
     #[test]

@@ -56,6 +56,12 @@ fn usage() -> ! {
            --shrink-every N  sweeps between shrink passes (default 4)\n\
            --first-order     first-order MVP pair selection (default:\n\
                              second-order, curvature-normalised gain)\n\
+           --gap-screen      gap-safe dynamic screening inside DCDM\n\
+                             (default on: duality-gap spheres permanently\n\
+                             retire provably-bound coordinates mid-solve)\n\
+           --no-gap-screen   disable gap-safe dynamic screening\n\
+           --gap-every N     sweeps between gap-screening rounds\n\
+                             (default 0 = tie to --shrink-every)\n\
            --gram G          dense|lru[:rows]|stream[:rows]|auto — Q backend\n\
                              (default auto: parallel dense build below 8192\n\
                              rows, bounded LRU row cache above, out-of-core\n\
@@ -134,6 +140,10 @@ fn dcdm_of(args: &Args) -> DcdmTuning {
         shrinking: !args.flag("no-shrink"),
         shrink_every: args.get_usize("shrink-every", DcdmTuning::default().shrink_every),
         second_order: !args.flag("first-order"),
+        // --no-gap-screen wins; --gap-screen is the (default-on) opt-in
+        gap_screening: !args.flag("no-gap-screen")
+            && (args.flag("gap-screen") || DcdmTuning::default().gap_screening),
+        gap_every: args.get_usize("gap-every", DcdmTuning::default().gap_every),
     }
 }
 
@@ -149,14 +159,18 @@ fn solver_of(args: &Args) -> SolverChoice {
     }
 }
 
-/// Per-path solver telemetry line (shrinking active-set counters).
+/// Per-path solver telemetry line (shrinking + gap-screening counters).
 fn solver_telemetry(m: &srbo::coordinator::metrics::PathMetrics) -> String {
     format!(
-        "sweeps={} pair_steps={} shrink={} unshrink={} rows_touched={} min_active={}",
+        "sweeps={} pair_steps={} shrink={} unshrink={} gap_rounds={} \
+         gap_retired={} final_gap={:.2e} rows_touched={} min_active={}",
         m.total_sweeps,
         m.total_pair_steps,
         m.total_shrink_events,
         m.total_unshrink_events,
+        m.total_gap_rounds,
+        m.total_gap_retired,
+        m.max_final_gap,
         m.total_rows_touched,
         m.min_active.map_or_else(|| "-".to_string(), |v| v.to_string()),
     )

@@ -69,6 +69,30 @@ pub fn backends_under_test() -> Vec<&'static str> {
     }
 }
 
+/// The gap-screening toggle selected by `SRBO_TEST_DYNAMIC` (`on|off`),
+/// if any — the second CI matrix axis, auditing every gram policy with
+/// dynamic screening both enabled and disabled.  Unknown values panic
+/// for the same reason [`env_gram`] does.
+pub fn env_dynamic() -> Option<bool> {
+    match std::env::var("SRBO_TEST_DYNAMIC") {
+        Ok(v) => Some(match v.as_str() {
+            "on" => true,
+            "off" => false,
+            other => panic!("SRBO_TEST_DYNAMIC={other} (want on|off)"),
+        }),
+        Err(_) => None,
+    }
+}
+
+/// Apply the `SRBO_TEST_DYNAMIC` override (if set) to a path config, so
+/// the conformance/safety suites exercise the whole path stack with gap
+/// screening forced on or off.
+pub fn apply_env_dynamic(cfg: &mut PathConfig) {
+    if let Some(on) = env_dynamic() {
+        cfg.dcdm.gap_screening = on;
+    }
+}
+
 /// Construct the named backend over (x, y) — `y: None` builds the
 /// unlabelled H (one-class family).  Streaming kinds spill x into a
 /// temp [`FileStore`] first, so they exercise the real on-disk path.
@@ -226,6 +250,11 @@ pub fn assert_path_conformance(
     oneclass: bool,
     ctx: &str,
 ) {
+    // both sides get the same SRBO_TEST_DYNAMIC override (the axis
+    // changes the common solve, never the reference/candidate split)
+    let mut cfg = cfg.clone();
+    apply_env_dynamic(&mut cfg);
+    let cfg = &cfg;
     let mut ref_cfg = cfg.clone();
     ref_cfg.shard = Sharding::Serial;
     let a = NuPath::run_with_matrix(want, &ref_cfg, oneclass, Default::default())

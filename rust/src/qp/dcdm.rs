@@ -35,6 +35,35 @@
 //! active order is always ascending and gathered entries are
 //! bit-identical to full-row entries on every backend.
 //!
+//! # Gap-safe dynamic screening
+//!
+//! Orthogonal to (and composing with) the heuristic shrinking above,
+//! exact mode periodically runs a *provable* elimination pass: every
+//! `gap_every` sweeps (and on the same cadence during the pairwise
+//! phase) the duality gap is computed from the maintained gradient, the
+//! sphere ‖w − w*‖ ≤ r = √(2·gap) brackets every optimal score (strong
+//! convexity in w-space has modulus exactly 1 for a quadratic), and the
+//! water-filling multiplier bracket of [`crate::screening::gap`] proves
+//! coordinates pinned at 0 or ub.  A proven coordinate already sitting
+//! at its bound (within [`BOUND_TOL`]; snapped exactly onto it) is
+//! **permanently retired**: it leaves both the active set and the free
+//! set and — unlike heuristically shrunk coordinates — is excluded from
+//! every later unshrink rebuild.  A proven coordinate still *off* its
+//! bound is deferred to a later round (freezing it early would move
+//! mass and break feasibility); the solver drives it to the bound
+//! first.  The gap is evaluated on the *restricted* problem (retired
+//! coordinates fixed at their proven bounds, target reduced by the
+//! retired mass) — sound because every optimum of the full problem has
+//! them at exactly those bounds.  Each round runs the adaptive
+//! refinement loop: retiring coordinates shrinks the restricted
+//! problem, hence the gap, hence the sphere, so the test repeats until
+//! the retired count stops improving.  A final round always runs at
+//! convergence (`gap_rounds ≥ 1` whenever gap screening is on), where
+//! the gap — and so the radius — is smallest.  All gap arithmetic is
+//! serial with index-tiebroken sorts over backend-bit-identical inputs,
+//! so gap-screened solves stay bit-identical across backends and
+//! thread counts.
+//!
 //! **Pair selection** is second-order by default: given the steepest
 //! ascent coordinate i, the partner j maximises the curvature-normalised
 //! gain (g_j − g_i)² / (Q_ii + Q_jj − 2Q_ij) over the active descent
@@ -50,6 +79,7 @@
 use super::{ConstraintKind, QpProblem, SolveStats};
 use crate::kernel::matrix::KernelMatrix;
 use crate::qp::projection;
+use crate::screening::{gap as gap_rule, ScreenCode};
 
 /// α-to-bound tolerance shared by the MVP scans and the shrink rule.
 const BOUND_TOL: f64 = 1e-12;
@@ -85,6 +115,14 @@ pub struct DcdmOpts {
     /// Curvature-aware (second-order) pair selection; `false` restores
     /// the first-order maximal-violating-pair rule.
     pub second_order: bool,
+    /// Gap-safe dynamic screening (exact mode only): periodically prove
+    /// coordinates pinned at a bound via duality-gap spheres and retire
+    /// them permanently — no unshrink pass ever re-checks them.
+    pub gap_screening: bool,
+    /// Sweeps between gap-screening rounds; 0 ties the cadence to
+    /// `shrink_every` (the pair-phase cadence scales by
+    /// [`PAIR_STEPS_PER_SHRINK`] either way).
+    pub gap_every: usize,
 }
 
 impl Default for DcdmOpts {
@@ -97,6 +135,8 @@ impl Default for DcdmOpts {
             shrinking: true,
             shrink_every: 4,
             second_order: true,
+            gap_screening: true,
+            gap_every: 0,
         }
     }
 }
@@ -110,6 +150,8 @@ pub struct DcdmTuning {
     pub shrinking: bool,
     pub shrink_every: usize,
     pub second_order: bool,
+    pub gap_screening: bool,
+    pub gap_every: usize,
 }
 
 impl Default for DcdmTuning {
@@ -119,6 +161,8 @@ impl Default for DcdmTuning {
             shrinking: d.shrinking,
             shrink_every: d.shrink_every,
             second_order: d.second_order,
+            gap_screening: d.gap_screening,
+            gap_every: d.gap_every,
         }
     }
 }
@@ -132,6 +176,8 @@ impl DcdmTuning {
             shrinking: self.shrinking,
             shrink_every: self.shrink_every,
             second_order: self.second_order,
+            gap_screening: self.gap_screening,
+            gap_every: self.gap_every,
             ..DcdmOpts::default()
         }
     }
@@ -169,6 +215,20 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
     let shrinking = opts.shrinking && !opts.paper_mode;
     let shrink_every = opts.shrink_every.max(1);
     let pair_shrink_interval = shrink_every.saturating_mul(PAIR_STEPS_PER_SHRINK);
+    let gap_on = opts.gap_screening && !opts.paper_mode;
+    let gap_every = if opts.gap_every == 0 { shrink_every } else { opts.gap_every };
+    // the pairwise phase runs its own cadence counter (equality duals
+    // never enter Phase 1, so sweep-based cadence alone would starve
+    // one-class solves of gap rounds entirely)
+    let pair_gap_interval = gap_every.saturating_mul(PAIR_STEPS_PER_SHRINK);
+
+    // free[i]: not gap-retired.  active ⊆ free at all times; unshrink
+    // rebuilds the active set from the free set, never from 0..n.
+    let mut free = vec![true; n];
+    let mut n_free = n;
+    // Q diagonal, fetched once — gap rounds re-read it every evaluation
+    let diag: Vec<f64> =
+        if gap_on { (0..n).map(|i| p.q.diag(i)).collect() } else { Vec::new() };
 
     let mut active: Vec<usize> = (0..n).collect();
     // row-gather scratch (first |active| slots are live)
@@ -185,6 +245,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
     loop {
         // ---- Phase 1: Algorithm-2 sweeps over the active set ----
         let mut sweeps_since_shrink = 0;
+        let mut sweeps_since_gap = 0;
         while sweeps_left > 0 {
             sweeps_left -= 1;
             stats.sweeps += 1;
@@ -212,6 +273,15 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                 sweeps_since_shrink = 0;
                 shrink(p, &mut active, &alpha, &g, &mut stats);
             }
+            sweeps_since_gap += 1;
+            if gap_on && sweeps_since_gap >= gap_every {
+                sweeps_since_gap = 0;
+                let fg = gap_round(
+                    p, &diag, &mut free, &mut n_free, &mut active, &mut alpha, &mut g,
+                    &mut sum, &mut qi, &mut stats,
+                );
+                stats.final_gap = fg;
+            }
         }
 
         // ---- Phase 2: pairwise (MVP) refinement over the active set —
@@ -219,6 +289,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
         // have no other update direction). ----
         if !opts.paper_mode || !sweeps_enabled {
             let mut steps_since_shrink = 0;
+            let mut steps_since_gap = 0;
             while pairs_left > 0 {
                 // maximal violating pair over the active set:
                 // i = argmin g over "can increase", j = argmax g over
@@ -330,20 +401,39 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                     steps_since_shrink = 0;
                     shrink(p, &mut active, &alpha, &g, &mut stats);
                 }
+                steps_since_gap += 1;
+                if gap_on && steps_since_gap >= pair_gap_interval {
+                    steps_since_gap = 0;
+                    let fg = gap_round(
+                        p, &diag, &mut free, &mut n_free, &mut active, &mut alpha,
+                        &mut g, &mut sum, &mut qi, &mut stats,
+                    );
+                    stats.final_gap = fg;
+                }
             }
         }
 
-        // ---- Unshrink: mandatory before convergence can be declared.
-        // If the set is already full (never shrank, or the previous
-        // round's reconstruction re-converged without re-shrinking) the
-        // optimum is certified on all coordinates and we are done. ----
-        if !shrinking || active.len() == n {
+        // ---- Unshrink: mandatory before convergence can be declared
+        // on heuristically shrunk coordinates.  Gap-retired ones are
+        // *proven* at their bounds and never return: the working set is
+        // full once it covers the free set, not 0..n.  A last gap round
+        // then runs at the smallest gap of the solve, where the sphere
+        // is tightest (and guarantees gap_rounds ≥ 1 and the final_gap
+        // telemetry even for solves that converge instantly). ----
+        if active.len() == n_free {
+            if gap_on {
+                let fg = gap_round(
+                    p, &diag, &mut free, &mut n_free, &mut active, &mut alpha, &mut g,
+                    &mut sum, &mut qi, &mut stats,
+                );
+                stats.final_gap = fg;
+            }
             break;
         }
         stats.unshrink_events += 1;
         reconstruct_gradient(p, &alpha, &mut g, &mut stats);
-        active = (0..n).collect();
-        stats.active_trajectory.push(n);
+        active = (0..n).filter(|&i| free[i]).collect();
+        stats.active_trajectory.push(active.len());
     }
 
     // Final violation from a freshly recomputed gradient — an
@@ -571,6 +661,148 @@ fn reconstruct_gradient(p: &QpProblem, alpha: &[f64], g: &mut [f64], stats: &mut
     }
 }
 
+/// Recompute g = Qα + f exactly on `idx` by accumulating the support
+/// rows gathered to `idx` (Q symmetric: row j gathered at `idx` yields
+/// the Q_ij entries) — [`reconstruct_gradient`] restricted to a subset,
+/// O(nnz) row fetches.  Gap rounds use it to de-stale the gradient on
+/// free-but-heuristically-shrunk coordinates before testing them.
+fn refresh_gradient_at(
+    p: &QpProblem,
+    alpha: &[f64],
+    g: &mut [f64],
+    idx: &[usize],
+    qbuf: &mut [f64],
+    stats: &mut SolveStats,
+) {
+    if idx.is_empty() {
+        return;
+    }
+    match p.lin {
+        Some(f) => {
+            for &i in idx {
+                g[i] = f[i];
+            }
+        }
+        None => {
+            for &i in idx {
+                g[i] = 0.0;
+            }
+        }
+    }
+    let row = &mut qbuf[..idx.len()];
+    for (j, &aj) in alpha.iter().enumerate() {
+        if aj != 0.0 {
+            stats.rows_touched += 1;
+            p.q.row_gather(j, idx, row);
+            for (&i, &qji) in idx.iter().zip(row.iter()) {
+                g[i] += aj * qji;
+            }
+        }
+    }
+}
+
+/// One cadenced gap-screening round: refresh stale free-coordinate
+/// gradients, then iterate the adaptive refinement loop — evaluate the
+/// restricted duality gap, test every free coordinate against the
+/// sphere + multiplier bracket ([`crate::screening::gap::screen`]),
+/// permanently retire the proven coordinates that already sit at their
+/// bound — until the retired count stops improving.  Returns the last
+/// measured gap.
+#[allow(clippy::too_many_arguments)]
+fn gap_round(
+    p: &QpProblem,
+    diag: &[f64],
+    free: &mut [bool],
+    n_free: &mut usize,
+    active: &mut Vec<usize>,
+    alpha: &mut [f64],
+    g: &mut [f64],
+    sum: &mut f64,
+    qbuf: &mut [f64],
+    stats: &mut SolveStats,
+) -> f64 {
+    let n = alpha.len();
+    // the maintained gradient is exact on the active set only; free
+    // coordinates that heuristic shrinking removed went stale and must
+    // be rebuilt before the sphere can bracket their optimal scores
+    if active.len() < *n_free {
+        let stale: Vec<usize> = (0..n)
+            .filter(|&i| free[i] && active.binary_search(&i).is_err())
+            .collect();
+        refresh_gradient_at(p, alpha, g, &stale, qbuf, stats);
+    }
+    let mut last_gap = 0.0;
+    loop {
+        let idx: Vec<usize> = (0..n).filter(|&i| free[i]).collect();
+        if idx.is_empty() {
+            return last_gap;
+        }
+        stats.gap_rounds += 1;
+        // restricted problem: retired coordinates are fixed at their
+        // proven bounds, so their mass leaves the sum target
+        let retired_mass: f64 = alpha
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| !free[i])
+            .map(|(_, &a)| a)
+            .sum();
+        let target = p.constraint.target() - retired_mass;
+        let kind = match p.constraint {
+            ConstraintKind::SumGe(_) => ConstraintKind::SumGe(target),
+            ConstraintKind::SumEq(_) => ConstraintKind::SumEq(target),
+        };
+        let gf: Vec<f64> = idx.iter().map(|&i| g[i]).collect();
+        let af: Vec<f64> = idx.iter().map(|&i| alpha[i]).collect();
+        let uf: Vec<f64> = idx.iter().map(|&i| p.ub[i]).collect();
+        let df: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+        let (gap, codes) = gap_rule::screen(&gf, &af, &uf, &df, kind);
+        last_gap = gap;
+        // retire only coordinates already at the proven bound: snapping
+        // across ≤ BOUND_TOL keeps α feasible without redistributing
+        // mass; a proven coordinate still off its bound waits for a
+        // later round, after the solver has driven it there
+        let mut retired: Vec<(usize, f64)> = Vec::new();
+        for (k, &i) in idx.iter().enumerate() {
+            match codes[k] {
+                ScreenCode::Zero if alpha[i] <= BOUND_TOL => retired.push((i, 0.0)),
+                ScreenCode::Upper if alpha[i] >= p.ub[i] - BOUND_TOL => {
+                    retired.push((i, p.ub[i]))
+                }
+                _ => {}
+            }
+        }
+        if retired.is_empty() {
+            return last_gap;
+        }
+        for &(i, bound) in &retired {
+            let d = bound - alpha[i];
+            if d != 0.0 {
+                // keep the maintained gradient consistent with the snap
+                // (|d| ≤ BOUND_TOL; also updating a just-retired entry
+                // is harmless — retired gradients are never read again)
+                stats.rows_touched += 1;
+                let row = &mut qbuf[..idx.len()];
+                p.q.row_gather(i, &idx, row);
+                for (&j, &qij) in idx.iter().zip(row.iter()) {
+                    g[j] += d * qij;
+                }
+                alpha[i] = bound;
+                *sum += d;
+            }
+            free[i] = false;
+            *n_free -= 1;
+            if let Ok(pos) = active.binary_search(&i) {
+                active.remove(pos);
+            }
+            stats.gap_retired_idx.push(i);
+        }
+        stats.active_trajectory.push(active.len());
+        // loop: the restricted problem just shrank, hence the gap and
+        // the sphere — the adaptive α_r ↔ r refinement (for a quadratic
+        // the modulus is exactly 1, so refinement is re-evaluation)
+    }
+}
+
 /// F(α) through [`KernelMatrix::quad_active`] over the support of α:
 /// O(nnz) row gathers of O(nnz) entries each, instead of the full
 /// O(l²) matvec the dense objective pays — after screening the support
@@ -670,9 +902,12 @@ mod tests {
         };
         let opts = DcdmOpts { paper_mode: true, ..DcdmOpts::default() };
         let (a, stats) = solve(&p, None, &opts);
-        // paper mode never shrinks
+        // paper mode never shrinks, and never gap-screens even though
+        // `gap_screening` defaults to true
         assert_eq!(stats.shrink_events, 0);
         assert_eq!(stats.unshrink_events, 0);
+        assert_eq!(stats.gap_rounds, 0);
+        assert_eq!(stats.gap_retired(), 0);
         // a further sweep must not move
         let (a2, _) = solve(&p, Some(&a), &DcdmOpts { max_sweeps: 1, ..opts });
         for (x, y) in a.iter().zip(&a2) {
@@ -861,21 +1096,220 @@ mod tests {
             ub: &ub,
             constraint: ConstraintKind::SumGe(0.2),
         };
-        let opts = DcdmOpts { shrink_every: 1, ..DcdmOpts::default() };
+        // gap screening off: this test pins the *heuristic* machinery
+        // (shrink + mandatory unshrink); gap retirement would otherwise
+        // legitimately prove the pinned coordinates away and make the
+        // unshrink pass unnecessary
+        let opts =
+            DcdmOpts { shrink_every: 1, gap_screening: false, ..DcdmOpts::default() };
         let (a_on, stats) = solve(&p, None, &opts);
         assert_eq!(stats.active_trajectory.first(), Some(&n));
         assert!(stats.shrink_events >= 1, "never shrank: {stats:?}");
         assert!(stats.unshrink_events >= 1, "converged without unshrink");
         assert!(stats.min_active().unwrap() < n);
         assert!(stats.rows_touched >= n as u64);
-        let (a_off, _) =
-            solve(&p, None, &DcdmOpts { shrinking: false, ..DcdmOpts::default() });
+        assert_eq!(stats.gap_rounds, 0, "gap rounds despite gap_screening: false");
+        let (a_off, _) = solve(
+            &p,
+            None,
+            &DcdmOpts { shrinking: false, gap_screening: false, ..DcdmOpts::default() },
+        );
         let (f_on, f_off) = (p.objective(&a_on), p.objective(&a_off));
         assert!(
             (f_on - f_off).abs() <= 1e-9 * (1.0 + f_off.abs()),
             "{f_on} vs {f_off}"
         );
         assert!(kkt_violation(&p, &a_on) < 1e-8);
+    }
+
+    /// The engineered pinned-coordinate problem from the telemetry test:
+    /// 30 of 40 coordinates carry a strong positive linear term and pin
+    /// at exactly 0 in the optimum.
+    fn pinned_problem(n: usize) -> (Mat, Vec<f64>, Vec<f64>) {
+        let q = eye(n);
+        let f: Vec<f64> =
+            (0..n).map(|i| if i < n / 4 { 0.0 } else { 1.0 }).collect();
+        let ub = vec![1.0 / n as f64; n];
+        (q, f, ub)
+    }
+
+    /// Gap screening (on by default) must *prove* the 30 pinned
+    /// coordinates at zero and permanently retire them, while leaving the
+    /// 10 interior support coordinates alone — and the screened solve
+    /// must land on the same objective as a gap-off solve.
+    #[test]
+    fn gap_screening_retires_pinned_coordinates() {
+        let n = 40;
+        let (q, f, ub) = pinned_problem(n);
+        let p = QpProblem {
+            q: &q,
+            lin: Some(&f),
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(0.2),
+        };
+        let (a, stats) = solve(&p, None, &DcdmOpts::default());
+        assert_eq!(stats.gap_retired(), 30, "retired: {:?}", stats.gap_retired_idx);
+        assert!(stats.gap_rounds >= 1, "no gap round ran");
+        assert!(stats.gap_retired_idx.iter().all(|&i| i >= 10));
+        for &i in &stats.gap_retired_idx {
+            // retirement snaps bit-exactly to the proven bound
+            assert_eq!(a[i], 0.0, "retired coordinate {i} not exactly zero");
+        }
+        // once all 30 are out (retired and/or shrunk) the working set is
+        // the 10 true supports
+        assert!(stats.min_active().unwrap() <= 10);
+        assert!(stats.final_gap >= 0.0 && stats.final_gap < 1e-6);
+        let (a_off, s_off) = solve(
+            &p,
+            None,
+            &DcdmOpts { gap_screening: false, ..DcdmOpts::default() },
+        );
+        assert_eq!(s_off.gap_rounds, 0);
+        assert_eq!(s_off.gap_retired(), 0);
+        let (f_on, f_off) = (p.objective(&a), p.objective(&a_off));
+        assert!(
+            (f_on - f_off).abs() <= 1e-9 * (1.0 + f_off.abs()),
+            "{f_on} vs {f_off}"
+        );
+        assert!(kkt_violation(&p, &a) < 1e-8);
+    }
+
+    /// With the cadence pushed out of reach the only gap round is the
+    /// mandatory one at convergence, so heuristic shrink + unshrink runs
+    /// exactly as before and retirement lands *after* the last unshrink:
+    /// the final working set must exclude every retired coordinate.
+    #[test]
+    fn gap_retirement_composes_with_unshrink() {
+        let n = 40;
+        let (q, f, ub) = pinned_problem(n);
+        let p = QpProblem {
+            q: &q,
+            lin: Some(&f),
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(0.2),
+        };
+        let opts = DcdmOpts {
+            shrink_every: 1,
+            gap_every: 1_000_000,
+            ..DcdmOpts::default()
+        };
+        let (a, stats) = solve(&p, None, &opts);
+        assert!(stats.shrink_events >= 1, "never shrank: {stats:?}");
+        assert!(stats.unshrink_events >= 1, "converged without unshrink");
+        assert_eq!(stats.gap_retired(), 30);
+        assert!(stats.gap_rounds >= 1);
+        // the convergence-time gap round retires all 30 pinned
+        // coordinates in one refinement pass, leaving the 10 supports
+        assert_eq!(stats.final_active(), Some(10));
+        for &i in &stats.gap_retired_idx {
+            assert_eq!(a[i], 0.0);
+        }
+        assert!(kkt_violation(&p, &a) < 1e-8);
+    }
+
+    /// Dense interleaving: gap rounds every sweep *and* shrink passes
+    /// every sweep. Unshrink rebuilds the active set from the free set
+    /// only, so no retired coordinate may resurface and every retired
+    /// coordinate must still sit bit-exactly on its proven bound at the
+    /// end (any post-retirement touch would move it off).
+    #[test]
+    fn gap_screening_interleaves_safely_with_shrinking() {
+        let n = 40;
+        let (q, f, ub) = pinned_problem(n);
+        let p = QpProblem {
+            q: &q,
+            lin: Some(&f),
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(0.2),
+        };
+        let opts =
+            DcdmOpts { shrink_every: 1, gap_every: 1, ..DcdmOpts::default() };
+        let (a, stats) = solve(&p, None, &opts);
+        assert_eq!(stats.gap_retired(), 30);
+        for &i in &stats.gap_retired_idx {
+            assert_eq!(a[i], 0.0, "coordinate {i} touched after retirement");
+        }
+        // active ⊆ free at all times: no trajectory entry may exceed the
+        // full set, and the final one cannot exceed n − retired
+        assert!(stats.active_trajectory.iter().all(|&m| m <= n));
+        assert!(stats.final_active().unwrap() + stats.gap_retired() <= n);
+        let (a_off, _) = solve(
+            &p,
+            None,
+            &DcdmOpts {
+                gap_screening: false,
+                shrinking: false,
+                ..DcdmOpts::default()
+            },
+        );
+        let (f_on, f_off) = (p.objective(&a), p.objective(&a_off));
+        assert!(
+            (f_on - f_off).abs() <= 1e-9 * (1.0 + f_off.abs()),
+            "{f_on} vs {f_off}"
+        );
+        assert!(kkt_violation(&p, &a) < 1e-8);
+    }
+
+    /// The safe-elimination invariant on random PSD problems, both
+    /// constraint kinds, with and without linear terms: every gap-retired
+    /// coordinate must sit at that same bound in the *unscreened*
+    /// optimum, and the screened solve must match it to solver accuracy.
+    #[test]
+    fn gap_retired_coordinates_match_unscreened_optimum() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let retired_total = AtomicUsize::new(0);
+        run_cases(24, 0x6A9, |g| {
+            let n = g.usize(6, 28);
+            let q = g.psd(n);
+            let ub = vec![1.5 / n as f64; n];
+            let cap = ub.iter().sum::<f64>() * 0.9;
+            let target = g.f64(0.05, 0.8).min(cap);
+            let kind = if g.bool() {
+                ConstraintKind::SumGe(target)
+            } else {
+                ConstraintKind::SumEq(target)
+            };
+            let lin: Option<Vec<f64>> =
+                if g.bool() { Some(g.vec_f64(n, -0.5, 0.5)) } else { None };
+            let p =
+                QpProblem { q: &q, lin: lin.as_deref(), ub: &ub, constraint: kind };
+            let on = DcdmOpts {
+                gap_every: 1,
+                shrink_every: g.usize(1, 6),
+                eps: 1e-10,
+                ..DcdmOpts::default()
+            };
+            let off =
+                DcdmOpts { gap_screening: false, eps: 1e-10, ..DcdmOpts::default() };
+            let (a_on, s_on) = solve(&p, None, &on);
+            let (a_off, _) = solve(&p, None, &off);
+            assert!(p.is_feasible(&a_on, 1e-8), "gap-on infeasible");
+            let (f_on, f_off) = (p.objective(&a_on), p.objective(&a_off));
+            assert!(
+                (f_on - f_off).abs() <= 1e-9 * (1.0 + f_off.abs()),
+                "objective gap: {f_on} vs {f_off} (n={n}, {kind:?})"
+            );
+            for &i in &s_on.gap_retired_idx {
+                let at_zero = a_on[i] == 0.0;
+                let at_ub = a_on[i] == ub[i];
+                assert!(at_zero || at_ub, "retired {i} off-bound: {}", a_on[i]);
+                // the unscreened optimum agrees with the proven bound
+                let want = if at_zero { 0.0 } else { ub[i] };
+                assert!(
+                    (a_off[i] - want).abs() < 1e-6,
+                    "unsafe elimination at {i}: screened bound {want}, \
+                     unscreened {} (n={n}, {kind:?})",
+                    a_off[i]
+                );
+            }
+            assert!(kkt_violation(&p, &a_on) < 1e-6, "gap-on kkt");
+            retired_total.fetch_add(s_on.gap_retired(), Ordering::Relaxed);
+        });
+        // the rule must actually fire somewhere across the sample
+        assert!(
+            retired_total.load(Ordering::Relaxed) > 0,
+            "gap screening never retired anything"
+        );
     }
 
     /// The reported sparse objective must agree with the dense

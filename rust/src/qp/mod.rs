@@ -191,6 +191,16 @@ pub struct SolveStats {
     /// clipped by the box: zero progress makes the phase stop instead
     /// of rescanning until `max_pair_steps`.
     pub stalled_pair_steps: usize,
+    /// Coordinates *permanently* retired by gap-safe dynamic screening
+    /// (proven at a bound by a duality-gap sphere — unlike heuristic
+    /// shrinking these never re-enter via unshrink).
+    pub gap_retired_idx: Vec<usize>,
+    /// Gap-screening evaluations, counting every iteration of the
+    /// adaptive sphere-refinement loop inside each cadenced round.
+    pub gap_rounds: usize,
+    /// Duality gap measured by the last gap-screening evaluation (0.0
+    /// when gap screening never ran).
+    pub final_gap: f64,
 }
 
 impl SolveStats {
@@ -203,6 +213,11 @@ impl SolveStats {
     /// Active-set size at termination (`None` without an active set).
     pub fn final_active(&self) -> Option<usize> {
         self.active_trajectory.last().copied()
+    }
+
+    /// Coordinates permanently retired by gap-safe dynamic screening.
+    pub fn gap_retired(&self) -> usize {
+        self.gap_retired_idx.len()
     }
 }
 

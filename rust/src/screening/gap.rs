@@ -1,0 +1,449 @@
+//! Gap-safe dynamic screening — the GAP Safe line of work (see
+//! PAPERS.md: Fercoq/Gramfort/Salmon-style rules, and the safe sample
+//! screening follow-ups for SVMs) adapted to the ν-SVM / OC-SVM duals:
+//! a duality-gap sphere recomputed *during* the solve keeps proving
+//! coordinates pinned as α converges, so elimination no longer depends
+//! on a path step (the SRBO sphere) or a heuristic bracket (shrinking).
+//!
+//! # Geometry
+//!
+//! With Q = ZZᵀ the dual objective F(α) = ½αᵀQα + fᵀα is 1-strongly
+//! convex in w = Zᵀα: for any feasible α and any optimum α*,
+//!
+//! ```text
+//!   ½‖w − w*‖²  ≤  F(α) − F(α*)  ≤  gap(α) := gᵀα − min_{β∈C} gᵀβ
+//! ```
+//!
+//! (left: first-order optimality of α*; right: the Frank–Wolfe
+//! linearisation gap, computable exactly because C — a box intersected
+//! with one sum constraint — admits a greedy LP, [`feasible_min`]).
+//! So w* lies in a sphere of radius r = √(2·gap) around w, and every
+//! optimal score g*_i = Z_i·w* + f_i is bracketed by
+//! g_i ± r·√Q_ii — exactly a [`region::Sphere`] with qv = g (the
+//! solver's maintained gradient, linear term folded in), norms = √diag Q
+//! and sqrt_r = r: the same machinery the SRBO path rule uses, fed from
+//! the duality gap instead of the Δ-set.
+//!
+//! For a quadratic the strong-convexity modulus α_r is exactly 1 in
+//! w-space, so the classical adaptive α_r ↔ r feedback loop degenerates
+//! to re-evaluating the gap itself: each retirement shrinks the
+//! restricted problem, which shrinks the gap, which shrinks r — the
+//! caller iterates until the retired count stops improving
+//! ([`crate::qp::dcdm`]).
+//!
+//! # The multiplier bracket
+//!
+//! At the optimum a multiplier μ* for the sum constraint satisfies
+//! g*_i > μ* ⇒ α*_i = 0 and g*_i < μ* ⇒ α*_i = ub_i.  μ* is unknown, but
+//! the water-filling identity
+//!
+//! ```text
+//!   Σ_{g*_i < μ*} ub_i  ≤  target  ≤  Σ_{g*_i ≤ μ*} ub_i
+//! ```
+//!
+//! pins it between two weighted quantiles of the score brackets
+//! ([`mu_bracket`]): monotone substitution of the per-coordinate bounds
+//! (upper bounds on the left sum, lower bounds on the right) preserves
+//! both inequalities, so the quantiles computed from the *bounds* still
+//! sandwich μ*.  This generalises the paper's Theorem-2 order statistics
+//! ([`super::rho::bounds`] is the ub = 1/l, f = 0 special case) to
+//! restricted problems with arbitrary boxes and linear terms.  For the
+//! inequality dual (`SumGe`) μ* ≥ 0 and complementary slackness applies:
+//! a strictly slack constraint forces μ* = 0, and μ* = 0 is only
+//! possible when the zero-multiplier optimum can reach the mass floor.
+//!
+//! The per-coordinate tests are then the SRBO corollaries verbatim:
+//! `sphere.lower(i) > μ_hi ⇒ α*_i = 0` and
+//! `sphere.upper(i) < μ_lo ⇒ α*_i = ub_i` ([`screen`]).
+
+use super::region::Sphere;
+use super::ScreenCode;
+use crate::qp::ConstraintKind;
+use crate::util::linalg::dot;
+
+/// Relative guard (× max|g|) on the gap tests.  Unlike the SRBO path
+/// rule's guard, the radius already inflates honestly with the solve's
+/// suboptimality, so the guard only needs to absorb the maintained
+/// gradient's incremental-update float drift (~1e-12 relative); 1e-9
+/// leaves three orders of margin while staying far below any margin a
+/// retirement could legitimately have.
+pub const GUARD_REL: f64 = 1e-9;
+
+/// Absolute guard floor (gradient units).
+pub const GUARD_ABS: f64 = 1e-12;
+
+/// The decision sphere uses `RADIUS_FACTOR · r` instead of r: one radius
+/// bounds the optimal score itself, the second keeps the *current and
+/// every later* iterate's gradient on the proven side of μ* (all remain
+/// within r of w* in w-space), so the final fresh-gradient KKT
+/// certificate stays ε-clean even though retired coordinates are never
+/// re-examined by an unshrink pass.  Strictly more conservative than the
+/// minimal safe test, so safety is unaffected.
+pub const RADIUS_FACTOR: f64 = 2.0;
+
+/// Bracket `[lo, hi]` containing every valid KKT multiplier μ* of the
+/// sum constraint (`lo = −∞` / `hi = +∞` when a side is unbounded).
+#[derive(Clone, Copy, Debug)]
+pub struct MuBracket {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// min_{β∈C} gᵀβ over C = {0 ≤ β ≤ ub, eᵀβ ⋄ target}, by exact greedy
+/// (fractional-knapsack) fill:
+///
+/// * `SumEq(c)` — take mass cheapest-score-first until c is placed;
+/// * `SumGe(ν)` — every negative-score coordinate saturates regardless
+///   of the floor; any remaining mass is then met cheapest-first among
+///   the non-negative scores (if the floor is already met, nothing is).
+///
+/// Deterministic: score ties break by ascending index (`total_cmp`),
+/// so the value is bit-identical across backends and thread counts.
+pub fn feasible_min(g: &[f64], ub: &[f64], constraint: ConstraintKind) -> f64 {
+    let mut order: Vec<usize> = (0..g.len()).collect();
+    order.sort_by(|&a, &b| g[a].total_cmp(&g[b]).then(a.cmp(&b)));
+    let mut v = 0.0;
+    match constraint {
+        ConstraintKind::SumEq(c) => {
+            let mut rem = c;
+            for &i in &order {
+                if rem <= 0.0 {
+                    break;
+                }
+                let take = ub[i].min(rem);
+                v += g[i] * take;
+                rem -= take;
+            }
+        }
+        ConstraintKind::SumGe(nu) => {
+            let mut rem = nu;
+            for &i in &order {
+                if g[i] < 0.0 {
+                    v += g[i] * ub[i];
+                    rem -= ub[i];
+                }
+            }
+            if rem > 0.0 {
+                for &i in &order {
+                    if g[i] >= 0.0 {
+                        if rem <= 0.0 {
+                            break;
+                        }
+                        let take = ub[i].min(rem);
+                        v += g[i] * take;
+                        rem -= take;
+                    }
+                }
+            }
+        }
+    }
+    v
+}
+
+/// The Frank–Wolfe duality gap gᵀα − min_{β∈C} gᵀβ ≥ F(α) − F(α*),
+/// from the (exact) gradient g = Qα + f at the feasible iterate α.
+pub fn duality_gap(g: &[f64], alpha: &[f64], ub: &[f64], constraint: ConstraintKind) -> f64 {
+    dot(g, alpha) - feasible_min(g, ub, constraint)
+}
+
+/// Smallest value v at which the ub-weighted cumulative mass of `vals`
+/// (ascending) first strictly exceeds `target`; +∞ when the total mass
+/// never does (then sup{μ : Σ_{vals_i<μ} ub_i ≤ target} is unbounded).
+fn quantile_gt(vals: &[f64], ub: &[f64], target: f64) -> f64 {
+    let mut order: Vec<usize> = (0..vals.len()).collect();
+    order.sort_by(|&a, &b| vals[a].total_cmp(&vals[b]).then(a.cmp(&b)));
+    let mut cum = 0.0;
+    for &i in &order {
+        cum += ub[i];
+        if cum > target {
+            return vals[i];
+        }
+    }
+    f64::INFINITY
+}
+
+/// Smallest value v at which the ub-weighted cumulative mass of `vals`
+/// (ascending) reaches `target`; −∞ when `target ≤ 0` (the empty prefix
+/// already qualifies — without this case the bound would be wrongly
+/// large) and also when the total mass falls short (an infeasible
+/// restriction — conservative keep-everything).
+fn quantile_ge(vals: &[f64], ub: &[f64], target: f64) -> f64 {
+    if target <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    let mut order: Vec<usize> = (0..vals.len()).collect();
+    order.sort_by(|&a, &b| vals[a].total_cmp(&vals[b]).then(a.cmp(&b)));
+    let mut cum = 0.0;
+    for &i in &order {
+        cum += ub[i];
+        if cum >= target {
+            return vals[i];
+        }
+    }
+    f64::NEG_INFINITY
+}
+
+/// Bracket every valid KKT multiplier μ* from per-coordinate score
+/// bounds `glo_i ≤ g*_i ≤ ghi_i` (module docs derive the water-filling
+/// identities).  The float biases all err toward a *wider* bracket: the
+/// target slack pushes the hi quantile later (larger) and the lo
+/// quantile earlier (smaller), so screening only ever gets more
+/// conservative.
+pub fn mu_bracket(glo: &[f64], ghi: &[f64], ub: &[f64], constraint: ConstraintKind) -> MuBracket {
+    let t = constraint.target();
+    let slack = 1e-12 * (1.0 + t.abs());
+    // ghi_i < μ ⇒ g*_i < μ, so Σ_{ghi<μ*} ub ≤ Σ_{g*<μ*} ub ≤ t keeps
+    // holding at μ*; symmetrically glo_i ≤ μ ⇐ g*_i ≤ μ for the ≥-t side.
+    let hi_raw = quantile_gt(ghi, ub, t + slack);
+    let lo_raw = quantile_ge(glo, ub, t - slack);
+    match constraint {
+        ConstraintKind::SumEq(_) => MuBracket { lo: lo_raw, hi: hi_raw },
+        ConstraintKind::SumGe(_) => {
+            if t < -slack {
+                // the mass floor is strictly slack at every feasible
+                // point (e.g. after retiring saturated coordinates), so
+                // complementary slackness forces μ* = 0 exactly
+                return MuBracket { lo: 0.0, hi: 0.0 };
+            }
+            // μ* = 0 is possible only if the zero-multiplier optimum
+            // reaches the floor: Σ_{g*_i ≤ 0} ub_i ≥ t, overestimated
+            // via glo (⊇ the true set, biased toward "possible")
+            let zero_mass: f64 = glo
+                .iter()
+                .zip(ub)
+                .filter(|&(&lo, _)| lo <= 0.0)
+                .map(|(_, &u)| u)
+                .sum();
+            let lo = if zero_mass >= t - slack { 0.0 } else { lo_raw.max(0.0) };
+            MuBracket { lo, hi: hi_raw.max(0.0) }
+        }
+    }
+}
+
+/// One complete gap-screening evaluation of a (possibly restricted)
+/// problem: exact gradient `g`, feasible iterate `alpha`, box `ub`,
+/// `diag` of Q, and the constraint with the *restricted* target.
+/// Returns the (clamped) duality gap and a per-coordinate code vector:
+/// `Zero`/`Upper` are *proven* for every optimum of the given problem.
+///
+/// All arithmetic is serial with index-tiebroken sorts, so given
+/// bit-identical inputs (which [`crate::kernel::matrix::KernelMatrix`]
+/// backends guarantee for g and diag) the codes are bit-identical
+/// across backends and thread counts.
+pub fn screen(
+    g: &[f64],
+    alpha: &[f64],
+    ub: &[f64],
+    diag: &[f64],
+    constraint: ConstraintKind,
+) -> (f64, Vec<ScreenCode>) {
+    let gap = duality_gap(g, alpha, ub, constraint).max(0.0);
+    let r = (2.0 * gap).sqrt();
+    let norms: Vec<f64> = diag.iter().map(|&d| d.max(0.0).sqrt()).collect();
+    let sphere = Sphere { qv: g.to_vec(), sqrt_r: RADIUS_FACTOR * r, norms };
+    let m = g.len();
+    let glo: Vec<f64> = (0..m).map(|i| sphere.lower(i)).collect();
+    let ghi: Vec<f64> = (0..m).map(|i| sphere.upper(i)).collect();
+    let bracket = mu_bracket(&glo, &ghi, ub, constraint);
+    let scale = g.iter().fold(0.0f64, |acc, &v| acc.max(v.abs()));
+    let guard = GUARD_REL * scale + GUARD_ABS;
+    let codes = (0..m)
+        .map(|i| {
+            if glo[i] > bracket.hi + guard {
+                // inf g*_i > μ_hi ≥ every valid μ* ⇒ α*_i = 0
+                ScreenCode::Zero
+            } else if ghi[i] < bracket.lo - guard {
+                // sup g*_i < μ_lo ≤ every valid μ* ⇒ α*_i = ub_i
+                ScreenCode::Upper
+            } else {
+                ScreenCode::Keep
+            }
+        })
+        .collect();
+    (gap, codes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::run_cases;
+    use crate::qp::projection::projected;
+    use crate::qp::{dcdm, QpProblem};
+
+    fn random_instance(
+        g: &mut crate::prop::Gen,
+    ) -> (usize, crate::util::Mat, Vec<f64>, ConstraintKind, Option<Vec<f64>>) {
+        let n = g.usize(6, 24);
+        let q = g.psd(n);
+        let ub = vec![1.5 / n as f64; n];
+        let cap = ub.iter().sum::<f64>() * 0.9;
+        let target = g.f64(0.05, 0.8).min(cap);
+        let kind = if g.bool() {
+            ConstraintKind::SumGe(target)
+        } else {
+            ConstraintKind::SumEq(target)
+        };
+        let lin = if g.bool() { Some(g.vec_f64(n, -0.5, 0.5)) } else { None };
+        (n, q, ub, kind, lin)
+    }
+
+    /// `feasible_min` is attained by a feasible point and lower-bounds
+    /// gᵀβ over many random feasible β — the two halves of LP optimality
+    /// the greedy fill must deliver.
+    #[test]
+    fn feasible_min_is_a_valid_lp_optimum() {
+        run_cases(24, 0x6A01, |g| {
+            let n = g.usize(3, 16);
+            let ub: Vec<f64> = g.vec_f64(n, 0.01, 0.4);
+            let scores = g.vec_f64(n, -1.0, 1.0);
+            let total: f64 = ub.iter().sum();
+            let target = g.f64(0.0, 1.0) * total;
+            for kind in [ConstraintKind::SumGe(target), ConstraintKind::SumEq(target)] {
+                let v = feasible_min(&scores, &ub, kind);
+                for _ in 0..20 {
+                    let beta: Vec<f64> =
+                        ub.iter().map(|&u| g.f64(0.0, 1.0) * u).collect();
+                    let beta = projected(&beta, &ub, kind);
+                    assert!(
+                        dot(&scores, &beta) >= v - 1e-9,
+                        "greedy min {v} beaten by feasible point ({kind:?})"
+                    );
+                }
+            }
+        });
+    }
+
+    /// The FW gap upper-bounds the true suboptimality F(α) − F(α*) at
+    /// random feasible points, and (near-)vanishes at the solved optimum.
+    #[test]
+    fn gap_bounds_suboptimality_and_vanishes_at_optimum() {
+        run_cases(16, 0x6A02, |gen| {
+            let (n, q, ub, kind, lin) = random_instance(gen);
+            let p = QpProblem { q: &q, lin: lin.as_deref(), ub: &ub, constraint: kind };
+            let (astar, _) = dcdm::solve(&p, None, &Default::default());
+            let fstar = p.objective(&astar);
+            let mut gbuf = vec![0.0; n];
+            for _ in 0..8 {
+                let raw: Vec<f64> = ub.iter().map(|&u| gen.f64(0.0, 1.0) * u).collect();
+                let a = projected(&raw, &ub, kind);
+                p.gradient(&a, &mut gbuf);
+                let gap = duality_gap(&gbuf, &a, &ub, kind);
+                let sub = p.objective(&a) - fstar;
+                assert!(gap >= sub - 1e-8, "gap {gap} < suboptimality {sub} (n={n})");
+            }
+            p.gradient(&astar, &mut gbuf);
+            let gap0 = duality_gap(&gbuf, &astar, &ub, kind);
+            assert!(gap0.abs() < 1e-6, "gap at optimum: {gap0}");
+        });
+    }
+
+    /// With exact per-coordinate scores (zero-width bounds from the
+    /// solved optimum), the bracket must contain a multiplier consistent
+    /// with the interior coordinates — the analogue of the rho-bounds
+    /// audit for the generalised water-filling quantiles.
+    #[test]
+    fn bracket_contains_the_interior_multiplier() {
+        run_cases(16, 0x6A03, |gen| {
+            let (n, q, ub, kind, lin) = random_instance(gen);
+            let p = QpProblem { q: &q, lin: lin.as_deref(), ub: &ub, constraint: kind };
+            let (a, _) = dcdm::solve(
+                &p,
+                None,
+                &dcdm::DcdmOpts { eps: 1e-10, ..Default::default() },
+            );
+            let mut gbuf = vec![0.0; n];
+            p.gradient(&a, &mut gbuf);
+            let b = mu_bracket(&gbuf, &gbuf, &ub, kind);
+            assert!(b.lo <= b.hi + 1e-9, "inverted bracket [{}, {}]", b.lo, b.hi);
+            let interior: Vec<usize> = (0..n)
+                .filter(|&i| a[i] > 1e-7 && a[i] < ub[i] - 1e-7)
+                .collect();
+            for &i in &interior {
+                assert!(
+                    gbuf[i] >= b.lo - 1e-6 && gbuf[i] <= b.hi + 1e-6,
+                    "interior score g[{i}]={} outside [{}, {}] ({kind:?})",
+                    gbuf[i],
+                    b.lo,
+                    b.hi
+                );
+            }
+        });
+    }
+
+    /// End-to-end safety of [`screen`] on random duals: codes computed
+    /// at a *partially converged* iterate never contradict the exact
+    /// optimum — the invariant dynamic screening inside DCDM rests on.
+    #[test]
+    fn screening_is_safe_at_rough_iterates() {
+        run_cases(20, 0x6A04, |gen| {
+            let (n, q, ub, kind, lin) = random_instance(gen);
+            let p = QpProblem { q: &q, lin: lin.as_deref(), ub: &ub, constraint: kind };
+            // a deliberately rough iterate: few sweeps, loose eps
+            let rough = dcdm::DcdmOpts {
+                eps: 1e-2,
+                max_sweeps: 2,
+                max_pair_steps: 3 * n,
+                gap_screening: false,
+                ..Default::default()
+            };
+            let (a, _) = dcdm::solve(&p, None, &rough);
+            let mut gbuf = vec![0.0; n];
+            p.gradient(&a, &mut gbuf);
+            let diag: Vec<f64> = (0..n).map(|i| q.get(i, i)).collect();
+            let (_gap, codes) = screen(&gbuf, &a, &ub, &diag, kind);
+            let (astar, _) = dcdm::solve(
+                &p,
+                None,
+                &dcdm::DcdmOpts { eps: 1e-10, gap_screening: false, ..Default::default() },
+            );
+            for i in 0..n {
+                match codes[i] {
+                    ScreenCode::Zero => assert!(
+                        astar[i] <= 1e-6,
+                        "unsafe Zero at {i}: {} ({kind:?}, n={n})",
+                        astar[i]
+                    ),
+                    ScreenCode::Upper => assert!(
+                        astar[i] >= ub[i] - 1e-6,
+                        "unsafe Upper at {i}: {} ({kind:?}, n={n})",
+                        astar[i]
+                    ),
+                    ScreenCode::Keep => {}
+                }
+            }
+        });
+    }
+
+    /// `SumGe` edge cases: a strictly negative restricted target forces
+    /// the [0, 0] bracket, and a slack constraint keeps 0 inside it.
+    #[test]
+    fn sum_ge_complementary_slackness_edges() {
+        let glo = [0.4, 1.0];
+        let ghi = [0.6, 1.2];
+        let ub = [1.0, 1.0];
+        let b = mu_bracket(&glo, &ghi, &ub, ConstraintKind::SumGe(-0.5));
+        assert_eq!((b.lo, b.hi), (0.0, 0.0));
+        // scores straddling 0 with a reachable floor: μ* = 0 possible
+        let glo2 = [-0.5, 0.3];
+        let ghi2 = [-0.3, 0.5];
+        let b2 = mu_bracket(&glo2, &ghi2, &ub, ConstraintKind::SumGe(0.5));
+        assert_eq!(b2.lo, 0.0, "zero multiplier excluded: {b2:?}");
+        assert!(b2.hi >= 0.0);
+    }
+
+    /// The water-filling quantiles on a hand-checkable instance.
+    #[test]
+    fn quantiles_on_known_masses() {
+        let vals = [0.1, 0.2, 0.3];
+        let ub = [1.0, 1.0, 1.0];
+        // cum > 1.5 first at the second value
+        assert_eq!(quantile_gt(&vals, &ub, 1.5), 0.2);
+        // cum ≥ 1.5 first at the second value too
+        assert_eq!(quantile_ge(&vals, &ub, 1.5), 0.2);
+        // beyond total mass: sup side unbounded, inf side conservative
+        assert_eq!(quantile_gt(&vals, &ub, 3.5), f64::INFINITY);
+        assert_eq!(quantile_ge(&vals, &ub, 3.5), f64::NEG_INFINITY);
+        // the empty prefix already satisfies a non-positive target
+        assert_eq!(quantile_ge(&vals, &ub, 0.0), f64::NEG_INFINITY);
+    }
+}

@@ -10,8 +10,13 @@
 //!    Corollary 2, order-statistic form — DESIGN.md §6);
 //! 4. [`srbo`] emits per-sample codes (Corollaries 3/4);
 //! 5. [`oneclass`] adapts 1-4 to the OC-SVM dual (Table II).
+//!
+//! [`gap`] is the *dynamic* counterpart: duality-gap spheres recomputed
+//! during the solve itself (GAP Safe style), driving permanent
+//! coordinate retirement inside [`crate::qp::dcdm`].
 
 pub mod delta;
+pub mod gap;
 pub mod oneclass;
 pub mod region;
 pub mod rho;

@@ -149,6 +149,66 @@ fn supervised_paths_conform_with_shrinking_disabled() {
     }
 }
 
+/// Gap-safe dynamic screening forced to run on *every* sweep: all
+/// gap-round arithmetic (restricted duality gap, water-filling bracket,
+/// permanent retirement) is serial with index-tiebroken sorts, so each
+/// backend must still reproduce the serial dense reference path bit for
+/// bit — the dynamic-screening analogue of the SRBO conformance pin.
+#[test]
+fn supervised_paths_conform_with_gap_screening_every_sweep() {
+    let d = gaussians(28, 2.5, 47); // l = 56
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.2, 0.3, 4);
+    let reference = full_q(&d.x, &d.y, kernel);
+    for kind in backends_under_test() {
+        for threads in [1usize, 2] {
+            let mut cfg = PathConfig::new(nus.clone(), kernel);
+            cfg.dcdm.gap_screening = true;
+            cfg.dcdm.gap_every = 1;
+            cfg.shard = if threads == 1 {
+                Sharding::Serial
+            } else {
+                Sharding::Threads(threads)
+            };
+            let got =
+                build_backend(kind, &d.x, Some(&d.y), kernel, 12, 2, 7).unwrap();
+            assert_path_conformance(
+                &reference,
+                &got,
+                &cfg,
+                false,
+                &format!("gap/{kind} t={threads}"),
+            );
+        }
+    }
+}
+
+/// Gap screening every sweep with heuristic shrinking *disabled*: the
+/// gap rounds are then the only active-set reduction, and one-class
+/// (SumEq) paths must conform the same way.
+#[test]
+fn oneclass_paths_conform_with_gap_screening_only() {
+    let d = gaussians(36, 1.0, 29).positives();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nus = nu_grid(0.25, 0.5, 4);
+    let reference = full_gram(&d.x, kernel);
+    for kind in backends_under_test() {
+        let mut cfg = PathConfig::new(nus.clone(), kernel);
+        cfg.dcdm.shrinking = false;
+        cfg.dcdm.gap_screening = true;
+        cfg.dcdm.gap_every = 1;
+        cfg.shard = Sharding::Threads(2);
+        let got = build_backend(kind, &d.x, None, kernel, 10, 2, 5).unwrap();
+        assert_path_conformance(
+            &reference,
+            &got,
+            &cfg,
+            true,
+            &format!("oc-gap/{kind}"),
+        );
+    }
+}
+
 /// The harness itself must reject unknown backend names (CI matrix
 /// typos surface instead of testing nothing).
 #[test]

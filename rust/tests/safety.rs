@@ -16,7 +16,7 @@ use srbo::data::store::{FeatureStore, FileStore};
 use srbo::data::{benchmark, synthetic, Dataset};
 use srbo::kernel::matrix::{Sharding, StreamingGram};
 use srbo::kernel::{full_gram, full_q, KernelKind};
-use srbo::prop::conformance::{build_backend, env_gram};
+use srbo::prop::conformance::{apply_env_dynamic, build_backend, env_gram};
 use srbo::qp::ConstraintKind;
 use srbo::screening::oneclass;
 
@@ -33,6 +33,7 @@ fn audit_supervised(d: &Dataset, kernel: KernelKind, nus: Vec<f64>) -> SafetyAud
             .unwrap();
     let mut on = PathConfig::new(nus.clone(), kernel);
     on.screening = true;
+    apply_env_dynamic(&mut on); // CI's SRBO_TEST_DYNAMIC axis
     let mut off = on.clone();
     off.screening = false;
     let p_on = NuPath::run_with_matrix(&backend, &on, false, Default::default()).unwrap();
@@ -115,6 +116,7 @@ fn oneclass_screening_is_safe_end_to_end() {
     let nus = grid(0.25, 0.5, 10);
     let mut on = PathConfig::new(nus.clone(), kernel);
     on.screening = true;
+    apply_env_dynamic(&mut on);
     let mut off = on.clone();
     off.screening = false;
     let p_on = NuPath::run_with_matrix(&backend, &on, true, Default::default()).unwrap();
@@ -193,6 +195,7 @@ fn screening_with_shrinking_solver_is_safe_and_matches_unshrunk() {
     let mut on = PathConfig::new(nus.clone(), kernel);
     on.screening = true;
     on.dcdm.shrinking = true; // explicit: this audit is about shrinking
+    apply_env_dynamic(&mut on);
     let mut off_screen = on.clone();
     off_screen.screening = false;
     let mut no_shrink = on.clone();
@@ -257,6 +260,7 @@ fn streaming_backed_screening_is_safe() {
     let mut on = PathConfig::new(nus.clone(), kernel);
     on.screening = true;
     on.shard = Sharding::Threads(2);
+    apply_env_dynamic(&mut on);
     let mut off = on.clone();
     off.screening = false;
     let p_on = NuPath::run_with_matrix(&sg, &on, false, Default::default()).unwrap();
@@ -289,4 +293,94 @@ fn streaming_backed_screening_is_safe() {
             assert_eq!(a.to_bits(), b.to_bits(), "alpha differs at step {k}");
         }
     }
+}
+
+/// Gap-safe dynamic screening audit: with gap rounds forced on every
+/// sweep, the full SRBO path must still reproduce the gap-screening-off
+/// path at every grid point — dynamic retirement may change how the
+/// solver gets there, never where it lands.  Runs over the
+/// `SRBO_TEST_GRAM` backend so the CI policy matrix audits the dynamic
+/// rule on every kernel backend.
+#[test]
+fn gap_screened_path_matches_unscreened() {
+    let d = synthetic::gaussians(60, 2.0, 23);
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let q = full_q(&d.x, &d.y, kernel);
+    let backend =
+        build_backend(env_gram().unwrap_or("dense"), &d.x, Some(&d.y), kernel, 24, 2, 16)
+            .unwrap();
+    let nus = grid(0.2, 0.4, 9);
+    let mut gap_on = PathConfig::new(nus.clone(), kernel);
+    gap_on.screening = true;
+    gap_on.dcdm.gap_screening = true;
+    gap_on.dcdm.gap_every = 1; // every sweep: maximal interference
+    let mut gap_off = gap_on.clone();
+    gap_off.dcdm.gap_screening = false;
+    let p_gap = NuPath::run_with_matrix(&backend, &gap_on, false, Default::default()).unwrap();
+    let p_ref = NuPath::run_with_matrix(&backend, &gap_off, false, Default::default()).unwrap();
+    let l = d.len();
+    let audit = SafetyAudit::compare(
+        &q,
+        &nus,
+        |_| vec![1.0 / l as f64; l],
+        ConstraintKind::SumGe,
+        &p_gap.steps.iter().map(|s| s.alpha.clone()).collect::<Vec<_>>(),
+        &p_ref.steps.iter().map(|s| s.alpha.clone()).collect::<Vec<_>>(),
+        |a| {
+            let mut s = vec![0.0; l];
+            q.matvec(a, &mut s);
+            s
+        },
+    );
+    assert!(
+        audit.is_safe(1e-6),
+        "gap-screened vs plain: obj gap {} preds {}",
+        audit.max_objective_gap,
+        audit.predictions_match
+    );
+    // the rule actually ran, and its telemetry flows through the metrics
+    assert!(p_gap.metrics.total_gap_rounds > 0, "gap rounds never ran");
+    assert_eq!(p_ref.metrics.total_gap_rounds, 0);
+    assert_eq!(p_ref.metrics.total_gap_retired, 0);
+}
+
+/// The one-class analogue: gap screening on every sweep over the SumEq
+/// dual must reproduce the gap-off one-class path.
+#[test]
+fn oneclass_gap_screened_path_matches_unscreened() {
+    let d = synthetic::oneclass_gaussians(100, -1.0, 31).positives();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let h = full_gram(&d.x, kernel);
+    let backend =
+        build_backend(env_gram().unwrap_or("dense"), &d.x, None, kernel, 24, 2, 16).unwrap();
+    let nus = grid(0.25, 0.5, 8);
+    let mut gap_on = PathConfig::new(nus.clone(), kernel);
+    gap_on.screening = true;
+    gap_on.dcdm.gap_screening = true;
+    gap_on.dcdm.gap_every = 1;
+    let mut gap_off = gap_on.clone();
+    gap_off.dcdm.gap_screening = false;
+    let p_gap = NuPath::run_with_matrix(&backend, &gap_on, true, Default::default()).unwrap();
+    let p_ref = NuPath::run_with_matrix(&backend, &gap_off, true, Default::default()).unwrap();
+    let l = d.len();
+    let audit = SafetyAudit::compare(
+        &h,
+        &nus,
+        |nu| vec![oneclass::upper_bound(nu, l); l],
+        |_| ConstraintKind::SumEq(1.0),
+        &p_gap.steps.iter().map(|s| s.alpha.clone()).collect::<Vec<_>>(),
+        &p_ref.steps.iter().map(|s| s.alpha.clone()).collect::<Vec<_>>(),
+        |a| {
+            let mut s = vec![0.0; l];
+            h.matvec(a, &mut s);
+            s
+        },
+    );
+    assert!(
+        audit.is_safe(1e-6),
+        "oc gap-screened vs plain: obj gap {} score gap {}",
+        audit.max_objective_gap,
+        audit.max_score_gap
+    );
+    assert!(p_gap.metrics.total_gap_rounds > 0, "gap rounds never ran");
 }
