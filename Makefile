@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all verify verify-matrix lint fmt bench-compile bench bench-gram bench-path bench-dcdm aot clean
+.PHONY: all verify verify-matrix lint fmt bench-compile bench bench-gram bench-path bench-dcdm bench-regress aot clean
 
 all: verify
 
@@ -53,10 +53,17 @@ bench-gram:
 bench-path:
 	$(CARGO) bench --bench path_scale
 
-# DCDM solver bench (size × shrink × selection × backend grid) →
-# BENCH_dcdm.json.  SRBO_BENCH_QUICK=1 runs the CI smoke grid.
+# DCDM solver bench (size × shrink × gap × gbar × selection × backend
+# grid) → BENCH_dcdm.json.  SRBO_BENCH_QUICK=1 runs the CI smoke grid.
 bench-dcdm:
 	$(CARGO) bench --bench dcdm_scale
+
+# Regression gate: rerun the dcdm bench and compare medians against the
+# committed BENCH_dcdm.json baseline (>25% median wall-time regression
+# on any matching run fails; skips cleanly when no baseline is
+# committed).  CI runs the same script after its quick-mode smoke.
+bench-regress: bench-dcdm
+	./scripts/bench_regress.sh BENCH_dcdm.json
 
 # Optional: export the L2 JAX/Pallas graphs to artifacts/*.hlo.txt.
 # Needs the Python toolchain (jax); the Rust `pjrt` feature consumes the

@@ -1,10 +1,14 @@
 //! §Perf DCDM solver bench: direct ν-SVM dual solves over a size ×
-//! {shrink on/off} × {gap-screen on/off} × {second/first-order
-//! selection} × backend grid, so the solver finally has a perf
-//! trajectory alongside the path bench.  Prints medians plus the
-//! solver's own work counters (sweeps, pair steps, rows touched,
-//! smallest active set, gap rounds/retired) and writes
-//! `BENCH_dcdm.json` at the repo root (run via `make bench-dcdm`).
+//! {shrink on/off} × {gap-screen on/off} × {G-bar on/off, shrink-on
+//! rows only} × {second/first-order selection} × backend grid, so the
+//! solver finally has a perf trajectory alongside the path bench.
+//! Prints medians plus the solver's own work counters (sweeps, pair
+//! steps, rows touched, smallest active set, gap rounds/retired,
+//! unshrink rows, G-bar updates) and writes `BENCH_dcdm.json` at the
+//! repo root (run via `make bench-dcdm`).  An engineered
+//! pinned-coordinate case (3/4 of the coordinates driven to ub by a
+//! strong linear term) isolates the G-bar win: its gbar-on row should
+//! show far fewer `unshrink_rows_touched` than gbar-off.
 //!
 //! Knobs: `SRBO_SCALE` shrinks dataset sizes; `SRBO_BENCH_QUICK=1` runs
 //! a tiny smoke grid (CI uses it to keep the JSON emission honest).
@@ -16,6 +20,48 @@ use srbo::kernel::KernelKind;
 use srbo::qp::dcdm::{self, DcdmOpts};
 use srbo::qp::{ConstraintKind, QpProblem, SolveStats};
 use srbo::util::tsv::Json;
+
+/// One BENCH_dcdm.json run row (shared by the grid and the engineered
+/// pinned-coordinate case, so the schema stays uniform).
+#[allow(clippy::too_many_arguments)]
+fn run_row(
+    case: &str,
+    l: usize,
+    backend: &str,
+    selection: &str,
+    shrinking: bool,
+    gap_screening: bool,
+    gbar: bool,
+    median_s: f64,
+    min_s: f64,
+    st: &SolveStats,
+    min_active: usize,
+) -> Json {
+    Json::Obj(vec![
+        ("case".into(), Json::Str(case.into())),
+        ("l".into(), Json::Num(l as f64)),
+        ("backend".into(), Json::Str(backend.into())),
+        ("selection".into(), Json::Str(selection.into())),
+        ("shrinking".into(), Json::Bool(shrinking)),
+        ("gap_screening".into(), Json::Bool(gap_screening)),
+        ("gbar".into(), Json::Bool(gbar)),
+        ("median_s".into(), Json::Num(median_s)),
+        ("min_s".into(), Json::Num(min_s)),
+        ("sweeps".into(), Json::Num(st.sweeps as f64)),
+        ("pair_steps".into(), Json::Num(st.pair_steps as f64)),
+        ("rows_touched".into(), Json::Num(st.rows_touched as f64)),
+        ("min_active".into(), Json::Num(min_active as f64)),
+        ("shrink_events".into(), Json::Num(st.shrink_events as f64)),
+        ("unshrink_events".into(), Json::Num(st.unshrink_events as f64)),
+        ("unshrink_rows_touched".into(), Json::Num(st.unshrink_rows_touched as f64)),
+        ("gbar_updates".into(), Json::Num(st.gbar_updates as f64)),
+        ("gap_rounds".into(), Json::Num(st.gap_rounds as f64)),
+        ("gap_retired".into(), Json::Num(st.gap_retired() as f64)),
+        ("final_gap".into(), Json::Num(st.final_gap)),
+        ("objective".into(), Json::Num(st.objective)),
+        ("violation".into(), Json::Num(st.violation)),
+    ])
+}
 
 fn main() {
     let quick = std::env::var("SRBO_BENCH_QUICK").is_ok();
@@ -48,65 +94,109 @@ fn main() {
             for (sel, second_order) in [("second", true), ("first", false)] {
                 for (shr, shrinking) in [("on", true), ("off", false)] {
                     for (gp, gap_screening) in [("on", true), ("off", false)] {
-                        let opts = DcdmOpts {
-                            shrinking,
-                            second_order,
-                            gap_screening,
-                            ..DcdmOpts::default()
+                        // the G-bar axis only matters when unshrink
+                        // reconstructions happen, i.e. with shrinking on
+                        let gbar_axis: &[(&str, bool)] = if shrinking {
+                            &[("on", true), ("off", false)]
+                        } else {
+                            &[("on", true)]
                         };
-                        let p = QpProblem {
-                            q,
-                            lin: None,
-                            ub: &ub,
-                            constraint: ConstraintKind::SumGe(nu),
-                        };
-                        let mut last: Option<SolveStats> = None;
-                        let s = bench(
-                            &format!("dcdm_l{l}_{bname}_{sel}_shrink-{shr}_gap-{gp}"),
-                            warmup,
-                            reps,
-                            || {
-                                let (alpha, stats) = dcdm::solve(&p, None, &opts);
-                                std::hint::black_box(&alpha);
-                                last = Some(stats);
-                            },
-                        );
-                        let st = last.expect("at least one rep ran");
-                        let min_active = st.min_active().unwrap_or(l);
-                        println!(
-                            "{}  sweeps={} pairs={} rows={} min_active={min_active} \
-                             gap_rounds={} gap_retired={}",
-                            s.human(),
-                            st.sweeps,
-                            st.pair_steps,
-                            st.rows_touched,
-                            st.gap_rounds,
-                            st.gap_retired(),
-                        );
-                        runs.push(Json::Obj(vec![
-                            ("l".into(), Json::Num(l as f64)),
-                            ("backend".into(), Json::Str((*bname).into())),
-                            ("selection".into(), Json::Str(sel.into())),
-                            ("shrinking".into(), Json::Bool(shrinking)),
-                            ("gap_screening".into(), Json::Bool(gap_screening)),
-                            ("median_s".into(), Json::Num(s.median_s)),
-                            ("min_s".into(), Json::Num(s.min_s)),
-                            ("sweeps".into(), Json::Num(st.sweeps as f64)),
-                            ("pair_steps".into(), Json::Num(st.pair_steps as f64)),
-                            ("rows_touched".into(), Json::Num(st.rows_touched as f64)),
-                            ("min_active".into(), Json::Num(min_active as f64)),
-                            ("shrink_events".into(), Json::Num(st.shrink_events as f64)),
-                            ("unshrink_events".into(), Json::Num(st.unshrink_events as f64)),
-                            ("gap_rounds".into(), Json::Num(st.gap_rounds as f64)),
-                            ("gap_retired".into(), Json::Num(st.gap_retired() as f64)),
-                            ("final_gap".into(), Json::Num(st.final_gap)),
-                            ("objective".into(), Json::Num(st.objective)),
-                            ("violation".into(), Json::Num(st.violation)),
-                        ]));
+                        for &(gb, gbar) in gbar_axis {
+                            let opts = DcdmOpts {
+                                shrinking,
+                                second_order,
+                                gap_screening,
+                                gbar,
+                                ..DcdmOpts::default()
+                            };
+                            let p = QpProblem {
+                                q,
+                                lin: None,
+                                ub: &ub,
+                                constraint: ConstraintKind::SumGe(nu),
+                            };
+                            let mut last: Option<SolveStats> = None;
+                            let s = bench(
+                                &format!(
+                                    "dcdm_l{l}_{bname}_{sel}_shrink-{shr}_gap-{gp}_gbar-{gb}"
+                                ),
+                                warmup,
+                                reps,
+                                || {
+                                    let (alpha, stats) = dcdm::solve(&p, None, &opts);
+                                    std::hint::black_box(&alpha);
+                                    last = Some(stats);
+                                },
+                            );
+                            let st = last.expect("at least one rep ran");
+                            let min_active = st.min_active().unwrap_or(l);
+                            println!(
+                                "{}  sweeps={} pairs={} rows={} min_active={min_active} \
+                                 gap_rounds={} gap_retired={} unshrink_rows={} gbar_updates={}",
+                                s.human(),
+                                st.sweeps,
+                                st.pair_steps,
+                                st.rows_touched,
+                                st.gap_rounds,
+                                st.gap_retired(),
+                                st.unshrink_rows_touched,
+                                st.gbar_updates,
+                            );
+                            runs.push(run_row(
+                                "grid", l, bname, sel, shrinking, gap_screening,
+                                gbar, s.median_s, s.min_s, &st, min_active,
+                            ));
+                        }
                     }
                 }
             }
         }
+        // Engineered pinned-coordinate case: a strong negative linear
+        // term drives 3/4 of the coordinates to their upper bound, so
+        // unshrink reconstructions are dominated by ub-pinned rows.
+        // With G-bar those rows are served from the cached base on
+        // every clean pass; without it each unshrink re-touches the
+        // whole support.  Gap screening stays off so retirement does
+        // not shrink the off-case's support for free.
+        let pinned_lin: Vec<f64> =
+            (0..l).map(|i| if i < 3 * l / 4 { -2.0 } else { 0.0 }).collect();
+        let mut pinned_rows = Vec::new();
+        for &(gb, gbar) in &[("on", true), ("off", false)] {
+            let opts = DcdmOpts {
+                shrink_every: 1,
+                gap_screening: false,
+                gbar,
+                ..DcdmOpts::default()
+            };
+            let p = QpProblem {
+                q: &backends[0].1,
+                lin: Some(&pinned_lin),
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nu),
+            };
+            let mut last: Option<SolveStats> = None;
+            let s = bench(
+                &format!("dcdm_l{l}_pinned_gbar-{gb}"),
+                warmup,
+                reps,
+                || {
+                    let (alpha, stats) = dcdm::solve(&p, None, &opts);
+                    std::hint::black_box(&alpha);
+                    last = Some(stats);
+                },
+            );
+            let st = last.expect("at least one rep ran");
+            let min_active = st.min_active().unwrap_or(l);
+            pinned_rows.push(st.unshrink_rows_touched);
+            runs.push(run_row(
+                "pinned", l, "dense", "second", true, false, gbar, s.median_s,
+                s.min_s, &st, min_active,
+            ));
+        }
+        println!(
+            "pinned l={l}: unshrink_rows gbar-on={} gbar-off={}",
+            pinned_rows[0], pinned_rows[1]
+        );
     }
     let doc = Json::Obj(vec![
         ("bench".into(), Json::Str("dcdm_scale".into())),

@@ -88,6 +88,20 @@ pub trait FeatureStore: Send + Sync {
         out
     }
 
+    /// Copy an arbitrary row subset into `out` (length idx.len()·d,
+    /// row-major in `idx` order) — the gather the retirement-aware
+    /// row path is built on: after gap screening, callers pass only the
+    /// surviving indices, so an out-of-core store reads just those rows.
+    /// The default does one [`Self::row_into`] per index; [`FileStore`]
+    /// overrides it to coalesce consecutive runs into ranged reads.
+    fn gather_rows(&self, idx: &[usize], out: &mut [f64]) {
+        let d = self.dim();
+        assert_eq!(out.len(), idx.len() * d);
+        for (k, &i) in idx.iter().enumerate() {
+            self.row_into(i, &mut out[k * d..(k + 1) * d]);
+        }
+    }
+
     /// Materialise the whole store as a resident [`Mat`] in chunked
     /// page reads — one pass over the file, for consumers that
     /// explicitly want the dense regime (8·l·d bytes is smaller than
@@ -365,6 +379,35 @@ impl FeatureStore for FileStore {
         let off = self.data_off + 8 * (lo as u64) * (self.dim as u64);
         self.with_reader(|file| read_f64s(file, off, out));
     }
+
+    /// Coalesce the index list into maximal consecutive runs and issue
+    /// one ranged read per run on a single pooled handle.  After gap
+    /// screening retires rows, the survivor list is mostly long
+    /// ascending stretches with holes, so late-solve I/O (seek count
+    /// and bytes) is proportional to the free set, not l.
+    fn gather_rows(&self, idx: &[usize], out: &mut [f64]) {
+        let d = self.dim;
+        assert_eq!(out.len(), idx.len() * d);
+        if idx.is_empty() {
+            return;
+        }
+        self.with_reader(|file| {
+            let mut k = 0;
+            while k < idx.len() {
+                let start = idx[k];
+                assert!(start < self.rows, "row {start} of {}", self.rows);
+                let mut run = 1;
+                while k + run < idx.len() && idx[k + run] == start + run {
+                    run += 1;
+                }
+                assert!(start + run <= self.rows, "row {} of {}", start + run - 1, self.rows);
+                let off = self.data_off + 8 * (start as u64) * (d as u64);
+                read_f64s(file, off, &mut out[k * d..(k + run) * d])?;
+                k += run;
+            }
+            Ok(())
+        });
+    }
 }
 
 /// Seek to `off` and decode `out.len()` little-endian f64s through a
@@ -438,6 +481,57 @@ mod tests {
             drop(fs);
             let _ = fs::remove_file(&path);
         });
+    }
+
+    #[test]
+    fn gather_rows_matches_per_row_reads_bit_for_bit() {
+        run_cases(8, 0x6A7, |g| {
+            let l = g.usize(1, 24);
+            let d = g.usize(1, 6);
+            let x = random_mat(g, l, d);
+            let path = tmp("gather");
+            FileStore::write(&path, &x, None).unwrap();
+            let fs = FileStore::open(&path).unwrap();
+            let mem = MemStore::new(x.clone());
+            // ascending subset with holes — the post-screening shape
+            let idx: Vec<usize> = (0..l).filter(|_| g.bool()).collect();
+            let mut a = vec![0.0; idx.len() * d];
+            let mut b = vec![0.0; idx.len() * d];
+            fs.gather_rows(&idx, &mut a);
+            mem.gather_rows(&idx, &mut b);
+            assert_eq!(a, b, "gather {idx:?}");
+            for (k, &i) in idx.iter().enumerate() {
+                assert_eq!(&a[k * d..(k + 1) * d], x.row(i), "gathered row {i}");
+            }
+            drop(fs);
+            let _ = fs::remove_file(&path);
+        });
+    }
+
+    #[test]
+    fn gather_rows_handles_non_contiguous_and_unsorted_indices() {
+        let mut g = Gen::new(0x9A7);
+        let l = 12;
+        let x = random_mat(&mut g, l, 4);
+        let path = tmp("gather2");
+        FileStore::write(&path, &x, None).unwrap();
+        let fs = FileStore::open(&path).unwrap();
+        for idx in [
+            vec![],
+            vec![7],
+            vec![0, 1, 2, 3],
+            vec![0, 2, 4, 5, 6, 11],
+            vec![11, 3, 4, 5, 0], // unsorted: runs coalesce within order
+            vec![5, 5, 5],        // duplicates are just repeated reads
+        ] {
+            let mut out = vec![0.0; idx.len() * 4];
+            fs.gather_rows(&idx, &mut out);
+            for (k, &i) in idx.iter().enumerate() {
+                assert_eq!(&out[k * 4..(k + 1) * 4], x.row(i), "idx={idx:?} row {i}");
+            }
+        }
+        drop(fs);
+        let _ = fs::remove_file(&path);
     }
 
     #[test]

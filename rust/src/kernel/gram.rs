@@ -9,13 +9,100 @@
 //! row-mode, so every backend computes bit-identical entries.
 
 use super::KernelKind;
-use crate::util::linalg::dot;
+use crate::util::linalg::{dot, lanes_sum, DOT_LANES};
 use crate::util::Mat;
 
 /// Squared row norms ‖x_i‖² — the RBF builders' shared hoist
 /// (‖x_i − x_j‖² = n_i + n_j − 2 x_i·x_j).
+///
+/// Computed with the same lane [`dot`] as every kernel entry: the RBF
+/// diagonal is exact (n_i + n_i − 2·x_i·x_i ≡ 0.0 ⇒ entry ≡ 1.0) and
+/// the linear diagonal bit-matches [`hoisted_diag`] only because norms
+/// and entries share one summation order.
 pub fn row_norms(x: &Mat) -> Vec<f64> {
     (0..x.rows).map(|i| dot(x.row(i), x.row(i))).collect()
+}
+
+/// Output tile width of the blocked micro-kernel: four Gram entries
+/// (four lane-dots) in flight against one shared row.
+pub const GRAM_TILE: usize = 4;
+
+/// Map one hoisted dot product to the kernel entry — shared by the tile
+/// and remainder paths of [`kernel_block_hoisted`], with arithmetic
+/// identical to [`kernel_entry_hoisted`] (`na`/`nxs` read only for RBF).
+#[inline]
+fn finish_entry(kernel: KernelKind, dt: f64, na: f64, nxs: &[f64], j: usize) -> f64 {
+    match kernel {
+        KernelKind::Linear => dt + 1.0,
+        KernelKind::Rbf { gamma } => {
+            let d = (na + nxs[j] - 2.0 * dt).max(0.0);
+            (-gamma * d).exp()
+        }
+    }
+}
+
+/// The blocked Gram micro-kernel: `out[t] = κ(a, row t of xs)` for a
+/// row-major block `xs` of `out.len()` feature rows of width `d`, with
+/// squared norms hoisted by the caller (`na` for `a`, `nxs[t]` per block
+/// row — both read only for RBF; pass `&[]` for linear).
+///
+/// Rows are processed in [`GRAM_TILE`]-wide output tiles; within a tile
+/// the [`DOT_LANES`] accumulator lanes of all four dots advance chunk by
+/// chunk, so the autovectorizer sees `GRAM_TILE × DOT_LANES` independent
+/// fma streams over a single load of `a`.  For each row the update
+/// sequence on its own accumulators — chunk-major, lanes in order,
+/// serial tail, [`lanes_sum`] reduction — is exactly [`dot`]'s, so every
+/// entry is bit-identical to the remainder path and to
+/// [`kernel_entry_hoisted`]: tiling changes speed, never bits.  This is
+/// the ONE kernel every backend's bulk entry computation routes through
+/// (row builds, the threaded dense builders, streaming page fills, and
+/// row gathers), which is what keeps all `KernelMatrix` backends
+/// bit-identical to each other.
+pub fn kernel_block_hoisted(
+    kernel: KernelKind,
+    a: &[f64],
+    na: f64,
+    xs: &[f64],
+    d: usize,
+    nxs: &[f64],
+    out: &mut [f64],
+) {
+    let m = out.len();
+    debug_assert_eq!(a.len(), d);
+    debug_assert_eq!(xs.len(), m * d);
+    let head = d - d % DOT_LANES;
+    let mut t = 0;
+    while t + GRAM_TILE <= m {
+        let base = t * d;
+        let mut acc = [[0.0f64; DOT_LANES]; GRAM_TILE];
+        let mut c = 0;
+        while c < head {
+            let av = &a[c..c + DOT_LANES];
+            for (u, lanes) in acc.iter_mut().enumerate() {
+                let rv = &xs[base + u * d + c..base + u * d + c + DOT_LANES];
+                for (lane, (&x, &r)) in lanes.iter_mut().zip(av.iter().zip(rv)) {
+                    *lane += x * r;
+                }
+            }
+            c += DOT_LANES;
+        }
+        let mut tails = [0.0f64; GRAM_TILE];
+        for i in head..d {
+            for (u, tail) in tails.iter_mut().enumerate() {
+                *tail += a[i] * xs[base + u * d + i];
+            }
+        }
+        for (u, (lanes, tail)) in acc.iter().zip(tails).enumerate() {
+            let dt = lanes_sum(*lanes) + tail;
+            out[t + u] = finish_entry(kernel, dt, na, nxs, t + u);
+        }
+        t += GRAM_TILE;
+    }
+    while t < m {
+        let dt = dot(a, &xs[t * d..(t + 1) * d]);
+        out[t] = finish_entry(kernel, dt, na, nxs, t);
+        t += 1;
+    }
 }
 
 /// One Gram entry κ(x_i, x_j) from two feature rows and their hoisted
@@ -51,49 +138,47 @@ pub fn gram_row_hoisted(
     out: &mut [f64],
 ) {
     debug_assert_eq!(out.len(), x.rows);
-    let xi = x.row(i);
-    match kernel {
-        KernelKind::Linear => {
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = kernel_entry_hoisted(kernel, xi, x.row(j), 0.0, 0.0);
-            }
-        }
-        KernelKind::Rbf { .. } => {
-            let ni = norms[i];
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = kernel_entry_hoisted(kernel, xi, x.row(j), ni, norms[j]);
-            }
-        }
-    }
+    let ni = match kernel {
+        KernelKind::Linear => 0.0,
+        KernelKind::Rbf { .. } => norms[i],
+    };
+    kernel_block_hoisted(kernel, x.row(i), ni, &x.data, x.cols, norms, out);
 }
 
-/// Full Gram matrix K(X, X) (symmetric, serial).
+/// Full Gram matrix K(X, X) (symmetric, serial): the lower triangle of
+/// each row through the blocked micro-kernel, mirrored into the upper.
+/// The RBF diagonal comes out exactly 1.0 because norms and entries
+/// share one dot (n_i + n_i − 2·x_i·x_i ≡ 0.0).
 pub fn full_gram(x: &Mat, kernel: KernelKind) -> Mat {
-    let l = x.rows;
+    let (l, d) = (x.rows, x.cols);
     let mut k = Mat::zeros(l, l);
-    match kernel {
-        KernelKind::Linear => {
-            for i in 0..l {
-                let xi = x.row(i);
-                for j in 0..=i {
-                    let v = dot(xi, x.row(j)) + 1.0;
-                    k.set(i, j, v);
-                    k.set(j, i, v);
-                }
-            }
-        }
-        KernelKind::Rbf { gamma } => {
-            let norms = row_norms(x);
-            for i in 0..l {
-                let xi = x.row(i);
-                k.set(i, i, 1.0);
-                for j in 0..i {
-                    let d = (norms[i] + norms[j] - 2.0 * dot(xi, x.row(j))).max(0.0);
-                    let v = (-gamma * d).exp();
-                    k.set(i, j, v);
-                    k.set(j, i, v);
-                }
-            }
+    if l == 0 {
+        return k;
+    }
+    let norms = match kernel {
+        KernelKind::Rbf { .. } => row_norms(x),
+        KernelKind::Linear => Vec::new(),
+    };
+    for (i, row) in k.data.chunks_mut(l).enumerate() {
+        let ni = match kernel {
+            KernelKind::Linear => 0.0,
+            KernelKind::Rbf { .. } => norms[i],
+        };
+        kernel_block_hoisted(
+            kernel,
+            x.row(i),
+            ni,
+            &x.data[..(i + 1) * d],
+            d,
+            &norms,
+            &mut row[..=i],
+        );
+    }
+    // mirror the strict lower triangle into the upper
+    for i in 0..l {
+        for j in 0..i {
+            let v = k.get(i, j);
+            k.set(j, i, v);
         }
     }
     k
@@ -189,27 +274,24 @@ pub fn full_gram_threaded(x: &Mat, kernel: KernelKind, threads: usize) -> Mat {
             buckets[i % threads].push((i, row));
         }
         let norms = &norms;
+        let d = x.cols;
         std::thread::scope(|s| {
             for bucket in buckets {
                 s.spawn(move || {
                     for (i, row) in bucket {
-                        let xi = x.row(i);
-                        match kernel {
-                            KernelKind::Linear => {
-                                for (j, o) in row[..=i].iter_mut().enumerate() {
-                                    *o = dot(xi, x.row(j)) + 1.0;
-                                }
-                            }
-                            KernelKind::Rbf { gamma } => {
-                                row[i] = 1.0;
-                                for (j, o) in row[..i].iter_mut().enumerate() {
-                                    let d = (norms[i] + norms[j]
-                                        - 2.0 * dot(xi, x.row(j)))
-                                    .max(0.0);
-                                    *o = (-gamma * d).exp();
-                                }
-                            }
-                        }
+                        let ni = match kernel {
+                            KernelKind::Linear => 0.0,
+                            KernelKind::Rbf { .. } => norms[i],
+                        };
+                        kernel_block_hoisted(
+                            kernel,
+                            x.row(i),
+                            ni,
+                            &x.data[..(i + 1) * d],
+                            d,
+                            norms,
+                            &mut row[..=i],
+                        );
                     }
                 });
             }
@@ -353,6 +435,91 @@ mod tests {
                 gram_row_hoisted(&x, &norms, i, kernel, &mut row);
                 assert_eq!(row.as_slice(), k.row(i), "row {i} differs ({kernel:?})");
             }
+        }
+    }
+
+    /// The pre-blocking scalar entry kernel (sequential 4-acc dot),
+    /// kept only as the reference the micro-kernel tolerance pin
+    /// compares against.
+    fn kernel_entry_reference(
+        kernel: KernelKind,
+        xi: &[f64],
+        xj: &[f64],
+        ni: f64,
+        nj: f64,
+    ) -> f64 {
+        use crate::util::linalg::dot_reference;
+        match kernel {
+            KernelKind::Linear => dot_reference(xi, xj) + 1.0,
+            KernelKind::Rbf { gamma } => {
+                let d = (ni + nj - 2.0 * dot_reference(xi, xj)).max(0.0);
+                (-gamma * d).exp()
+            }
+        }
+    }
+
+    #[test]
+    fn block_kernel_bit_matches_single_entry_kernel() {
+        // every tile/remainder split (m around GRAM_TILE multiples) and
+        // every lane head/tail split (d around DOT_LANES multiples):
+        // the tiled path must equal the per-entry path bit for bit
+        crate::prop::run_cases(10, 0xB10C, |g| {
+            let m = g.usize(1, 3 * GRAM_TILE + 2);
+            let d = g.usize(1, 2 * DOT_LANES + 3);
+            let rows: Vec<Vec<f64>> = (0..m).map(|_| g.vec_f64(d, -2.0, 2.0)).collect();
+            let x = Mat::from_rows(&rows);
+            let norms = row_norms(&x);
+            let a = g.vec_f64(d, -2.0, 2.0);
+            let na = dot(&a, &a);
+            let mut out = vec![0.0; m];
+            for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma: g.f64(0.1, 2.0) }] {
+                kernel_block_hoisted(kernel, &a, na, &x.data, d, &norms, &mut out);
+                for (j, &got) in out.iter().enumerate() {
+                    let want = kernel_entry_hoisted(kernel, &a, x.row(j), na, norms[j]);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "entry {j} (m={m} d={d} {kernel:?}): {got} vs {want}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_kernel_matches_scalar_reference_within_tolerance() {
+        // one-time drift bound vs the pre-blocking scalar kernel: the
+        // lane reordering may move entries by O(eps), never more
+        use crate::util::linalg::dot_reference;
+        let mut g = crate::prop::Gen::new(0x01D);
+        let rows: Vec<Vec<f64>> = (0..23).map(|_| g.vec_f64(11, -3.0, 3.0)).collect();
+        let x = Mat::from_rows(&rows);
+        let norms = row_norms(&x);
+        let ref_norms: Vec<f64> =
+            (0..23).map(|i| dot_reference(x.row(i), x.row(i))).collect();
+        for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma: 0.6 }] {
+            let k = full_gram(&x, kernel);
+            for i in 0..23 {
+                for j in 0..23 {
+                    let want = kernel_entry_reference(
+                        kernel,
+                        x.row(i),
+                        x.row(j),
+                        ref_norms[i],
+                        ref_norms[j],
+                    );
+                    let got = k.get(i, j);
+                    let tol = 1e-12 * (1.0 + want.abs());
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "entry ({i},{j}) {kernel:?}: {got} vs scalar {want}"
+                    );
+                }
+            }
+        }
+        // and the lane norms themselves stay within the same bound
+        for (a, b) in norms.iter().zip(&ref_norms) {
+            assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()));
         }
     }
 

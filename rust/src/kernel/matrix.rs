@@ -55,14 +55,14 @@
 //! worker count.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::ops::Deref;
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
 
 use super::gram::{
     default_build_threads, full_gram_threaded, full_q_threaded, gram_row_hoisted,
-    hoisted_diag, kernel_entry_hoisted, labelled_row_hoisted, row_norms, shard_ranges,
+    hoisted_diag, kernel_block_hoisted, labelled_row_hoisted, row_norms, shard_ranges,
 };
 use super::KernelKind;
 use crate::data::store::{FeatureStore, FileStore};
@@ -104,6 +104,23 @@ impl Deref for Row<'_> {
             Row::Shared(arc) => arc,
         }
     }
+}
+
+/// Row-cache telemetry counters ([`KernelMatrix::cache_stats`]).
+///
+/// `evictions` counts every row dropped from residency — LRU
+/// budget-pressure victims and immediate [`KernelMatrix::retire`]
+/// evictions alike.  Dense backends report all zeros.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Row requests served from a resident row.
+    pub hits: u64,
+    /// Row requests that had to compute the row.
+    pub misses: u64,
+    /// Rows dropped from residency (LRU victims + retirements).
+    pub evictions: u64,
+    /// Rows currently resident.
+    pub resident: usize,
 }
 
 /// Minimum rows per worker before [`Sharding::Auto`] adds a thread
@@ -265,10 +282,28 @@ pub trait KernelMatrix {
         self.par_power_eig_max(iters, 1)
     }
 
-    /// (hits, misses, resident rows) — dense backends report zeros.
-    fn cache_stats(&self) -> (u64, u64, usize) {
-        (0, 0, 0)
+    /// Row-cache telemetry — dense backends report all zeros.
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
     }
+
+    /// The gap-screening hand-off: the caller proves coordinate `i` is
+    /// permanently fixed (gap-safe retirement in
+    /// [`crate::qp::dcdm`]) and promises never to request **row i**
+    /// again for the rest of the solve.  Cache backends evict the row
+    /// immediately and refuse to re-admit it (a later `row(i)` still
+    /// recomputes it correctly — bit-identical, just never cached — so
+    /// the row contract survives even a broken promise); streaming
+    /// backends drop it from their I/O planning.  Entries at *column* i
+    /// of other rows are unaffected: retirement frees storage, it never
+    /// changes bits.  Dense backends no-op.
+    fn retire(&self, i: usize) {
+        let _ = i;
+    }
+
+    /// Clear all retirements (a backend is reused across ν-path steps;
+    /// retirement is only valid within one solve).
+    fn retire_reset(&self) {}
 
     /// y = Q x with the row sweep fanned out over `threads` workers.
     ///
@@ -539,7 +574,7 @@ impl KernelMatrix for DenseGram {
 /// resident feature memory is `chunk_rows · d · 8` bytes plus one row —
 /// bounded by the chunk size, not l·d.
 ///
-/// Entry arithmetic goes through [`kernel_entry_hoisted`] with the
+/// Entry arithmetic goes through [`kernel_block_hoisted`] with the
 /// store's precomputed norms, so entries are **bit-identical** to every
 /// resident backend.  Thread-safe and `Sync` (the store hands each
 /// concurrent reader its own handle), so the shard-parallel sweeps fan
@@ -552,6 +587,10 @@ pub struct StreamingGram {
     kernel: KernelKind,
     diag: Vec<f64>,
     chunk_rows: usize,
+    /// Gap-retired rows ([`KernelMatrix::retire`]): callers promise not
+    /// to request these as rows again, so the gather planning below
+    /// (whose index sets exclude them) never reads them off disk.
+    retired: Mutex<HashSet<usize>>,
 }
 
 impl StreamingGram {
@@ -578,7 +617,19 @@ impl StreamingGram {
         chunk_rows: usize,
     ) -> Self {
         let diag = hoisted_diag(store.norms(), y.as_deref(), kernel);
-        StreamingGram { store, y, kernel, diag, chunk_rows: chunk_rows.max(1) }
+        StreamingGram {
+            store,
+            y,
+            kernel,
+            diag,
+            chunk_rows: chunk_rows.max(1),
+            retired: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// Rows retired so far this solve (see [`KernelMatrix::retire`]).
+    pub fn retired_rows(&self) -> usize {
+        self.retired.lock().unwrap().len()
     }
 
     /// The backing feature store.
@@ -619,10 +670,15 @@ impl StreamingGram {
             let hi = (lo + self.chunk_rows).min(l);
             let block = &mut page[..(hi - lo) * d];
             self.store.rows_into(lo, hi, block);
-            for (k, o) in out[lo..hi].iter_mut().enumerate() {
-                let xj = &block[k * d..(k + 1) * d];
-                *o = kernel_entry_hoisted(self.kernel, xi, xj, ni, norms[lo + k]);
-            }
+            kernel_block_hoisted(
+                self.kernel,
+                xi,
+                ni,
+                block,
+                d,
+                &norms[lo..hi],
+                &mut out[lo..hi],
+            );
             lo = hi;
         }
         // same label scaling expression as `labelled_row_hoisted`
@@ -689,24 +745,25 @@ impl KernelMatrix for StreamingGram {
         self.sweep(0, x1, Some(x2), y1, Some(y2));
     }
 
-    /// Out-of-core active gather: reads x_i plus one stored row per
-    /// requested index — O(|idx|·d) I/O instead of streaming the whole
-    /// store for a row the caller would mostly discard.  Entry
-    /// arithmetic (and the label-scaling expression) is exactly
-    /// [`Self::compute_row`]'s, so gathered entries stay bit-identical
+    /// Out-of-core active gather: reads x_i plus the requested feature
+    /// rows through [`FeatureStore::gather_rows`] — `FileStore`
+    /// coalesces ascending index runs into ranged reads, so late-solve
+    /// I/O is proportional to the surviving (non-retired) set the
+    /// caller's `idx` describes, never to l.  Entries then go through
+    /// the blocked micro-kernel (with the label-scaling expression of
+    /// [`Self::compute_row`]), so gathered entries stay bit-identical
     /// to full-row entries.
     fn row_gather(&self, i: usize, idx: &[usize], out: &mut [f64]) {
         assert_eq!(idx.len(), out.len());
         let d = self.store.dim();
         let norms = self.store.norms();
         let mut xi = vec![0.0; d];
-        let mut xj = vec![0.0; d];
         self.store.row_into(i, &mut xi);
         let ni = norms[i];
-        for (o, &j) in out.iter_mut().zip(idx) {
-            self.store.row_into(j, &mut xj);
-            *o = kernel_entry_hoisted(self.kernel, &xi, &xj, ni, norms[j]);
-        }
+        let mut block = vec![0.0; idx.len() * d];
+        self.store.gather_rows(idx, &mut block);
+        let nidx: Vec<f64> = idx.iter().map(|&j| norms[j]).collect();
+        kernel_block_hoisted(self.kernel, &xi, ni, &block, d, &nidx, out);
         if let Some(y) = &self.y {
             let yi = y[i];
             for (o, &j) in out.iter_mut().zip(idx) {
@@ -763,6 +820,14 @@ impl KernelMatrix for StreamingGram {
         });
     }
 
+    fn retire(&self, i: usize) {
+        self.retired.lock().unwrap().insert(i);
+    }
+
+    fn retire_reset(&self) {
+        self.retired.lock().unwrap().clear();
+    }
+
     fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
         Some(self)
     }
@@ -816,6 +881,20 @@ impl RowEngine {
     fn out_of_core(&self) -> bool {
         matches!(self, RowEngine::Stream(_))
     }
+
+    /// Forward a retirement to the streaming layer (resident engines
+    /// have nothing to drop).
+    fn retire(&self, i: usize) {
+        if let RowEngine::Stream(sg) = self {
+            KernelMatrix::retire(sg, i);
+        }
+    }
+
+    fn retire_reset(&self) {
+        if let RowEngine::Stream(sg) = self {
+            KernelMatrix::retire_reset(sg);
+        }
+    }
 }
 
 struct LruEntry {
@@ -828,6 +907,10 @@ struct LruInner {
     clock: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
+    /// Gap-retired rows: evicted immediately and refused re-admission
+    /// (a `row()` request for one still recomputes, uncached).
+    retired: HashSet<usize>,
 }
 
 /// Bounded-memory backend: rows computed on demand behind an LRU with a
@@ -876,6 +959,8 @@ impl LruRowCache {
                 clock: 0,
                 hits: 0,
                 misses: 0,
+                evictions: 0,
+                retired: HashSet::new(),
             }),
         }
     }
@@ -922,6 +1007,11 @@ impl KernelMatrix for LruRowCache {
         let mut buf = vec![0.0; self.engine.len()];
         self.compute_row(i, &mut buf);
         let data: Rc<[f64]> = buf.into();
+        // a retired row is never re-admitted: hand back the (exact)
+        // recomputation without touching the working set
+        if inner.retired.contains(&i) {
+            return Row::Cached(data);
+        }
         while inner.rows.len() >= self.budget_rows {
             let victim = inner
                 .rows
@@ -930,6 +1020,7 @@ impl KernelMatrix for LruRowCache {
                 .map(|(&k, _)| k)
                 .expect("non-empty cache");
             inner.rows.remove(&victim);
+            inner.evictions += 1;
         }
         inner
             .rows
@@ -988,9 +1079,33 @@ impl KernelMatrix for LruRowCache {
         }
     }
 
-    fn cache_stats(&self) -> (u64, u64, usize) {
+    fn cache_stats(&self) -> CacheStats {
         let inner = self.inner.borrow();
-        (inner.hits, inner.misses, inner.rows.len())
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            resident: inner.rows.len(),
+        }
+    }
+
+    /// Evict row i immediately and refuse re-admission for the rest of
+    /// the solve (see the trait docs) — the gap rule proved the
+    /// coordinate dead, so its row must not occupy budget a live row
+    /// could use.
+    fn retire(&self, i: usize) {
+        let mut inner = self.inner.borrow_mut();
+        if inner.rows.remove(&i).is_some() {
+            inner.evictions += 1;
+        }
+        inner.retired.insert(i);
+        drop(inner);
+        self.engine.retire(i);
+    }
+
+    fn retire_reset(&self) {
+        self.inner.borrow_mut().retired.clear();
+        self.engine.retire_reset();
     }
 }
 
@@ -1004,6 +1119,9 @@ struct ShardInner {
     clock: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
+    /// Gap-retired rows owned by this shard (never re-admitted).
+    retired: HashSet<usize>,
 }
 
 /// Thread-safe bounded-memory backend for the shard-parallel path: rows
@@ -1072,6 +1190,8 @@ impl ShardedLruRowCache {
                     clock: 0,
                     hits: 0,
                     misses: 0,
+                    evictions: 0,
+                    retired: HashSet::new(),
                 })
             })
             .collect();
@@ -1135,6 +1255,11 @@ impl ShardedLruRowCache {
         let mut inner = self.shards[s].lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
+        // a retired row is never re-admitted: hand back the (exact)
+        // recomputation without touching the shard's working set
+        if inner.retired.contains(&i) {
+            return data;
+        }
         // a concurrent cross-shard reader (reduced gather) may have
         // filled this row while we computed it — reuse theirs instead
         // of evicting a resident row for a duplicate insert
@@ -1150,6 +1275,7 @@ impl ShardedLruRowCache {
                 .map(|(&k, _)| k)
                 .expect("non-empty shard");
             inner.rows.remove(&victim);
+            inner.evictions += 1;
         }
         inner
             .rows
@@ -1308,17 +1434,36 @@ impl KernelMatrix for ShardedLruRowCache {
         });
     }
 
-    fn cache_stats(&self) -> (u64, u64, usize) {
-        let mut hits = 0;
-        let mut misses = 0;
-        let mut resident = 0;
+    fn cache_stats(&self) -> CacheStats {
+        let mut stats = CacheStats::default();
         for shard in &self.shards {
             let inner = shard.lock().unwrap();
-            hits += inner.hits;
-            misses += inner.misses;
-            resident += inner.rows.len();
+            stats.hits += inner.hits;
+            stats.misses += inner.misses;
+            stats.evictions += inner.evictions;
+            stats.resident += inner.rows.len();
         }
-        (hits, misses, resident)
+        stats
+    }
+
+    /// Evict row i from its owning shard immediately and refuse
+    /// re-admission for the rest of the solve (see the trait docs).
+    fn retire(&self, i: usize) {
+        {
+            let mut inner = self.shards[self.shard_of(i)].lock().unwrap();
+            if inner.rows.remove(&i).is_some() {
+                inner.evictions += 1;
+            }
+            inner.retired.insert(i);
+        }
+        self.engine.retire(i);
+    }
+
+    fn retire_reset(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().retired.clear();
+        }
+        self.engine.retire_reset();
     }
 
     fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
@@ -1655,12 +1800,30 @@ impl KernelMatrix for QBackend {
         }
     }
 
-    fn cache_stats(&self) -> (u64, u64, usize) {
+    fn cache_stats(&self) -> CacheStats {
         match self {
             QBackend::Dense(d) => d.cache_stats(),
             QBackend::Lru(c) => c.cache_stats(),
             QBackend::Sharded(c) => c.cache_stats(),
             QBackend::Stream(s) => s.cache_stats(),
+        }
+    }
+
+    fn retire(&self, i: usize) {
+        match self {
+            QBackend::Dense(d) => d.retire(i),
+            QBackend::Lru(c) => c.retire(i),
+            QBackend::Sharded(c) => c.retire(i),
+            QBackend::Stream(s) => KernelMatrix::retire(s, i),
+        }
+    }
+
+    fn retire_reset(&self) {
+        match self {
+            QBackend::Dense(d) => d.retire_reset(),
+            QBackend::Lru(c) => c.retire_reset(),
+            QBackend::Sharded(c) => c.retire_reset(),
+            QBackend::Stream(s) => KernelMatrix::retire_reset(s),
         }
     }
 
@@ -1762,20 +1925,20 @@ mod tests {
         for i in 0..12 {
             let _ = lru.row(i);
         }
-        let (hits, misses, resident) = lru.cache_stats();
-        assert_eq!(hits, 0);
-        assert_eq!(misses, 12);
-        assert!(resident <= 3, "resident={resident}");
+        let stats = lru.cache_stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 12);
+        assert!(stats.resident <= 3, "resident={}", stats.resident);
+        // 12 misses into a 3-row budget: 9 victims
+        assert_eq!(stats.evictions, 9);
         // most-recent row is a hit
         let _ = lru.row(11);
-        let (hits, _, _) = lru.cache_stats();
-        assert_eq!(hits, 1);
+        assert_eq!(lru.cache_stats().hits, 1);
         // oldest resident (9) is evicted before newer ones
         let _ = lru.row(0); // miss: evicts 9 (10, 11 are newer)
         let _ = lru.row(10);
         let _ = lru.row(11);
-        let (hits, _, _) = lru.cache_stats();
-        assert_eq!(hits, 3, "rows 10 and 11 should have survived");
+        assert_eq!(lru.cache_stats().hits, 3, "rows 10 and 11 should have survived");
     }
 
     #[test]
@@ -1785,8 +1948,7 @@ mod tests {
         let lru = LruRowCache::new_q(&x, &y, KernelKind::Linear, 1);
         let r0 = lru.row(0);
         let r1 = lru.row(1); // budget 1: evicts row 0
-        let (_, _, resident) = lru.cache_stats();
-        assert_eq!(resident, 1);
+        assert_eq!(lru.cache_stats().resident, 1);
         // both handles still readable and distinct
         assert_eq!(r0.len(), 8);
         assert_eq!(r1.len(), 8);
@@ -1803,9 +1965,8 @@ mod tests {
         let v = vec![0.1; 10];
         let mut out = vec![0.0; 10];
         lru.matvec(&v, &mut out);
-        let (_, _, resident) = lru.cache_stats();
         // matvec reused the two cached rows and inserted nothing new
-        assert_eq!(resident, 2);
+        assert_eq!(lru.cache_stats().resident, 2);
         let r = lru.row(3);
         assert_eq!(r.len(), 10);
     }
@@ -2005,17 +2166,18 @@ mod tests {
         for i in 0..24 {
             let _ = c.row(i);
         }
-        let (hits, misses, resident) = c.cache_stats();
-        assert_eq!(hits, 0);
-        assert_eq!(misses, 24);
+        let stats = c.cache_stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 24);
         assert!(
-            resident <= shards * c.budget_per_shard(),
-            "resident={resident}"
+            stats.resident <= shards * c.budget_per_shard(),
+            "resident={}",
+            stats.resident
         );
+        assert_eq!(stats.evictions as usize, 24 - stats.resident);
         // the most recent row of each shard is still a hit
         let _ = c.row(23);
-        let (hits, _, _) = c.cache_stats();
-        assert_eq!(hits, 1);
+        assert_eq!(c.cache_stats().hits, 1);
     }
 
     #[test]
@@ -2134,7 +2296,7 @@ mod tests {
         for i in 0..20 {
             let _ = c.row(i);
         }
-        let (_, _, resident) = c.cache_stats();
+        let resident = c.cache_stats().resident;
         assert!(resident <= 4, "resident={resident} > budget");
         // uneven split floors: 3 shards × ⌊7/3⌋ = 6 ≤ 7
         let c2 = ShardedLruRowCache::new_q(&x, &y, KernelKind::Linear, 7, 3);
@@ -2233,15 +2395,13 @@ mod tests {
             assert_eq!(&lru.row(i)[..], dense.mat().row(i), "lru row {i}");
             assert_eq!(&sharded.row(i)[..], dense.mat().row(i), "sharded row {i}");
         }
-        let (_, misses, resident) = lru.cache_stats();
-        assert!(misses > 0);
-        assert!(resident <= 4, "resident={resident}");
-        let (_, _, resident) = sharded.cache_stats();
-        assert!(resident <= 3 * sharded.budget_per_shard());
+        let stats = lru.cache_stats();
+        assert!(stats.misses > 0);
+        assert!(stats.resident <= 4, "resident={}", stats.resident);
+        assert!(sharded.cache_stats().resident <= 3 * sharded.budget_per_shard());
         // cached re-reads hit without touching the store again
         let _ = lru.row(25);
-        let (hits, _, _) = lru.cache_stats();
-        assert_eq!(hits, 1);
+        assert_eq!(lru.cache_stats().hits, 1);
     }
 
     #[test]
@@ -2290,5 +2450,81 @@ mod tests {
         let h = pol.gram_streaming(store, kernel, Sharding::Serial);
         assert_eq!(h.name(), "stream-lru");
         assert_eq!(h.dims(), 20);
+    }
+
+    #[test]
+    fn lru_retire_evicts_and_refuses_readmission() {
+        let mut g = Gen::new(0x8E7);
+        let (x, y) = random_xy(&mut g, 10, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.5 };
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let lru = LruRowCache::new_q(&x, &y, kernel, 8);
+        let _ = lru.row(3);
+        assert_eq!(lru.cache_stats().resident, 1);
+        lru.retire(3);
+        let stats = lru.cache_stats();
+        assert_eq!(stats.resident, 0, "retire evicts immediately");
+        assert_eq!(stats.evictions, 1);
+        // a violated promise still gets the exact row — just uncached
+        let r = lru.row(3);
+        assert_eq!(&r[..], dense.mat().row(3));
+        let stats = lru.cache_stats();
+        assert_eq!(stats.resident, 0, "retired row never re-admitted");
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 2);
+        // retiring a non-resident row only marks it
+        lru.retire(7);
+        assert_eq!(lru.cache_stats().evictions, 1);
+        let _ = lru.row(7);
+        assert_eq!(lru.cache_stats().resident, 0);
+        // a new solve clears the retirement set
+        lru.retire_reset();
+        let _ = lru.row(3);
+        assert_eq!(lru.cache_stats().resident, 1);
+    }
+
+    #[test]
+    fn sharded_retire_evicts_and_refuses_readmission() {
+        let mut g = Gen::new(0x9F2);
+        let (x, y) = random_xy(&mut g, 12, 2);
+        let kernel = KernelKind::Linear;
+        let dense = DenseGram::build_q(&x, &y, kernel, 2);
+        let c = ShardedLruRowCache::new_q(&x, &y, kernel, 12, 3);
+        for i in 0..12 {
+            let _ = c.row(i);
+        }
+        let before = c.cache_stats();
+        c.retire(5);
+        let after = c.cache_stats();
+        assert_eq!(after.resident, before.resident - 1);
+        assert_eq!(after.evictions, before.evictions + 1);
+        let r = c.row(5);
+        assert_eq!(&r[..], dense.mat().row(5));
+        assert_eq!(c.cache_stats().resident, after.resident, "no re-admission");
+        c.retire_reset();
+        let _ = c.row(5);
+        assert_eq!(c.cache_stats().resident, before.resident);
+    }
+
+    #[test]
+    fn retire_forwards_through_cache_to_streaming_engine() {
+        let mut g = Gen::new(0xA31);
+        let (x, y) = random_xy(&mut g, 14, 2);
+        let kernel = KernelKind::Rbf { gamma: 0.7 };
+        let sg = stream_q(&x, &y, kernel, 4);
+        let lru = LruRowCache::new_streaming(sg, 6);
+        lru.retire(2);
+        lru.retire(9);
+        let engine_retired = match &lru.engine {
+            RowEngine::Stream(sg) => sg.retired_rows(),
+            RowEngine::Mem { .. } => unreachable!(),
+        };
+        assert_eq!(engine_retired, 2, "cache forwards retirement downstream");
+        lru.retire_reset();
+        let engine_retired = match &lru.engine {
+            RowEngine::Stream(sg) => sg.retired_rows(),
+            RowEngine::Mem { .. } => unreachable!(),
+        };
+        assert_eq!(engine_retired, 0);
     }
 }

@@ -62,6 +62,11 @@ fn usage() -> ! {
            --no-gap-screen   disable gap-safe dynamic screening\n\
            --gap-every N     sweeps between gap-screening rounds\n\
                              (default 0 = tie to --shrink-every)\n\
+           --gbar            cached G-bar unshrink (default on: keep the\n\
+                             ub-pinned gradient mass between unshrink\n\
+                             reconstructions so clean passes touch only\n\
+                             interior support rows)\n\
+           --no-gbar         disable the G-bar cache\n\
            --gram G          dense|lru[:rows]|stream[:rows]|auto — Q backend\n\
                              (default auto: parallel dense build below 8192\n\
                              rows, bounded LRU row cache above, out-of-core\n\
@@ -144,6 +149,9 @@ fn dcdm_of(args: &Args) -> DcdmTuning {
         gap_screening: !args.flag("no-gap-screen")
             && (args.flag("gap-screen") || DcdmTuning::default().gap_screening),
         gap_every: args.get_usize("gap-every", DcdmTuning::default().gap_every),
+        // --no-gbar wins; --gbar is the (default-on) opt-in
+        gbar: !args.flag("no-gbar")
+            && (args.flag("gbar") || DcdmTuning::default().gbar),
     }
 }
 
@@ -271,7 +279,7 @@ fn cmd_path_store(args: &Args, store_path: &str) {
     let wall = Timer::start();
     let path = NuPath::run_with_matrix(&backend, &cfg, oneclass, times)
         .expect("path failed");
-    let (hits, misses, resident) = backend.cache_stats();
+    let cs = backend.cache_stats();
     println!(
         "path store={store_path} l={l} backend={} kernel={} screening={} threads={}: \
          {} grid points in {:.3}s",
@@ -283,8 +291,7 @@ fn cmd_path_store(args: &Args, store_path: &str) {
         wall.secs()
     );
     println!(
-        "  avg screening ratio {:.2}%  row cache: {hits} hits / {misses} misses / \
-         {resident} resident  phase times: {}",
+        "  avg screening ratio {:.2}%  phase times: {}",
         path.avg_screening_ratio(),
         path.metrics
             .times
@@ -294,7 +301,14 @@ fn cmd_path_store(args: &Args, store_path: &str) {
             .collect::<Vec<_>>()
             .join(" ")
     );
-    println!("  solver: {}", solver_telemetry(&path.metrics));
+    println!(
+        "  solver: {} cache: hits={} misses={} evictions={} resident={}",
+        solver_telemetry(&path.metrics),
+        cs.hits,
+        cs.misses,
+        cs.evictions,
+        cs.resident
+    );
 }
 
 fn cmd_convert(args: &Args) {

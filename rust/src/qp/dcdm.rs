@@ -64,6 +64,22 @@
 //! so gap-screened solves stay bit-identical across backends and
 //! thread counts.
 //!
+//! # Cached G-bar
+//!
+//! Unshrink's gradient reconstruction accumulates the support rows —
+//! but most of a converged support sits *pinned at ub*, and those
+//! coordinates stop moving long before the solve ends.  The solver
+//! therefore keeps the LIBSVM-style G-bar: the cached gradient
+//! contribution of the upper-bound set (plus the linear term), dirtied
+//! only when a coordinate enters or leaves ub.  A clean reconstruction
+//! copies the cache and adds just the interior support rows —
+//! O(|interior|·l) instead of O(nnz·l) — and the cadenced gap rounds'
+//! stale-gradient refreshes take the same shortcut.  Unlike LIBSVM the
+//! cache is never updated incrementally (± updates are not bitwise
+//! reproducible); a dirty cache is rebuilt from scratch in ascending
+//! index order, so reconstruction stays deterministic and bit-identical
+//! across backends.  `gbar: false` restores the flat rebuild.
+//!
 //! **Pair selection** is second-order by default: given the steepest
 //! ascent coordinate i, the partner j maximises the curvature-normalised
 //! gain (g_j − g_i)² / (Q_ii + Q_jj − 2Q_ij) over the active descent
@@ -123,6 +139,12 @@ pub struct DcdmOpts {
     /// `shrink_every` (the pair-phase cadence scales by
     /// [`PAIR_STEPS_PER_SHRINK`] either way).
     pub gap_every: usize,
+    /// Cached G-bar (exact mode only): keep the ub-pinned gradient
+    /// contribution between reconstructions so clean unshrink passes
+    /// touch only the interior support rows.  Exactness is unaffected —
+    /// the cache is rebuilt (never incrementally patched) after any
+    /// bound transition.
+    pub gbar: bool,
 }
 
 impl Default for DcdmOpts {
@@ -137,6 +159,7 @@ impl Default for DcdmOpts {
             second_order: true,
             gap_screening: true,
             gap_every: 0,
+            gbar: true,
         }
     }
 }
@@ -152,6 +175,7 @@ pub struct DcdmTuning {
     pub second_order: bool,
     pub gap_screening: bool,
     pub gap_every: usize,
+    pub gbar: bool,
 }
 
 impl Default for DcdmTuning {
@@ -163,6 +187,7 @@ impl Default for DcdmTuning {
             second_order: d.second_order,
             gap_screening: d.gap_screening,
             gap_every: d.gap_every,
+            gbar: d.gbar,
         }
     }
 }
@@ -178,8 +203,59 @@ impl DcdmTuning {
             second_order: self.second_order,
             gap_screening: self.gap_screening,
             gap_every: self.gap_every,
+            gbar: self.gbar,
             ..DcdmOpts::default()
         }
+    }
+}
+
+/// The LIBSVM-style cached G-bar: `base = f + Σ_{j ∈ U} α_j·Q_j` where
+/// U is the upper-bound set.  Membership uses **exact** `α_i == ub_i` —
+/// every pinned write stores the bound bit-exactly (box clamps and gap
+/// snaps both assign the bound itself), so while a coordinate's status
+/// holds its α cannot have changed and `base` cannot go silently stale.
+/// A status flip marks the cache dirty; the next reconstruction
+/// rebuilds `base` from scratch over U in ascending order (LIBSVM's
+/// ± incremental updates are not bitwise reproducible — (x+v)−v ≠ x —
+/// so a full rebuild is the only bit-stable maintenance).  Clean
+/// reconstructions then cost only the interior support rows.
+struct Gbar {
+    on: bool,
+    /// Cached f + Σ_{j ∈ U} α_j·Q_j (empty until the first rebuild).
+    base: Vec<f64>,
+    /// U membership: α_i == ub_i exactly, updated on every α write.
+    at_ub: Vec<bool>,
+    /// `base` does not reflect `at_ub` (or was never built).
+    dirty: bool,
+}
+
+impl Gbar {
+    fn new(on: bool, alpha: &[f64], ub: &[f64]) -> Gbar {
+        let at_ub = if on {
+            alpha.iter().zip(ub).map(|(a, u)| a == u).collect()
+        } else {
+            Vec::new()
+        };
+        Gbar { on, base: Vec::new(), at_ub, dirty: true }
+    }
+
+    /// Record a write of α_i; a U-membership flip dirties the cache.
+    #[inline]
+    fn note(&mut self, i: usize, alpha_i: f64, ub_i: f64, stats: &mut SolveStats) {
+        if !self.on {
+            return;
+        }
+        let now = alpha_i == ub_i;
+        if now != self.at_ub[i] {
+            self.at_ub[i] = now;
+            self.dirty = true;
+            stats.gbar_updates += 1;
+        }
+    }
+
+    /// Is the cached base usable as-is?
+    fn clean(&self) -> bool {
+        self.on && !self.dirty
     }
 }
 
@@ -198,6 +274,9 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
         }
     };
     projection::project(&mut alpha, p.ub, p.constraint);
+    // a backend may be reused across ν-path steps, and retirement
+    // promises ([`KernelMatrix::retire`]) are only valid within a solve
+    p.q.retire_reset();
 
     // Maintained gradient g = Qα + f — exact on the active set at all
     // times; entries of shrunk coordinates go stale and are rebuilt by
@@ -212,6 +291,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
         ..SolveStats::default()
     };
 
+    let mut gbar = Gbar::new(opts.gbar && !opts.paper_mode, &alpha, p.ub);
     let shrinking = opts.shrinking && !opts.paper_mode;
     let shrink_every = opts.shrink_every.max(1);
     let pair_shrink_interval = shrink_every.saturating_mul(PAIR_STEPS_PER_SHRINK);
@@ -261,6 +341,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                     i,
                     Some(target),
                     &mut qi,
+                    &mut gbar,
                     &mut stats,
                 );
                 max_delta = max_delta.max(d.abs());
@@ -278,7 +359,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                 sweeps_since_gap = 0;
                 let fg = gap_round(
                     p, &diag, &mut free, &mut n_free, &mut active, &mut alpha, &mut g,
-                    &mut sum, &mut qi, &mut stats,
+                    &mut sum, &mut qi, &mut gbar, &mut stats,
                 );
                 stats.final_gap = fg;
             }
@@ -341,6 +422,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                             opts.second_order,
                             &mut qi,
                             &mut qj,
+                            &mut gbar,
                             &mut stats,
                         )
                     } else {
@@ -353,6 +435,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                             i_up,
                             None,
                             &mut qi,
+                            &mut gbar,
                             &mut stats,
                         )
                     }
@@ -370,6 +453,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                             ConstraintKind::SumEq(_) => None,
                         },
                         &mut qi,
+                        &mut gbar,
                         &mut stats,
                     )
                 } else {
@@ -384,6 +468,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                         opts.second_order,
                         &mut qi,
                         &mut qj,
+                        &mut gbar,
                         &mut stats,
                     )
                 };
@@ -406,7 +491,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
                     steps_since_gap = 0;
                     let fg = gap_round(
                         p, &diag, &mut free, &mut n_free, &mut active, &mut alpha,
-                        &mut g, &mut sum, &mut qi, &mut stats,
+                        &mut g, &mut sum, &mut qi, &mut gbar, &mut stats,
                     );
                     stats.final_gap = fg;
                 }
@@ -424,14 +509,14 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
             if gap_on {
                 let fg = gap_round(
                     p, &diag, &mut free, &mut n_free, &mut active, &mut alpha, &mut g,
-                    &mut sum, &mut qi, &mut stats,
+                    &mut sum, &mut qi, &mut gbar, &mut stats,
                 );
                 stats.final_gap = fg;
             }
             break;
         }
         stats.unshrink_events += 1;
-        reconstruct_gradient(p, &alpha, &mut g, &mut stats);
+        reconstruct_gradient(p, &alpha, &mut g, &mut gbar, &mut stats);
         active = (0..n).filter(|&i| free[i]).collect();
         stats.active_trajectory.push(active.len());
     }
@@ -454,6 +539,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
 /// the Phase-1 sweeps (floor = ν) and the pairwise phase's single moves,
 /// so the clamp/lb arithmetic cannot diverge between them.  Returns the
 /// signed step taken (0.0 ⇒ no move).
+#[allow(clippy::too_many_arguments)]
 fn single_update(
     p: &QpProblem,
     active: &[usize],
@@ -463,6 +549,7 @@ fn single_update(
     i: usize,
     sum_floor: Option<f64>,
     qbuf: &mut [f64],
+    gbar: &mut Gbar,
     stats: &mut SolveStats,
 ) -> f64 {
     let qii = p.q.diag(i);
@@ -494,6 +581,7 @@ fn single_update(
         }
         *sum += d;
         alpha[i] = new;
+        gbar.note(i, new, p.ub[i], stats);
     }
     d
 }
@@ -506,6 +594,7 @@ fn single_update(
 /// descent candidates, reusing the row-i fetch for both selection and
 /// update.  Returns the signed mass moved (0.0 ⇒ fully clipped or
 /// degenerate).
+#[allow(clippy::too_many_arguments)]
 fn pair_step(
     p: &QpProblem,
     active: &[usize],
@@ -517,6 +606,7 @@ fn pair_step(
     second_order: bool,
     qi: &mut [f64],
     qj: &mut [f64],
+    gbar: &mut Gbar,
     stats: &mut SolveStats,
 ) -> f64 {
     if i == usize::MAX || j_first == usize::MAX {
@@ -594,6 +684,8 @@ fn pair_step(
     }
     alpha[i] += t;
     alpha[j] -= t;
+    gbar.note(i, alpha[i], p.ub[i], stats);
+    gbar.note(j, alpha[j], p.ub[j], stats);
     t
 }
 
@@ -642,17 +734,61 @@ fn shrink(
     }
 }
 
-/// Rebuild g = Qα + f from scratch by accumulating the support rows —
-/// O(nnz·l) row fetches instead of the O(l²) full matvec (Q symmetric:
-/// column j = row j).  Runs at every unshrink event.
-fn reconstruct_gradient(p: &QpProblem, alpha: &[f64], g: &mut [f64], stats: &mut SolveStats) {
-    match p.lin {
-        Some(f) => g.copy_from_slice(f),
-        None => g.fill(0.0),
+/// Rebuild g = Qα + f by accumulating support rows (Q symmetric:
+/// column j = row j).  Runs at every unshrink event.  With [`Gbar`] on,
+/// the ub-pinned mass comes from the cache — a clean cache makes the
+/// rebuild O(|interior support|·l) row fetches; a dirty one pays a
+/// one-off ascending rebuild of the cache first.  With it off (or in
+/// paper mode) every support row is accumulated, O(nnz·l).  Either way
+/// the fetch order is ascending within each group, so reconstruction is
+/// deterministic and backend-bit-identical.
+fn reconstruct_gradient(
+    p: &QpProblem,
+    alpha: &[f64],
+    g: &mut [f64],
+    gbar: &mut Gbar,
+    stats: &mut SolveStats,
+) {
+    if !gbar.on {
+        match p.lin {
+            Some(f) => g.copy_from_slice(f),
+            None => g.fill(0.0),
+        }
+        for (j, &aj) in alpha.iter().enumerate() {
+            if aj != 0.0 {
+                stats.rows_touched += 1;
+                stats.unshrink_rows_touched += 1;
+                let row = p.q.row(j);
+                for (gk, &qjk) in g.iter_mut().zip(row.iter()) {
+                    *gk += aj * qjk;
+                }
+            }
+        }
+        return;
     }
+    if gbar.dirty {
+        gbar.base.resize(alpha.len(), 0.0);
+        match p.lin {
+            Some(f) => gbar.base.copy_from_slice(f),
+            None => gbar.base.fill(0.0),
+        }
+        for (j, &aj) in alpha.iter().enumerate() {
+            if gbar.at_ub[j] && aj != 0.0 {
+                stats.rows_touched += 1;
+                stats.unshrink_rows_touched += 1;
+                let row = p.q.row(j);
+                for (bk, &qjk) in gbar.base.iter_mut().zip(row.iter()) {
+                    *bk += aj * qjk;
+                }
+            }
+        }
+        gbar.dirty = false;
+    }
+    g.copy_from_slice(&gbar.base);
     for (j, &aj) in alpha.iter().enumerate() {
-        if aj != 0.0 {
+        if !gbar.at_ub[j] && aj != 0.0 {
             stats.rows_touched += 1;
+            stats.unshrink_rows_touched += 1;
             let row = p.q.row(j);
             for (gk, &qjk) in g.iter_mut().zip(row.iter()) {
                 *gk += aj * qjk;
@@ -666,32 +802,43 @@ fn reconstruct_gradient(p: &QpProblem, alpha: &[f64], g: &mut [f64], stats: &mut
 /// the Q_ij entries) — [`reconstruct_gradient`] restricted to a subset,
 /// O(nnz) row fetches.  Gap rounds use it to de-stale the gradient on
 /// free-but-heuristically-shrunk coordinates before testing them.
+/// When the G-bar cache is clean it seeds `g[idx]` from the cached
+/// base and gathers only the interior support rows.
+#[allow(clippy::too_many_arguments)]
 fn refresh_gradient_at(
     p: &QpProblem,
     alpha: &[f64],
     g: &mut [f64],
     idx: &[usize],
+    gbar: &Gbar,
     qbuf: &mut [f64],
     stats: &mut SolveStats,
 ) {
     if idx.is_empty() {
         return;
     }
-    match p.lin {
-        Some(f) => {
-            for &i in idx {
-                g[i] = f[i];
-            }
+    let from_base = gbar.clean() && !gbar.base.is_empty();
+    if from_base {
+        for &i in idx {
+            g[i] = gbar.base[i];
         }
-        None => {
-            for &i in idx {
-                g[i] = 0.0;
+    } else {
+        match p.lin {
+            Some(f) => {
+                for &i in idx {
+                    g[i] = f[i];
+                }
+            }
+            None => {
+                for &i in idx {
+                    g[i] = 0.0;
+                }
             }
         }
     }
     let row = &mut qbuf[..idx.len()];
     for (j, &aj) in alpha.iter().enumerate() {
-        if aj != 0.0 {
+        if aj != 0.0 && !(from_base && gbar.at_ub[j]) {
             stats.rows_touched += 1;
             p.q.row_gather(j, idx, row);
             for (&i, &qji) in idx.iter().zip(row.iter()) {
@@ -719,6 +866,7 @@ fn gap_round(
     g: &mut [f64],
     sum: &mut f64,
     qbuf: &mut [f64],
+    gbar: &mut Gbar,
     stats: &mut SolveStats,
 ) -> f64 {
     let n = alpha.len();
@@ -729,7 +877,7 @@ fn gap_round(
         let stale: Vec<usize> = (0..n)
             .filter(|&i| free[i] && active.binary_search(&i).is_err())
             .collect();
-        refresh_gradient_at(p, alpha, g, &stale, qbuf, stats);
+        refresh_gradient_at(p, alpha, g, &stale, gbar, qbuf, stats);
     }
     let mut last_gap = 0.0;
     loop {
@@ -788,12 +936,16 @@ fn gap_round(
                 }
                 alpha[i] = bound;
                 *sum += d;
+                gbar.note(i, bound, p.ub[i], stats);
             }
             free[i] = false;
             *n_free -= 1;
             if let Ok(pos) = active.binary_search(&i) {
                 active.remove(pos);
             }
+            // the coordinate is provably dead: hand the row to the
+            // storage layer so caches evict it and never re-admit it
+            p.q.retire(i);
             stats.gap_retired_idx.push(i);
         }
         stats.active_trajectory.push(active.len());
@@ -1310,6 +1462,142 @@ mod tests {
             retired_total.load(Ordering::Relaxed) > 0,
             "gap screening never retired anything"
         );
+    }
+
+    /// G-bar exactness property: the cached reconstruction — dirty
+    /// rebuild or clean reuse — must be bit-identical to a rebuild from
+    /// a cold cache, across both constraint kinds and random sequences
+    /// of bound transitions (writes landing exactly on ub, exactly on
+    /// 0, and in the interior).  This is the invariant that makes
+    /// `gbar: true` safe as a default: the cache can never drift.
+    #[test]
+    fn gbar_cached_reconstruction_bit_matches_fresh_rebuild() {
+        run_cases(24, 0x6BA2, |gen| {
+            let n = gen.usize(4, 24);
+            let q = gen.psd(n);
+            let ub: Vec<f64> = (0..n).map(|_| gen.f64(0.05, 0.5)).collect();
+            let lin: Option<Vec<f64>> =
+                if gen.bool() { Some(gen.vec_f64(n, -0.5, 0.5)) } else { None };
+            let kind = if gen.bool() {
+                ConstraintKind::SumGe(0.1)
+            } else {
+                ConstraintKind::SumEq(0.1)
+            };
+            let p =
+                QpProblem { q: &q, lin: lin.as_deref(), ub: &ub, constraint: kind };
+            let mut alpha = vec![0.0; n];
+            let mut stats = SolveStats::default();
+            let mut gbar = Gbar::new(true, &alpha, &ub);
+            let mut g = vec![0.0; n];
+            for _ in 0..gen.usize(1, 5) {
+                for _ in 0..gen.usize(1, 3 * n) {
+                    let i = gen.usize(0, n - 1);
+                    alpha[i] = match gen.usize(0, 2) {
+                        0 => ub[i],
+                        1 => 0.0,
+                        _ => gen.f64(0.1, 0.9) * ub[i],
+                    };
+                    gbar.note(i, alpha[i], ub[i], &mut stats);
+                }
+                reconstruct_gradient(&p, &alpha, &mut g, &mut gbar, &mut stats);
+                // a cold cache over the same iterate carries the same
+                // U partition (membership is derived from α == ub)
+                let mut fresh = Gbar::new(true, &alpha, &ub);
+                assert_eq!(fresh.at_ub, gbar.at_ub, "membership drifted");
+                let mut want = vec![0.0; n];
+                reconstruct_gradient(&p, &alpha, &mut want, &mut fresh, &mut stats);
+                for (k, (a, b)) in g.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "g[{k}] drifted");
+                }
+                // clean reuse (no transitions since) reproduces the bits
+                let mut again = vec![0.0; n];
+                assert!(gbar.clean());
+                reconstruct_gradient(&p, &alpha, &mut again, &mut gbar, &mut stats);
+                for (a, b) in again.iter().zip(&g) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        });
+    }
+
+    /// A clean cache makes reconstruction touch only the interior
+    /// support rows: the ub-pinned mass is served from `base`.
+    #[test]
+    fn gbar_clean_reconstruction_touches_only_interior_rows() {
+        let n = 16;
+        let q = eye(n);
+        let ub = vec![0.25; n];
+        let mut alpha = vec![0.0; n];
+        for a in alpha.iter_mut().take(6) {
+            *a = 0.25; // pinned at ub
+        }
+        for a in alpha.iter_mut().take(10).skip(6) {
+            *a = 0.1; // interior support
+        }
+        let p = QpProblem {
+            q: &q,
+            lin: None,
+            ub: &ub,
+            constraint: ConstraintKind::SumGe(0.0),
+        };
+        let mut gbar = Gbar::new(true, &alpha, &ub);
+        let mut stats = SolveStats::default();
+        let mut g = vec![0.0; n];
+        reconstruct_gradient(&p, &alpha, &mut g, &mut gbar, &mut stats);
+        assert_eq!(stats.unshrink_rows_touched, 10, "dirty rebuild pays U + interior");
+        reconstruct_gradient(&p, &alpha, &mut g, &mut gbar, &mut stats);
+        assert_eq!(stats.unshrink_rows_touched, 14, "clean pass pays interior only");
+        // gbar-off pays the full support every time
+        let mut off = Gbar::new(false, &alpha, &ub);
+        let mut s_off = SolveStats::default();
+        reconstruct_gradient(&p, &alpha, &mut g, &mut off, &mut s_off);
+        reconstruct_gradient(&p, &alpha, &mut g, &mut off, &mut s_off);
+        assert_eq!(s_off.unshrink_rows_touched, 20);
+        assert_eq!(s_off.gbar_updates, 0);
+    }
+
+    /// End-to-end: gbar-on and gbar-off land on the same optimum (to
+    /// solver accuracy) on random PSD problems of both constraint kinds,
+    /// and gbar-off never reports G-bar telemetry.
+    #[test]
+    fn gbar_solution_matches_gbar_off_on_random_psd() {
+        run_cases(16, 0x6BA3, |g| {
+            let n = g.usize(6, 28);
+            let q = g.psd(n);
+            let ub = vec![1.5 / n as f64; n];
+            let cap = ub.iter().sum::<f64>() * 0.9;
+            let target = g.f64(0.05, 0.8).min(cap);
+            let kind = if g.bool() {
+                ConstraintKind::SumGe(target)
+            } else {
+                ConstraintKind::SumEq(target)
+            };
+            let lin: Option<Vec<f64>> =
+                if g.bool() { Some(g.vec_f64(n, -0.5, 0.5)) } else { None };
+            let p =
+                QpProblem { q: &q, lin: lin.as_deref(), ub: &ub, constraint: kind };
+            let on = DcdmOpts {
+                shrink_every: g.usize(1, 4),
+                eps: 1e-10,
+                ..DcdmOpts::default()
+            };
+            let off = DcdmOpts { gbar: false, ..on.clone() };
+            let (a_on, s_on) = solve(&p, None, &on);
+            let (a_off, s_off) = solve(&p, None, &off);
+            let (f_on, f_off) = (p.objective(&a_on), p.objective(&a_off));
+            assert!(
+                (f_on - f_off).abs() <= 1e-9 * (1.0 + f_off.abs()),
+                "objective gap: {f_on} vs {f_off} (n={n}, {kind:?})"
+            );
+            assert!(kkt_violation(&p, &a_on) < 1e-6, "gbar-on kkt");
+            assert_eq!(s_off.gbar_updates, 0);
+            assert_eq!(
+                s_off.unshrink_rows_touched == 0,
+                s_off.unshrink_events == 0,
+                "off-mode unshrink telemetry inconsistent"
+            );
+            let _ = s_on;
+        });
     }
 
     /// The reported sparse objective must agree with the dense

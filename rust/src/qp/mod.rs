@@ -201,6 +201,15 @@ pub struct SolveStats {
     /// Duality gap measured by the last gap-screening evaluation (0.0
     /// when gap screening never ran).
     pub final_gap: f64,
+    /// G-bar cache invalidations: upper-bound status flips (entering or
+    /// leaving α_i = ub_i) that dirtied the cached ub-pinned gradient
+    /// contribution.  Zero when the solver runs with `gbar: false`.
+    pub gbar_updates: u64,
+    /// Q rows materialised by unshrink gradient reconstructions alone
+    /// (a subset of `rows_touched`).  With G-bar this counts only the
+    /// free-support rows (plus any ub-set rebuild when the cache was
+    /// dirty); without it, every support row on every unshrink.
+    pub unshrink_rows_touched: u64,
 }
 
 impl SolveStats {

@@ -103,12 +103,51 @@ impl Mat {
     }
 }
 
-/// Dot product.
+/// Accumulator width of the lane dot product: one full AVX-512 f64
+/// vector (and two AVX2 vectors) of independent partial sums.
+pub const DOT_LANES: usize = 8;
+
+/// Reduce the lane accumulators in a fixed pairwise tree.  Every caller
+/// that accumulates lanes — [`dot`] and the blocked Gram micro-kernel
+/// ([`crate::kernel::gram::kernel_block_hoisted`]) — must finish through
+/// this one reduction so their results stay bit-identical.
+#[inline]
+pub fn lanes_sum(acc: [f64; DOT_LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Dot product: [`DOT_LANES`] independent accumulator lanes over
+/// fixed-width chunks (`chunks_exact` erases the inner bounds checks, so
+/// LLVM lifts the lane update to one SIMD fma per chunk), a serial tail,
+/// and the [`lanes_sum`] pairwise reduction.
+///
+/// This is THE summation order of the crate: every kernel entry, norm,
+/// and matvec routes through it (directly or through the blocked
+/// micro-kernel, whose per-row update sequence is identical), which is
+/// what keeps all `KernelMatrix` backends bit-identical to each other.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: keeps the FP dependency chain short so
-    // LLVM vectorises (hot path of DCDM and screening).
+    let mut acc = [0.0f64; DOT_LANES];
+    let head = a.len() - a.len() % DOT_LANES;
+    for (ca, cb) in a[..head].chunks_exact(DOT_LANES).zip(b[..head].chunks_exact(DOT_LANES)) {
+        for k in 0..DOT_LANES {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in a[head..].iter().zip(&b[head..]) {
+        tail += x * y;
+    }
+    lanes_sum(acc) + tail
+}
+
+/// The pre-blocking scalar dot (4-way unrolled, sequential lane sum) —
+/// kept only as the reference implementation the micro-kernel tolerance
+/// tests compare against.  Not used by any production path.
+#[doc(hidden)]
+pub fn dot_reference(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f64; 4];
     let chunks = a.len() / 4;
     for k in 0..chunks {
@@ -162,6 +201,23 @@ mod tests {
         let b: Vec<f64> = (0..37).map(|i| (37 - i) as f64 * 0.5).collect();
         let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lane_dot_matches_scalar_reference_within_tolerance() {
+        // every length around the lane width, so head/tail splits at
+        // 0, 1, DOT_LANES-1 and beyond are all exercised
+        for n in 0..3 * DOT_LANES + 1 {
+            let a: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7 - 3.0).sin() * 2.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 * 1.3 + 1.0).cos() * 2.0).collect();
+            let lanes = dot(&a, &b);
+            let scalar = dot_reference(&a, &b);
+            let scale = 1.0 + scalar.abs();
+            assert!(
+                (lanes - scalar).abs() <= 1e-12 * scale,
+                "n={n}: lanes={lanes} scalar={scalar}"
+            );
+        }
     }
 
     #[test]

@@ -57,9 +57,9 @@ fn lru_backed_path_reproduces_dense_path() {
     }
 
     // the row budget bounded resident Q memory throughout
-    let (_hits, misses, resident) = lru.cache_stats();
-    assert!(resident <= budget, "resident={resident} > budget={budget}");
-    assert!(misses > 0);
+    let cs = lru.cache_stats();
+    assert!(cs.resident <= budget, "resident={} > budget={budget}", cs.resident);
+    assert!(cs.misses > 0);
 }
 
 #[test]
@@ -85,8 +85,7 @@ fn lru_backed_oneclass_path_reproduces_dense_path() {
         let sum: f64 = sl.alpha.iter().sum();
         assert!((sum - 1.0).abs() < 1e-6);
     }
-    let (_, _, resident) = lru.cache_stats();
-    assert!(resident <= 8);
+    assert!(lru.cache_stats().resident <= 8);
 }
 
 #[test]

@@ -11,7 +11,7 @@
 
 use srbo::coordinator::path::PathConfig;
 use srbo::data::synthetic::gaussians;
-use srbo::kernel::matrix::Sharding;
+use srbo::kernel::matrix::{KernelMatrix, Sharding};
 use srbo::kernel::{full_gram, full_q, KernelKind};
 use srbo::prop::conformance::{
     assert_matrix_conformance, assert_path_conformance, backends_under_test, build_backend,
@@ -206,6 +206,62 @@ fn oneclass_paths_conform_with_gap_screening_only() {
             true,
             &format!("oc-gap/{kind}"),
         );
+    }
+}
+
+/// The gap-retirement contract on every backend: after `retire(i)`, a
+/// (contract-violating) re-request of row i still returns bits
+/// identical to the dense reference — recomputed on the spot, never
+/// re-admitted into a cache — and `retire_reset` restores normal
+/// caching.  Cache budgets are deliberately tiny so admission would be
+/// observable if it happened.
+#[test]
+fn retired_rows_recompute_identically_and_stay_uncached() {
+    let mut g = Gen::new(0x4E714E);
+    let (x, y) = random_xy(&mut g, 18, 3);
+    let kernel = KernelKind::Rbf { gamma: 0.7 };
+    let reference = full_q(&x, &y, kernel);
+    let i = 4;
+    for kind in backends_under_test() {
+        let got = build_backend(kind, &x, Some(&y), kernel, 6, 3, 5).unwrap();
+        let before: Vec<f64> = got.row(i).to_vec();
+        got.retire(i);
+        let after: Vec<f64> = got.row(i).to_vec();
+        for j in 0..reference.dims() {
+            assert_eq!(
+                reference.row(i)[j].to_bits(),
+                before[j].to_bits(),
+                "{kind}: pre-retire row[{j}]"
+            );
+            assert_eq!(
+                before[j].to_bits(),
+                after[j].to_bits(),
+                "{kind}: retired row[{j}] drifted"
+            );
+        }
+        // cached backends must not re-admit the retired row: further
+        // requests keep missing and the working set keeps it out
+        let caches = kind.contains("lru") || kind.contains("sharded");
+        let cs0 = got.cache_stats();
+        let _ = got.row(i);
+        let cs1 = got.cache_stats();
+        if caches {
+            assert_eq!(cs1.resident, cs0.resident, "{kind}: retired row re-admitted");
+            assert!(cs1.misses > cs0.misses, "{kind}: retired row served from cache");
+        }
+        got.retire_reset();
+        let r = got.row(i);
+        assert_eq!(
+            r[i].to_bits(),
+            reference.row(i)[i].to_bits(),
+            "{kind}: post-reset row"
+        );
+        if caches {
+            assert!(
+                got.cache_stats().resident > cs1.resident,
+                "{kind}: retire_reset did not restore caching"
+            );
+        }
     }
 }
 

@@ -155,10 +155,11 @@ fn sharded_lru_path_matches_dense_within_budget() {
             .unwrap();
 
     assert_paths_bit_identical(&p_dense, &p_sharded, "sharded-lru vs dense");
-    let (_hits, misses, resident) = sharded.cache_stats();
-    assert!(misses > 0);
+    let cs = sharded.cache_stats();
+    assert!(cs.misses > 0);
     assert!(
-        resident <= shards * sharded.budget_per_shard(),
-        "resident={resident} exceeds total budget"
+        cs.resident <= shards * sharded.budget_per_shard(),
+        "resident={} exceeds total budget",
+        cs.resident
     );
 }

@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Bench regression gate: compare a freshly-written BENCH_dcdm.json
+# against the committed baseline (git HEAD) and fail when any matching
+# run's median wall time regressed by more than the threshold
+# (SRBO_BENCH_REGRESS_PCT, default 25%).
+#
+# Rows are matched on their full configuration key (case, l, backend,
+# selection, shrinking, gap_screening, gbar) so grid growth or SRBO_SCALE
+# changes never produce false positives — unmatched rows are simply not
+# compared.  Skips cleanly (exit 0) when:
+#   * no BENCH_dcdm.json is committed yet (no baseline to regress from),
+#   * the baseline and fresh runs used different quick-mode flags
+#     (timings are not comparable across grids),
+#   * jq is unavailable.
+# Baseline medians under 1 ms are also skipped — at that scale quick-mode
+# noise dwarfs any real kernel regression.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fresh="${1:-BENCH_dcdm.json}"
+threshold="${SRBO_BENCH_REGRESS_PCT:-25}"
+
+if ! command -v jq >/dev/null 2>&1; then
+    echo "bench-regress: jq not found, skipping"
+    exit 0
+fi
+if [ ! -s "$fresh" ]; then
+    echo "bench-regress: $fresh missing — run 'make bench-dcdm' first" >&2
+    exit 1
+fi
+
+base_tmp="$(mktemp)"
+trap 'rm -f "$base_tmp"' EXIT
+if ! git show HEAD:BENCH_dcdm.json > "$base_tmp" 2>/dev/null || [ ! -s "$base_tmp" ]; then
+    echo "bench-regress: no committed BENCH_dcdm.json baseline, skipping"
+    exit 0
+fi
+
+old_quick="$(jq -r '.quick' "$base_tmp")"
+new_quick="$(jq -r '.quick' "$fresh")"
+if [ "$old_quick" != "$new_quick" ]; then
+    echo "bench-regress: baseline quick=$old_quick vs fresh quick=$new_quick — grids differ, skipping"
+    exit 0
+fi
+
+regressions="$(jq -r --argjson pct "$threshold" --slurpfile old "$base_tmp" '
+    def cfg_key: "\(.case // "grid")|l=\(.l)|\(.backend)|\(.selection)|shrink=\(.shrinking)|gap=\(.gap_screening)|gbar=\(.gbar // true)";
+    ($old[0].runs | map({(cfg_key): .median_s}) | add // {}) as $base
+    | .runs[]
+    | cfg_key as $k
+    | select($base[$k] != null and $base[$k] >= 0.001)
+    | select(.median_s > $base[$k] * (1 + $pct / 100))
+    | "  \($k): \($base[$k])s -> \(.median_s)s"
+' "$fresh")"
+
+if [ -n "$regressions" ]; then
+    echo "bench-regress: median wall-time regressions over ${threshold}% vs committed baseline:"
+    echo "$regressions"
+    exit 1
+fi
+echo "bench-regress: no median regression over ${threshold}% against committed baseline"
