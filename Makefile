@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all verify verify-matrix lint fmt bench-compile bench bench-gram bench-path bench-dcdm bench-regress aot clean
+.PHONY: all verify verify-matrix lint fmt bench-compile bench bench-gram bench-path bench-dcdm bench-drift bench-regress aot clean
 
 all: verify
 
@@ -58,12 +58,19 @@ bench-path:
 bench-dcdm:
 	$(CARGO) bench --bench dcdm_scale
 
-# Regression gate: rerun the dcdm bench and compare medians against the
-# committed BENCH_dcdm.json baseline (>25% median wall-time regression
-# on any matching run fails; skips cleanly when no baseline is
-# committed).  CI runs the same script after its quick-mode smoke.
-bench-regress: bench-dcdm
+# Incremental-training bench (warm resume vs cold over a mutation
+# fraction × size grid) → BENCH_drift.json.  SRBO_BENCH_QUICK=1 runs
+# the CI smoke grid.
+bench-drift:
+	$(CARGO) bench --bench drift_scale
+
+# Regression gate: rerun the dcdm + drift benches and compare medians
+# against the committed BENCH_*.json baselines (>25% median wall-time
+# regression on any matching run fails; skips cleanly when no baseline
+# is committed).  CI runs the same script after its quick-mode smoke.
+bench-regress: bench-dcdm bench-drift
 	./scripts/bench_regress.sh BENCH_dcdm.json
+	./scripts/bench_regress.sh BENCH_drift.json
 
 # Optional: export the L2 JAX/Pallas graphs to artifacts/*.hlo.txt.
 # Needs the Python toolchain (jax); the Rust `pjrt` feature consumes the

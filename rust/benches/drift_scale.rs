@@ -1,0 +1,149 @@
+//! §Perf incremental-training bench: warm-started resume vs cold re-run
+//! after data drift, over a mutation-fraction × size grid.
+//!
+//! For each size l and fraction f the bench snapshots a converged ν-path
+//! on the base data, mutates the dataset (drop + append ≈ f·l rows),
+//! then times (a) `path::resume_with_matrix` — α-recycling +
+//! incumbent-referenced SRBO screening from the stale snapshot — and
+//! (b) a cold `NuPath::run_with_matrix` over the same backend.  Warm
+//! medians should sit strictly below cold at small fractions (≤ 10%);
+//! large mutations degrade gracefully toward cold cost.  Writes
+//! `BENCH_drift.json` at the repo root (run via `make bench-drift`).
+//!
+//! Knobs: `SRBO_SCALE` shrinks dataset sizes; `SRBO_BENCH_QUICK=1` runs
+//! a tiny smoke grid (CI uses it to keep the JSON emission honest).
+
+use srbo::bench_harness::{bench, scaled};
+use srbo::coordinator::path::{self, NuPath, PathConfig, SavedPath};
+use srbo::data::{synthetic, StoreEdits};
+use srbo::kernel::matrix::GramPolicy;
+use srbo::kernel::KernelKind;
+use srbo::util::tsv::Json;
+use srbo::util::Mat;
+
+fn run_row(
+    case: &str,
+    l: usize,
+    frac: f64,
+    edited_rows: usize,
+    mode: &str,
+    median_s: f64,
+    min_s: f64,
+) -> Json {
+    Json::Obj(vec![
+        ("case".into(), Json::Str(case.into())),
+        ("l".into(), Json::Num(l as f64)),
+        ("frac".into(), Json::Num(frac)),
+        ("edited_rows".into(), Json::Num(edited_rows as f64)),
+        ("mode".into(), Json::Str(mode.into())),
+        ("median_s".into(), Json::Num(median_s)),
+        ("min_s".into(), Json::Num(min_s)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::var("SRBO_BENCH_QUICK").is_ok();
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let sizes: &[usize] = if quick { &[48] } else { &[128, 256] };
+    let fracs: &[f64] = if quick { &[0.05] } else { &[0.02, 0.05, 0.10, 0.25] };
+    let (warmup, reps) = if quick { (0, 1) } else { (1, 3) };
+    let nus: Vec<f64> = (0..6).map(|i| 0.2 + 0.02 * i as f64).collect();
+
+    let mut runs = Vec::new();
+    for &base in sizes {
+        let n = scaled(base); // per-class count; l = 2n
+        let d = synthetic::gaussians(n, 2.0, 42);
+        let l = d.len();
+        let cfg = PathConfig::new(nus.clone(), kernel);
+
+        // the incumbent snapshot: one converged path over the base data
+        // (outside every timed region — drift starts from a saved model)
+        let q0 = GramPolicy::Dense.q(&d.x, &d.y, kernel);
+        let p0 = NuPath::run_with_matrix(&q0, &cfg, false, Default::default())
+            .expect("base path");
+        let prev = SavedPath::from_path(&p0);
+
+        for &frac in fracs {
+            // mutate ≈ frac·l rows, half dropped and half appended
+            let k = (((frac * l as f64) / 2.0).round() as usize).max(1);
+            let drop: Vec<usize> = (0..k).map(|i| i * l / k).collect();
+            let fresh = synthetic::gaussians(k, 2.0, 7 + k as u64);
+            let mut rows2: Vec<Vec<f64>> = (0..l)
+                .filter(|i| !drop.contains(i))
+                .map(|i| d.x.row(i).to_vec())
+                .collect();
+            let mut y2: Vec<f64> = (0..l)
+                .filter(|i| !drop.contains(i))
+                .map(|i| d.y[i])
+                .collect();
+            for i in 0..k {
+                rows2.push(fresh.x.row(i).to_vec());
+                y2.push(fresh.y[i]);
+            }
+            let x2 = Mat::from_rows(&rows2);
+            let mut removal = vec![None; l];
+            let mut next = 0;
+            for (i, slot) in removal.iter_mut().enumerate() {
+                if !drop.contains(&i) {
+                    *slot = Some(next);
+                    next += 1;
+                }
+            }
+            let mut edits = StoreEdits::identity(l);
+            edits.remove(&removal).append(k);
+
+            // both modes pay the same backend (re)build; it is hoisted
+            // out so the timed regions isolate solve + screening work
+            let q2 = GramPolicy::Dense.q(&x2, &y2, kernel);
+            let pct = (frac * 100.0).round() as usize;
+            let warm = bench(&format!("drift_l{l}_f{pct}pct_warm"), warmup, reps, || {
+                let p = path::resume_with_matrix(
+                    &q2,
+                    &cfg,
+                    false,
+                    &prev,
+                    &edits,
+                    Default::default(),
+                )
+                .expect("warm resume");
+                std::hint::black_box(&p);
+            });
+            let cold = bench(&format!("drift_l{l}_f{pct}pct_cold"), warmup, reps, || {
+                let p = NuPath::run_with_matrix(&q2, &cfg, false, Default::default())
+                    .expect("cold path");
+                std::hint::black_box(&p);
+            });
+            println!(
+                "{}\n{}\ndrift l={l} frac={frac}: warm/cold = {:.2}",
+                warm.human(),
+                cold.human(),
+                warm.median_s / cold.median_s,
+            );
+            runs.push(run_row(
+                "drift", l, frac, 2 * k, "warm", warm.median_s, warm.min_s,
+            ));
+            runs.push(run_row(
+                "drift", l, frac, 2 * k, "cold", cold.median_s, cold.min_s,
+            ));
+        }
+    }
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("drift_scale".into())),
+        ("kernel".into(), Json::Str("rbf".into())),
+        ("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 })),
+        ("host_parallelism".into(), Json::Num(cores as f64)),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    let payload = doc.render() + "\n";
+    // anchor at the repo root (bench cwd is the package dir) so the
+    // perf-trajectory file lands in a stable, committable spot
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_drift.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_drift.json"));
+    std::fs::write(&out, &payload).expect("write BENCH_drift.json");
+    println!("wrote {} (host parallelism {cores})", out.display());
+}

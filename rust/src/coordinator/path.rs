@@ -13,17 +13,34 @@
 //! `screening: false` runs the same loop without SRBO (the "ν-SVM"
 //! baseline column of Tables IV-VII); `SolverChoice::Gqp` swaps in the
 //! generic QP solver (Fig. 8 / Table VIII).
+//!
+//! # Incremental training ([`resume`])
+//!
+//! When the data mutates (rows appended / removed — see
+//! [`crate::data::StoreEdits`]) a finished path is a stack of stale
+//! incumbents, not garbage: [`resume`] re-solves every grid point by
+//! mapping the saved α across the edit ([`crate::qp::WarmStart`]),
+//! measuring its Frank–Wolfe duality gap on the mutated problem, and
+//! screening against it with the gap-inflated sphere
+//! ([`srbo::screen_threaded_approx`]) before a warm reduced solve.
+//! Small edits ⇒ small gaps ⇒ most samples screened and few sweeps;
+//! large edits degrade gracefully to warm full solves — safety never
+//! depends on how much the data moved.
 
 use crate::bail;
+use crate::data::StoreEdits;
 use crate::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use crate::kernel::KernelKind;
 use crate::qp::dcdm::{self, DcdmTuning};
 use crate::qp::gqp::{self, GqpOpts};
-use crate::qp::{reduced, ConstraintKind, QpProblem, SolveStats};
-use crate::screening::{self, delta, oneclass, srbo, ScreenCode};
+use crate::qp::{reduced, ConstraintKind, QpProblem, SolveStats, WarmStart};
+use crate::screening::{self, delta, gap as gap_rule, oneclass, srbo, ScreenCode};
 use crate::util::error::Result;
 use crate::util::timer::{PhaseTimes, Timer};
 use crate::util::Mat;
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
 
 use super::metrics::PathMetrics;
 
@@ -343,6 +360,308 @@ impl NuPath {
     pub fn total_time(&self) -> f64 {
         self.metrics.times.total()
     }
+
+    /// Snapshot this path to disk so a later process can [`resume`] it.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        SavedPath::from_path(self).save(path)
+    }
+}
+
+/// On-disk snapshot of a solved path (`path --save` / `--resume`):
+/// everything [`resume`] needs to recycle the incumbents — the family
+/// flag, the ν grid and every step's full α.
+///
+/// Format (`SRBOPT01`, all integers u64 LE, all floats f64 LE):
+/// magic (8) · flags (bit 0 = one-class) · n_steps · l · nus
+/// (n_steps) · alphas (n_steps × l, step-major).  `load` validates the
+/// magic, the counts and the exact byte length before touching the
+/// payload, mirroring the feature-store discipline.
+#[derive(Clone, Debug)]
+pub struct SavedPath {
+    pub oneclass: bool,
+    /// Row count every stored α has.
+    pub l: usize,
+    pub nus: Vec<f64>,
+    /// One full-length α per grid point, same order as `nus`.
+    pub alphas: Vec<Vec<f64>>,
+}
+
+const SAVED_MAGIC: &[u8; 8] = b"SRBOPT01";
+
+/// Soft ceiling on counts read from a snapshot header — rejects garbage
+/// headers before any allocation is sized by them.
+const SAVED_MAX_COUNT: u64 = 1 << 40;
+
+fn put_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_f64s<W: Write>(w: &mut W, vals: &[f64]) -> Result<()> {
+    for &v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn get_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn get_f64s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f64>> {
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+impl SavedPath {
+    /// The snapshot of a completed in-memory path.
+    pub fn from_path(p: &NuPath) -> SavedPath {
+        SavedPath {
+            oneclass: p.oneclass,
+            l: p.steps.first().map_or(0, |s| s.alpha.len()),
+            nus: p.steps.iter().map(|s| s.nu).collect(),
+            alphas: p.steps.iter().map(|s| s.alpha.clone()).collect(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if self.alphas.len() != self.nus.len() {
+            bail!("saved path: {} alphas for {} nus", self.alphas.len(), self.nus.len());
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(SAVED_MAGIC)?;
+        put_u64(&mut w, self.oneclass as u64)?;
+        put_u64(&mut w, self.nus.len() as u64)?;
+        put_u64(&mut w, self.l as u64)?;
+        put_f64s(&mut w, &self.nus)?;
+        for a in &self.alphas {
+            if a.len() != self.l {
+                bail!("saved path: step alpha has {} rows, expected {}", a.len(), self.l);
+            }
+            put_f64s(&mut w, a)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<SavedPath> {
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != SAVED_MAGIC {
+            bail!("not a path snapshot: bad magic in {}", path.display());
+        }
+        let flags = get_u64(&mut r)?;
+        if flags > 1 {
+            bail!("path snapshot: unknown flags {flags:#x}");
+        }
+        let n_steps = get_u64(&mut r)?;
+        let l = get_u64(&mut r)?;
+        if n_steps == 0 || l == 0 || n_steps > SAVED_MAX_COUNT || l > SAVED_MAX_COUNT {
+            bail!("path snapshot: implausible header ({n_steps} steps, {l} rows)");
+        }
+        let expect = n_steps
+            .checked_mul(1 + l)
+            .and_then(|v| v.checked_mul(8))
+            .and_then(|v| v.checked_add(8 + 3 * 8));
+        if expect != Some(file_len) {
+            let expect = expect.map_or("overflow".to_string(), |e| e.to_string());
+            bail!(
+                "path snapshot: {} is {file_len} bytes, header implies {expect}",
+                path.display()
+            );
+        }
+        let nus = get_f64s(&mut r, n_steps as usize)?;
+        let mut alphas = Vec::with_capacity(n_steps as usize);
+        for _ in 0..n_steps {
+            alphas.push(get_f64s(&mut r, l as usize)?);
+        }
+        Ok(SavedPath { oneclass: flags & 1 == 1, l: l as usize, nus, alphas })
+    }
+}
+
+/// Resume a supervised path on the **mutated** data (x, y): every grid
+/// point is re-solved warm from the saved incumbent instead of cold
+/// (module docs sketch the per-step loop and its safety argument).
+///
+/// `prev` is the snapshot of the pre-edit run on the same ν grid;
+/// `edits` describes how the pre-edit rows map onto (x, y)
+/// ([`StoreEdits`] composes removals and appends).
+pub fn resume(
+    x: &Mat,
+    y: &[f64],
+    cfg: &PathConfig,
+    prev: &SavedPath,
+    edits: &StoreEdits,
+) -> Result<NuPath> {
+    cfg.validate()?;
+    if prev.oneclass {
+        bail!("snapshot is a one-class path; use resume_oneclass");
+    }
+    let mut times = PhaseTimes::new();
+    let mut t = Timer::start();
+    let q = cfg.gram.q_sharded(x, y, cfg.kernel, cfg.shard);
+    times.add("gram", t.lap());
+    resume_with_matrix(&q, cfg, false, prev, edits, times)
+}
+
+/// [`resume`] for the OC-SVM family (positive data only).
+pub fn resume_oneclass(
+    x: &Mat,
+    cfg: &PathConfig,
+    prev: &SavedPath,
+    edits: &StoreEdits,
+) -> Result<NuPath> {
+    cfg.validate()?;
+    if !prev.oneclass {
+        bail!("snapshot is a supervised path; use resume");
+    }
+    let l = x.rows;
+    if let Some(&nu_min) = cfg.nus.first() {
+        if nu_min * l as f64 <= 1.0 {
+            bail!("nu*l must exceed 1 for OC-SVM");
+        }
+    }
+    let mut times = PhaseTimes::new();
+    let mut t = Timer::start();
+    let h = cfg.gram.gram_sharded(x, cfg.kernel, cfg.shard);
+    times.add("gram", t.lap());
+    resume_with_matrix(&h, cfg, true, prev, edits, times)
+}
+
+/// Shared resume driver against any [`KernelMatrix`] of the mutated
+/// data.  Per grid point k:
+///
+/// 1. map the saved α across the edit — survivors keep their mass, new
+///    rows get the feasible initializer, one projection repairs the sum
+///    ([`WarmStart::across_edits`]);
+/// 2. one matvec measures the mapped incumbent's duality gap on the
+///    *new* problem ([`gap_rule::duality_gap`]);
+/// 3. screen at the same ν with δ = 0 and the gap-inflated radius
+///    (provably safe against the fresh optimum, however stale the
+///    incumbent — [`srbo::screen_threaded_approx`]);
+/// 4. warm reduced solve + combine, as in the forward path.
+///
+/// Steps are independent (each recycles its own saved α), so a resume
+/// parallels the forward path's structure without its sequential δ
+/// refinement.  With `cfg.screening` off, each step is just a warm full
+/// solve.
+pub fn resume_with_matrix(
+    q: &dyn KernelMatrix,
+    cfg: &PathConfig,
+    oneclass_mode: bool,
+    prev: &SavedPath,
+    edits: &StoreEdits,
+    mut times: PhaseTimes,
+) -> Result<NuPath> {
+    cfg.validate()?;
+    let l = q.dims();
+    if edits.new_len != l {
+        bail!("edits describe {} rows but Q has {l}", edits.new_len);
+    }
+    if edits.old_len() != prev.l {
+        bail!(
+            "edits start from {} rows but the snapshot has {}",
+            edits.old_len(),
+            prev.l
+        );
+    }
+    if prev.nus.len() != cfg.nus.len()
+        || prev.nus.iter().zip(&cfg.nus).any(|(a, b)| (a - b).abs() > 1e-12)
+    {
+        bail!("resume requires the snapshot's nu grid");
+    }
+    if prev.alphas.len() != prev.nus.len()
+        || prev.alphas.iter().any(|a| a.len() != prev.l)
+    {
+        bail!("corrupt snapshot: alpha shapes disagree with header");
+    }
+    let threads = cfg.shard.resolve(l);
+    let ub_for = |nu: f64| -> Vec<f64> {
+        if oneclass_mode {
+            vec![oneclass::upper_bound(nu, l); l]
+        } else {
+            vec![1.0 / l as f64; l]
+        }
+    };
+    let constraint_for = |nu: f64| -> ConstraintKind {
+        if oneclass_mode {
+            ConstraintKind::SumEq(1.0)
+        } else {
+            ConstraintKind::SumGe(nu)
+        }
+    };
+
+    let mut steps: Vec<PathStep> = Vec::with_capacity(cfg.nus.len());
+    let mut metrics = PathMetrics::default();
+    let mut t = Timer::start();
+    let zeros = vec![0.0; l];
+    for k in 0..cfg.nus.len() {
+        let nu = cfg.nus[k];
+        let ub = ub_for(nu);
+        let kind = constraint_for(nu);
+        let stale =
+            WarmStart::across_edits(&prev.alphas[k], &edits.remap, &ub, kind).alpha;
+        times.add("warm", t.lap());
+
+        if !cfg.screening {
+            let p = QpProblem { q, lin: None, ub: &ub, constraint: kind };
+            let (a, stats) = solve_qp(&p, Some(&stale), cfg.solver, cfg.eps, cfg.dcdm);
+            times.add("solve", t.lap());
+            metrics.record_solver(&stats);
+            steps.push(PathStep {
+                nu,
+                alpha: a,
+                codes: Vec::new(),
+                screening_ratio: 0.0,
+                solve_stats: stats,
+            });
+            continue;
+        }
+
+        // The incumbent's measured suboptimality on the mutated problem
+        // — the inflation screen_threaded_approx needs, and an honest
+        // one: nothing about the edit size is assumed.
+        let mut grad = vec![0.0; l];
+        q.par_matvec(&stale, &mut grad, threads);
+        let gap = gap_rule::duality_gap(&grad, &stale, &ub, kind).max(0.0);
+        let res = if oneclass_mode {
+            oneclass::screen_threaded_approx(q, &stale, &zeros, nu, gap, threads)
+        } else {
+            srbo::screen_threaded_approx(q, &stale, &zeros, nu, gap, threads)
+        };
+        times.add("screen", t.lap());
+
+        let red = reduced::build_threaded(q, &ub, kind, &res.codes, threads);
+        let warm = red.restrict(&stale);
+        let (alpha_s, stats) = if red.is_empty() {
+            (Vec::new(), SolveStats::default())
+        } else {
+            solve_qp(&red.as_qp(), Some(&warm), cfg.solver, cfg.eps, cfg.dcdm)
+        };
+        let alpha_next = red.combine(&alpha_s, l);
+        times.add("solve", t.lap());
+
+        let ratio = screening::screening_ratio(&res.codes);
+        metrics.record_step(ratio, red.keep.len(), &stats);
+        steps.push(PathStep {
+            nu,
+            alpha: alpha_next,
+            codes: res.codes,
+            screening_ratio: ratio,
+            solve_stats: stats,
+        });
+    }
+    metrics.times = times;
+    Ok(NuPath { steps, metrics, oneclass: oneclass_mode })
 }
 
 #[cfg(test)]
@@ -485,5 +804,152 @@ mod tests {
         assert!(NuPath::run(&d.x, &d.y, &cfg).is_err());
         let cfg2 = PathConfig::new(vec![], KernelKind::Linear);
         assert!(NuPath::run(&d.x, &d.y, &cfg2).is_err());
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("srbo-path-test-{}-{tag}.srbopt", std::process::id()))
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bitwise() {
+        let d = gaussians(30, 2.0, 9);
+        let cfg = PathConfig::new(grid(0.2, 0.35, 4), KernelKind::Linear);
+        let p = NuPath::run(&d.x, &d.y, &cfg).unwrap();
+        let path = tmp("roundtrip");
+        p.save(&path).unwrap();
+        let loaded = SavedPath::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert!(!loaded.oneclass);
+        assert_eq!(loaded.l, d.len());
+        assert_eq!(loaded.nus.len(), 4);
+        for (k, s) in p.steps.iter().enumerate() {
+            assert_eq!(loaded.nus[k].to_bits(), s.nu.to_bits());
+            for (a, b) in loaded.alphas[k].iter().zip(&s.alpha) {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"SRBOPT01 but then nonsense").unwrap();
+        assert!(SavedPath::load(&path).is_err());
+        std::fs::write(&path, b"NOTMAGIC").unwrap();
+        assert!(SavedPath::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    /// A resumed path after append + remove edits lands on the same
+    /// objectives as a cold run on the mutated data, at every grid
+    /// point.
+    #[test]
+    fn resume_matches_cold_run_after_edits() {
+        let d = gaussians(40, 2.0, 11);
+        let extra = gaussians(48, 2.0, 12);
+        let kernel = KernelKind::Rbf { gamma: 0.6 };
+        let cfg = PathConfig::new(grid(0.2, 0.35, 4), kernel);
+        let before = NuPath::run(&d.x, &d.y, &cfg).unwrap();
+        let prev = SavedPath::from_path(&before);
+
+        // drop 4 rows, append 6 from the second draw
+        let mut edits = StoreEdits::identity(d.len());
+        let drop = [3usize, 7, 20, 33];
+        let keep: Vec<usize> =
+            (0..d.len()).filter(|i| !drop.contains(i)).collect();
+        let mut removal = vec![None; d.len()];
+        for (new, &old) in keep.iter().enumerate() {
+            removal[old] = Some(new);
+        }
+        edits.remove(&removal);
+        edits.append(6);
+        let mut x_rows: Vec<Vec<f64>> =
+            keep.iter().map(|&i| d.x.row(i).to_vec()).collect();
+        let mut y_new: Vec<f64> = keep.iter().map(|&i| d.y[i]).collect();
+        for i in 0..6 {
+            x_rows.push(extra.x.row(i).to_vec());
+            y_new.push(extra.y[i]);
+        }
+        let x_new = Mat::from_rows(&x_rows);
+
+        let resumed = resume(&x_new, &y_new, &cfg, &prev, &edits).unwrap();
+        let cold = NuPath::run(&x_new, &y_new, &cfg).unwrap();
+        let q = full_q(&x_new, &y_new, kernel);
+        let l = x_new.rows;
+        let ub = vec![1.0 / l as f64; l];
+        for k in 0..cfg.nus.len() {
+            let prob = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(cfg.nus[k]),
+            };
+            let fr = prob.objective(resumed.alpha(k));
+            let fc = prob.objective(cold.alpha(k));
+            assert!(
+                (fr - fc).abs() <= 1e-6 * (1.0 + fc.abs()),
+                "step {k}: resumed {fr} vs cold {fc}"
+            );
+            let sum: f64 = resumed.alpha(k).iter().sum();
+            assert!(sum >= cfg.nus[k] - 1e-6, "step {k} infeasible: {sum}");
+        }
+    }
+
+    #[test]
+    fn oneclass_resume_matches_cold_run() {
+        let d = gaussians(60, 1.0, 13).positives();
+        let kernel = KernelKind::Rbf { gamma: 0.5 };
+        let cfg = PathConfig::new(grid(0.25, 0.45, 3), kernel);
+        let before = NuPath::run_oneclass(&d.x, &cfg).unwrap();
+        let prev = SavedPath::from_path(&before);
+        // remove the last two rows only — pure shrink
+        let keep = d.len() - 2;
+        let mut removal = vec![None; d.len()];
+        for (new, r) in removal.iter_mut().take(keep).enumerate() {
+            *r = Some(new);
+        }
+        let mut edits = StoreEdits::identity(d.len());
+        edits.remove(&removal);
+        let idx: Vec<usize> = (0..keep).collect();
+        let x_new = d.x.select_rows(&idx);
+        let resumed = resume_oneclass(&x_new, &cfg, &prev, &edits).unwrap();
+        let cold = NuPath::run_oneclass(&x_new, &cfg).unwrap();
+        let h = crate::kernel::full_gram(&x_new, kernel);
+        for k in 0..cfg.nus.len() {
+            let ub = vec![oneclass::upper_bound(cfg.nus[k], keep); keep];
+            let prob = QpProblem {
+                q: &h,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumEq(1.0),
+            };
+            let fr = prob.objective(resumed.alpha(k));
+            let fc = prob.objective(cold.alpha(k));
+            assert!(
+                (fr - fc).abs() <= 1e-6 * (1.0 + fc.abs()),
+                "oc step {k}: resumed {fr} vs cold {fc}"
+            );
+        }
+    }
+
+    #[test]
+    fn resume_validates_shapes_and_grid() {
+        let d = gaussians(20, 2.0, 14);
+        let cfg = PathConfig::new(grid(0.2, 0.3, 3), KernelKind::Linear);
+        let p = NuPath::run(&d.x, &d.y, &cfg).unwrap();
+        let prev = SavedPath::from_path(&p);
+        // wrong edit length
+        let edits = StoreEdits::identity(d.len() - 1);
+        assert!(resume(&d.x, &d.y, &cfg, &prev, &edits).is_err());
+        // wrong grid
+        let edits = StoreEdits::identity(d.len());
+        let cfg2 = PathConfig::new(grid(0.2, 0.32, 3), KernelKind::Linear);
+        assert!(resume(&d.x, &d.y, &cfg2, &prev, &edits).is_err());
+        // family mismatch
+        assert!(resume_oneclass(&d.x, &cfg, &prev, &edits).is_err());
+        // identity edits resume fine and stay feasible
+        let ok = resume(&d.x, &d.y, &cfg, &prev, &edits).unwrap();
+        assert_eq!(ok.steps.len(), 3);
     }
 }

@@ -10,7 +10,7 @@ pub mod split;
 pub mod store;
 pub mod synthetic;
 
-pub use store::{FeatureStore, FileStore, MemStore};
+pub use store::{FeatureStore, FileStore, MemStore, StoreEdits};
 
 use crate::util::Mat;
 

@@ -29,6 +29,29 @@
 //! file size, and that every norm is finite — truncated, corrupt, or
 //! NaN-norm files surface a [`SrboError`](crate::util::error::SrboError)
 //! instead of a panic (pinned by the property tests below).
+//!
+//! # Mutation (incremental training)
+//!
+//! Stores are mutable through [`FeatureStore::append_rows`] and
+//! [`FeatureStore::remove_rows`] so the warm-start path
+//! ([`crate::coordinator::path::resume`]) can edit data in place
+//! instead of rebuilding from scratch:
+//!
+//! * [`MemStore`] edits the resident matrix directly (append extends the
+//!   row block, removal compacts it order-preservingly).
+//! * [`FileStore`] removal is an O(1)-I/O *tombstone*: an in-memory
+//!   logical→physical row map reroutes every read while the file stays
+//!   untouched (reopening the path still sees the full original store).
+//!   Append streams a compacted rewrite into `<path>.tmp`, renames it
+//!   over the original under the same SRBOFS01 validation discipline,
+//!   and clears the pooled reader handles (they reference the unlinked
+//!   inode) — so one rewrite both persists pending tombstones and adds
+//!   the new rows.
+//!
+//! Removal returns the old→new logical remap that [`StoreEdits`]
+//! accumulates; row ids of surviving rows shift *predictably* (stable
+//! order), which is what the kernel caches' `dirty_rows` plumbing and
+//! the `WarmStart` α-mapping key off.
 
 use std::fs::{self, File};
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
@@ -49,6 +72,98 @@ const FLAG_LABELS: u64 = 1;
 
 /// Fixed-size header bytes before the norms block.
 const HEADER_BYTES: u64 = 32;
+
+/// Accumulated record of store mutations: the old→new logical row remap
+/// plus the number of freshly appended rows.
+///
+/// Canonical edit order is **removals first, then appends** — the order
+/// the store methods themselves enforce cheapest I/O for (`FileStore`
+/// removal is a free tombstone; its append rewrite compacts any pending
+/// tombstones).  `remap[i]` is the new index of old row `i`, or `None`
+/// when the row was removed; appended rows occupy the trailing
+/// `appended` indices of the new store and have no old counterpart.
+///
+/// This is the carrier [`crate::qp::WarmStart`] consumes to map an
+/// incumbent α onto the mutated index set and the carrier
+/// [`crate::coordinator::path::resume`] takes alongside the previous
+/// path result.
+#[derive(Debug, Clone)]
+pub struct StoreEdits {
+    /// New index of each old row (`None` = removed).
+    pub remap: Vec<Option<usize>>,
+    /// Rows appended after the removals.
+    pub appended: usize,
+    /// Total rows after all edits (survivors + appended).
+    pub new_len: usize,
+}
+
+impl StoreEdits {
+    /// No-op edit record over `len` rows.
+    pub fn identity(len: usize) -> StoreEdits {
+        StoreEdits { remap: (0..len).map(Some).collect(), appended: 0, new_len: len }
+    }
+
+    /// Rows in the pre-edit store.
+    pub fn old_len(&self) -> usize {
+        self.remap.len()
+    }
+
+    /// Rows the edits removed.
+    pub fn removed(&self) -> usize {
+        self.remap.iter().filter(|m| m.is_none()).count()
+    }
+
+    /// Fold a removal remap (as returned by
+    /// [`FeatureStore::remove_rows`]) into the record.  Panics if called
+    /// after [`Self::append`] — removals of freshly appended rows have
+    /// no old-row meaning, so the canonical order is enforced.
+    pub fn remove(&mut self, removal: &[Option<usize>]) -> &mut StoreEdits {
+        assert_eq!(self.appended, 0, "StoreEdits: apply removals before appends");
+        assert_eq!(removal.len(), self.new_len, "removal remap length");
+        for slot in self.remap.iter_mut() {
+            if let Some(j) = *slot {
+                *slot = removal[j];
+            }
+        }
+        self.new_len = removal.iter().flatten().count();
+        self
+    }
+
+    /// Record `n` rows appended at the end of the store.
+    pub fn append(&mut self, n: usize) -> &mut StoreEdits {
+        self.appended += n;
+        self.new_len += n;
+        self
+    }
+}
+
+/// Validate a removal list against `len` rows and build the old→new
+/// logical remap (`None` = removed).  Duplicates collapse; order is
+/// irrelevant.  Errors on out-of-range indices and on removing every
+/// row (stores keep the l ≥ 1 invariant).
+fn removal_remap(len: usize, rows: &[usize]) -> Result<Vec<Option<usize>>> {
+    let mut dropped = vec![false; len];
+    for &r in rows {
+        if r >= len {
+            bail!("remove_rows: row {r} out of range (store has {len})");
+        }
+        dropped[r] = true;
+    }
+    if len > 0 && dropped.iter().all(|&b| b) {
+        bail!("remove_rows: refusing to remove every row (store invariant l ≥ 1)");
+    }
+    let mut remap = Vec::with_capacity(len);
+    let mut next = 0;
+    for &gone in &dropped {
+        if gone {
+            remap.push(None);
+        } else {
+            remap.push(Some(next));
+            next += 1;
+        }
+    }
+    Ok(remap)
+}
 
 /// Read access to an l×d feature matrix, resident or out of core.
 ///
@@ -101,6 +216,21 @@ pub trait FeatureStore: Send + Sync {
             self.row_into(i, &mut out[k * d..(k + 1) * d]);
         }
     }
+
+    /// Append `x.rows` feature rows (with labels when the store carries
+    /// them) after the existing rows.  Norms for the new rows are
+    /// computed with the shared [`row_norms`] arithmetic, so backends
+    /// built over the store stay bit-identical with a resident rebuild.
+    ///
+    /// Kernel-matrix backends holding hoisted copies of the data must
+    /// be told via `KernelMatrix::dirty_rows` (or rebuilt) afterwards.
+    fn append_rows(&mut self, x: &Mat, y: Option<&[f64]>) -> Result<()>;
+
+    /// Remove the listed logical rows (duplicates allowed, any order),
+    /// compacting the survivors order-preservingly.  Returns the
+    /// old→new remap ([`StoreEdits::remove`] folds it in).  Removing
+    /// every row is an error — stores keep l ≥ 1.
+    fn remove_rows(&mut self, rows: &[usize]) -> Result<Vec<Option<usize>>>;
 
     /// Materialise the whole store as a resident [`Mat`] in chunked
     /// page reads — one pass over the file, for consumers that
@@ -170,6 +300,44 @@ impl FeatureStore for MemStore {
         let d = self.x.cols;
         out.copy_from_slice(&self.x.data[lo * d..hi * d]);
     }
+
+    /// In-place append: the row block and the hoisted norms both extend.
+    /// `row_norms` is per-row independent, so norms computed for the new
+    /// block alone are bit-identical to a full recompute.
+    fn append_rows(&mut self, x: &Mat, y: Option<&[f64]>) -> Result<()> {
+        if y.is_some() {
+            bail!("MemStore stores features only — labels travel alongside the matrix");
+        }
+        if x.rows == 0 {
+            bail!("append_rows needs at least one row");
+        }
+        if x.cols != self.x.cols {
+            bail!("append_rows: dim mismatch ({} != {})", x.cols, self.x.cols);
+        }
+        self.norms.extend(row_norms(x));
+        self.x.data.extend_from_slice(&x.data);
+        self.x.rows += x.rows;
+        Ok(())
+    }
+
+    /// Order-preserving in-place compaction of rows and norms.
+    fn remove_rows(&mut self, rows: &[usize]) -> Result<Vec<Option<usize>>> {
+        let remap = removal_remap(self.x.rows, rows)?;
+        let d = self.x.cols;
+        for (old, slot) in remap.iter().enumerate() {
+            if let Some(new) = *slot {
+                if new != old {
+                    self.x.data.copy_within(old * d..(old + 1) * d, new * d);
+                    self.norms[new] = self.norms[old];
+                }
+            }
+        }
+        let survivors = remap.iter().flatten().count();
+        self.x.rows = survivors;
+        self.x.data.truncate(survivors * d);
+        self.norms.truncate(survivors);
+        Ok(remap)
+    }
 }
 
 /// Monotone tag for spill-file names (unique within the process; the
@@ -194,6 +362,11 @@ pub struct FileStore {
     pool: Mutex<Vec<File>>,
     /// Spill files are deleted on drop; opened files never are.
     temp: bool,
+    /// Tombstone remap after `remove_rows`: physical file row of each
+    /// logical row.  `None` ⇒ identity (no pending removals).  Purely
+    /// in-memory — the file is untouched until the next append rewrite
+    /// compacts it.
+    live: Option<Vec<u64>>,
 }
 
 impl FileStore {
@@ -300,6 +473,7 @@ impl FileStore {
             data_off: HEADER_BYTES + 8 * l64 * blocks,
             pool: Mutex::new(vec![file]),
             temp: false,
+            live: None,
         })
     }
 
@@ -325,6 +499,22 @@ impl FileStore {
     /// Labels stored alongside the features, when the writer had them.
     pub fn labels(&self) -> Option<&[f64]> {
         self.labels.as_deref()
+    }
+
+    /// Physical file row behind logical row `i` (identity unless
+    /// tombstones are pending).
+    #[inline]
+    fn physical(&self, i: usize) -> u64 {
+        match &self.live {
+            Some(live) => live[i],
+            None => i as u64,
+        }
+    }
+
+    /// Byte offset of physical row `p` in the data block.
+    #[inline]
+    fn row_off(&self, p: u64) -> u64 {
+        self.data_off + 8 * p * (self.dim as u64)
     }
 
     /// Run `f` with a pooled reader handle (popped outside the read, so
@@ -376,8 +566,24 @@ impl FeatureStore for FileStore {
         if lo == hi {
             return;
         }
-        let off = self.data_off + 8 * (lo as u64) * (self.dim as u64);
-        self.with_reader(|file| read_f64s(file, off, out));
+        let d = self.dim;
+        self.with_reader(|file| {
+            // walk maximal physically-consecutive runs (one run total
+            // when no tombstones are pending) and issue a ranged read
+            // per run
+            let mut k = lo;
+            while k < hi {
+                let start = self.physical(k);
+                let mut run = 1;
+                while k + run < hi && self.physical(k + run) == start + run as u64 {
+                    run += 1;
+                }
+                let dst = &mut out[(k - lo) * d..(k - lo + run) * d];
+                read_f64s(file, self.row_off(start), dst)?;
+                k += run;
+            }
+            Ok(())
+        });
     }
 
     /// Coalesce the index list into maximal consecutive runs and issue
@@ -394,20 +600,148 @@ impl FeatureStore for FileStore {
         self.with_reader(|file| {
             let mut k = 0;
             while k < idx.len() {
-                let start = idx[k];
-                assert!(start < self.rows, "row {start} of {}", self.rows);
+                assert!(idx[k] < self.rows, "row {} of {}", idx[k], self.rows);
+                let start = self.physical(idx[k]);
                 let mut run = 1;
-                while k + run < idx.len() && idx[k + run] == start + run {
+                while k + run < idx.len()
+                    && idx[k + run] < self.rows
+                    && self.physical(idx[k + run]) == start + run as u64
+                {
                     run += 1;
                 }
-                assert!(start + run <= self.rows, "row {} of {}", start + run - 1, self.rows);
-                let off = self.data_off + 8 * (start as u64) * (d as u64);
-                read_f64s(file, off, &mut out[k * d..(k + run) * d])?;
+                read_f64s(file, self.row_off(start), &mut out[k * d..(k + run) * d])?;
                 k += run;
             }
             Ok(())
         });
     }
+
+    /// Streamed rewrite: header (new l) + compacted norms/labels/data +
+    /// the new rows go into `<path>.tmp`, which then renames over the
+    /// original — readers never observe a half-written store.  Pending
+    /// tombstones are compacted away by the same pass.  The pooled
+    /// reader handles reference the unlinked inode afterwards, so the
+    /// pool is cleared.
+    fn append_rows(&mut self, x: &Mat, y: Option<&[f64]>) -> Result<()> {
+        if x.rows == 0 {
+            bail!("append_rows needs at least one row");
+        }
+        if x.cols != self.dim {
+            bail!("append_rows: dim mismatch ({} != {})", x.cols, self.dim);
+        }
+        match (&self.labels, y) {
+            (Some(_), None) => {
+                bail!("{}: store carries labels — appended rows need them", self.path.display())
+            }
+            (None, Some(_)) => {
+                bail!("{}: store has no labels — appended labels would vanish", self.path.display())
+            }
+            (Some(_), Some(y)) => {
+                if y.len() != x.rows {
+                    bail!("label length {} != appended rows {}", y.len(), x.rows);
+                }
+                if let Some(i) = y.iter().position(|&v| v != 1.0 && v != -1.0) {
+                    bail!("label at appended row {i} is {} (want ±1)", y[i]);
+                }
+            }
+            (None, None) => {}
+        }
+        let new_norms = row_norms(x);
+        let total = self.rows + x.rows;
+        let mut tmp_name = self.path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        let emit = |w: &mut BufWriter<File>| -> std::io::Result<()> {
+            w.write_all(&STORE_MAGIC)?;
+            w.write_all(&(total as u64).to_le_bytes())?;
+            w.write_all(&(self.dim as u64).to_le_bytes())?;
+            let flags = if self.labels.is_some() { FLAG_LABELS } else { 0 };
+            w.write_all(&flags.to_le_bytes())?;
+            write_f64s(w, &self.norms)?;
+            write_f64s(w, &new_norms)?;
+            if let Some(old_y) = &self.labels {
+                write_f64s(w, old_y)?;
+                write_f64s(w, y.expect("label presence checked above"))?;
+            }
+            // stream the surviving old rows in chunked logical reads —
+            // the tombstone map compacts here
+            let mut buf = vec![0.0; 1024.min(self.rows) * self.dim];
+            let mut lo = 0;
+            while lo < self.rows {
+                let hi = (lo + 1024).min(self.rows);
+                let chunk = &mut buf[..(hi - lo) * self.dim];
+                self.rows_into(lo, hi, chunk);
+                write_f64s(w, chunk)?;
+                lo = hi;
+            }
+            write_f64s(w, &x.data)?;
+            w.flush()
+        };
+        let rewrite = || -> Result<()> {
+            let file = File::create(&tmp)
+                .with_context(|| format!("create feature store {}", tmp.display()))?;
+            let mut w = BufWriter::new(file);
+            emit(&mut w).with_context(|| format!("write feature store {}", tmp.display()))?;
+            fs::rename(&tmp, &self.path)
+                .with_context(|| format!("rename {} over {}", tmp.display(), self.path.display()))
+        };
+        if let Err(e) = rewrite() {
+            let _ = fs::remove_file(&tmp);
+            return Err(e);
+        }
+        self.pool.lock().unwrap().clear();
+        self.norms.extend_from_slice(&new_norms);
+        if let (Some(lab), Some(y)) = (&mut self.labels, y) {
+            lab.extend_from_slice(y);
+        }
+        let blocks = 1 + u64::from(self.labels.is_some());
+        self.rows = total;
+        self.live = None;
+        self.data_off = HEADER_BYTES + 8 * (total as u64) * blocks;
+        Ok(())
+    }
+
+    /// O(1)-I/O tombstone removal: the logical→physical map and the
+    /// resident norms/labels compact; the file is untouched (the next
+    /// append rewrite persists the compaction).
+    fn remove_rows(&mut self, rows: &[usize]) -> Result<Vec<Option<usize>>> {
+        let remap = removal_remap(self.rows, rows)?;
+        let survivors = remap.iter().flatten().count();
+        if survivors == self.rows {
+            return Ok(remap);
+        }
+        let old_live = self.live.take();
+        let mut live = Vec::with_capacity(survivors);
+        let mut next = 0;
+        for (old, slot) in remap.iter().enumerate() {
+            if slot.is_some() {
+                live.push(match &old_live {
+                    Some(m) => m[old],
+                    None => old as u64,
+                });
+                self.norms[next] = self.norms[old];
+                if let Some(lab) = &mut self.labels {
+                    lab[next] = lab[old];
+                }
+                next += 1;
+            }
+        }
+        self.norms.truncate(survivors);
+        if let Some(lab) = &mut self.labels {
+            lab.truncate(survivors);
+        }
+        self.rows = survivors;
+        self.live = Some(live);
+        Ok(remap)
+    }
+}
+
+/// Write f64s little-endian — the mirror of [`read_f64s`].
+fn write_f64s<W: Write>(w: &mut W, vals: &[f64]) -> std::io::Result<()> {
+    for v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
 }
 
 /// Seek to `off` and decode `out.len()` little-endian f64s through a
@@ -647,5 +981,174 @@ mod tests {
     fn rejects_empty_writes() {
         assert!(FileStore::write(&tmp("empty"), &Mat::zeros(0, 3), None).is_err());
         assert!(FileStore::write(&tmp("empty2"), &Mat::zeros(3, 0), None).is_err());
+    }
+
+    #[test]
+    fn memstore_mutations_match_a_fresh_store_bit_for_bit() {
+        run_cases(8, 0xED17, |g| {
+            let l = g.usize(2, 20);
+            let d = g.usize(1, 6);
+            let x = random_mat(g, l, d);
+            let mut ms = MemStore::new(x.clone());
+            let mut rows: Vec<usize> = (0..l).filter(|_| g.bool()).collect();
+            if rows.len() == l {
+                rows.pop();
+            }
+            let remap = ms.remove_rows(&rows).unwrap();
+            let extra = random_mat(g, g.usize(1, 5), d);
+            ms.append_rows(&extra, None).unwrap();
+            // expected: surviving rows in order, then the appended block
+            let mut kept: Vec<Vec<f64>> = (0..l)
+                .filter(|&i| remap[i].is_some())
+                .map(|i| x.row(i).to_vec())
+                .collect();
+            kept.extend((0..extra.rows).map(|i| extra.row(i).to_vec()));
+            let fresh = MemStore::new(Mat::from_rows(&kept));
+            assert_eq!(ms.len(), fresh.len());
+            for (a, b) in ms.norms().iter().zip(fresh.norms()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "norms differ after edits");
+            }
+            for i in 0..ms.len() {
+                assert_eq!(ms.row(i), fresh.row(i), "row {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn filestore_tombstone_removal_reroutes_reads_without_touching_the_file() {
+        let mut g = Gen::new(0x70B5);
+        let (l, d) = (14, 3);
+        let x = random_mat(&mut g, l, d);
+        let y: Vec<f64> = (0..l).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let path = tmp("tomb");
+        FileStore::write(&path, &x, Some(&y)).unwrap();
+        let bytes_before = fs::read(&path).unwrap();
+        let mut store = FileStore::open(&path).unwrap();
+        let remap = store.remove_rows(&[0, 3, 3, 9]).unwrap();
+        assert_eq!(store.len(), l - 3);
+        let kept: Vec<usize> = (0..l).filter(|&i| remap[i].is_some()).collect();
+        let mem = MemStore::new(x.clone());
+        for (new, &old) in kept.iter().enumerate() {
+            assert_eq!(store.row(new), x.row(old), "row {new} (old {old})");
+            assert_eq!(store.norms()[new].to_bits(), mem.norms()[old].to_bits());
+            assert_eq!(store.labels().unwrap()[new], y[old]);
+        }
+        // chunked and gathered reads route through the tombstone map too
+        let mut out = vec![0.0; store.len() * d];
+        store.rows_into(0, store.len(), &mut out);
+        for (new, &old) in kept.iter().enumerate() {
+            assert_eq!(&out[new * d..(new + 1) * d], x.row(old));
+        }
+        let idx: Vec<usize> = (0..store.len()).rev().collect();
+        let mut out = vec![0.0; idx.len() * d];
+        store.gather_rows(&idx, &mut out);
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(&out[k * d..(k + 1) * d], x.row(kept[i]), "gathered logical row {i}");
+        }
+        // a second removal composes over the pending map
+        let remap2 = store.remove_rows(&[1]).unwrap();
+        let kept2: Vec<usize> =
+            (0..kept.len()).filter(|&i| remap2[i].is_some()).map(|i| kept[i]).collect();
+        for (new, &old) in kept2.iter().enumerate() {
+            assert_eq!(store.row(new), x.row(old), "after 2nd removal row {new}");
+        }
+        // tombstones are memory-only: the file and a fresh open still
+        // see the original store
+        assert_eq!(fs::read(&path).unwrap(), bytes_before);
+        assert_eq!(FileStore::open(&path).unwrap().len(), l);
+        drop(store);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn filestore_append_rewrites_header_and_compacts_tombstones() {
+        let mut g = Gen::new(0xA99E);
+        let (l, d) = (10, 4);
+        let x = random_mat(&mut g, l, d);
+        let y: Vec<f64> = (0..l).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        let path = tmp("append");
+        FileStore::write(&path, &x, Some(&y)).unwrap();
+        let mut store = FileStore::open(&path).unwrap();
+        // prime the reader pool so invalidation is exercised
+        let _ = store.row(0);
+        let remap = store.remove_rows(&[2, 7]).unwrap();
+        let extra = random_mat(&mut g, 3, d);
+        let ey = [1.0, -1.0, 1.0];
+        store.append_rows(&extra, Some(&ey)).unwrap();
+        assert_eq!(store.len(), l - 2 + 3);
+        // expected logical contents: survivors in order + appended block
+        let kept: Vec<usize> = (0..l).filter(|&i| remap[i].is_some()).collect();
+        let mut rows: Vec<Vec<f64>> = kept.iter().map(|&i| x.row(i).to_vec()).collect();
+        rows.extend((0..extra.rows).map(|i| extra.row(i).to_vec()));
+        let mut labels: Vec<f64> = kept.iter().map(|&i| y[i]).collect();
+        labels.extend_from_slice(&ey);
+        let fresh = MemStore::new(Mat::from_rows(&rows));
+        for i in 0..store.len() {
+            assert_eq!(store.row(i), fresh.row(i), "row {i} after append");
+            assert_eq!(store.norms()[i].to_bits(), fresh.norms()[i].to_bits(), "norm {i}");
+        }
+        assert_eq!(store.labels().unwrap(), &labels[..]);
+        // the rewrite persisted: a fresh open of the path sees the
+        // compacted + appended store, bit-identical
+        let reopened = FileStore::open(&path).unwrap();
+        assert_eq!(reopened.len(), store.len());
+        for i in 0..store.len() {
+            assert_eq!(reopened.row(i), store.row(i), "reopened row {i}");
+        }
+        assert_eq!(reopened.labels().unwrap(), store.labels().unwrap());
+        // no stray tmp file left behind
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists());
+        drop(store);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mutation_validation_errors() {
+        let mut ms = MemStore::new(Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]));
+        assert!(ms.append_rows(&Mat::from_rows(&[vec![1.0]]), None).is_err(), "dim mismatch");
+        assert!(ms.append_rows(&Mat::zeros(0, 2), None).is_err(), "empty append");
+        let lab = [1.0];
+        assert!(
+            ms.append_rows(&Mat::from_rows(&[vec![0.0, 1.0]]), Some(&lab)).is_err(),
+            "MemStore takes no labels"
+        );
+        assert!(ms.remove_rows(&[0, 1]).is_err(), "remove-all must fail");
+        assert!(ms.remove_rows(&[5]).is_err(), "out of range");
+        assert_eq!(ms.len(), 2, "failed edits leave the store intact");
+
+        let mut g = Gen::new(0x7A1);
+        let x = random_mat(&mut g, 3, 2);
+        let y = [1.0, -1.0, 1.0];
+        let path = tmp("mutval");
+        FileStore::write(&path, &x, Some(&y)).unwrap();
+        let mut labeled = FileStore::open(&path).unwrap();
+        let row = Mat::from_rows(&[vec![0.5, 0.5]]);
+        assert!(labeled.append_rows(&row, None).is_err(), "labels required");
+        let bad = [0.5];
+        assert!(labeled.append_rows(&row, Some(&bad)).is_err(), "labels must be ±1");
+        drop(labeled);
+        FileStore::write(&path, &x, None).unwrap();
+        let mut unlabeled = FileStore::open(&path).unwrap();
+        let one = [1.0];
+        assert!(unlabeled.append_rows(&row, Some(&one)).is_err(), "store has no labels");
+        drop(unlabeled);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn store_edits_compose_removals_then_appends() {
+        let mut ed = StoreEdits::identity(5);
+        // remove old rows 1 and 3, then a second removal of (new) row 1,
+        // then append 2 rows
+        ed.remove(&removal_remap(5, &[1, 3]).unwrap());
+        ed.remove(&removal_remap(3, &[1]).unwrap());
+        ed.append(2);
+        assert_eq!(ed.old_len(), 5);
+        assert_eq!(ed.removed(), 3);
+        assert_eq!(ed.appended, 2);
+        assert_eq!(ed.new_len, 4);
+        assert_eq!(ed.remap, vec![Some(0), None, None, None, Some(1)]);
     }
 }

@@ -353,15 +353,27 @@ pub fn q_row(x: &Mat, y: &[f64], i: usize, kernel: KernelKind, out: &mut [f64]) 
     }
 }
 
-/// Rectangular Gram block K(A, B) (decision function path).
+/// Rectangular Gram block K(A, B) (decision function path): each row of
+/// `a` against the whole `b` block in one [`kernel_block_hoisted`] pass,
+/// with both norm vectors hoisted out of the loop.  This is the batched
+/// scoring kernel behind [`crate::svm::KernelModel::decision`] — the
+/// same tiled micro-kernel every `KernelMatrix` backend routes through,
+/// so serving-path entries match training-path entries bit for bit.
 pub fn cross_gram(a: &Mat, b: &Mat, kernel: KernelKind) -> Mat {
     let mut k = Mat::zeros(a.rows, b.rows);
-    for i in 0..a.rows {
-        let ai = a.row(i);
-        let row = k.row_mut(i);
-        for (j, o) in row.iter_mut().enumerate() {
-            *o = kernel.eval(ai, b.row(j));
-        }
+    if a.rows == 0 || b.rows == 0 {
+        return k;
+    }
+    let (na, nb) = match kernel {
+        KernelKind::Rbf { .. } => (row_norms(a), row_norms(b)),
+        KernelKind::Linear => (Vec::new(), Vec::new()),
+    };
+    for (i, row) in k.data.chunks_mut(b.rows).enumerate() {
+        let ni = match kernel {
+            KernelKind::Linear => 0.0,
+            KernelKind::Rbf { .. } => na[i],
+        };
+        kernel_block_hoisted(kernel, a.row(i), ni, &b.data, b.cols, &nb, row);
     }
     k
 }
@@ -583,6 +595,32 @@ mod tests {
         assert_eq!(k.rows, 3);
         assert_eq!(k.cols, 1);
         assert_eq!(k.get(1, 0), 2.0); // [1,0].[1,1] + 1
+    }
+
+    #[test]
+    fn cross_gram_blocked_matches_per_entry_eval() {
+        crate::prop::run_cases(8, 0xC605, |g| {
+            let (m, n, d) = (g.usize(1, 14), g.usize(1, 14), g.usize(1, 9));
+            let a = Mat::from_rows(
+                &(0..m).map(|_| g.vec_f64(d, -2.0, 2.0)).collect::<Vec<_>>(),
+            );
+            let b = Mat::from_rows(
+                &(0..n).map(|_| g.vec_f64(d, -2.0, 2.0)).collect::<Vec<_>>(),
+            );
+            for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma: g.f64(0.1, 2.0) }] {
+                let k = cross_gram(&a, &b, kernel);
+                for i in 0..m {
+                    for j in 0..n {
+                        let want = kernel.eval(a.row(i), b.row(j));
+                        let got = k.get(i, j);
+                        assert!(
+                            (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                            "entry ({i},{j}) {kernel:?}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        });
     }
 
     #[test]

@@ -305,6 +305,27 @@ pub trait KernelMatrix {
     /// retirement is only valid within one solve).
     fn retire_reset(&self) {}
 
+    /// The incremental-training hand-off: the feature data backing the
+    /// listed rows changed **in place** (same l, same row ids — e.g. a
+    /// [`crate::data::FeatureStore`] whose row contents were rewritten).
+    /// Cache backends evict exactly those rows — stale entries would
+    /// silently serve old kernel values — and clear any retirement
+    /// marks on them (a changed row is live again until re-proven
+    /// dead).  Edits that change `l` (append/remove) are out of scope:
+    /// row ids shift, so callers rebuild the backend instead (the
+    /// resume path in [`crate::coordinator::path`] always does).
+    ///
+    /// Backends holding a construction-time snapshot of the features
+    /// (dense Gram, the resident row engine) cannot see the new data
+    /// and must be rebuilt by the caller; their impls no-op.  The
+    /// streaming engine reads the store live, so its rows pick up the
+    /// new contents on the next compute (its hoisted RBF diagonal is
+    /// feature-independent; linear-kernel streams are rebuilt by the
+    /// same callers that rebuild dense backends).
+    fn dirty_rows(&self, rows: &[usize]) {
+        let _ = rows;
+    }
+
     /// y = Q x with the row sweep fanned out over `threads` workers.
     ///
     /// Every y_i is computed by exactly the same arithmetic as
@@ -828,6 +849,16 @@ impl KernelMatrix for StreamingGram {
         self.retired.lock().unwrap().clear();
     }
 
+    /// Rows are recomputed from the live store on every access, so
+    /// changed contents are picked up automatically — only the
+    /// retirement marks need clearing (a mutated row is live again).
+    fn dirty_rows(&self, rows: &[usize]) {
+        let mut retired = self.retired.lock().unwrap();
+        for i in rows {
+            retired.remove(i);
+        }
+    }
+
     fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
         Some(self)
     }
@@ -893,6 +924,16 @@ impl RowEngine {
     fn retire_reset(&self) {
         if let RowEngine::Stream(sg) = self {
             KernelMatrix::retire_reset(sg);
+        }
+    }
+
+    /// Forward a row-content invalidation to the streaming layer.  The
+    /// resident engine holds a construction-time clone of x (and a
+    /// hoisted diagonal computed from it), so it cannot see mutated
+    /// features — callers rebuild it instead (see the trait docs).
+    fn dirty_rows(&self, rows: &[usize]) {
+        if let RowEngine::Stream(sg) = self {
+            KernelMatrix::dirty_rows(sg, rows);
         }
     }
 }
@@ -1106,6 +1147,23 @@ impl KernelMatrix for LruRowCache {
     fn retire_reset(&self) {
         self.inner.borrow_mut().retired.clear();
         self.engine.retire_reset();
+    }
+
+    /// Targeted invalidation for in-place row edits: evict exactly the
+    /// listed rows (counted as evictions in the stats), lift their
+    /// retirement marks, and forward to the engine — the rest of the
+    /// cache stays warm, which is the whole point versus a flush.
+    fn dirty_rows(&self, rows: &[usize]) {
+        {
+            let mut inner = self.inner.borrow_mut();
+            for i in rows {
+                if inner.rows.remove(i).is_some() {
+                    inner.evictions += 1;
+                }
+                inner.retired.remove(i);
+            }
+        }
+        self.engine.dirty_rows(rows);
     }
 }
 
@@ -1466,6 +1524,19 @@ impl KernelMatrix for ShardedLruRowCache {
         self.engine.retire_reset();
     }
 
+    /// Targeted invalidation for in-place row edits, through each row's
+    /// owning shard (see [`LruRowCache::dirty_rows`]).
+    fn dirty_rows(&self, rows: &[usize]) {
+        for &i in rows {
+            let mut inner = self.shards[self.shard_of(i)].lock().unwrap();
+            if inner.rows.remove(&i).is_some() {
+                inner.evictions += 1;
+            }
+            inner.retired.remove(&i);
+        }
+        self.engine.dirty_rows(rows);
+    }
+
     fn as_sync(&self) -> Option<&(dyn KernelMatrix + Sync)> {
         Some(self)
     }
@@ -1824,6 +1895,15 @@ impl KernelMatrix for QBackend {
             QBackend::Lru(c) => c.retire_reset(),
             QBackend::Sharded(c) => c.retire_reset(),
             QBackend::Stream(s) => KernelMatrix::retire_reset(s),
+        }
+    }
+
+    fn dirty_rows(&self, rows: &[usize]) {
+        match self {
+            QBackend::Dense(d) => d.dirty_rows(rows),
+            QBackend::Lru(c) => c.dirty_rows(rows),
+            QBackend::Sharded(c) => c.dirty_rows(rows),
+            QBackend::Stream(s) => KernelMatrix::dirty_rows(s, rows),
         }
     }
 
@@ -2526,5 +2606,68 @@ mod tests {
             RowEngine::Mem { .. } => unreachable!(),
         };
         assert_eq!(engine_retired, 0);
+    }
+
+    #[test]
+    fn dirty_rows_evicts_exactly_the_listed_rows() {
+        let mut g = Gen::new(0xD127);
+        let (x, y) = random_xy(&mut g, 12, 3);
+        let kernel = KernelKind::Rbf { gamma: 0.5 };
+
+        let lru = LruRowCache::new_q(&x, &y, kernel, 12);
+        for i in 0..12 {
+            let _ = lru.row(i);
+        }
+        let before = lru.cache_stats();
+        assert_eq!(before.resident, 12);
+        lru.dirty_rows(&[3, 7]);
+        let after = lru.cache_stats();
+        assert_eq!(after.resident, 10, "only the listed rows leave");
+        assert_eq!(after.evictions, before.evictions + 2);
+        // Untouched rows are still warm: re-reading one is a pure hit.
+        let _ = lru.row(5);
+        assert_eq!(lru.cache_stats().hits, after.hits + 1);
+
+        let sharded = ShardedLruRowCache::new_q(&x, &y, kernel, 12, 3);
+        for i in 0..12 {
+            let _ = sharded.row(i);
+        }
+        let before = sharded.cache_stats();
+        assert_eq!(before.resident, 12);
+        sharded.dirty_rows(&[0, 6, 11]);
+        let after = sharded.cache_stats();
+        assert_eq!(after.resident, 9);
+        assert_eq!(after.evictions, before.evictions + 3);
+    }
+
+    #[test]
+    fn dirty_rows_lifts_retirement_and_readmits() {
+        let mut g = Gen::new(0xD128);
+        let (x, y) = random_xy(&mut g, 10, 2);
+        let kernel = KernelKind::Rbf { gamma: 0.9 };
+        let sg = stream_q(&x, &y, kernel, 4);
+        let lru = LruRowCache::new_streaming(sg, 5);
+        let dense = DenseGram::build_q(&x, &y, kernel, 1);
+
+        lru.retire(4);
+        let _ = lru.row(4);
+        assert_eq!(
+            lru.cache_stats().resident,
+            0,
+            "retired row is served but never cached"
+        );
+
+        // A content edit on the row lifts the mark all the way down:
+        // the cache re-admits it and the streaming engine plans it
+        // again.
+        KernelMatrix::dirty_rows(&lru, &[4]);
+        let engine_retired = match &lru.engine {
+            RowEngine::Stream(sg) => sg.retired_rows(),
+            RowEngine::Mem { .. } => unreachable!(),
+        };
+        assert_eq!(engine_retired, 0, "dirty row is live again downstream");
+        let r = lru.row(4);
+        assert_eq!(lru.cache_stats().resident, 1);
+        assert_eq!(&r[..], &dense.row(4)[..], "bits unchanged throughout");
     }
 }

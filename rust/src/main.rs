@@ -20,9 +20,9 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use srbo::coordinator::grid::select_model;
-use srbo::coordinator::path::{NuPath, PathConfig, SolverChoice};
+use srbo::coordinator::path::{self, NuPath, PathConfig, SavedPath, SolverChoice};
 use srbo::data::store::{FeatureStore, FileStore};
-use srbo::data::{benchmark, loader, split, synthetic, Dataset};
+use srbo::data::{benchmark, loader, split, synthetic, Dataset, StoreEdits};
 use srbo::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use srbo::kernel::{default_build_threads, full_q_threaded, KernelKind};
 use srbo::qp::dcdm::DcdmTuning;
@@ -78,6 +78,15 @@ fn usage() -> ! {
            --no-screening    disable SRBO\n\
            --oneclass        OC-SVM family\n\
            --workers N       grid workers (default: cores)\n\
+         incremental training (`path` only):\n\
+           --save FILE       snapshot the solved path (nu grid + alphas)\n\
+           --resume FILE     warm-start every grid point from a snapshot\n\
+                             (gap-inflated screening keeps it exact)\n\
+           --append FILE     with --resume: append this .fsb store's rows\n\
+                             to the training data before re-solving\n\
+           --drop-rows SPEC  with --resume: remove rows first — comma\n\
+                             list of indices and a..b ranges (b excluded),\n\
+                             e.g. 3,10..20,45\n\
          convert options:\n\
            --input FILE      source .libsvm/.csv file (required)\n\
            --output FILE     target feature store (default: input with .fsb)"
@@ -184,6 +193,97 @@ fn solver_telemetry(m: &srbo::coordinator::metrics::PathMetrics) -> String {
     )
 }
 
+/// Parse a `--drop-rows` spec — comma-separated indices and `a..b`
+/// ranges (end-exclusive) — into a sorted, deduplicated index list,
+/// validated against the current row count.
+fn parse_row_spec(spec: &str, l: usize) -> Vec<usize> {
+    let die = |msg: String| -> ! {
+        eprintln!("bad --drop-rows spec: {msg}");
+        std::process::exit(2);
+    };
+    let num = |s: &str| -> usize {
+        s.trim()
+            .parse()
+            .unwrap_or_else(|_| die(format!("not a row index: {s:?}")))
+    };
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once("..") {
+            Some((a, b)) => {
+                let (a, b) = (num(a), num(b));
+                if a >= b {
+                    die(format!("empty range {part:?}"));
+                }
+                out.extend(a..b);
+            }
+            None => out.push(num(part)),
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    if out.is_empty() {
+        die("no rows listed".to_string());
+    }
+    if let Some(&max) = out.last() {
+        if max >= l {
+            die(format!("row {max} out of range (l={l})"));
+        }
+    }
+    out
+}
+
+/// Load every row (and the labels, when present) of an `--append`
+/// feature store into memory.
+fn load_append_store(path: &str) -> (Mat, Option<Vec<f64>>) {
+    let store = FileStore::open(Path::new(path)).unwrap_or_else(|e| {
+        eprintln!("--append: {e}");
+        std::process::exit(1);
+    });
+    let (l, d) = (store.len(), store.dim());
+    let mut data = vec![0.0; l * d];
+    store.rows_into(0, l, &mut data);
+    let y = store.labels().map(<[f64]>::to_vec);
+    (Mat { rows: l, cols: d, data }, y)
+}
+
+/// Old→new remap for dropping the (sorted, in-range) `drop` rows from a
+/// length-`l` index set.
+fn drop_remap(l: usize, drop: &[usize]) -> Vec<Option<usize>> {
+    let mut remap = vec![None; l];
+    let mut new = 0;
+    for (old, slot) in remap.iter_mut().enumerate() {
+        if !drop.contains(&old) {
+            *slot = Some(new);
+            new += 1;
+        }
+    }
+    remap
+}
+
+/// Reject mutation flags outside a `--resume` run.
+fn check_edit_flags(args: &Args) {
+    if args.get("resume").is_none()
+        && (args.get("append").is_some() || args.get("drop-rows").is_some())
+    {
+        eprintln!("--append/--drop-rows only make sense with --resume");
+        std::process::exit(2);
+    }
+}
+
+fn save_if_asked(args: &Args, path: &NuPath) {
+    if let Some(out) = args.get("save") {
+        path.save(Path::new(&out)).unwrap_or_else(|e| {
+            eprintln!("--save: {e}");
+            std::process::exit(1);
+        });
+        println!("  snapshot saved to {out}");
+    }
+}
+
 fn nu_grid(args: &Args) -> Vec<f64> {
     let from = args.get_f64("nu-from", 0.1);
     let to = args.get_f64("nu-to", 0.5);
@@ -236,10 +336,39 @@ fn cmd_train(args: &Args) {
 /// `--oneclass` forces the H family); prints the same telemetry as the
 /// in-memory path plus the backend's cache counters.
 fn cmd_path_store(args: &Args, store_path: &str) {
-    let store = FileStore::open(Path::new(store_path)).unwrap_or_else(|e| {
+    let mut store = FileStore::open(Path::new(store_path)).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(1);
     });
+    check_edit_flags(args);
+    let resume_snap = args.get("resume").map(|s| {
+        SavedPath::load(Path::new(&s)).unwrap_or_else(|e| {
+            eprintln!("--resume: {e}");
+            std::process::exit(1);
+        })
+    });
+    // --resume edits mutate the store itself (tombstone removal, append
+    // rewrite) before Q is built, and are recorded so the snapshot's
+    // incumbents can be mapped across them.
+    let mut edits = StoreEdits::identity(store.len());
+    if resume_snap.is_some() {
+        if let Some(spec) = args.get("drop-rows") {
+            let drop = parse_row_spec(&spec, store.len());
+            let remap = store.remove_rows(&drop).unwrap_or_else(|e| {
+                eprintln!("--drop-rows: {e}");
+                std::process::exit(1);
+            });
+            edits.remove(&remap);
+        }
+        if let Some(ap) = args.get("append") {
+            let (ax, ay) = load_append_store(&ap);
+            store.append_rows(&ax, ay.as_deref()).unwrap_or_else(|e| {
+                eprintln!("--append: {e}");
+                std::process::exit(1);
+            });
+            edits.append(ax.rows);
+        }
+    }
     let labels = store.labels().map(<[f64]>::to_vec);
     let l = store.len();
     let kernel = kernel_of(args);
@@ -277,8 +406,13 @@ fn cmd_path_store(args: &Args, store_path: &str) {
     };
     times.add("gram", t.lap());
     let wall = Timer::start();
-    let path = NuPath::run_with_matrix(&backend, &cfg, oneclass, times)
-        .expect("path failed");
+    let path = match &resume_snap {
+        Some(prev) => {
+            path::resume_with_matrix(&backend, &cfg, oneclass, prev, &edits, times)
+        }
+        None => NuPath::run_with_matrix(&backend, &cfg, oneclass, times),
+    }
+    .expect("path failed");
     let cs = backend.cache_stats();
     println!(
         "path store={store_path} l={l} backend={} kernel={} screening={} threads={}: \
@@ -309,6 +443,7 @@ fn cmd_path_store(args: &Args, store_path: &str) {
         cs.evictions,
         cs.resident
     );
+    save_if_asked(args, &path);
 }
 
 fn cmd_convert(args: &Args) {
@@ -349,6 +484,7 @@ fn cmd_path(args: &Args) {
     if let Some(store_path) = args.get("store") {
         return cmd_path_store(args, store_path);
     }
+    check_edit_flags(args);
     let d = load_dataset(args);
     let (train, test) = split::train_test_stratified(&d, 0.8, args.get_u64("seed", 42));
     let kernel = kernel_of(args);
@@ -358,15 +494,78 @@ fn cmd_path(args: &Args) {
     cfg.gram = gram_of(args);
     cfg.shard = shard_of(args);
     cfg.dcdm = dcdm_of(args);
-    let t = Timer::start();
-    let (path, l) = if args.flag("oneclass") {
-        let pos = train.positives();
-        let l = pos.len();
-        (NuPath::run_oneclass(&pos.x, &cfg).expect("path failed"), l)
-    } else {
-        let l = train.len();
-        (NuPath::run(&train.x, &train.y, &cfg).expect("path failed"), l)
+    let oneclass = args.flag("oneclass");
+    let base = if oneclass { train.positives() } else { train };
+    // --resume: mutate the training rows per --drop-rows/--append, then
+    // recycle the snapshot's incumbents through the warm path.
+    let resumed = args.get("resume").map(|snap| {
+        let prev = SavedPath::load(Path::new(&snap)).unwrap_or_else(|e| {
+            eprintln!("--resume: {e}");
+            std::process::exit(1);
+        });
+        let mut edits = StoreEdits::identity(base.len());
+        let mut keep: Vec<usize> = (0..base.len()).collect();
+        if let Some(spec) = args.get("drop-rows") {
+            let drop = parse_row_spec(&spec, base.len());
+            edits.remove(&drop_remap(base.len(), &drop));
+            keep.retain(|i| !drop.contains(i));
+        }
+        let mut x_rows: Vec<Vec<f64>> =
+            keep.iter().map(|&i| base.x.row(i).to_vec()).collect();
+        let mut y_new: Vec<f64> = keep.iter().map(|&i| base.y[i]).collect();
+        if let Some(ap) = args.get("append") {
+            let (ax, ay) = load_append_store(&ap);
+            if ax.cols != base.x.cols {
+                eprintln!(
+                    "--append: store has {} features, training data {}",
+                    ax.cols,
+                    base.x.cols
+                );
+                std::process::exit(2);
+            }
+            match (&ay, oneclass) {
+                (None, false) => {
+                    eprintln!("--append: supervised resume needs a labelled store");
+                    std::process::exit(2);
+                }
+                (Some(_), true) => {
+                    eprintln!(
+                        "--append: one-class resume takes an unlabelled store \
+                         (positives only)"
+                    );
+                    std::process::exit(2);
+                }
+                _ => {}
+            }
+            edits.append(ax.rows);
+            for i in 0..ax.rows {
+                x_rows.push(ax.row(i).to_vec());
+            }
+            if let Some(ay) = ay {
+                y_new.extend(ay);
+            } else {
+                y_new.extend(std::iter::repeat(1.0).take(ax.rows));
+            }
+        }
+        (prev, edits, Mat::from_rows(&x_rows), y_new)
+    });
+    let (x_used, y_used) = match &resumed {
+        Some((_, _, x, y)) => (x.clone(), y.clone()),
+        None => (base.x.clone(), base.y.clone()),
     };
+    let l = x_used.rows;
+    let t = Timer::start();
+    let path = match (&resumed, oneclass) {
+        (Some((prev, edits, _, _)), true) => {
+            path::resume_oneclass(&x_used, &cfg, prev, edits)
+        }
+        (Some((prev, edits, _, _)), false) => {
+            path::resume(&x_used, &y_used, &cfg, prev, edits)
+        }
+        (None, true) => NuPath::run_oneclass(&x_used, &cfg),
+        (None, false) => NuPath::run(&x_used, &y_used, &cfg),
+    }
+    .expect("path failed");
     let total = t.secs();
     println!(
         "path {} kernel={} screening={} solver={:?} threads={}: {} grid points in {:.3}s",
@@ -390,13 +589,13 @@ fn cmd_path(args: &Args) {
             .join(" ")
     );
     println!("  solver: {}", solver_telemetry(&path.metrics));
-    if !args.flag("oneclass") {
-        // accuracy along the path
+    if !oneclass {
+        // accuracy along the path (against the data actually trained on)
         let mut best = (0.0, 0.0);
         for s in &path.steps {
             let m = NuSvm::from_alpha(
-                &train.x,
-                &train.y,
+                &x_used,
+                &y_used,
                 s.alpha.clone(),
                 s.nu,
                 kernel,
@@ -409,6 +608,7 @@ fn cmd_path(args: &Args) {
         }
         println!("  best nu={:.3} with test accuracy {:.2}%", best.0, best.1);
     }
+    save_if_asked(args, &path);
 }
 
 fn cmd_grid(args: &Args) {

@@ -287,9 +287,9 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
 
     let mut stats = SolveStats {
         rows_touched: n as u64, // the initial full-gradient matvec
-        active_trajectory: vec![n],
         ..SolveStats::default()
     };
+    stats.record_active(n);
 
     let mut gbar = Gbar::new(opts.gbar && !opts.paper_mode, &alpha, p.ub);
     let shrinking = opts.shrinking && !opts.paper_mode;
@@ -518,7 +518,7 @@ pub fn solve(p: &QpProblem, warm: Option<&[f64]>, opts: &DcdmOpts) -> (Vec<f64>,
         stats.unshrink_events += 1;
         reconstruct_gradient(p, &alpha, &mut g, &mut gbar, &mut stats);
         active = (0..n).filter(|&i| free[i]).collect();
-        stats.active_trajectory.push(active.len());
+        stats.record_active(active.len());
     }
 
     // Final violation from a freshly recomputed gradient — an
@@ -730,7 +730,7 @@ fn shrink(
     });
     if active.len() < before {
         stats.shrink_events += 1;
-        stats.active_trajectory.push(active.len());
+        stats.record_active(active.len());
     }
 }
 
@@ -948,7 +948,7 @@ fn gap_round(
             p.q.retire(i);
             stats.gap_retired_idx.push(i);
         }
-        stats.active_trajectory.push(active.len());
+        stats.record_active(active.len());
         // loop: the restricted problem just shrank, hence the gap and
         // the sphere — the adaptive α_r ↔ r refinement (for a quadratic
         // the modulus is exactly 1, so refinement is re-evaluation)

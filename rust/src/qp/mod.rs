@@ -185,8 +185,18 @@ pub struct SolveStats {
     /// backend-independent work metric `dcdm_scale` records.
     pub rows_touched: u64,
     /// |active| after the initial activation and after every shrink /
-    /// unshrink event — the active-set size trajectory.
+    /// unshrink event — the active-set size trajectory.  Bounded: past
+    /// [`ACTIVE_TRAJECTORY_CAP`] entries [`Self::record_active`]
+    /// decimates the interior (the first entry, the first occurrence of
+    /// the running minimum, and the latest entry always survive), so a
+    /// long solve cannot grow telemetry without bound.  The *exact*
+    /// min/last live in `active_min`/`active_last` regardless.
     pub active_trajectory: Vec<usize>,
+    /// Exact running minimum of every recorded active-set size (survives
+    /// trajectory decimation).
+    pub active_min: Option<usize>,
+    /// Exact last recorded active-set size.
+    pub active_last: Option<usize>,
     /// Pairwise steps abandoned because the selected move was fully
     /// clipped by the box: zero progress makes the phase stop instead
     /// of rescanning until `max_pair_steps`.
@@ -212,21 +222,107 @@ pub struct SolveStats {
     pub unshrink_rows_touched: u64,
 }
 
+/// Bound on [`SolveStats::active_trajectory`] — long solves with many
+/// shrink/unshrink/gap events decimate the recorded trajectory instead
+/// of growing it one entry per event.
+pub const ACTIVE_TRAJECTORY_CAP: usize = 64;
+
 impl SolveStats {
+    /// Record an active-set size: updates the exact min/last and appends
+    /// to the bounded trajectory.  At the cap the trajectory halves by
+    /// dropping every other interior sample — keeping the first entry,
+    /// the first occurrence of the running minimum, and the most recent
+    /// entry — so the recorded shape stays useful at O(1) memory.
+    pub fn record_active(&mut self, n: usize) {
+        self.active_min = Some(self.active_min.map_or(n, |m| m.min(n)));
+        self.active_last = Some(n);
+        if self.active_trajectory.len() >= ACTIVE_TRAJECTORY_CAP {
+            let min = self.active_min.unwrap();
+            let src = std::mem::take(&mut self.active_trajectory);
+            let last_idx = src.len() - 1;
+            let mut min_kept = false;
+            for (i, &v) in src.iter().enumerate() {
+                let keep_min = v == min && !min_kept;
+                if i == 0 || i == last_idx || keep_min || i % 2 == 0 {
+                    self.active_trajectory.push(v);
+                    if v == min {
+                        min_kept = true;
+                    }
+                }
+            }
+        }
+        self.active_trajectory.push(n);
+    }
+
     /// Smallest active-set size the solver worked on (`None` when the
-    /// solver does not track an active set).
+    /// solver does not track an active set).  Exact even after the
+    /// trajectory decimated.
     pub fn min_active(&self) -> Option<usize> {
-        self.active_trajectory.iter().copied().min()
+        self.active_min
+            .or_else(|| self.active_trajectory.iter().copied().min())
     }
 
     /// Active-set size at termination (`None` without an active set).
+    /// Exact even after the trajectory decimated.
     pub fn final_active(&self) -> Option<usize> {
-        self.active_trajectory.last().copied()
+        self.active_last
+            .or_else(|| self.active_trajectory.last().copied())
     }
 
     /// Coordinates permanently retired by gap-safe dynamic screening.
     pub fn gap_retired(&self) -> usize {
         self.gap_retired_idx.len()
+    }
+}
+
+/// An incumbent dual solution carried across a dataset mutation: the
+/// α-recycling half of warm-start incremental training.
+///
+/// Surviving rows keep their incumbent α through the
+/// [`StoreEdits`](crate::data::StoreEdits) remap; appended rows get the
+/// same ν-feasible uniform initializer a cold DCDM start uses
+/// (`ub_i · min(target / Σub, 1)`); and the sum constraint — broken by
+/// removals, appends, and any `ub` rescale (the supervised `1/l` and
+/// one-class `1/(νl)` bounds both move with l) — is repaired by the
+/// exact water-filling projection ([`projection::project`]).  The result
+/// is always feasible for the *mutated* problem, so it can seed
+/// [`dcdm::solve`]'s `warm` argument or reference incumbent-referenced
+/// screening directly.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Feasible warm α on the mutated index set.
+    pub alpha: Vec<f64>,
+}
+
+impl WarmStart {
+    /// Map `old_alpha` (length `remap.len()`) onto the mutated index set
+    /// of `ub.len()` rows and repair feasibility for `constraint`.
+    ///
+    /// `remap[i]` is the new index of old row `i` (`None` = removed);
+    /// new rows are exactly the indices no old row maps to.
+    pub fn across_edits(
+        old_alpha: &[f64],
+        remap: &[Option<usize>],
+        ub: &[f64],
+        constraint: ConstraintKind,
+    ) -> WarmStart {
+        assert_eq!(old_alpha.len(), remap.len(), "incumbent α length vs remap");
+        let n = ub.len();
+        let target = constraint.target();
+        let ub_sum: f64 = ub.iter().sum();
+        let scale = if ub_sum > 0.0 { (target / ub_sum).min(1.0) } else { 0.0 };
+        // cold-start value for rows with no incumbent
+        let mut alpha: Vec<f64> = ub.iter().map(|&u| u * scale).collect();
+        for (old, slot) in remap.iter().enumerate() {
+            if let Some(new) = *slot {
+                assert!(new < n, "remap points past the mutated problem");
+                // survivors keep their incumbent mass, clipped into the
+                // (possibly rescaled) box
+                alpha[new] = old_alpha[old].clamp(0.0, ub[new]);
+            }
+        }
+        projection::project(&mut alpha, ub, constraint);
+        WarmStart { alpha }
     }
 }
 
@@ -285,6 +381,61 @@ mod tests {
             constraint: ConstraintKind::SumGe(0.0),
         };
         assert!(kkt_violation(&p, &[0.0, 0.0, 0.0]) < 1e-12);
+    }
+
+    #[test]
+    fn active_trajectory_is_bounded_and_keeps_first_min_last() {
+        let mut stats = SolveStats::default();
+        // a long, noisy shrink trajectory: 1000 events, min planted at
+        // event 400
+        let size = |k: usize| if k == 400 { 3 } else { 1000 - (k % 700) };
+        for k in 0..1000 {
+            stats.record_active(size(k));
+        }
+        assert!(
+            stats.active_trajectory.len() <= ACTIVE_TRAJECTORY_CAP,
+            "trajectory grew to {}",
+            stats.active_trajectory.len()
+        );
+        assert_eq!(stats.active_trajectory.first(), Some(&size(0)), "first preserved");
+        assert_eq!(stats.min_active(), Some(3), "exact min survives decimation");
+        assert_eq!(stats.final_active(), Some(size(999)), "exact last");
+        assert_eq!(stats.active_trajectory.last(), Some(&size(999)));
+        assert!(stats.active_trajectory.contains(&3), "min kept in the recorded shape");
+        // accessors still work on hand-built stats that bypass the
+        // recorder (older call sites / GQP leave the fields default)
+        let hand = SolveStats { active_trajectory: vec![9, 4, 7], ..Default::default() };
+        assert_eq!(hand.min_active(), Some(4));
+        assert_eq!(hand.final_active(), Some(7));
+    }
+
+    #[test]
+    fn warm_start_maps_survivors_and_repairs_feasibility() {
+        // old problem: 4 rows; remove row 1, append two rows
+        let old = [0.25, 0.25, 0.25, 0.25];
+        let remap = [Some(0), None, Some(1), Some(2)];
+        let ub = [0.2; 5];
+        let ws = WarmStart::across_edits(&old, &remap, &ub, ConstraintKind::SumEq(1.0));
+        let sum: f64 = ws.alpha.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum repaired to the target, got {sum}");
+        for &a in &ws.alpha {
+            assert!((0.0..=0.2 + 1e-12).contains(&a), "box respected: {a}");
+        }
+        // survivors keep (clipped) incumbent mass before projection —
+        // with every coordinate clipped to 0.2 and water-filling lifting
+        // the total back to 1.0, all five end at the upper bound
+        assert!(ws.alpha.iter().all(|&a| (a - 0.2).abs() < 1e-9));
+
+        // inequality form: a slack incumbent projects to itself
+        let old = [0.05, 0.0, 0.05];
+        let remap = [Some(0), Some(1), Some(2)];
+        let ub = [1.0; 4];
+        let ws = WarmStart::across_edits(&old, &remap, &ub, ConstraintKind::SumGe(0.1));
+        assert!((ws.alpha[0] - 0.05).abs() < 1e-12);
+        assert!((ws.alpha[2] - 0.05).abs() < 1e-12);
+        // the appended row got the cold initializer then projection
+        // clipped nothing (sum already ≥ ν)
+        assert!(ws.alpha[3] >= 0.0);
     }
 
     #[test]

@@ -81,6 +81,22 @@ pub fn screen_threaded(
     srbo::screen_threaded(h, alpha0, delta, nu1, threads)
 }
 
+/// [`screen_threaded`] for an approximate reference with duality gap ≤
+/// `gap` on the ν_k problem — the OC-SVM face of
+/// [`srbo::screen_threaded_approx`] (the box shrinks along the path, so
+/// the nested-feasible-set argument behind the zero-δ tightening holds
+/// here too).
+pub fn screen_threaded_approx(
+    h: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    nu1: f64,
+    gap: f64,
+    threads: usize,
+) -> ScreenResult {
+    srbo::screen_threaded_approx(h, alpha0, delta, nu1, gap, threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -40,6 +40,28 @@ pub fn build_threaded(
     delta: &[f64],
     threads: usize,
 ) -> Sphere {
+    let p = parts(q, alpha0, delta, threads);
+    Sphere { qv: p.qv, sqrt_r: p.r2.sqrt(), norms: p.norms }
+}
+
+/// Intermediate dual quantities shared by the exact and gap-inflated
+/// sphere builds — one fused O(l²) sweep serves both.
+struct Parts {
+    qv: Vec<f64>,
+    qa0: Vec<f64>,
+    norms: Vec<f64>,
+    /// radius² of the exact sphere, clamped at 0.
+    r2: f64,
+    /// α⁰ᵀQα⁰ = ‖w₀‖².
+    w0w0: f64,
+}
+
+fn parts(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    threads: usize,
+) -> Parts {
     let l = alpha0.len();
     assert_eq!(q.dims(), l);
     let v: Vec<f64> = alpha0
@@ -54,9 +76,71 @@ pub fn build_threaded(
     q.par_matvec2(&v, alpha0, &mut qv, &mut qa0, threads);
     let ctc = dot(&v, &qv);
     let w0w0 = dot(alpha0, &qa0);
-    let r = (ctc - w0w0).max(0.0);
+    let r2 = (ctc - w0w0).max(0.0);
     let norms: Vec<f64> = (0..l).map(|i| q.diag(i).max(0.0).sqrt()).collect();
-    Sphere { qv, sqrt_r: r.sqrt(), norms }
+    Parts { qv, qa0, norms, r2, w0w0 }
+}
+
+/// [`build_threaded`] for an **approximate** reference: `alpha0` is only
+/// an ε-accurate solution of the ν_k problem, with Frank–Wolfe duality
+/// gap at most `gap` on the ν_k feasible set (see
+/// [`super::gap::duality_gap`]).  The sphere keeps the computable center
+/// v = α⁰ + δ/2 and inflates the radius so it still provably contains
+/// the exact next optimum w_{k+1}.
+///
+/// # Why the inflation is safe
+///
+/// Let α* be the exact ν_k optimum, e = w(α⁰) − w(α*), and
+/// g = √(2·gap).  Strong convexity of the dual in w gives ‖e‖ ≤ g.
+/// Theorem 1 needs an *exact* reference and a shift into A_{ν_{k+1}};
+/// use δ* = δ + (α⁰ − α*), so α* + δ* = α⁰ + δ, which is feasible at
+/// ν_{k+1} by the usual Δ-membership of `delta`.  The exact sphere then
+/// has center c* = w(α* + δ*/2) = c − e/2 (c = w(v) is our center) and
+/// radius² R² = ‖c*‖² − ‖w(α*)‖².  Expanding both norms around the
+/// computable quantities:
+///
+/// ```text
+///   R² = r² + w₀ᵀe − ½ w_δᵀe − ¾‖e‖²  ≤  r² + g·(‖w₀‖ + ‖w_δ‖/2)
+/// ```
+///
+/// with r² the exact-reference radius², w₀ = w(α⁰) and w_δ = w(δ)
+/// (‖w_δ‖² = δᵀQδ = 2·(δᵀQv − δᵀQα⁰), both sides of the fused sweep).
+/// A sphere centered at c with radius R + ‖c − c*‖ ≤ R + g/2 contains
+/// the exact sphere, hence w_{k+1}:
+///
+/// ```text
+///   sqrt_r = √(max(0, r² + g·(‖w_δ‖/2 + ‖w₀‖))) + g/2
+/// ```
+///
+/// When `delta` is identically zero, Δ-membership means α⁰ is itself
+/// feasible at ν_{k+1}; the paths here are monotone (A_{ν_{k+1}} ⊆
+/// A_{ν_k} for both duals), so the same `gap` bounds the suboptimality
+/// of α⁰ *on the ν_{k+1} problem* and strong convexity gives the direct
+/// sphere ‖w(α⁰) − w_{k+1}‖ ≤ g around the same center — the radius is
+/// tightened to min(sqrt_r, g).  This is the resume path's case
+/// (re-screening the same ν after a data edit), where it keeps the
+/// radius proportional to the drift instead of √drift.
+///
+/// `gap` ≤ 0 recovers the exact build bit-for-bit.
+pub fn build_approx_threaded(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    gap: f64,
+    threads: usize,
+) -> Sphere {
+    let p = parts(q, alpha0, delta, threads);
+    let g = (2.0 * gap.max(0.0)).sqrt();
+    if g == 0.0 {
+        return Sphere { qv: p.qv, sqrt_r: p.r2.sqrt(), norms: p.norms };
+    }
+    let wd = (2.0 * (dot(delta, &p.qv) - dot(delta, &p.qa0))).max(0.0).sqrt();
+    let w0 = p.w0w0.max(0.0).sqrt();
+    let mut sqrt_r = (p.r2 + g * (0.5 * wd + w0)).max(0.0).sqrt() + 0.5 * g;
+    if delta.iter().all(|&d| d == 0.0) {
+        sqrt_r = sqrt_r.min(g);
+    }
+    Sphere { qv: p.qv, sqrt_r, norms: p.norms }
 }
 
 impl Sphere {
@@ -191,5 +275,183 @@ mod tests {
         let a0 = vec![0.1; 6];
         let s = build(&q, &a0, &[0.0; 6]);
         assert!(s.sqrt_r < 1e-9);
+    }
+
+    #[test]
+    fn approx_build_with_zero_gap_matches_exact_bitwise() {
+        let mut g = crate::prop::Gen::new(0xA991);
+        let q = g.psd(9);
+        let a0 = g.vec_f64(9, 0.0, 0.2);
+        let delta = g.vec_f64(9, -0.05, 0.05);
+        let exact = build_threaded(&q, &a0, &delta, 1);
+        let approx = build_approx_threaded(&q, &a0, &delta, 0.0, 1);
+        assert_eq!(exact.sqrt_r.to_bits(), approx.sqrt_r.to_bits());
+        assert_eq!(exact.qv, approx.qv);
+        let inflated = build_approx_threaded(&q, &a0, &delta, 1e-3, 1);
+        assert!(inflated.sqrt_r > exact.sqrt_r, "positive gap must inflate");
+    }
+
+    /// The gap-inflated sphere keeps the Theorem-1 containment when the
+    /// reference is only roughly solved: audit in explicit w-space
+    /// through Q = A Aᵀ, with the gap measured (not assumed) at the
+    /// rough α⁰.
+    #[test]
+    fn approx_sphere_contains_next_optimum_from_rough_reference() {
+        run_cases(16, 0xA5EA, |g| {
+            let n = g.usize(6, 16);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a.set(i, j, g.rng().normal());
+                }
+            }
+            let mut q = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = dot(a.row(i), a.row(j)) / n as f64;
+                    q.set(i, j, v);
+                    q.set(j, i, v);
+                }
+            }
+            let ub = vec![1.0 / n as f64; n];
+            let nu0 = g.f64(0.1, 0.4);
+            let nu1 = nu0 + g.f64(0.01, 0.2);
+            let p0 = crate::qp::QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nu0),
+            };
+            let p1 = crate::qp::QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nu1),
+            };
+            // deliberately rough reference + its measured FW gap
+            let rough = crate::qp::dcdm::DcdmOpts {
+                eps: 1e-2,
+                max_sweeps: 2,
+                max_pair_steps: 3 * n,
+                gap_screening: false,
+                ..Default::default()
+            };
+            let (a0, _) = crate::qp::dcdm::solve(&p0, None, &rough);
+            let mut grad = vec![0.0; n];
+            p0.gradient(&a0, &mut grad);
+            let gap = crate::screening::gap::duality_gap(
+                &grad,
+                &a0,
+                &ub,
+                ConstraintKind::SumGe(nu0),
+            )
+            .max(0.0);
+            let (a1, _) = crate::qp::dcdm::solve(&p1, None, &Default::default());
+            let mut beta: Vec<f64> =
+                a0.iter().map(|&v| v + 0.05 * g.rng().normal()).collect();
+            beta = projected(&beta, &ub, ConstraintKind::SumGe(nu1));
+            let delta: Vec<f64> =
+                beta.iter().zip(&a0).map(|(b, a)| b - a).collect();
+            let sphere = build_approx_threaded(&q, &a0, &delta, gap, 1);
+            let wvec = |al: &[f64]| -> Vec<f64> {
+                let mut w = vec![0.0; n];
+                for (i, &ai) in al.iter().enumerate() {
+                    for (wk, &ak) in w.iter_mut().zip(a.row(i)) {
+                        *wk += ai * ak;
+                    }
+                }
+                for wk in w.iter_mut() {
+                    *wk /= (n as f64).sqrt();
+                }
+                w
+            };
+            let w1 = wvec(&a1);
+            let v: Vec<f64> = a0
+                .iter()
+                .zip(&delta)
+                .map(|(&x, &d)| x + 0.5 * d)
+                .collect();
+            let c = wvec(&v);
+            let dist2: f64 = w1
+                .iter()
+                .zip(&c)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            let r2 = sphere.sqrt_r * sphere.sqrt_r;
+            assert!(
+                dist2 <= r2 + 1e-6,
+                "approx sphere violated: dist2={dist2} r2={r2} gap={gap} (n={n})"
+            );
+        });
+    }
+
+    /// Same-ν resume case: δ = 0, the reference feasible at the target,
+    /// radius tightened to √(2·gap) — still contains the exact optimum.
+    #[test]
+    fn approx_sphere_zero_delta_contains_same_nu_optimum() {
+        run_cases(12, 0xA5EB, |g| {
+            let n = g.usize(6, 14);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a.set(i, j, g.rng().normal());
+                }
+            }
+            let mut q = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = dot(a.row(i), a.row(j)) / n as f64;
+                    q.set(i, j, v);
+                    q.set(j, i, v);
+                }
+            }
+            let ub = vec![1.0 / n as f64; n];
+            let nu = g.f64(0.1, 0.5);
+            let kind = ConstraintKind::SumGe(nu);
+            let p = crate::qp::QpProblem { q: &q, lin: None, ub: &ub, constraint: kind };
+            let rough = crate::qp::dcdm::DcdmOpts {
+                eps: 1e-2,
+                max_sweeps: 2,
+                max_pair_steps: 3 * n,
+                gap_screening: false,
+                ..Default::default()
+            };
+            let (a0, _) = crate::qp::dcdm::solve(&p, None, &rough);
+            let mut grad = vec![0.0; n];
+            p.gradient(&a0, &mut grad);
+            let gap =
+                crate::screening::gap::duality_gap(&grad, &a0, &ub, kind).max(0.0);
+            let (astar, _) = crate::qp::dcdm::solve(&p, None, &Default::default());
+            let zeros = vec![0.0; n];
+            let sphere = build_approx_threaded(&q, &a0, &zeros, gap, 1);
+            assert!(
+                sphere.sqrt_r <= (2.0 * gap).sqrt() + 1e-15,
+                "zero-delta tightening missing"
+            );
+            let wvec = |al: &[f64]| -> Vec<f64> {
+                let mut w = vec![0.0; n];
+                for (i, &ai) in al.iter().enumerate() {
+                    for (wk, &ak) in w.iter_mut().zip(a.row(i)) {
+                        *wk += ai * ak;
+                    }
+                }
+                for wk in w.iter_mut() {
+                    *wk /= (n as f64).sqrt();
+                }
+                w
+            };
+            let w1 = wvec(&astar);
+            let c = wvec(&a0);
+            let dist2: f64 = w1
+                .iter()
+                .zip(&c)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            let r2 = sphere.sqrt_r * sphere.sqrt_r;
+            assert!(
+                dist2 <= r2 + 1e-6,
+                "zero-delta sphere violated: dist2={dist2} r2={r2} gap={gap}"
+            );
+        });
     }
 }

@@ -17,7 +17,11 @@ pub struct ScreenResult {
 /// Apply Corollary 4 for the step ν_k → ν_{k+1}.
 ///
 /// * `q` — labelled Gram matrix (Q = diag(y) K diag(y));
-/// * `alpha0` — the *exact* dual optimum at ν_k (safety assumes this);
+/// * `alpha0` — the *exact* dual optimum at ν_k (safety assumes this up
+///   to solver tolerance, absorbed by the guards below; for a reference
+///   with a *known, possibly large* duality gap use
+///   [`screen_threaded_approx`], which inflates the radius instead of
+///   leaning on the guards);
 /// * `delta` — a member of Δ (see [`super::delta`]);
 /// * `nu1` — the next parameter value.
 pub fn screen(
@@ -27,6 +31,27 @@ pub fn screen(
     nu1: f64,
 ) -> ScreenResult {
     screen_threaded(q, alpha0, delta, nu1, 1)
+}
+
+/// [`screen_threaded`] for an **approximate** reference: `alpha0` need
+/// only be feasible at ν_k with Frank–Wolfe duality gap ≤ `gap` there
+/// (measured via [`super::gap::duality_gap`]).  The sphere radius is
+/// inflated by the gap-safe term derived in
+/// [`region::build_approx_threaded`], so every emitted code is still
+/// provable against the exact ν_{k+1} optimum — this is what lets the
+/// incremental-training resume path screen against a stale incumbent α
+/// after a data edit instead of re-solving from scratch.  `gap` ≤ 0
+/// recovers the exact rule bit-for-bit.
+pub fn screen_threaded_approx(
+    q: &dyn KernelMatrix,
+    alpha0: &[f64],
+    delta: &[f64],
+    nu1: f64,
+    gap: f64,
+    threads: usize,
+) -> ScreenResult {
+    let sphere = region::build_approx_threaded(q, alpha0, delta, gap, threads);
+    screen_with_sphere_threaded(&sphere, nu1, threads)
 }
 
 /// [`screen`] with both phases shard-parallel: the sphere's O(l²) fused
@@ -164,6 +189,61 @@ mod tests {
                     ScreenCode::Upper => assert!(
                         a1[i] >= ub[i] - tol,
                         "unsafe Upper at {i}: a1={} (n={n})",
+                        a1[i]
+                    ),
+                    ScreenCode::Keep => {}
+                }
+            }
+        });
+    }
+
+    /// The gap-inflated rule stays safe when the reference is only
+    /// roughly solved: codes from a loose α⁰ (measured gap fed in)
+    /// never contradict the exact α(ν₁).
+    #[test]
+    fn approx_screening_is_safe_with_rough_reference() {
+        run_cases(16, 0x5AFF, |g| {
+            let n = g.usize(10, 32);
+            let q = g.psd(n);
+            let ub = vec![1.0 / n as f64; n];
+            let nu0 = g.f64(0.1, 0.5);
+            let nu1 = nu0 + g.f64(0.005, 0.15);
+            let k0 = ConstraintKind::SumGe(nu0);
+            let p0 = QpProblem { q: &q, lin: None, ub: &ub, constraint: k0 };
+            let p1 = QpProblem {
+                q: &q,
+                lin: None,
+                ub: &ub,
+                constraint: ConstraintKind::SumGe(nu1),
+            };
+            let rough = dcdm::DcdmOpts {
+                eps: 1e-2,
+                max_sweeps: 2,
+                max_pair_steps: 3 * n,
+                gap_screening: false,
+                ..Default::default()
+            };
+            let (a0, _) = dcdm::solve(&p0, None, &rough);
+            let mut grad = vec![0.0; n];
+            p0.gradient(&a0, &mut grad);
+            let gap = crate::screening::gap::duality_gap(&grad, &a0, &ub, k0)
+                .max(0.0);
+            let (a1, _) = dcdm::solve(&p1, None, &Default::default());
+            let beta = projected(&a0, &ub, ConstraintKind::SumGe(nu1));
+            let delta: Vec<f64> =
+                beta.iter().zip(&a0).map(|(b, a)| b - a).collect();
+            let res = screen_threaded_approx(&q, &a0, &delta, nu1, gap, 1);
+            let tol = 1e-6;
+            for i in 0..n {
+                match res.codes[i] {
+                    ScreenCode::Zero => assert!(
+                        a1[i] <= tol,
+                        "unsafe approx Zero at {i}: a1={} gap={gap} (n={n})",
+                        a1[i]
+                    ),
+                    ScreenCode::Upper => assert!(
+                        a1[i] >= ub[i] - tol,
+                        "unsafe approx Upper at {i}: a1={} gap={gap} (n={n})",
                         a1[i]
                     ),
                     ScreenCode::Keep => {}

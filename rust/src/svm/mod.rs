@@ -28,17 +28,17 @@ pub struct KernelModel {
 
 impl KernelModel {
     /// Raw decision scores f(x) − threshold for each row of `x`.
+    ///
+    /// Batched: the whole request batch is scored by ONE rectangular
+    /// Gram block K(x, sv) — built through the same blocked micro-kernel
+    /// as every `KernelMatrix` backend — followed by a single matvec
+    /// with the coefficient vector, instead of a per-sample kernel loop.
     pub fn decision(&self, x: &Mat) -> Vec<f64> {
-        let mut out = Vec::with_capacity(x.rows);
-        for i in 0..x.rows {
-            let xi = x.row(i);
-            let mut s = 0.0;
-            for (j, &c) in self.coef.iter().enumerate() {
-                if c != 0.0 {
-                    s += c * self.kernel.eval(self.sv.row(j), xi);
-                }
-            }
-            out.push(s - self.threshold);
+        let k = crate::kernel::gram::cross_gram(x, &self.sv, self.kernel);
+        let mut out = vec![0.0; x.rows];
+        k.matvec(&self.coef, &mut out);
+        for o in &mut out {
+            *o -= self.threshold;
         }
         out
     }

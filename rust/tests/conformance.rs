@@ -9,14 +9,17 @@
 //! one backend family; CI uses it to run this suite (and safety.rs)
 //! once per gram policy.
 
-use srbo::coordinator::path::PathConfig;
+use srbo::coordinator::path::{self, NuPath, PathConfig, SavedPath};
 use srbo::data::synthetic::gaussians;
+use srbo::data::StoreEdits;
 use srbo::kernel::matrix::{KernelMatrix, Sharding};
 use srbo::kernel::{full_gram, full_q, KernelKind};
 use srbo::prop::conformance::{
     assert_matrix_conformance, assert_path_conformance, backends_under_test, build_backend,
 };
 use srbo::prop::{run_cases, Gen};
+use srbo::qp::{kkt_violation, ConstraintKind, QpProblem};
+use srbo::screening::oneclass;
 use srbo::util::Mat;
 
 fn random_xy(g: &mut Gen, l: usize, d: usize) -> (Mat, Vec<f64>) {
@@ -263,6 +266,124 @@ fn retired_rows_recompute_identically_and_stay_uncached() {
             );
         }
     }
+}
+
+/// Warm-started incremental training conforms on every backend: after
+/// random row removals + appends, resuming from the stale snapshot
+/// (α-recycling + incumbent-referenced screening) must land on the same
+/// optimum as a cold path over the edited data — same objective to
+/// 1e-9 relative and an ε-KKT point of the fresh problem — for both
+/// constraint families across the `SRBO_TEST_GRAM` backend matrix.
+#[test]
+fn warm_started_resume_matches_cold_solve_after_edits() {
+    run_cases(2, 0xED17, |g| {
+        let l = g.usize(24, 36);
+        let d = g.usize(2, 4);
+        let kernel = KernelKind::Rbf { gamma: g.f64(0.3, 1.0) };
+        for oneclass in [false, true] {
+            let (x, y) = random_xy(g, l, d);
+            let nus = if oneclass {
+                nu_grid(0.3, 0.5, 4)
+            } else {
+                nu_grid(0.2, 0.35, 4)
+            };
+            let mut cfg = PathConfig::new(nus.clone(), kernel);
+            // tight solver ε so both ε-KKT optima sit within the 1e-9
+            // objective band
+            cfg.eps = 1e-12;
+            srbo::prop::conformance::apply_env_dynamic(&mut cfg);
+
+            // snapshot from a cold run over the ORIGINAL data
+            let q0 = if oneclass {
+                full_gram(&x, kernel)
+            } else {
+                full_q(&x, &y, kernel)
+            };
+            let p0 = NuPath::run_with_matrix(&q0, &cfg, oneclass, Default::default())
+                .unwrap();
+            let prev = SavedPath::from_path(&p0);
+
+            // random edits: drop a few rows, append a few fresh ones
+            let mut drop: Vec<usize> =
+                (0..g.usize(1, 3)).map(|_| g.usize(0, l - 1)).collect();
+            drop.sort_unstable();
+            drop.dedup();
+            let n_app = g.usize(1, 4);
+            let keep: Vec<usize> = (0..l).filter(|i| !drop.contains(i)).collect();
+            let mut rows2: Vec<Vec<f64>> =
+                keep.iter().map(|&i| x.row(i).to_vec()).collect();
+            let mut y2: Vec<f64> = keep.iter().map(|&i| y[i]).collect();
+            for _ in 0..n_app {
+                rows2.push(g.vec_f64(d, -2.0, 2.0));
+                y2.push(if g.bool() { 1.0 } else { -1.0 });
+            }
+            let x2 = Mat::from_rows(&rows2);
+            let l2 = x2.rows;
+            let mut removal = vec![None; l];
+            let mut next = 0;
+            for (i, slot) in removal.iter_mut().enumerate() {
+                if !drop.contains(&i) {
+                    *slot = Some(next);
+                    next += 1;
+                }
+            }
+            let mut edits = StoreEdits::identity(l);
+            edits.remove(&removal).append(n_app);
+
+            // dense Q over the edited data for objective/KKT math
+            let q2 = if oneclass {
+                full_gram(&x2, kernel)
+            } else {
+                full_q(&x2, &y2, kernel)
+            };
+            let obj = |a: &[f64]| -> f64 {
+                let mut qa = vec![0.0; l2];
+                q2.matvec(a, &mut qa);
+                0.5 * a.iter().zip(&qa).map(|(ai, qi)| ai * qi).sum::<f64>()
+            };
+
+            for kind in backends_under_test() {
+                let y2_opt = (!oneclass).then_some(y2.as_slice());
+                let backend =
+                    build_backend(kind, &x2, y2_opt, kernel, 10, 2, 7).unwrap();
+                let warm = path::resume_with_matrix(
+                    &backend,
+                    &cfg,
+                    oneclass,
+                    &prev,
+                    &edits,
+                    Default::default(),
+                )
+                .unwrap();
+                let cold =
+                    NuPath::run_with_matrix(&backend, &cfg, oneclass, Default::default())
+                        .unwrap();
+                for (k, &nu) in nus.iter().enumerate() {
+                    let ctx = format!("{kind} oc={oneclass} step {k} (nu={nu})");
+                    let ub = if oneclass {
+                        vec![oneclass::upper_bound(nu, l2); l2]
+                    } else {
+                        vec![1.0 / l2 as f64; l2]
+                    };
+                    let constraint = if oneclass {
+                        ConstraintKind::SumEq(1.0)
+                    } else {
+                        ConstraintKind::SumGe(nu)
+                    };
+                    let p = QpProblem { q: &q2, lin: None, ub: &ub, constraint };
+                    let aw = &warm.steps[k].alpha;
+                    let ac = &cold.steps[k].alpha;
+                    let (fw, fc) = (obj(aw), obj(ac));
+                    assert!(
+                        (fw - fc).abs() <= 1e-9 * (1.0 + fc.abs()),
+                        "{ctx}: warm objective {fw} vs cold {fc}"
+                    );
+                    let viol = kkt_violation(&p, aw);
+                    assert!(viol < 1e-6, "{ctx}: warm KKT violation {viol}");
+                }
+            }
+        }
+    });
 }
 
 /// The harness itself must reject unknown backend names (CI matrix

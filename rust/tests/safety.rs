@@ -384,3 +384,99 @@ fn oneclass_gap_screened_path_matches_unscreened() {
     );
     assert!(p_gap.metrics.total_gap_rounds > 0, "gap rounds never ran");
 }
+
+/// Incumbent-referenced screening audit (the warm-start resume rule):
+/// screening ν₁ against an *approximate* incumbent from ν₀ — its
+/// measured duality gap fed in, radius gap-inflated — must delete no
+/// support vector of the fresh ν₁ optimum: every Zero code lands on
+/// α*₁ = 0 and every Upper code on the box, at any reference quality,
+/// for both families, over the `SRBO_TEST_GRAM` backend.
+#[test]
+fn incumbent_referenced_screening_deletes_no_support_vector() {
+    use srbo::qp::dcdm::{self, DcdmOpts};
+    use srbo::qp::{projection, QpProblem};
+    use srbo::screening::{gap, srbo as srbo_rule, ScreenCode};
+
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let tol = 1e-6;
+    for (oneclass, seed) in [(false, 41u64), (true, 43)] {
+        let d = if oneclass {
+            synthetic::oneclass_gaussians(100, -1.0, seed).positives()
+        } else {
+            synthetic::gaussians(40, 2.0, seed)
+        };
+        let l = d.len();
+        let qd = if oneclass {
+            full_gram(&d.x, kernel)
+        } else {
+            full_q(&d.x, &d.y, kernel)
+        };
+        let y_opt = (!oneclass).then_some(d.y.as_slice());
+        let backend =
+            build_backend(env_gram().unwrap_or("dense"), &d.x, y_opt, kernel, 24, 2, 16)
+                .unwrap();
+        let (nu0, nu1) = if oneclass { (0.3, 0.4) } else { (0.25, 0.3) };
+        let ub_for = |nu: f64| -> Vec<f64> {
+            if oneclass {
+                vec![oneclass::upper_bound(nu, l); l]
+            } else {
+                vec![1.0 / l as f64; l]
+            }
+        };
+        let kind_for = |nu: f64| -> ConstraintKind {
+            if oneclass {
+                ConstraintKind::SumEq(1.0)
+            } else {
+                ConstraintKind::SumGe(nu)
+            }
+        };
+        let ub0 = ub_for(nu0);
+        let ub1 = ub_for(nu1);
+        let p0 = QpProblem { q: &qd, lin: None, ub: &ub0, constraint: kind_for(nu0) };
+        let p1 = QpProblem { q: &qd, lin: None, ub: &ub1, constraint: kind_for(nu1) };
+        let (fresh, _) =
+            dcdm::solve(&p1, None, &DcdmOpts { eps: 1e-10, ..Default::default() });
+
+        // two reference qualities: barely-started and mid-flight
+        let rough = DcdmOpts {
+            eps: 1e-2,
+            max_sweeps: 2,
+            max_pair_steps: 3 * l,
+            gap_screening: false,
+            ..Default::default()
+        };
+        let medium = DcdmOpts { eps: 1e-5, ..Default::default() };
+        for (which, opts) in [("rough", rough), ("medium", medium)] {
+            let (a0, _) = dcdm::solve(&p0, None, &opts);
+            let mut grad = vec![0.0; l];
+            p0.gradient(&a0, &mut grad);
+            let gap0 =
+                gap::duality_gap(&grad, &a0, &ub0, kind_for(nu0)).max(0.0);
+            // δ repairs feasibility at ν₁ (Δ-membership), as resume does
+            // when the grid moves; measured gap inflates the sphere
+            let beta = projection::projected(&a0, &ub1, kind_for(nu1));
+            let delta: Vec<f64> =
+                beta.iter().zip(&a0).map(|(b, a)| b - a).collect();
+            let res = if oneclass {
+                oneclass::screen_threaded_approx(&backend, &a0, &delta, nu1, gap0, 2)
+            } else {
+                srbo_rule::screen_threaded_approx(&backend, &a0, &delta, nu1, gap0, 2)
+            };
+            for i in 0..l {
+                match res.codes[i] {
+                    ScreenCode::Zero => assert!(
+                        fresh[i] <= tol,
+                        "oc={oneclass} {which}: screened-out SV {i}: α*={} gap={gap0}",
+                        fresh[i]
+                    ),
+                    ScreenCode::Upper => assert!(
+                        fresh[i] >= ub1[i] - tol,
+                        "oc={oneclass} {which}: boxed non-bound {i}: α*={} gap={gap0}",
+                        fresh[i]
+                    ),
+                    ScreenCode::Keep => {}
+                }
+            }
+        }
+    }
+}

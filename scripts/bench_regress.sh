@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
-# Bench regression gate: compare a freshly-written BENCH_dcdm.json
-# against the committed baseline (git HEAD) and fail when any matching
-# run's median wall time regressed by more than the threshold
-# (SRBO_BENCH_REGRESS_PCT, default 25%).
+# Bench regression gate: compare a freshly-written BENCH_*.json (the
+# dcdm solver grid or the drift warm-vs-cold grid) against the committed
+# baseline (git HEAD) and fail when any matching run's median wall time
+# regressed by more than the threshold (SRBO_BENCH_REGRESS_PCT, default
+# 25%).
 #
-# Rows are matched on their full configuration key (case, l, backend,
-# selection, shrinking, gap_screening, gbar) so grid growth or SRBO_SCALE
-# changes never produce false positives — unmatched rows are simply not
+# Rows are matched on their full configuration key — every config field
+# the row carries (case, l, backend, selection, shrinking,
+# gap_screening, gbar, frac, mode) — so grid growth or SRBO_SCALE
+# changes never produce false positives: unmatched rows are simply not
 # compared.  Skips cleanly (exit 0) when:
-#   * no BENCH_dcdm.json is committed yet (no baseline to regress from),
+#   * no baseline file is committed yet (nothing to regress from),
 #   * the baseline and fresh runs used different quick-mode flags
 #     (timings are not comparable across grids),
 #   * jq is unavailable.
@@ -25,14 +27,14 @@ if ! command -v jq >/dev/null 2>&1; then
     exit 0
 fi
 if [ ! -s "$fresh" ]; then
-    echo "bench-regress: $fresh missing — run 'make bench-dcdm' first" >&2
+    echo "bench-regress: $fresh missing — run the matching 'make bench-*' first" >&2
     exit 1
 fi
 
 base_tmp="$(mktemp)"
 trap 'rm -f "$base_tmp"' EXIT
-if ! git show HEAD:BENCH_dcdm.json > "$base_tmp" 2>/dev/null || [ ! -s "$base_tmp" ]; then
-    echo "bench-regress: no committed BENCH_dcdm.json baseline, skipping"
+if ! git show "HEAD:$fresh" > "$base_tmp" 2>/dev/null || [ ! -s "$base_tmp" ]; then
+    echo "bench-regress: no committed $fresh baseline, skipping"
     exit 0
 fi
 
@@ -44,7 +46,18 @@ if [ "$old_quick" != "$new_quick" ]; then
 fi
 
 regressions="$(jq -r --argjson pct "$threshold" --slurpfile old "$base_tmp" '
-    def cfg_key: "\(.case // "grid")|l=\(.l)|\(.backend)|\(.selection)|shrink=\(.shrinking)|gap=\(.gap_screening)|gbar=\(.gbar // true)";
+    # key on every config field the row carries; has() (not //) so
+    # boolean false never collapses into a default
+    def cfg_key:
+        ["\(.case // "grid")", "l=\(.l)"]
+        + (if has("backend") then ["\(.backend)"] else [] end)
+        + (if has("selection") then ["\(.selection)"] else [] end)
+        + (if has("shrinking") then ["shrink=\(.shrinking)"] else [] end)
+        + (if has("gap_screening") then ["gap=\(.gap_screening)"] else [] end)
+        + (if has("gbar") then ["gbar=\(.gbar)"] else [] end)
+        + (if has("frac") then ["frac=\(.frac)"] else [] end)
+        + (if has("mode") then ["\(.mode)"] else [] end)
+        | join("|");
     ($old[0].runs | map({(cfg_key): .median_s}) | add // {}) as $base
     | .runs[]
     | cfg_key as $k
