@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all verify verify-matrix lint fmt bench-compile bench bench-gram bench-path bench-dcdm bench-drift bench-regress aot clean
+.PHONY: all verify verify-matrix lint fmt bench-compile bench bench-gram bench-path bench-dcdm bench-drift bench-serve bench-regress aot clean
 
 all: verify
 
@@ -64,13 +64,21 @@ bench-dcdm:
 bench-drift:
 	$(CARGO) bench --bench drift_scale
 
-# Regression gate: rerun the dcdm + drift benches and compare medians
-# against the committed BENCH_*.json baselines (>25% median wall-time
-# regression on any matching run fails; skips cleanly when no baseline
-# is committed).  CI runs the same script after its quick-mode smoke.
-bench-regress: bench-dcdm bench-drift
+# Serving bench (batch × clients × family grid through the loopback
+# serve loop) → BENCH_serve.json.  SRBO_BENCH_QUICK=1 runs the CI
+# smoke grid.
+bench-serve:
+	$(CARGO) bench --bench serve_scale
+
+# Regression gate: rerun the dcdm + drift + serve benches and compare
+# medians against the committed BENCH_*.json baselines (>25% median
+# wall-time regression on any matching run fails; skips cleanly when no
+# baseline is committed).  CI runs the same script after its quick-mode
+# smoke.
+bench-regress: bench-dcdm bench-drift bench-serve
 	./scripts/bench_regress.sh BENCH_dcdm.json
 	./scripts/bench_regress.sh BENCH_drift.json
+	./scripts/bench_regress.sh BENCH_serve.json
 
 # Optional: export the L2 JAX/Pallas graphs to artifacts/*.hlo.txt.
 # Needs the Python toolchain (jax); the Rust `pjrt` feature consumes the

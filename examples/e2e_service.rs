@@ -5,15 +5,19 @@
 //!   1. generate a benchmark-mimic dataset fleet (Table III entries),
 //!   2. run the L3 coordinator's grid-search service (ν-path × σ grid,
 //!      SRBO screening, Gram cache, worker threads) on each dataset,
-//!   3. serve batched decision requests for the selected models — each
-//!      request batch is one cross-Gram block + one matvec on the native
-//!      path (never per-sample kernel loops), cross-checked against the
-//!      AOT artifacts (L2/L1: JAX + Pallas, compiled via PJRT) where the
-//!      compiled shapes allow, reporting latency/throughput,
+//!   3. export each selected model as a versioned `SRBOMD01` artifact,
+//!      admit it into the serving registry, and serve batched decision
+//!      requests over the threaded TCP loop (`srbo::serve`) — the eval
+//!      worker coalesces each batch into one cross-Gram block + one
+//!      matvec — cross-checked against the AOT artifacts (L2/L1:
+//!      JAX + Pallas, compiled via PJRT) where the compiled shapes
+//!      allow, reporting latency/throughput,
 //!   4. report the paper's headline metric: speedup of the screened path
 //!      vs the unscreened path at unchanged accuracy.
 //!
 //!     cargo run --release --example e2e_service
+
+use std::sync::Arc;
 
 use srbo::coordinator::grid::select_model;
 use srbo::data::split::train_test_stratified;
@@ -22,6 +26,8 @@ use srbo::kernel::matrix::{GramPolicy, Sharding};
 use srbo::kernel::KernelKind;
 use srbo::qp::dcdm::DcdmTuning;
 use srbo::runtime::Runtime;
+use srbo::serve::{Client, Registry, ServeConfig, Server};
+use srbo::svm::model_io::SavedModel;
 use srbo::svm::nu::NuSvm;
 use srbo::util::Timer;
 
@@ -100,73 +106,95 @@ fn main() -> srbo::Result<()> {
         total_plain_time / total_screened_time
     );
 
-    println!("=== runtime path: serving batched requests ===");
+    println!("=== serving layer: SRBOMD01 artifacts over the threaded TCP loop ===");
     let rt = Runtime::load_default();
     if let Err(e) = &rt {
         println!("  (artifacts not built — `make aot`; {e}; native path only)");
     }
+    // export every selected model as a versioned artifact and admit the
+    // saved→reloaded copy into the serving registry (the server scores
+    // what was on disk, not the in-memory model)
+    let registry = Arc::new(Registry::new());
+    let mut artifacts = Vec::new();
+    for (i, (train, _, kernel, nu)) in selected.iter().enumerate() {
+        let m = NuSvm::train(&train.x, &train.y, *nu, *kernel)?;
+        let path = std::env::temp_dir()
+            .join(format!("srbo-e2e-{}-{i}.mdl", std::process::id()));
+        SavedModel::from_nu(&m).with_stored_norms().save(&path)?;
+        registry.load_file(&train.name, 1, &path)?;
+        artifacts.push((path.clone(), SavedModel::load(&path)?));
+    }
+    let server = Server::bind("127.0.0.1:0", registry, ServeConfig::default())?;
+    let mut client = Client::connect(&server.addr.to_string())?;
     let reps = 20;
     let mut total_reqs = 0usize;
     let mut total_secs = 0.0;
-    for (train, test, kernel, nu) in &selected {
-        let model = NuSvm::train(&train.x, &train.y, *nu, *kernel)?;
-        // native serving: every request batch is ONE rectangular Gram
-        // block + ONE matvec through the blocked kernel micro-kernel
-        // (KernelModel::decision) — never a per-sample kernel loop
-        let native = model.decision(&test.x);
+    for (i, (train, test, kernel, _)) in selected.iter().enumerate() {
+        // wire serving: the eval worker turns every request batch into
+        // ONE rectangular Gram block + ONE matvec through the blocked
+        // micro-kernel — never a per-sample kernel loop
+        let wire = client.score(&train.name, 1, &test.x)?;
         let t = Timer::start();
         for _ in 0..reps {
-            std::hint::black_box(model.decision(&test.x));
+            std::hint::black_box(client.score(&train.name, 1, &test.x)?);
         }
-        let native_secs = t.secs();
+        let wire_secs = t.secs();
         total_reqs += reps * test.len();
-        total_secs += native_secs;
+        total_secs += wire_secs;
         println!(
-            "  {:<12} {} test rows x{reps}: native {:.1} req/s, batch {:.2}ms",
+            "  {:<12} {} test rows x{reps}: served {:.1} samples/s, batch {:.2}ms",
             train.name,
             test.len(),
-            (reps * test.len()) as f64 / native_secs,
-            native_secs / reps as f64 * 1e3,
+            (reps * test.len()) as f64 / wire_secs,
+            wire_secs / reps as f64 * 1e3,
         );
 
-        // PJRT artifact comparison where the compiled shapes allow it
+        // the wire scores are bit-identical to KernelModel::decision on
+        // the saved→reloaded model (the serving safety contract)
+        let model = &artifacts[i].1.model;
+        let direct = model.decision(&test.x);
+        for (a, b) in wire.iter().zip(&direct) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "SERVING VIOLATION: wire decision differs from the reloaded model"
+            );
+        }
+
+        // PJRT artifact comparison where the compiled shapes allow it —
+        // the saved/reloaded expansion carries exactly the SV rows and
+        // y·α coefficients the artifact call needs
         let Ok(rt) = &rt else { continue };
         let KernelKind::Rbf { gamma } = *kernel else {
             continue; // decision artifact is RBF; linear served natively
         };
-        if train.len() > srbo::runtime::shapes::L
-            || train.dim() > srbo::runtime::shapes::F
+        if model.sv.rows > srbo::runtime::shapes::L
+            || model.sv.cols > srbo::runtime::shapes::F
         {
             println!(
                 "    exceeds artifact shape (l={}, p={}) — native only",
-                train.len(),
-                train.dim()
+                model.sv.rows,
+                model.sv.cols
             );
             continue;
         }
-        let ya: Vec<f64> = model
-            .alpha
-            .iter()
-            .zip(&train.y)
-            .map(|(&a, &y)| a * y)
-            .collect();
         // warmup + timed batches
-        let _ = rt.decision_rbf(&test.x, &train.x, &ya, gamma)?;
+        let _ = rt.decision_rbf(&test.x, &model.sv, &model.coef, gamma)?;
         let t = Timer::start();
         for _ in 0..reps {
-            let scores = rt.decision_rbf(&test.x, &train.x, &ya, gamma)?;
+            let scores = rt.decision_rbf(&test.x, &model.sv, &model.coef, gamma)?;
             std::hint::black_box(&scores);
         }
         let secs = t.secs();
-        let artifact = rt.decision_rbf(&test.x, &train.x, &ya, gamma)?;
-        let max_gap = native
+        let artifact = rt.decision_rbf(&test.x, &model.sv, &model.coef, gamma)?;
+        let max_gap = wire
             .iter()
             .zip(&artifact)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f64::max);
         println!(
-            "    PJRT artifact: {:.1} req/s, batch {:.2}ms, \
-             artifact-vs-native max gap {:.1e}",
+            "    PJRT artifact: {:.1} samples/s, batch {:.2}ms, \
+             artifact-vs-served max gap {:.1e}",
             (reps * test.len()) as f64 / secs,
             secs / reps as f64 * 1e3,
             max_gap,
@@ -174,9 +202,15 @@ fn main() -> srbo::Result<()> {
     }
     if total_secs > 0.0 {
         println!(
-            "native serving throughput: {:.0} scored samples/s (batched cross-Gram + matvec)",
+            "served throughput: {:.0} scored samples/s (coalesced cross-Gram + matvec)",
             total_reqs as f64 / total_secs
         );
+    }
+    println!("server telemetry: {}", client.stats()?);
+    drop(client);
+    server.shutdown();
+    for (path, _) in &artifacts {
+        let _ = std::fs::remove_file(path);
     }
     Ok(())
 }

@@ -1,0 +1,166 @@
+//! §Perf serving bench: synthetic traffic through a loopback socket
+//! against the threaded serve loop, over a batch-size × client-count ×
+//! model-family grid.
+//!
+//! Each cell spawns `clients` threads that fire `reqs` score requests
+//! of `batch` rows each and record per-request wall latency at the
+//! client (connect → score → response decoded).  Rows carry nearest-rank
+//! p50/p99 latency and req/s throughput; the server's own telemetry is
+//! printed at the end so the coalescing ratio (requests per Gram pass)
+//! is visible.  Writes `BENCH_serve.json` at the repo root (run via
+//! `make bench-serve`).
+//!
+//! Knobs: `SRBO_SCALE` shrinks the training size; `SRBO_BENCH_QUICK=1`
+//! runs a tiny smoke grid (CI uses it to keep the JSON emission honest).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use srbo::bench_harness::scaled;
+use srbo::data::synthetic;
+use srbo::kernel::KernelKind;
+use srbo::prop::Gen;
+use srbo::serve::{Client, Registry, ServableModel, ServeConfig, Server};
+use srbo::svm::model_io::ModelFamily;
+use srbo::svm::nu::NuSvm;
+use srbo::svm::oneclass::OcSvm;
+use srbo::util::tsv::Json;
+use srbo::util::Mat;
+
+/// Nearest-rank percentile over a sorted sample set.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let k = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[k.clamp(1, sorted.len()) - 1]
+}
+
+/// One traffic cell: `clients` concurrent connections × `reqs`
+/// requests of `batch` rows.  Returns every per-request latency.
+fn drive(
+    addr: &str,
+    name: &'static str,
+    version: u32,
+    dim: usize,
+    batch: usize,
+    clients: usize,
+    reqs: usize,
+) -> Vec<f64> {
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut g = Gen::new(0xBE4C ^ (c as u64 * 977 + batch as u64));
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut lats = Vec::with_capacity(reqs);
+            for _ in 0..reqs {
+                let x = Mat::from_rows(
+                    &(0..batch).map(|_| g.vec_f64(dim, -3.0, 3.0)).collect::<Vec<_>>(),
+                );
+                let t = Instant::now();
+                let s = client.score(name, version, &x).expect("score");
+                lats.push(t.elapsed().as_secs_f64());
+                std::hint::black_box(&s);
+            }
+            lats
+        }));
+    }
+    handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client thread"))
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("SRBO_BENCH_QUICK").is_ok();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let n = scaled(if quick { 48 } else { 240 });
+    let d = synthetic::gaussians(n, 2.0, 42);
+    let pos = d.positives();
+
+    // one model per family, trained outside every timed region
+    let nu = NuSvm::train(&d.x, &d.y, 0.3, kernel).expect("nu train");
+    let oc = OcSvm::train(&pos.x, 0.3, kernel).expect("oc train");
+    let dim = d.x.cols;
+    let registry = Arc::new(Registry::new());
+    registry.insert(ServableModel::from_model(
+        "nu", 1, ModelFamily::Supervised, nu.model.clone(),
+    ));
+    registry.insert(ServableModel::from_model(
+        "oc", 1, ModelFamily::OneClass, oc.model.clone(),
+    ));
+    let server =
+        Server::bind("127.0.0.1:0", registry, ServeConfig::default()).expect("bind server");
+    let addr = server.addr.to_string();
+
+    let batches: &[usize] = if quick { &[1, 8] } else { &[1, 8, 32] };
+    let clients: &[usize] = if quick { &[2] } else { &[1, 4, 8] };
+    let reqs = if quick { 15 } else { 50 };
+    let families: &[(&str, &'static str, usize)] =
+        &[("serve_nu", "nu", d.len()), ("serve_oc", "oc", pos.len())];
+
+    let mut runs = Vec::new();
+    for &(case, name, l) in families {
+        for &batch in batches {
+            for &nclients in clients {
+                let wall = Instant::now();
+                let mut lats = drive(&addr, name, 1, dim, batch, nclients, reqs);
+                let wall_s = wall.elapsed().as_secs_f64();
+                lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let total = (nclients * reqs) as f64;
+                let (p50, p99) = (percentile(&lats, 50.0), percentile(&lats, 99.0));
+                let req_s = total / wall_s;
+                let mode = format!("b{batch}c{nclients}");
+                println!(
+                    "{case} l={l} {mode}: p50 {:.3}ms  p99 {:.3}ms  {:.0} req/s",
+                    p50 * 1e3,
+                    p99 * 1e3,
+                    req_s
+                );
+                runs.push(Json::Obj(vec![
+                    ("case".into(), Json::Str(case.into())),
+                    ("l".into(), Json::Num(l as f64)),
+                    ("batch".into(), Json::Num(batch as f64)),
+                    ("clients".into(), Json::Num(nclients as f64)),
+                    ("requests".into(), Json::Num(total)),
+                    ("mode".into(), Json::Str(mode)),
+                    ("median_s".into(), Json::Num(p50)),
+                    ("min_s".into(), Json::Num(lats[0])),
+                    ("p50_ms".into(), Json::Num(p50 * 1e3)),
+                    ("p99_ms".into(), Json::Num(p99 * 1e3)),
+                    ("req_s".into(), Json::Num(req_s)),
+                ]));
+            }
+        }
+    }
+
+    // server-side view: total Gram passes vs requests = coalescing ratio
+    let stats = server.telemetry().snapshot();
+    println!(
+        "server: {} requests over {} Gram passes ({:.2} req/pass), peak queue {}",
+        stats.requests,
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        stats.queue_peak
+    );
+    assert_eq!(stats.errors, 0, "bench traffic must not produce error frames");
+    server.shutdown();
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("serve_scale".into())),
+        ("kernel".into(), Json::Str("rbf".into())),
+        ("quick".into(), Json::Num(if quick { 1.0 } else { 0.0 })),
+        ("host_parallelism".into(), Json::Num(cores as f64)),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    let payload = doc.render() + "\n";
+    // anchor at the repo root (bench cwd is the package dir) so the
+    // perf-trajectory file lands in a stable, committable spot
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serve.json"));
+    std::fs::write(&out, &payload).expect("write BENCH_serve.json");
+    println!("wrote {} (host parallelism {cores})", out.display());
+}

@@ -378,6 +378,67 @@ pub fn cross_gram(a: &Mat, b: &Mat, kernel: KernelKind) -> Mat {
     k
 }
 
+/// Shard-parallel rectangular Gram block K(A, B) with B's squared row
+/// norms hoisted by the caller — the serving-path variant of
+/// [`cross_gram`]: the support-vector block B and its norms are loaded
+/// once per model, so per-batch work is only A's rows, fanned over
+/// `threads` scoped workers via the shared [`shard_ranges`] partition.
+///
+/// `nb` must be [`row_norms`]`(b)` (only read for RBF; pass `&[]` for
+/// linear).  Every entry goes through [`kernel_block_hoisted`] with the
+/// identical per-row arithmetic as [`cross_gram`] — each output row is
+/// computed independently and lands in its own slice — so the result is
+/// bit-identical to the serial build for any thread count.
+pub fn cross_gram_hoisted_threaded(
+    a: &Mat,
+    b: &Mat,
+    nb: &[f64],
+    kernel: KernelKind,
+    threads: usize,
+) -> Mat {
+    assert_eq!(a.cols, b.cols, "cross_gram: feature dims differ");
+    if let KernelKind::Rbf { .. } = kernel {
+        assert_eq!(nb.len(), b.rows, "cross_gram: hoisted norms must cover B");
+    }
+    let mut k = Mat::zeros(a.rows, b.rows);
+    if a.rows == 0 || b.rows == 0 {
+        return k;
+    }
+    let row_ni = |i: usize| match kernel {
+        KernelKind::Linear => 0.0,
+        KernelKind::Rbf { .. } => dot(a.row(i), a.row(i)),
+    };
+    let threads = threads.max(1).min(a.rows);
+    if threads == 1 {
+        for (i, row) in k.data.chunks_mut(b.rows).enumerate() {
+            kernel_block_hoisted(kernel, a.row(i), row_ni(i), &b.data, b.cols, nb, row);
+        }
+        return k;
+    }
+    let ranges = shard_ranges(a.rows, threads);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f64] = &mut k.data;
+        for &(lo, hi) in &ranges {
+            let (chunk, tail) = rest.split_at_mut((hi - lo) * b.rows);
+            rest = tail;
+            s.spawn(move || {
+                for (i, row) in (lo..hi).zip(chunk.chunks_mut(b.rows)) {
+                    kernel_block_hoisted(
+                        kernel,
+                        a.row(i),
+                        row_ni(i),
+                        &b.data,
+                        b.cols,
+                        nb,
+                        row,
+                    );
+                }
+            });
+        }
+    });
+    k
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -533,6 +594,35 @@ mod tests {
         for (a, b) in norms.iter().zip(&ref_norms) {
             assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()));
         }
+    }
+
+    #[test]
+    fn cross_gram_hoisted_threaded_matches_serial_bit_for_bit() {
+        crate::prop::run_cases(6, 0xC466, |g| {
+            let (m, n) = (g.usize(1, 30), g.usize(1, 20));
+            let d = g.usize(1, 9);
+            let a = Mat::from_rows(
+                &(0..m).map(|_| g.vec_f64(d, -3.0, 3.0)).collect::<Vec<_>>(),
+            );
+            let b = Mat::from_rows(
+                &(0..n).map(|_| g.vec_f64(d, -3.0, 3.0)).collect::<Vec<_>>(),
+            );
+            let gamma = g.f64(0.1, 2.0);
+            for kernel in [KernelKind::Linear, KernelKind::Rbf { gamma }] {
+                let serial = cross_gram(&a, &b, kernel);
+                let nb = match kernel {
+                    KernelKind::Rbf { .. } => row_norms(&b),
+                    KernelKind::Linear => Vec::new(),
+                };
+                for threads in [1, 2, 5] {
+                    let par = cross_gram_hoisted_threaded(&a, &b, &nb, kernel, threads);
+                    assert_eq!(
+                        serial, par,
+                        "threads={threads} kernel={kernel:?} m={m} n={n} d={d}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

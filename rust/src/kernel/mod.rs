@@ -9,9 +9,9 @@ pub mod gram;
 pub mod matrix;
 
 pub use gram::{
-    default_build_threads, full_gram, full_gram_threaded, full_q, full_q_threaded,
-    gram_row, gram_row_hoisted, kernel_block_hoisted, kernel_entry_hoisted, q_row,
-    row_norms, shard_ranges,
+    cross_gram, cross_gram_hoisted_threaded, default_build_threads, full_gram,
+    full_gram_threaded, full_q, full_q_threaded, gram_row, gram_row_hoisted,
+    kernel_block_hoisted, kernel_entry_hoisted, q_row, row_norms, shard_ranges,
 };
 pub use matrix::{
     DenseGram, GramPolicy, KernelMatrix, LruRowCache, QBackend, ShardedLruRowCache,

@@ -36,6 +36,7 @@ pub mod qp;
 pub mod report;
 pub mod runtime;
 pub mod screening;
+pub mod serve;
 pub mod stats;
 pub mod svm;
 pub mod util;

@@ -1,12 +1,14 @@
 //! `srbo` — the SRBO-ν-SVM training service CLI.
 //!
 //! Subcommands:
-//!   train      train one ν-SVM / OC-SVM on a dataset (screened path)
-//!   path       run a full SRBO ν-path and print screening telemetry
-//!   grid       grid-search (ν × σ) model selection via the coordinator
-//!   convert    write a libsvm/csv file into the binary feature store
-//!   datasets   list the built-in Table-III benchmark fleet
-//!   runtime    load + smoke-test the PJRT artifacts
+//!   train       train one ν-SVM / OC-SVM on a dataset (screened path)
+//!   path        run a full SRBO ν-path and print screening telemetry
+//!   grid        grid-search (ν × σ) model selection via the coordinator
+//!   convert     write a libsvm/csv file into the binary feature store
+//!   save-model  train once and export a versioned SRBOMD01 model file
+//!   serve       threaded TCP model server (batched scoring, telemetry)
+//!   datasets    list the built-in Table-III benchmark fleet
+//!   runtime     load + smoke-test the PJRT artifacts
 //!
 //! Examples:
 //!   srbo path --dataset gauss2 --kernel rbf --sigma 1.0 --nu-from 0.1 \
@@ -14,6 +16,8 @@
 //!   srbo convert --input data/real/Banknote.libsvm --output banknote.fsb
 //!   srbo path --store banknote.fsb --gram stream:512 --threads 4
 //!   srbo grid --dataset Banknote --scale 0.2
+//!   srbo save-model --dataset gauss2 --nu 0.3 --output gauss2.mdl
+//!   srbo serve --listen 127.0.0.1:7878 --model "gauss2@1=gauss2.mdl"
 //!   srbo runtime
 
 use std::path::{Path, PathBuf};
@@ -27,7 +31,9 @@ use srbo::kernel::matrix::{GramPolicy, KernelMatrix, Sharding};
 use srbo::kernel::{default_build_threads, full_q_threaded, KernelKind};
 use srbo::qp::dcdm::DcdmTuning;
 use srbo::runtime::Runtime;
+use srbo::serve::{Registry, ServeConfig, Server};
 use srbo::stats::accuracy;
+use srbo::svm::model_io::SavedModel;
 use srbo::svm::nu::NuSvm;
 use srbo::util::cli::Args;
 use srbo::util::timer::PhaseTimes;
@@ -37,7 +43,7 @@ use srbo::util::Timer;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: srbo <train|path|grid|convert|datasets|runtime> [options]\n\
+        "usage: srbo <train|path|grid|convert|save-model|serve|datasets|runtime> [options]\n\
          common options:\n\
            --dataset NAME    gauss1|gauss2|gauss5|circle|exclusive|spiral|<TableIII name>\n\
            --store FILE      run `path` straight off a .fsb feature store\n\
@@ -89,7 +95,18 @@ fn usage() -> ! {
                              e.g. 3,10..20,45\n\
          convert options:\n\
            --input FILE      source .libsvm/.csv file (required)\n\
-           --output FILE     target feature store (default: input with .fsb)"
+           --output FILE     target feature store (default: input with .fsb)\n\
+         save-model options (plus the training flags above):\n\
+           --output FILE     target SRBOMD01 model file (default: <dataset>.mdl)\n\
+           --no-norms        skip storing squared SV norms (server recomputes\n\
+                             them at load; scores are identical either way)\n\
+         serve options:\n\
+           --listen ADDR     bind address (default 127.0.0.1:7878; port 0\n\
+                             picks an ephemeral port)\n\
+           --model SPEC      comma list of name[@version]=file.mdl entries\n\
+                             (version defaults to 1); more models can be\n\
+                             loaded/evicted at runtime over the wire\n\
+           --eval-threads N  shards per coalesced Gram pass (default: cores)"
     );
     std::process::exit(2);
 }
@@ -611,6 +628,105 @@ fn cmd_path(args: &Args) {
     save_if_asked(args, &path);
 }
 
+/// `save-model`: train once on the dataset flags, export a `SRBOMD01`
+/// artifact, and re-open it to prove the file validates end to end
+/// (mirrors `convert`'s write-then-verify discipline).
+fn cmd_save_model(args: &Args) {
+    let d = load_dataset(args);
+    let (train, _test) = split::train_test_stratified(&d, 0.8, args.get_u64("seed", 42));
+    let kernel = kernel_of(args);
+    let nu = args.get_f64("nu", 0.3);
+    let output = args
+        .get("output")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{}.mdl", d.name)));
+    let t = Timer::start();
+    let saved = if args.flag("oneclass") {
+        let pos = train.positives();
+        let m = srbo::svm::oneclass::OcSvm::train(&pos.x, nu, kernel)
+            .expect("training failed");
+        SavedModel::from_oneclass(&m)
+    } else {
+        let m = NuSvm::train(&train.x, &train.y, nu, kernel).expect("training failed");
+        SavedModel::from_nu(&m)
+    };
+    let saved = if args.flag("no-norms") { saved } else { saved.with_stored_norms() };
+    let bytes = saved.save(&output).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let back = SavedModel::load(&output).unwrap_or_else(|e| {
+        eprintln!("verification failed: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "wrote {}: family={} kernel={} sv={} dim={} norms={} ({bytes} bytes, {:.3}s)",
+        output.display(),
+        back.family.name(),
+        back.model.kernel.name(),
+        back.model.sv.rows,
+        back.model.sv.cols,
+        if back.norms.is_some() { "stored" } else { "recompute" },
+        t.secs()
+    );
+}
+
+/// `serve`: load `--model` artifacts into a registry and run the
+/// threaded TCP server until killed.
+fn cmd_serve(args: &Args) {
+    let listen = args.get_or("listen", "127.0.0.1:7878");
+    let spec = match args.get("model") {
+        Some(s) => s,
+        None => {
+            eprintln!("serve needs --model name[@version]=file.mdl[,...]");
+            usage()
+        }
+    };
+    let registry = Arc::new(Registry::new());
+    for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (key, file) = match entry.split_once('=') {
+            Some(kv) => kv,
+            None => {
+                eprintln!("bad --model entry {entry:?} (want name[@version]=file.mdl)");
+                usage()
+            }
+        };
+        let (name, version) = match key.split_once('@') {
+            Some((n, v)) => match v.parse::<u32>() {
+                Ok(v) => (n, v),
+                Err(_) => {
+                    eprintln!("bad version in --model entry {entry:?}");
+                    usage()
+                }
+            },
+            None => (key, 1),
+        };
+        registry.load_file(name, version, Path::new(file)).unwrap_or_else(|e| {
+            eprintln!("--model {entry}: {e}");
+            std::process::exit(1);
+        });
+        println!("loaded {name}@{version} from {file}");
+    }
+    let cfg = ServeConfig {
+        eval_threads: args
+            .get_usize("eval-threads", ServeConfig::default().eval_threads)
+            .max(1),
+    };
+    let server = Server::bind(&listen, registry, cfg).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    println!(
+        "serving {} model(s) on {} (eval_threads={}); Ctrl-C to stop",
+        server.registry().len(),
+        server.addr,
+        cfg.eval_threads
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 fn cmd_grid(args: &Args) {
     let d = load_dataset(args);
     let (train, test) = split::train_test_stratified(&d, 0.8, args.get_u64("seed", 42));
@@ -704,6 +820,8 @@ fn main() {
         Some("path") => cmd_path(&args),
         Some("grid") => cmd_grid(&args),
         Some("convert") => cmd_convert(&args),
+        Some("save-model") => cmd_save_model(&args),
+        Some("serve") => cmd_serve(&args),
         Some("datasets") => cmd_datasets(),
         Some("runtime") => cmd_runtime(&args),
         _ => usage(),

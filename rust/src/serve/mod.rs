@@ -1,0 +1,34 @@
+//! Production model serving: the "millions of users" leg of the
+//! system.  A trained ν/C-SVM or OC-SVM is exported as a versioned
+//! `SRBOMD01` artifact ([`crate::svm::model_io`]), admitted into a
+//! [`Registry`], and scored over a std-only threaded TCP loop.
+//!
+//! Layering:
+//!
+//! * [`protocol`] — length-prefixed binary frames + the blocking
+//!   [`Client`];
+//! * [`registry`] — `name@version → ServableModel` with hoisted SV
+//!   norms and the batched scoring path;
+//! * [`server`] — acceptor, per-connection threads, and the
+//!   admission/batching queue that coalesces in-flight requests into
+//!   one sharded Gram pass per model;
+//! * [`telemetry`] — p50/p99 latency, queue depth, throughput counters
+//!   in the `BENCH_*.json` style.
+//!
+//! The contract that makes batching safe: every kernel entry flows
+//! through the same blocked micro-kernel as training
+//! ([`kernel_block_hoisted`](crate::kernel::kernel_block_hoisted)), and
+//! request rows are independent in it, so any coalescing or sharding of
+//! a batch returns scores bit-identical to per-sample
+//! [`KernelModel::decision`](crate::svm::KernelModel::decision) — pinned
+//! end-to-end by `tests/serve.rs`.
+
+pub mod protocol;
+pub mod registry;
+pub mod server;
+pub mod telemetry;
+
+pub use protocol::{Client, Request, Response, MAX_FRAME};
+pub use registry::{Registry, ServableModel};
+pub use server::{ServeConfig, Server};
+pub use telemetry::{Stats, Telemetry};

@@ -1,0 +1,468 @@
+//! Wire protocol for the serving layer: length-prefixed binary frames
+//! over TCP, plus the [`Client`] used by tests, benches, and examples.
+//!
+//! Every frame is `[len: u32 LE][payload: len bytes]` with `len` capped
+//! at [`MAX_FRAME`].  Request payloads open with an op byte; response
+//! payloads open with a status byte (0 = OK, 1 = error) so a malformed
+//! request is answered with an error *frame* — framing survives and the
+//! connection stays usable.
+//!
+//! ```text
+//! SCORE  1 | name_len u16 | name | version u32 | n u32 | d u32 | n·d f64
+//! LOAD   2 | name_len u16 | name | version u32 | path_len u16 | path
+//! EVICT  3 | name_len u16 | name | version u32
+//! STATS  4
+//! LIST   5
+//!
+//! OK     0 | kind u8 — 0: n u32 + n f64 scores · 1: ack · 2: UTF-8 JSON
+//! ERR    1 | UTF-8 message
+//! ```
+//!
+//! All integers and floats are little-endian, matching the `SRBOMD01`
+//! and `SRBOFS01` file formats.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::bail;
+use crate::util::error::{Context, Result};
+use crate::util::Mat;
+
+/// Hard ceiling on one frame (64 MiB) — a length word above this is a
+/// protocol violation, not a large request.
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+pub const OP_SCORE: u8 = 1;
+pub const OP_LOAD: u8 = 2;
+pub const OP_EVICT: u8 = 3;
+pub const OP_STATS: u8 = 4;
+pub const OP_LIST: u8 = 5;
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+
+const KIND_SCORES: u8 = 0;
+const KIND_ACK: u8 = 1;
+const KIND_TEXT: u8 = 2;
+
+/// A decoded client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Score the rows of `x` against model `name@version`.
+    Score { name: String, version: u32, x: Mat },
+    /// Load a `SRBOMD01` file into the registry as `name@version`.
+    Load { name: String, version: u32, path: String },
+    /// Drop `name@version` from the registry.
+    Evict { name: String, version: u32 },
+    /// Telemetry snapshot (JSON).
+    Stats,
+    /// Registry contents (JSON).
+    List,
+}
+
+/// A decoded server response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// One decision score per request row, in request order.
+    Scores(Vec<f64>),
+    /// LOAD/EVICT acknowledged.
+    Ack,
+    /// STATS/LIST payload (JSON text).
+    Text(String),
+    /// The request was rejected; the connection remains usable.
+    Error(String),
+}
+
+// ---------------------------------------------------------------- encoding
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize);
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Score { name, version, x } => {
+            out.push(OP_SCORE);
+            put_str16(&mut out, name);
+            out.extend_from_slice(&version.to_le_bytes());
+            out.extend_from_slice(&(x.rows as u32).to_le_bytes());
+            out.extend_from_slice(&(x.cols as u32).to_le_bytes());
+            for v in &x.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Request::Load { name, version, path } => {
+            out.push(OP_LOAD);
+            put_str16(&mut out, name);
+            out.extend_from_slice(&version.to_le_bytes());
+            put_str16(&mut out, path);
+        }
+        Request::Evict { name, version } => {
+            out.push(OP_EVICT);
+            put_str16(&mut out, name);
+            out.extend_from_slice(&version.to_le_bytes());
+        }
+        Request::Stats => out.push(OP_STATS),
+        Request::List => out.push(OP_LIST),
+    }
+    out
+}
+
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    match resp {
+        Response::Scores(s) => {
+            out.push(STATUS_OK);
+            out.push(KIND_SCORES);
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            for v in s {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Response::Ack => {
+            out.push(STATUS_OK);
+            out.push(KIND_ACK);
+        }
+        Response::Text(t) => {
+            out.push(STATUS_OK);
+            out.push(KIND_TEXT);
+            out.extend_from_slice(t.as_bytes());
+        }
+        Response::Error(msg) => {
+            out.push(STATUS_ERR);
+            out.extend_from_slice(msg.as_bytes());
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- decoding
+
+/// Bounds-checked cursor over a request/response payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).unwrap_or(usize::MAX);
+        if end > self.b.len() {
+            bail!("truncated payload: wanted {n} bytes at offset {}, have {}", self.pos, self.b.len());
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).ok().context("string field is not UTF-8")
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let raw = self.take(n.checked_mul(8).context("float block size overflows")?)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!("payload carries {} trailing bytes", self.b.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut c = Cur::new(payload);
+    let op = c.u8().context("empty request payload")?;
+    let req = match op {
+        OP_SCORE => {
+            let name = c.str16()?;
+            let version = c.u32()?;
+            let n = c.u32()? as usize;
+            let d = c.u32()? as usize;
+            if n == 0 || d == 0 {
+                bail!("score request needs n ≥ 1 rows and d ≥ 1 features (got {n}×{d})");
+            }
+            let count = n.checked_mul(d).context("score request dims overflow")?;
+            let data = c.f64s(count)?;
+            if let Some(k) = data.iter().position(|v| !v.is_finite()) {
+                bail!("score request has a non-finite feature at row {}, column {}", k / d, k % d);
+            }
+            Request::Score { name, version, x: Mat { rows: n, cols: d, data } }
+        }
+        OP_LOAD => {
+            let name = c.str16()?;
+            let version = c.u32()?;
+            let path = c.str16()?;
+            Request::Load { name, version, path }
+        }
+        OP_EVICT => Request::Evict { name: c.str16()?, version: c.u32()? },
+        OP_STATS => Request::Stats,
+        OP_LIST => Request::List,
+        other => bail!("unknown request op {other}"),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+pub fn decode_response(payload: &[u8]) -> Result<Response> {
+    let mut c = Cur::new(payload);
+    let status = c.u8().context("empty response payload")?;
+    if status == STATUS_ERR {
+        let msg = String::from_utf8_lossy(&payload[1..]).into_owned();
+        return Ok(Response::Error(msg));
+    }
+    if status != STATUS_OK {
+        bail!("unknown response status {status}");
+    }
+    match c.u8()? {
+        KIND_SCORES => {
+            let n = c.u32()? as usize;
+            let s = c.f64s(n)?;
+            c.finish()?;
+            Ok(Response::Scores(s))
+        }
+        KIND_ACK => {
+            c.finish()?;
+            Ok(Response::Ack)
+        }
+        KIND_TEXT => Ok(Response::Text(
+            String::from_utf8_lossy(&payload[2..]).into_owned(),
+        )),
+        other => bail!("unknown response kind {other}"),
+    }
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Write one `[len u32 LE][payload]` frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME as usize);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Blocking frame read.  `Ok(None)` is a clean EOF at a frame boundary;
+/// an EOF mid-frame or a length word above [`MAX_FRAME`] is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match r.read(&mut len) {
+        Ok(0) => return Ok(None),
+        Ok(n) => r.read_exact(&mut len[n..])?,
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------- client
+
+/// Blocking client for one server connection.  Sequential
+/// request/response per connection; open more clients for concurrency.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect to serve endpoint {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream })
+    }
+
+    /// One request/response round trip.
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        self.roundtrip(&encode_request(req))
+            .and_then(|p| decode_response(&p))
+    }
+
+    /// Send a raw payload (possibly malformed — used by the protocol
+    /// tests) and return the raw response payload.
+    pub fn roundtrip(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, payload).context("send request frame")?;
+        read_frame(&mut self.stream)
+            .context("read response frame")?
+            .context("server closed the connection")
+    }
+
+    /// Score `x` against `name@version`; an error frame becomes `Err`.
+    pub fn score(&mut self, name: &str, version: u32, x: &Mat) -> Result<Vec<f64>> {
+        let req = Request::Score { name: name.to_string(), version, x: x.clone() };
+        match self.request(&req)? {
+            Response::Scores(s) => Ok(s),
+            Response::Error(e) => bail!("server rejected score request: {e}"),
+            other => bail!("unexpected response {other:?} to score request"),
+        }
+    }
+
+    pub fn load(&mut self, name: &str, version: u32, path: &str) -> Result<()> {
+        let req = Request::Load {
+            name: name.to_string(),
+            version,
+            path: path.to_string(),
+        };
+        match self.request(&req)? {
+            Response::Ack => Ok(()),
+            Response::Error(e) => bail!("server rejected load request: {e}"),
+            other => bail!("unexpected response {other:?} to load request"),
+        }
+    }
+
+    pub fn evict(&mut self, name: &str, version: u32) -> Result<()> {
+        let req = Request::Evict { name: name.to_string(), version };
+        match self.request(&req)? {
+            Response::Ack => Ok(()),
+            Response::Error(e) => bail!("server rejected evict request: {e}"),
+            other => bail!("unexpected response {other:?} to evict request"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        match self.request(&Request::Stats)? {
+            Response::Text(t) => Ok(t),
+            other => bail!("unexpected response {other:?} to stats request"),
+        }
+    }
+
+    pub fn list(&mut self) -> Result<String> {
+        match self.request(&Request::List)? {
+            Response::Text(t) => Ok(t),
+            other => bail!("unexpected response {other:?} to list request"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{run_cases, Gen};
+
+    #[test]
+    fn score_request_roundtrips_bit_for_bit() {
+        run_cases(16, 0x51E1, |g| {
+            let n = g.usize(1, 12);
+            let d = g.usize(1, 9);
+            let x = Mat {
+                rows: n,
+                cols: d,
+                data: g.vec_f64(n * d, -5.0, 5.0),
+            };
+            let req = Request::Score { name: "m".into(), version: g.usize(0, 9) as u32, x };
+            let back = decode_request(&encode_request(&req)).unwrap();
+            match (&req, &back) {
+                (
+                    Request::Score { name: an, version: av, x: ax },
+                    Request::Score { name: bn, version: bv, x: bx },
+                ) => {
+                    assert_eq!(an, bn);
+                    assert_eq!(av, bv);
+                    assert_eq!((ax.rows, ax.cols), (bx.rows, bx.cols));
+                    for (a, b) in ax.data.iter().zip(&bx.data) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                _ => panic!("decoded to a different variant"),
+            }
+        });
+    }
+
+    #[test]
+    fn control_requests_roundtrip() {
+        let cases = [
+            Request::Load { name: "a".into(), version: 3, path: "/tmp/a.mdl".into() },
+            Request::Evict { name: "a".into(), version: 3 },
+            Request::Stats,
+            Request::List,
+        ];
+        for req in &cases {
+            let back = decode_request(&encode_request(req)).unwrap();
+            assert_eq!(format!("{req:?}"), format!("{back:?}"));
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let cases = [
+            Response::Scores(vec![1.5, -2.25, 0.0]),
+            Response::Ack,
+            Response::Text("{\"requests\":3}".into()),
+            Response::Error("unknown model".into()),
+        ];
+        for resp in &cases {
+            assert_eq!(&decode_response(&encode_response(resp)).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_error_instead_of_panicking() {
+        // empty payload
+        assert!(decode_request(&[]).is_err());
+        // unknown op
+        assert!(decode_request(&[9]).unwrap_err().msg().contains("unknown request op"));
+        // truncated mid-header
+        let good = encode_request(&Request::Evict { name: "model".into(), version: 1 });
+        assert!(decode_request(&good[..4]).unwrap_err().msg().contains("truncated"));
+        // trailing garbage
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode_request(&bad).unwrap_err().msg().contains("trailing"));
+        // zero-row score
+        let zero = Request::Score { name: "m".into(), version: 0, x: Mat::zeros(0, 3) };
+        assert!(decode_request(&encode_request(&zero)).is_err());
+        // non-finite feature
+        let nan = Request::Score {
+            name: "m".into(),
+            version: 0,
+            x: Mat { rows: 1, cols: 1, data: vec![f64::NAN] },
+        };
+        assert!(decode_request(&encode_request(&nan)).unwrap_err().msg().contains("non-finite"));
+    }
+
+    #[test]
+    fn frames_roundtrip_and_cap_is_enforced() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none());
+
+        let mut oversized = Vec::new();
+        oversized.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let e = read_frame(&mut &oversized[..]).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+}

@@ -1,0 +1,234 @@
+//! Multi-model registry: resident [`ServableModel`]s keyed by
+//! `name@version`, loaded from `SRBOMD01` files and evictable at
+//! runtime.
+//!
+//! A servable model hoists its squared SV norms once at admission (the
+//! stored block when the file carries one, [`row_norms`] otherwise —
+//! identical bits either way), so every request batch pays exactly one
+//! rectangular Gram pass over the batch rows and a matvec.  That scoring
+//! path is pinned bit-identical to per-sample [`KernelModel::decision`]
+//! by the conformance test in this module and the end-to-end suite in
+//! `tests/serve.rs`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+use crate::bail;
+use crate::kernel::gram::{cross_gram_hoisted_threaded, row_norms};
+use crate::svm::model_io::{ModelFamily, SavedModel};
+use crate::svm::KernelModel;
+use crate::util::error::Result;
+use crate::util::tsv::Json;
+use crate::util::Mat;
+
+/// A model admitted for serving: the kernel expansion plus its hoisted
+/// squared SV norms.
+pub struct ServableModel {
+    pub name: String,
+    pub version: u32,
+    pub family: ModelFamily,
+    pub model: KernelModel,
+    sv_norms: Vec<f64>,
+}
+
+impl ServableModel {
+    pub fn new(name: &str, version: u32, saved: SavedModel) -> ServableModel {
+        let sv_norms = saved.sv_norms();
+        ServableModel {
+            name: name.to_string(),
+            version,
+            family: saved.family,
+            model: saved.model,
+            sv_norms,
+        }
+    }
+
+    /// Wrap an in-memory expansion directly (norms hoisted here).
+    pub fn from_model(name: &str, version: u32, family: ModelFamily, model: KernelModel) -> Self {
+        let sv_norms = row_norms(&model.sv);
+        ServableModel { name: name.to_string(), version, family, model, sv_norms }
+    }
+
+    /// Feature dimension requests must match.
+    pub fn dim(&self) -> usize {
+        self.model.sv.cols
+    }
+
+    /// Batched decision scores: ONE rectangular Gram block K(x, sv)
+    /// through the blocked micro-kernel (sharded over `threads`
+    /// workers), one matvec, one threshold subtraction — bit-identical
+    /// to [`KernelModel::decision`] row by row.
+    pub fn score(&self, x: &Mat, threads: usize) -> Result<Vec<f64>> {
+        if x.cols != self.dim() {
+            bail!(
+                "model {}@{} expects {} features per row, request has {}",
+                self.name, self.version, self.dim(), x.cols
+            );
+        }
+        let k = cross_gram_hoisted_threaded(x, &self.model.sv, &self.sv_norms, self.model.kernel, threads);
+        let mut out = vec![0.0; x.rows];
+        k.matvec(&self.model.coef, &mut out);
+        for o in &mut out {
+            *o -= self.model.threshold;
+        }
+        Ok(out)
+    }
+}
+
+/// Thread-safe `name@version → model` map shared by every connection.
+#[derive(Default)]
+pub struct Registry {
+    models: RwLock<HashMap<(String, u32), Arc<ServableModel>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Admit (or replace) a model under its `name@version` key.
+    pub fn insert(&self, model: ServableModel) {
+        let key = (model.name.clone(), model.version);
+        self.models.write().unwrap().insert(key, Arc::new(model));
+    }
+
+    /// Load a `SRBOMD01` file (fully validated) and admit it.
+    pub fn load_file(&self, name: &str, version: u32, path: &Path) -> Result<()> {
+        let saved = SavedModel::load(path)?;
+        self.insert(ServableModel::new(name, version, saved));
+        Ok(())
+    }
+
+    /// Drop a model; `false` when it was not registered.
+    pub fn evict(&self, name: &str, version: u32) -> bool {
+        self.models.write().unwrap().remove(&(name.to_string(), version)).is_some()
+    }
+
+    pub fn get(&self, name: &str, version: u32) -> Option<Arc<ServableModel>> {
+        self.models.read().unwrap().get(&(name.to_string(), version)).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registry contents as a JSON array (the LIST response body),
+    /// sorted by key for stable output.
+    pub fn list_json(&self) -> Json {
+        let map = self.models.read().unwrap();
+        let mut rows: Vec<&Arc<ServableModel>> = map.values().collect();
+        rows.sort_by(|a, b| (&a.name, a.version).cmp(&(&b.name, b.version)));
+        Json::Arr(
+            rows.iter()
+                .map(|m| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(m.name.clone())),
+                        ("version".into(), Json::Num(m.version as f64)),
+                        ("family".into(), Json::Str(m.family.name().into())),
+                        ("kernel".into(), Json::Str(m.model.kernel.name().into())),
+                        ("sv".into(), Json::Num(m.model.sv.rows as f64)),
+                        ("dim".into(), Json::Num(m.dim() as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelKind;
+    use crate::prop::{run_cases, Gen};
+
+    fn random_servable(g: &mut Gen, name: &str, version: u32) -> ServableModel {
+        let m = g.usize(1, 20);
+        let d = g.usize(1, 8);
+        let rows: Vec<Vec<f64>> = (0..m).map(|_| g.vec_f64(d, -2.0, 2.0)).collect();
+        let kernel = if g.bool() {
+            KernelKind::Linear
+        } else {
+            KernelKind::Rbf { gamma: g.f64(0.1, 2.0) }
+        };
+        let model = KernelModel {
+            kernel,
+            sv: Mat::from_rows(&rows),
+            coef: g.vec_f64(m, -1.0, 1.0),
+            threshold: if g.bool() { g.f64(-0.5, 0.5) } else { 0.0 },
+        };
+        let family = if g.bool() { ModelFamily::Supervised } else { ModelFamily::OneClass };
+        ServableModel::from_model(name, version, family, model)
+    }
+
+    #[test]
+    fn batched_score_matches_decision_bit_for_bit() {
+        run_cases(12, 0x5E4E, |g| {
+            let m = random_servable(g, "m", 1);
+            let n = g.usize(1, 16);
+            let x = Mat::from_rows(
+                &(0..n).map(|_| g.vec_f64(m.dim(), -3.0, 3.0)).collect::<Vec<_>>(),
+            );
+            let direct = m.model.decision(&x);
+            for threads in [1, 3] {
+                let served = m.score(&x, threads).unwrap();
+                for (a, b) in served.iter().zip(&direct) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "served score drifted from decision");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn score_rejects_dimension_mismatch() {
+        let mut g = Gen::new(7);
+        let m = random_servable(&mut g, "m", 1);
+        let x = Mat::zeros(2, m.dim() + 1);
+        let e = m.score(&x, 1).unwrap_err();
+        assert!(e.msg().contains("features per row"), "{e}");
+    }
+
+    #[test]
+    fn registry_insert_get_evict() {
+        let mut g = Gen::new(8);
+        let reg = Registry::new();
+        assert!(reg.is_empty());
+        reg.insert(random_servable(&mut g, "a", 1));
+        reg.insert(random_servable(&mut g, "a", 2));
+        reg.insert(random_servable(&mut g, "b", 1));
+        assert_eq!(reg.len(), 3);
+        assert!(reg.get("a", 1).is_some());
+        assert!(reg.get("a", 3).is_none());
+        // replacement under the same key keeps one entry
+        reg.insert(random_servable(&mut g, "a", 1));
+        assert_eq!(reg.len(), 3);
+        assert!(reg.evict("a", 1));
+        assert!(!reg.evict("a", 1));
+        assert_eq!(reg.len(), 2);
+        let listed = reg.list_json().render();
+        assert!(listed.contains("\"name\":\"a\"") && listed.contains("\"version\":2"));
+    }
+
+    #[test]
+    fn load_file_roundtrips_through_disk() {
+        let mut g = Gen::new(9);
+        let m = random_servable(&mut g, "disk", 1);
+        let saved = SavedModel::new(m.family, m.model.clone()).with_stored_norms();
+        let path = std::env::temp_dir()
+            .join(format!("srbo-reg-{}.mdl", std::process::id()));
+        saved.save(&path).unwrap();
+        let reg = Registry::new();
+        reg.load_file("disk", 1, &path).unwrap();
+        let loaded = reg.get("disk", 1).unwrap();
+        let x = Mat::from_rows(&[(0..loaded.dim()).map(|i| i as f64).collect::<Vec<_>>()]);
+        let a = loaded.score(&x, 1).unwrap();
+        let b = m.model.decision(&x);
+        assert_eq!(a[0].to_bits(), b[0].to_bits());
+        assert!(reg.load_file("bad", 1, Path::new("/nonexistent/x.mdl")).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,467 @@
+//! The threaded TCP serving loop: acceptor + per-connection threads +
+//! one eval worker behind an admission/batching queue.
+//!
+//! Connection threads decode frames and answer control ops inline;
+//! score requests are enqueued as jobs.  The eval worker drains the
+//! whole queue at once and coalesces jobs that target the same model
+//! into ONE rectangular Gram pass (rows are independent in the blocked
+//! micro-kernel, so coalescing is bit-transparent), sharding that pass
+//! over `eval_threads` workers.  Under concurrent load the queue fills
+//! while a pass runs, so the next pass amortises per-batch overhead
+//! across every waiting request — classic admission batching without a
+//! timer.
+//!
+//! Shutdown is cooperative and panic-free: connection reads run under a
+//! short timeout and re-check the stop flag at frame boundaries; the
+//! acceptor is woken by a loopback connect; the eval worker is stopped
+//! only after every producer thread has been joined, so no queued job
+//! can be orphaned mid-request.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::protocol::{
+    decode_request, encode_response, write_frame, Request, Response, MAX_FRAME,
+};
+use super::registry::{Registry, ServableModel};
+use super::telemetry::Telemetry;
+use crate::util::error::{Context, Result};
+use crate::util::Mat;
+
+/// Serving knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Shards per coalesced Gram pass (defaults to the machine's
+    /// parallelism).
+    pub eval_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ServeConfig { eval_threads: cores }
+    }
+}
+
+/// One queued score request: the resolved model, the batch rows, and
+/// the channel carrying the result back to the connection thread.
+struct Job {
+    model: Arc<ServableModel>,
+    x: Mat,
+    tx: mpsc::Sender<Result<Vec<f64>>>,
+}
+
+/// The admission queue (jobs + wakeup for the eval worker).
+#[derive(Default)]
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    wake: Condvar,
+}
+
+/// A running server.  Dropping it (or calling [`Server::shutdown`])
+/// stops the acceptor, joins every connection thread, then stops the
+/// eval worker — in that order, so in-flight requests complete.
+pub struct Server {
+    /// The bound address (ephemeral port resolved).
+    pub addr: std::net::SocketAddr,
+    registry: Arc<Registry>,
+    telemetry: Arc<Telemetry>,
+    stop: Arc<AtomicBool>,
+    eval_stop: Arc<AtomicBool>,
+    queue: Arc<Queue>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    eval: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start serving
+    /// the given registry.
+    pub fn bind(addr: &str, registry: Arc<Registry>, cfg: ServeConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind serve endpoint {addr}"))?;
+        let local = listener.local_addr().context("resolve bound address")?;
+        let telemetry = Arc::new(Telemetry::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let eval_stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(Queue::default());
+
+        let eval = {
+            let (queue, eval_stop, telemetry) = (queue.clone(), eval_stop.clone(), telemetry.clone());
+            let threads = cfg.eval_threads.max(1);
+            std::thread::spawn(move || eval_loop(&queue, &eval_stop, &telemetry, threads))
+        };
+        let acceptor = {
+            let (registry, telemetry) = (registry.clone(), telemetry.clone());
+            let (stop, queue) = (stop.clone(), queue.clone());
+            std::thread::spawn(move || {
+                accept_loop(listener, &registry, &telemetry, &queue, &stop)
+            })
+        };
+        Ok(Server {
+            addr: local,
+            registry,
+            telemetry,
+            stop,
+            eval_stop,
+            queue,
+            acceptor: Some(acceptor),
+            eval: Some(eval),
+        })
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    /// Stop accepting, drain in-flight requests, join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking acceptor; it drops the dummy connection,
+        // then joins its connection threads before returning.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // Every producer is gone — now the eval worker may exit once
+        // the queue is dry (it already is: each job's producer blocked
+        // on the result before exiting).
+        self.eval_stop.store(true, Ordering::SeqCst);
+        self.queue.wake.notify_all();
+        if let Some(h) = self.eval.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+// ------------------------------------------------------------ eval worker
+
+/// Drain-all batching loop: every pass takes the whole queue, groups
+/// jobs by target model, and runs one sharded Gram pass per group.
+fn eval_loop(queue: &Queue, stop: &AtomicBool, telemetry: &Telemetry, threads: usize) {
+    loop {
+        let drained: Vec<Job> = {
+            let mut jobs = queue.jobs.lock().unwrap();
+            while jobs.is_empty() {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = queue
+                    .wake
+                    .wait_timeout(jobs, Duration::from_millis(50))
+                    .unwrap();
+                jobs = guard;
+            }
+            jobs.drain(..).collect()
+        };
+        // group by model identity, preserving arrival order
+        let mut groups: Vec<(Arc<ServableModel>, Vec<Job>)> = Vec::new();
+        for job in drained {
+            match groups.iter_mut().find(|(m, _)| Arc::ptr_eq(m, &job.model)) {
+                Some((_, g)) => g.push(job),
+                None => groups.push((job.model.clone(), vec![job])),
+            }
+        }
+        for (model, jobs) in groups {
+            telemetry.batch_evaluated(jobs.len());
+            evaluate_group(&model, jobs, threads);
+        }
+    }
+}
+
+/// One coalesced pass: concatenate the group's rows, score once, split
+/// the results back per job (row order in == row order out, and rows
+/// are independent, so results are bit-identical to per-job scoring).
+fn evaluate_group(model: &ServableModel, jobs: Vec<Job>, threads: usize) {
+    let d = model.dim();
+    let total: usize = jobs.iter().map(|j| j.x.rows).sum();
+    let mut all = Mat::zeros(total, d);
+    let mut at = 0;
+    for job in &jobs {
+        all.data[at * d..(at + job.x.rows) * d].copy_from_slice(&job.x.data);
+        at += job.x.rows;
+    }
+    let scored = model.score(&all, threads);
+    match scored {
+        Ok(scores) => {
+            let mut at = 0;
+            for job in jobs {
+                let slice = scores[at..at + job.x.rows].to_vec();
+                at += job.x.rows;
+                let _ = job.tx.send(Ok(slice));
+            }
+        }
+        Err(e) => {
+            for job in jobs {
+                let _ = job.tx.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- acceptor
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: &Arc<Registry>,
+    telemetry: &Arc<Telemetry>,
+    queue: &Arc<Queue>,
+    stop: &Arc<AtomicBool>,
+) {
+    let mut conns = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::SeqCst) {
+                    break; // the shutdown wake-up connect
+                }
+                let (registry, telemetry) = (registry.clone(), telemetry.clone());
+                let (queue, stop) = (queue.clone(), stop.clone());
+                conns.push(std::thread::spawn(move || {
+                    handle_conn(stream, &registry, &telemetry, &queue, &stop)
+                }));
+            }
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+// ------------------------------------------------------------ connection
+
+/// Outcome of one interruptible frame read.
+enum FrameRead {
+    Frame(Vec<u8>),
+    /// Clean EOF at a frame boundary, or server shutdown.
+    Closed,
+    /// The peer sent a length word above [`MAX_FRAME`] — answer an
+    /// error frame, then drop (framing is unrecoverable).
+    Oversized(u32),
+    /// Mid-frame EOF or a hard socket error.
+    Broken,
+}
+
+/// `read_exact` that tolerates the read timeout used for shutdown
+/// polling: timeouts re-check `stop`; partial progress is kept so frame
+/// sync survives slow writers.  Returns `false` on EOF-before-any-byte
+/// or shutdown.
+fn read_exact_interruptible(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Option<bool> {
+    use std::io::Read;
+    let mut filled = 0;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return if filled == 0 { Some(false) } else { None },
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    return Some(false);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return None,
+        }
+    }
+    Some(true)
+}
+
+fn read_frame_interruptible(stream: &mut TcpStream, stop: &AtomicBool) -> FrameRead {
+    let mut len = [0u8; 4];
+    match read_exact_interruptible(stream, &mut len, stop) {
+        Some(true) => {}
+        Some(false) => return FrameRead::Closed,
+        None => return FrameRead::Broken,
+    }
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return FrameRead::Oversized(len);
+    }
+    let mut payload = vec![0u8; len as usize];
+    match read_exact_interruptible(stream, &mut payload, stop) {
+        Some(true) => FrameRead::Frame(payload),
+        _ => FrameRead::Broken,
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    registry: &Registry,
+    telemetry: &Telemetry,
+    queue: &Queue,
+    stop: &AtomicBool,
+) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(Duration::from_millis(100))).is_err() {
+        return;
+    }
+    loop {
+        let payload = match read_frame_interruptible(&mut stream, stop) {
+            FrameRead::Frame(p) => p,
+            FrameRead::Closed | FrameRead::Broken => return,
+            FrameRead::Oversized(len) => {
+                telemetry.error();
+                let resp = Response::Error(format!(
+                    "frame length {len} exceeds the {MAX_FRAME}-byte cap"
+                ));
+                let _ = write_frame(&mut stream, &encode_response(&resp));
+                return;
+            }
+        };
+        let resp = match decode_request(&payload) {
+            Ok(req) => dispatch(req, registry, telemetry, queue),
+            Err(e) => Response::Error(format!("malformed request: {e}")),
+        };
+        if matches!(resp, Response::Error(_)) {
+            telemetry.error();
+        }
+        if write_frame(&mut stream, &encode_response(&resp)).is_err() {
+            return;
+        }
+    }
+}
+
+fn dispatch(req: Request, registry: &Registry, telemetry: &Telemetry, queue: &Queue) -> Response {
+    match req {
+        Request::Score { name, version, x } => {
+            let model = match registry.get(&name, version) {
+                Some(m) => m,
+                None => return Response::Error(format!("unknown model {name}@{version}")),
+            };
+            if x.cols != model.dim() {
+                return Response::Error(format!(
+                    "model {name}@{version} expects {} features per row, request has {}",
+                    model.dim(),
+                    x.cols
+                ));
+            }
+            let rows = x.rows;
+            let t0 = Instant::now();
+            telemetry.request_enqueued();
+            let (tx, rx) = mpsc::channel();
+            queue.jobs.lock().unwrap().push_back(Job { model, x, tx });
+            queue.wake.notify_one();
+            match rx.recv() {
+                Ok(Ok(scores)) => {
+                    telemetry.request_done(rows, t0.elapsed().as_secs_f64());
+                    Response::Scores(scores)
+                }
+                Ok(Err(e)) => {
+                    telemetry.request_done(rows, t0.elapsed().as_secs_f64());
+                    Response::Error(format!("evaluation failed: {e}"))
+                }
+                Err(_) => {
+                    telemetry.request_done(rows, t0.elapsed().as_secs_f64());
+                    Response::Error("server shutting down".to_string())
+                }
+            }
+        }
+        Request::Load { name, version, path } => {
+            match registry.load_file(&name, version, Path::new(&path)) {
+                Ok(()) => Response::Ack,
+                Err(e) => Response::Error(format!("load failed: {e}")),
+            }
+        }
+        Request::Evict { name, version } => {
+            if registry.evict(&name, version) {
+                Response::Ack
+            } else {
+                Response::Error(format!("unknown model {name}@{version}"))
+            }
+        }
+        Request::Stats => Response::Text(telemetry.snapshot().to_json().render()),
+        Request::List => Response::Text(registry.list_json().render()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelKind;
+    use crate::prop::Gen;
+    use crate::serve::protocol::Client;
+    use crate::svm::model_io::ModelFamily;
+    use crate::svm::KernelModel;
+
+    fn servable(g: &mut Gen, name: &str, version: u32) -> ServableModel {
+        let (m, d) = (g.usize(2, 12), g.usize(1, 5));
+        let rows: Vec<Vec<f64>> = (0..m).map(|_| g.vec_f64(d, -2.0, 2.0)).collect();
+        let model = KernelModel {
+            kernel: KernelKind::Rbf { gamma: g.f64(0.2, 1.5) },
+            sv: Mat::from_rows(&rows),
+            coef: g.vec_f64(m, -1.0, 1.0),
+            threshold: 0.0,
+        };
+        ServableModel::from_model(name, version, ModelFamily::Supervised, model)
+    }
+
+    #[test]
+    fn serves_scores_and_control_ops_on_a_loopback_socket() {
+        let mut g = Gen::new(0x5EB1);
+        let registry = Arc::new(Registry::new());
+        let sv = servable(&mut g, "m", 1);
+        let direct = sv.model.clone();
+        registry.insert(sv);
+        let server =
+            Server::bind("127.0.0.1:0", registry, ServeConfig { eval_threads: 2 }).unwrap();
+        let addr = server.addr.to_string();
+
+        let mut client = Client::connect(&addr).unwrap();
+        let x = Mat::from_rows(
+            &(0..5).map(|_| g.vec_f64(direct.sv.cols, -2.0, 2.0)).collect::<Vec<_>>(),
+        );
+        let served = client.score("m", 1, &x).unwrap();
+        let want = direct.decision(&x);
+        for (a, b) in served.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // unknown model → error frame, connection survives
+        assert!(client.score("nope", 1, &x).is_err());
+        assert!(client.score("m", 1, &x).is_ok());
+        // stats + list are JSON
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("\"requests\":"), "{stats}");
+        let list = client.list().unwrap();
+        assert!(list.contains("\"name\":\"m\""), "{list}");
+        // evict, then scoring fails
+        client.evict("m", 1).unwrap();
+        assert!(client.score("m", 1, &x).is_err());
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_idle_connections_is_clean() {
+        let registry = Arc::new(Registry::new());
+        let server = Server::bind("127.0.0.1:0", registry, ServeConfig::default()).unwrap();
+        let addr = server.addr.to_string();
+        let _idle1 = Client::connect(&addr).unwrap();
+        let _idle2 = Client::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        server.shutdown(); // joins acceptor + conn threads without hanging
+    }
+}

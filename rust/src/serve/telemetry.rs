@@ -1,0 +1,215 @@
+//! Serving telemetry: lock-free counters plus a bounded latency ring,
+//! snapshotted into the same JSON style as the `BENCH_*.json` reports.
+//!
+//! Counters are `AtomicU64` (incremented from connection and eval
+//! threads); per-request latencies land in a fixed-capacity ring guarded
+//! by a mutex held only for one push or one snapshot copy, so the hot
+//! path never blocks behind a reader.  Percentiles are nearest-rank over
+//! the ring contents (the most recent [`LAT_RING_CAP`] requests).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::tsv::Json;
+
+/// Latency samples retained for percentile estimates.
+pub const LAT_RING_CAP: usize = 4096;
+
+/// Shared telemetry handle (one per server).
+#[derive(Default)]
+pub struct Telemetry {
+    requests: AtomicU64,
+    samples: AtomicU64,
+    batches: AtomicU64,
+    coalesced: AtomicU64,
+    errors: AtomicU64,
+    queue_depth: AtomicU64,
+    queue_peak: AtomicU64,
+    lat: Mutex<Ring>,
+}
+
+#[derive(Default)]
+struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Ring {
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < LAT_RING_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % LAT_RING_CAP;
+        }
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// A score request entered the admission queue.
+    pub fn request_enqueued(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// A score request left the queue with its result after `secs`.
+    pub fn request_done(&self, rows: usize, secs: f64) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        self.samples.fetch_add(rows as u64, Ordering::Relaxed);
+        self.lat.lock().unwrap().push(secs);
+    }
+
+    /// The eval worker ran one coalesced Gram pass covering
+    /// `requests_in_batch` queued requests.
+    pub fn batch_evaluated(&self, requests_in_batch: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.coalesced.fetch_add(requests_in_batch as u64, Ordering::Relaxed);
+    }
+
+    /// Any request answered with an error frame.
+    pub fn error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Stats {
+        let lats: Vec<f64> = self.lat.lock().unwrap().buf.clone();
+        let (p50, p99, max) = percentiles(&lats);
+        Stats {
+            requests: self.requests.load(Ordering::Relaxed),
+            samples: self.samples.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_peak: self.queue_peak.load(Ordering::Relaxed),
+            p50_ms: p50 * 1e3,
+            p99_ms: p99 * 1e3,
+            max_ms: max * 1e3,
+        }
+    }
+}
+
+/// Nearest-rank p50/p99 and the max over a sample set (zeros when
+/// empty).
+fn percentiles(samples: &[f64]) -> (f64, f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = |q: f64| {
+        let k = ((q / 100.0) * s.len() as f64).ceil() as usize;
+        s[k.clamp(1, s.len()) - 1]
+    };
+    (rank(50.0), rank(99.0), s[s.len() - 1])
+}
+
+/// One consistent telemetry snapshot (the STATS response body).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stats {
+    /// Score requests admitted to the queue.
+    pub requests: u64,
+    /// Total rows scored across all requests.
+    pub samples: u64,
+    /// Coalesced Gram passes run by the eval worker.
+    pub batches: u64,
+    /// Requests covered by those passes (≥ batches when coalescing).
+    pub coalesced: u64,
+    /// Requests answered with an error frame.
+    pub errors: u64,
+    /// Requests in flight right now.
+    pub queue_depth: u64,
+    /// High-water queue depth.
+    pub queue_peak: u64,
+    /// Median request latency (queue admission → result ready).
+    pub p50_ms: f64,
+    /// 99th-percentile request latency.
+    pub p99_ms: f64,
+    /// Worst request latency in the ring.
+    pub max_ms: f64,
+}
+
+impl Stats {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("requests".into(), Json::Num(self.requests as f64)),
+            ("samples".into(), Json::Num(self.samples as f64)),
+            ("batches".into(), Json::Num(self.batches as f64)),
+            ("coalesced".into(), Json::Num(self.coalesced as f64)),
+            ("errors".into(), Json::Num(self.errors as f64)),
+            ("queue_depth".into(), Json::Num(self.queue_depth as f64)),
+            ("queue_peak".into(), Json::Num(self.queue_peak as f64)),
+            ("p50_ms".into(), Json::Num(self.p50_ms)),
+            ("p99_ms".into(), Json::Num(self.p99_ms)),
+            ("max_ms".into(), Json::Num(self.max_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let (p50, p99, max) = percentiles(&s);
+        assert_eq!(p50, 50.0);
+        assert_eq!(p99, 99.0);
+        assert_eq!(max, 100.0);
+        assert_eq!(percentiles(&[]), (0.0, 0.0, 0.0));
+        assert_eq!(percentiles(&[2.5]), (2.5, 2.5, 2.5));
+    }
+
+    #[test]
+    fn counters_and_queue_peak_track() {
+        let t = Telemetry::new();
+        t.request_enqueued();
+        t.request_enqueued();
+        t.request_enqueued();
+        t.batch_evaluated(3);
+        t.request_done(4, 0.001);
+        t.request_done(2, 0.003);
+        t.request_done(1, 0.002);
+        t.error();
+        let s = t.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.samples, 7);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.coalesced, 3);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.queue_peak, 3);
+        assert_eq!(s.p50_ms, 2.0);
+        assert_eq!(s.max_ms, 3.0);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let t = Telemetry::new();
+        for i in 0..(LAT_RING_CAP + 100) {
+            t.request_enqueued();
+            t.request_done(1, i as f64);
+        }
+        let lats = t.lat.lock().unwrap().buf.clone();
+        assert_eq!(lats.len(), LAT_RING_CAP);
+        // the 100 oldest samples (0..100) were overwritten
+        assert!(lats.iter().all(|&v| v >= 100.0));
+        let s = t.snapshot();
+        assert_eq!(s.requests as usize, LAT_RING_CAP + 100);
+    }
+
+    #[test]
+    fn stats_render_json_schema() {
+        let s = Telemetry::new().snapshot();
+        let j = s.to_json().render();
+        for key in ["requests", "batches", "errors", "queue_peak", "p50_ms", "p99_ms"] {
+            assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
+        }
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod c;
 pub mod kde;
+pub mod model_io;
 pub mod nu;
 pub mod oneclass;
 

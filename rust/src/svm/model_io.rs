@@ -1,0 +1,511 @@
+//! Versioned on-disk model format for production serving: a trained
+//! [`KernelModel`] (either family) ships as a single `SRBOMD01` file the
+//! serve layer can load, validate, and score against without retraining.
+//!
+//! Screening's payoff at serving time is exactly this artifact being
+//! small: the SV set the path engine converges to is a fraction of the
+//! training data, so a model is cheap to ship and cheap to score
+//! (one rectangular Gram pass per request batch).
+//!
+//! # On-disk layout (`.mdl`, all integers/floats little-endian)
+//!
+//! ```text
+//! offset  size      field
+//! 0       8         magic "SRBOMD01" ("SRBOMD" + 2-digit format version)
+//! 8       8         flags (u64; bit 0 = one-class family, bit 1 = RBF
+//!                   kernel, bit 2 = squared SV norms stored)
+//! 16      8         m  (support-vector rows, u64, ≥ 1)
+//! 24      8         d  (features per SV, u64, ≥ 1)
+//! 32      8         gamma (f64; RBF only — exactly 0.0 for linear)
+//! 40      8         threshold (f64; ρ* for one-class, 0 for ν/C-SVM)
+//! 48      8·m       coefficients coef_i = y_i α_i / α_i (f64)
+//! …       8·m       squared SV norms ‖sv_i‖² (f64; only when flagged)
+//! …       8·m·d     row-major SV feature rows (f64)
+//! ```
+//!
+//! [`SavedModel::load`] mirrors the [`FileStore`](crate::data::store)
+//! `SRBOFS01` discipline: magic, version, flags, header counts, the
+//! exact file size and every float's finiteness are validated before the
+//! model is trusted — truncated, corrupt, NaN-α, or trailing-garbage
+//! files surface a [`SrboError`](crate::util::error::SrboError) naming
+//! the offending path, never a panic (pinned by the property tests
+//! below).
+//!
+//! Stored norms are written from [`row_norms`] at save time — the same
+//! lane arithmetic as every kernel entry — so a server that hoists them
+//! once per model scores bit-identically to a fresh recompute.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use super::nu::NuSvm;
+use super::oneclass::OcSvm;
+use super::KernelModel;
+use crate::bail;
+use crate::kernel::gram::row_norms;
+use crate::kernel::KernelKind;
+use crate::util::error::{Context, Result};
+use crate::util::Mat;
+
+/// Magic bytes opening every saved-model file.
+pub const MODEL_MAGIC: [u8; 8] = *b"SRBOMD01";
+
+/// Fixed-size header bytes before the coefficient block.
+const HEADER_BYTES: u64 = 48;
+
+const FLAG_ONECLASS: u64 = 1;
+const FLAG_RBF: u64 = 2;
+const FLAG_NORMS: u64 = 4;
+
+/// Which decision semantics the expansion carries — a supervised
+/// ν/C-SVM (sgn of the score) or a one-class model (score < 0 ⇒
+/// outlier, threshold ρ* folded in).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelFamily {
+    Supervised,
+    OneClass,
+}
+
+impl ModelFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelFamily::Supervised => "supervised",
+            ModelFamily::OneClass => "one-class",
+        }
+    }
+}
+
+/// A model as serialized: the kernel expansion, its family, and
+/// (optionally) the squared SV norms precomputed at save time so an
+/// opening server skips the O(m·d) hoist pass.
+#[derive(Clone, Debug)]
+pub struct SavedModel {
+    pub family: ModelFamily,
+    pub model: KernelModel,
+    /// `Some` when the writer stored ‖sv_i‖² (header flag bit 2).
+    pub norms: Option<Vec<f64>>,
+}
+
+impl SavedModel {
+    /// Wrap a trained expansion (no stored norms).
+    pub fn new(family: ModelFamily, model: KernelModel) -> SavedModel {
+        SavedModel { family, model, norms: None }
+    }
+
+    /// A supervised ν-SVM ready to serialize.
+    pub fn from_nu(m: &NuSvm) -> SavedModel {
+        SavedModel::new(ModelFamily::Supervised, m.model.clone())
+    }
+
+    /// A one-class model ready to serialize (ρ* travels as the
+    /// threshold).
+    pub fn from_oneclass(m: &OcSvm) -> SavedModel {
+        SavedModel::new(ModelFamily::OneClass, m.model.clone())
+    }
+
+    /// Precompute and store the squared SV norms ([`row_norms`]
+    /// arithmetic, identical bits to any later recompute).
+    pub fn with_stored_norms(mut self) -> SavedModel {
+        self.norms = Some(row_norms(&self.model.sv));
+        self
+    }
+
+    /// The squared SV norms — stored when present, recomputed otherwise;
+    /// bit-identical either way because both sides use [`row_norms`].
+    pub fn sv_norms(&self) -> Vec<f64> {
+        match &self.norms {
+            Some(n) => n.clone(),
+            None => row_norms(&self.model.sv),
+        }
+    }
+
+    /// Serialize into the `SRBOMD01` format at `path`, returning the
+    /// total bytes written.  The invariants `load` enforces are checked
+    /// up front so a save can never produce a file `load` rejects.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        let sv = &self.model.sv;
+        let (m, d) = (sv.rows, sv.cols);
+        if m == 0 || d == 0 {
+            bail!("saved model needs m ≥ 1 SVs and d ≥ 1 features (got {m}×{d})");
+        }
+        if self.model.coef.len() != m {
+            bail!("saved model: {} coefficients for {m} SVs", self.model.coef.len());
+        }
+        if let Some(i) = self.model.coef.iter().position(|c| !c.is_finite()) {
+            bail!("saved model: non-finite coefficient at index {i}");
+        }
+        if !self.model.threshold.is_finite() {
+            bail!("saved model: non-finite threshold {}", self.model.threshold);
+        }
+        let gamma = match self.model.kernel {
+            KernelKind::Linear => 0.0,
+            KernelKind::Rbf { gamma } => {
+                if !(gamma.is_finite() && gamma > 0.0) {
+                    bail!("saved model: RBF gamma must be finite and positive, got {gamma}");
+                }
+                gamma
+            }
+        };
+        if let Some(n) = &self.norms {
+            assert_eq!(n.len(), m, "stored norms must cover every SV");
+        }
+        let mut flags = 0u64;
+        if self.family == ModelFamily::OneClass {
+            flags |= FLAG_ONECLASS;
+        }
+        if matches!(self.model.kernel, KernelKind::Rbf { .. }) {
+            flags |= FLAG_RBF;
+        }
+        if self.norms.is_some() {
+            flags |= FLAG_NORMS;
+        }
+        let file = File::create(path)
+            .with_context(|| format!("create saved model {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        let emit = |w: &mut BufWriter<File>| -> std::io::Result<()> {
+            w.write_all(&MODEL_MAGIC)?;
+            w.write_all(&flags.to_le_bytes())?;
+            w.write_all(&(m as u64).to_le_bytes())?;
+            w.write_all(&(d as u64).to_le_bytes())?;
+            w.write_all(&gamma.to_le_bytes())?;
+            w.write_all(&self.model.threshold.to_le_bytes())?;
+            write_f64s(w, &self.model.coef)?;
+            if let Some(n) = &self.norms {
+                write_f64s(w, n)?;
+            }
+            write_f64s(w, &sv.data)?;
+            w.flush()
+        };
+        emit(&mut w).with_context(|| format!("write saved model {}", path.display()))?;
+        let blocks = 1 + u64::from(self.norms.is_some());
+        Ok(HEADER_BYTES + 8 * (m as u64) * (blocks + d as u64))
+    }
+
+    /// Open and fully validate a saved model.  Bad magic, an unsupported
+    /// format version, unknown flags, zero-SV headers, size mismatches
+    /// (truncation or trailing garbage), and non-finite floats anywhere
+    /// in the payload all return errors naming the path — afterwards the
+    /// model can be served without further checks.
+    pub fn load(path: &Path) -> Result<SavedModel> {
+        let mut file =
+            File::open(path).with_context(|| format!("open saved model {}", path.display()))?;
+        let ctx = |what: &str| format!("{}: {what}", path.display());
+        let mut header = [0u8; HEADER_BYTES as usize];
+        file.read_exact(&mut header)
+            .with_context(|| ctx("truncated header (want 48 bytes)"))?;
+        if header[..6] != MODEL_MAGIC[..6] {
+            bail!("{}: bad magic (not a SRBOMD saved model)", path.display());
+        }
+        if header[..8] != MODEL_MAGIC {
+            bail!(
+                "{}: unsupported model format version {:?} (this build reads 01)",
+                path.display(),
+                String::from_utf8_lossy(&header[6..8])
+            );
+        }
+        let word = |k: usize| u64::from_le_bytes(header[8 * k..8 * (k + 1)].try_into().unwrap());
+        let float = |k: usize| f64::from_le_bytes(header[8 * k..8 * (k + 1)].try_into().unwrap());
+        let (flags, m64, d64) = (word(1), word(2), word(3));
+        let (gamma, threshold) = (float(4), float(5));
+        if flags & !(FLAG_ONECLASS | FLAG_RBF | FLAG_NORMS) != 0 {
+            bail!("{}: unknown header flags {flags:#x}", path.display());
+        }
+        if m64 == 0 || d64 == 0 {
+            bail!("{}: empty model (m={m64} SVs, d={d64} features)", path.display());
+        }
+        let has_norms = flags & FLAG_NORMS != 0;
+        let blocks = 1 + u64::from(has_norms);
+        let payload = 8u64
+            .checked_mul(m64)
+            .and_then(|b| b.checked_mul(blocks + d64))
+            .unwrap_or(u64::MAX);
+        let want_size = HEADER_BYTES.checked_add(payload).unwrap_or(u64::MAX);
+        let actual = file.metadata().with_context(|| ctx("stat failed"))?.len();
+        if actual != want_size {
+            bail!(
+                "{}: size mismatch — header promises {want_size} bytes (m={m64}, d={d64}, \
+                 norms={has_norms}), file has {actual} (truncated or corrupt)",
+                path.display()
+            );
+        }
+        let kernel = if flags & FLAG_RBF != 0 {
+            if !(gamma.is_finite() && gamma > 0.0) {
+                bail!("{}: RBF gamma must be finite and positive, got {gamma}", path.display());
+            }
+            KernelKind::Rbf { gamma }
+        } else {
+            if gamma != 0.0 {
+                bail!("{}: linear model carries gamma {gamma} (want 0)", path.display());
+            }
+            KernelKind::Linear
+        };
+        if !threshold.is_finite() {
+            bail!("{}: non-finite threshold {threshold}", path.display());
+        }
+        let (m, d) = (m64 as usize, d64 as usize);
+        let mut coef = vec![0.0; m];
+        read_f64s(&mut file, &mut coef).with_context(|| ctx("read coefficients"))?;
+        if let Some(i) = coef.iter().position(|c| !c.is_finite()) {
+            bail!("{}: non-finite coefficient (α) at index {i} ({})", path.display(), coef[i]);
+        }
+        let norms = if has_norms {
+            let mut n = vec![0.0; m];
+            read_f64s(&mut file, &mut n).with_context(|| ctx("read SV norms"))?;
+            if let Some(i) = n.iter().position(|v| !(v.is_finite() && *v >= 0.0)) {
+                bail!("{}: bad squared SV norm at row {i} ({})", path.display(), n[i]);
+            }
+            Some(n)
+        } else {
+            None
+        };
+        let mut data = vec![0.0; m * d];
+        read_f64s(&mut file, &mut data).with_context(|| ctx("read SV rows"))?;
+        if let Some(k) = data.iter().position(|v| !v.is_finite()) {
+            bail!(
+                "{}: non-finite SV feature at row {}, column {} ({})",
+                path.display(),
+                k / d,
+                k % d,
+                data[k]
+            );
+        }
+        let family = if flags & FLAG_ONECLASS != 0 {
+            ModelFamily::OneClass
+        } else {
+            ModelFamily::Supervised
+        };
+        Ok(SavedModel {
+            family,
+            model: KernelModel {
+                kernel,
+                sv: Mat { rows: m, cols: d, data },
+                coef,
+                threshold,
+            },
+            norms,
+        })
+    }
+}
+
+/// Write f64s little-endian (mirror of [`read_f64s`]).
+fn write_f64s<W: Write>(w: &mut W, vals: &[f64]) -> std::io::Result<()> {
+    for v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Decode `out.len()` little-endian f64s sequentially through a fixed
+/// page buffer.
+fn read_f64s(file: &mut File, out: &mut [f64]) -> std::io::Result<()> {
+    let mut page = [0u8; 8192];
+    let mut k = 0;
+    while k < out.len() {
+        let take = ((out.len() - k) * 8).min(page.len());
+        file.read_exact(&mut page[..take])?;
+        for bytes in page[..take].chunks_exact(8) {
+            out[k] = f64::from_le_bytes(bytes.try_into().unwrap());
+            k += 1;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{run_cases, Gen};
+    use std::fs;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    /// Unique temp path for a test file (removed by each test).
+    fn tmp(tag: &str) -> PathBuf {
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("srbo-mdl-{}-{tag}-{seq}.mdl", std::process::id()))
+    }
+
+    fn random_model(g: &mut Gen) -> SavedModel {
+        let m = g.usize(1, 24);
+        let d = g.usize(1, 7);
+        let rows: Vec<Vec<f64>> = (0..m).map(|_| g.vec_f64(d, -3.0, 3.0)).collect();
+        let sv = Mat::from_rows(&rows);
+        let kernel = if g.bool() {
+            KernelKind::Linear
+        } else {
+            KernelKind::Rbf { gamma: g.f64(0.05, 3.0) }
+        };
+        let family = if g.bool() { ModelFamily::Supervised } else { ModelFamily::OneClass };
+        let threshold = if family == ModelFamily::OneClass { g.f64(-1.0, 1.0) } else { 0.0 };
+        let model = KernelModel { kernel, sv, coef: g.vec_f64(m, -1.0, 1.0), threshold };
+        let saved = SavedModel::new(family, model);
+        if g.bool() {
+            saved.with_stored_norms()
+        } else {
+            saved
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_for_bit() {
+        run_cases(12, 0x3D01, |g| {
+            let saved = random_model(g);
+            let path = tmp("roundtrip");
+            let bytes = saved.save(&path).unwrap();
+            assert_eq!(bytes, fs::metadata(&path).unwrap().len());
+            let loaded = SavedModel::load(&path).unwrap();
+            assert_eq!(loaded.family, saved.family);
+            assert_eq!(loaded.model.kernel, saved.model.kernel);
+            assert_eq!(
+                loaded.model.threshold.to_bits(),
+                saved.model.threshold.to_bits()
+            );
+            assert_eq!(loaded.model.sv.rows, saved.model.sv.rows);
+            assert_eq!(loaded.model.sv.cols, saved.model.sv.cols);
+            for (a, b) in loaded.model.coef.iter().zip(&saved.model.coef) {
+                assert_eq!(a.to_bits(), b.to_bits(), "coef differ");
+            }
+            for (a, b) in loaded.model.sv.data.iter().zip(&saved.model.sv.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "SV rows differ");
+            }
+            match (&loaded.norms, &saved.norms) {
+                (Some(a), Some(b)) => {
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "stored norms differ");
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("norms presence flipped across the roundtrip"),
+            }
+            // stored-vs-recomputed norms are the same bits either way
+            for (a, b) in loaded.sv_norms().iter().zip(saved.sv_norms()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let _ = fs::remove_file(&path);
+        });
+    }
+
+    #[test]
+    fn reloaded_model_scores_bit_identically() {
+        run_cases(8, 0x3D02, |g| {
+            let saved = random_model(g);
+            let path = tmp("score");
+            saved.save(&path).unwrap();
+            let loaded = SavedModel::load(&path).unwrap();
+            let n = g.usize(1, 10);
+            let d = saved.model.sv.cols;
+            let x = Mat::from_rows(
+                &(0..n).map(|_| g.vec_f64(d, -3.0, 3.0)).collect::<Vec<_>>(),
+            );
+            for (a, b) in loaded.model.decision(&x).iter().zip(saved.model.decision(&x)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "decisions differ after reload");
+            }
+            let _ = fs::remove_file(&path);
+        });
+    }
+
+    #[test]
+    fn corrupt_files_error_with_the_path() {
+        let mut g = Gen::new(0xBAD1);
+        let saved = {
+            // force an RBF model with stored norms so every block exists
+            let rows: Vec<Vec<f64>> = (0..5).map(|_| g.vec_f64(3, -2.0, 2.0)).collect();
+            let model = KernelModel {
+                kernel: KernelKind::Rbf { gamma: 0.7 },
+                sv: Mat::from_rows(&rows),
+                coef: g.vec_f64(5, -1.0, 1.0),
+                threshold: 0.25,
+            };
+            SavedModel::new(ModelFamily::OneClass, model).with_stored_norms()
+        };
+        let path = tmp("corrupt");
+        saved.save(&path).unwrap();
+        let good = fs::read(&path).unwrap();
+        let p = path.to_str().unwrap();
+        let reject = |bytes: &[u8], want: &str| {
+            fs::write(&path, bytes).unwrap();
+            let e = SavedModel::load(&path).unwrap_err();
+            assert!(e.msg().contains(want), "want {want:?} in: {e}");
+            assert!(e.msg().contains(p), "{e} should name the file");
+        };
+
+        // truncated mid-data
+        reject(&good[..good.len() - 11], "size mismatch");
+        // truncated inside the header
+        reject(&good[..20], "truncated header");
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        reject(&bad, "bad magic");
+        // bad format version (magic prefix intact)
+        let mut bad = good.clone();
+        bad[6..8].copy_from_slice(b"99");
+        reject(&bad, "unsupported model format version");
+        // unknown flag bits
+        let mut bad = good.clone();
+        bad[8] |= 0x40;
+        reject(&bad, "unknown header flags");
+        // zero-SV header
+        let mut bad = good.clone();
+        bad[16..24].copy_from_slice(&0u64.to_le_bytes());
+        reject(&bad, "empty model");
+        // NaN coefficient (the NaN-α case)
+        let mut bad = good.clone();
+        bad[48..56].copy_from_slice(&f64::NAN.to_le_bytes());
+        reject(&bad, "non-finite coefficient");
+        // NaN stored norm (norms block starts after the 5 coefs)
+        let mut bad = good.clone();
+        let off = 48 + 8 * 5;
+        bad[off..off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        reject(&bad, "bad squared SV norm at row 0");
+        // NaN SV feature value
+        let mut bad = good.clone();
+        let off = 48 + 8 * 5 * 2;
+        bad[off..off + 8].copy_from_slice(&f64::INFINITY.to_le_bytes());
+        reject(&bad, "non-finite SV feature at row 0");
+        // non-finite threshold
+        let mut bad = good.clone();
+        bad[40..48].copy_from_slice(&f64::NAN.to_le_bytes());
+        reject(&bad, "non-finite threshold");
+        // trailing garbage is a size mismatch, not silently ignored
+        let mut bad = good.clone();
+        bad.push(7);
+        reject(&bad, "size mismatch");
+
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_rejects_invalid_models() {
+        let ok = KernelModel {
+            kernel: KernelKind::Linear,
+            sv: Mat::from_rows(&[vec![1.0, 2.0]]),
+            coef: vec![0.5],
+            threshold: 0.0,
+        };
+        let path = tmp("saveval");
+        // zero-SV model
+        let mut m = ok.clone();
+        m.sv = Mat::zeros(0, 2);
+        m.coef.clear();
+        assert!(SavedModel::new(ModelFamily::Supervised, m).save(&path).is_err());
+        // coefficient arity mismatch
+        let mut m = ok.clone();
+        m.coef = vec![0.5, 0.5];
+        assert!(SavedModel::new(ModelFamily::Supervised, m).save(&path).is_err());
+        // NaN coefficient
+        let mut m = ok.clone();
+        m.coef = vec![f64::NAN];
+        assert!(SavedModel::new(ModelFamily::Supervised, m).save(&path).is_err());
+        // bad gamma
+        let mut m = ok.clone();
+        m.kernel = KernelKind::Rbf { gamma: -1.0 };
+        assert!(SavedModel::new(ModelFamily::Supervised, m).save(&path).is_err());
+        // the valid model still saves
+        assert!(SavedModel::new(ModelFamily::Supervised, ok).save(&path).is_ok());
+        let _ = fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,210 @@
+//! End-to-end serving audit: a real trained model travels the full
+//! production path — train → `SRBOMD01` file → registry load → threaded
+//! TCP server → concurrent clients — and every decision that comes back
+//! over the wire is bit-identical to calling `KernelModel::decision`
+//! directly on the same model.  Malformed frames are answered with an
+//! error frame (the connection survives), corrupt model files are
+//! rejected over the wire with a typed error naming the path, and
+//! shutdown joins every thread without panics.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use srbo::data::synthetic;
+use srbo::kernel::KernelKind;
+use srbo::prop::Gen;
+use srbo::serve::protocol::STATUS_ERR;
+use srbo::serve::{Client, Registry, ServeConfig, Server};
+use srbo::svm::model_io::SavedModel;
+use srbo::svm::nu::NuSvm;
+use srbo::svm::oneclass::OcSvm;
+use srbo::svm::KernelModel;
+use srbo::util::Mat;
+
+/// Unique temp path per fixture file.
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("srbo-serve-{}-{tag}.mdl", std::process::id()))
+}
+
+/// Train one model per family on real synthetic data and export both as
+/// `SRBOMD01` files — the supervised one with stored norms, the
+/// one-class one without, so both load paths are exercised end to end.
+fn train_fixtures(tag: &str) -> (PathBuf, PathBuf) {
+    let d = synthetic::gaussians(80, 2.0, 11);
+    let kernel = KernelKind::Rbf { gamma: 0.5 };
+    let nu = NuSvm::train(&d.x, &d.y, 0.3, kernel).expect("nu train");
+    let oc = OcSvm::train(&d.positives().x, 0.3, kernel).expect("oc train");
+    let nu_path = tmp(&format!("{tag}-nu"));
+    let oc_path = tmp(&format!("{tag}-oc"));
+    SavedModel::from_nu(&nu).with_stored_norms().save(&nu_path).expect("save nu");
+    SavedModel::from_oneclass(&oc).save(&oc_path).expect("save oc");
+    (nu_path, oc_path)
+}
+
+/// The reference scorer: reload the artifact exactly as the server does
+/// and call `KernelModel::decision` directly.
+fn reference(path: &PathBuf) -> KernelModel {
+    SavedModel::load(path).expect("reload fixture").model
+}
+
+#[test]
+fn concurrent_clients_get_bit_identical_decisions() {
+    let (nu_path, oc_path) = train_fixtures("conc");
+    let registry = Arc::new(Registry::new());
+    registry.load_file("nu", 1, &nu_path).expect("admit nu");
+    registry.load_file("oc", 2, &oc_path).expect("admit oc");
+    let server =
+        Server::bind("127.0.0.1:0", registry, ServeConfig { eval_threads: 3 }).expect("bind");
+    let addr = server.addr.to_string();
+    let models = [("nu", 1u32, reference(&nu_path)), ("oc", 2u32, reference(&oc_path))];
+
+    // N concurrent clients × mixed batch sizes × both families.  Each
+    // thread records (model index, batch, wire scores) and the main
+    // thread replays every batch through KernelModel::decision.
+    let mut threads = Vec::new();
+    for t in 0..6u64 {
+        let addr = addr.clone();
+        let dims: Vec<usize> = models.iter().map(|(_, _, m)| m.sv.cols).collect();
+        threads.push(std::thread::spawn(move || {
+            let mut g = Gen::new(0xE2E0 + t);
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut seen = Vec::new();
+            for _ in 0..8 {
+                let which = g.usize(0, 1);
+                let rows = g.usize(1, 12);
+                let x = Mat::from_rows(
+                    &(0..rows)
+                        .map(|_| g.vec_f64(dims[which], -3.0, 3.0))
+                        .collect::<Vec<_>>(),
+                );
+                let (name, version) = [("nu", 1), ("oc", 2)][which];
+                let scores = client.score(name, version, &x).expect("score over the wire");
+                assert_eq!(scores.len(), rows);
+                seen.push((which, x, scores));
+            }
+            seen
+        }));
+    }
+    let mut total_requests = 0u64;
+    for th in threads {
+        for (which, x, wire) in th.join().expect("client thread panicked") {
+            total_requests += 1;
+            let direct = models[which].2.decision(&x);
+            for (a, b) in wire.iter().zip(&direct) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "wire decision differs from direct KernelModel::decision"
+                );
+            }
+        }
+    }
+
+    // telemetry saw every request; the happy path produced no errors
+    let mut client = Client::connect(&addr).expect("connect for stats");
+    let stats = client.stats().expect("stats");
+    assert!(
+        stats.contains(&format!("\"requests\":{total_requests}")),
+        "stats {stats} should count {total_requests} requests"
+    );
+    assert!(stats.contains("\"errors\":0"), "unexpected errors in {stats}");
+    assert!(stats.contains("\"p50_ms\":") && stats.contains("\"p99_ms\":"), "{stats}");
+    let list = client.list().expect("list");
+    assert!(list.contains("\"name\":\"nu\"") && list.contains("\"name\":\"oc\""), "{list}");
+    drop(client);
+
+    server.shutdown(); // joins acceptor, connections, eval worker
+    let _ = std::fs::remove_file(&nu_path);
+    let _ = std::fs::remove_file(&oc_path);
+}
+
+#[test]
+fn malformed_frames_get_error_frames_not_dropped_connections() {
+    let (nu_path, oc_path) = train_fixtures("mal");
+    let registry = Arc::new(Registry::new());
+    registry.load_file("m", 1, &nu_path).expect("admit");
+    let server = Server::bind("127.0.0.1:0", registry, ServeConfig { eval_threads: 1 })
+        .expect("bind");
+    let addr = server.addr.to_string();
+    let direct = reference(&nu_path);
+    let mut client = Client::connect(&addr).expect("connect");
+    let probe = Mat::from_rows(&[(0..direct.sv.cols).map(|i| 0.1 * i as f64).collect()]);
+
+    // raw garbage payload → error frame, same connection keeps working
+    let resp = client.roundtrip(&[0xFF, 1, 2, 3]).expect("garbage answered, not dropped");
+    assert_eq!(resp[0], STATUS_ERR, "garbage should get an error frame");
+    // empty payload → error frame
+    let resp = client.roundtrip(&[]).expect("empty payload answered");
+    assert_eq!(resp[0], STATUS_ERR);
+    // truncated score request → error frame
+    let resp = client.roundtrip(&[1, 5, 0]).expect("truncated request answered");
+    assert_eq!(resp[0], STATUS_ERR);
+    // unknown model → error frame with the name
+    let e = client.score("ghost", 9, &probe).unwrap_err();
+    assert!(e.msg().contains("ghost@9"), "{e}");
+    // the connection still serves real work after every rejection
+    let wire = client.score("m", 1, &probe).expect("score after malformed frames");
+    assert_eq!(wire[0].to_bits(), direct.decision(&probe)[0].to_bits());
+
+    // corrupt model file → wire LOAD rejected with the path in the error
+    let corrupt = tmp("mal-corrupt");
+    let mut bytes = std::fs::read(&nu_path).expect("read fixture");
+    bytes.truncate(bytes.len() - 9);
+    std::fs::write(&corrupt, &bytes).expect("write corrupt fixture");
+    let e = client.load("bad", 1, corrupt.to_str().unwrap()).unwrap_err();
+    assert!(e.msg().contains("size mismatch"), "{e}");
+    assert!(e.msg().contains(corrupt.to_str().unwrap()), "{e} should name the path");
+
+    // a valid LOAD over the wire admits a second family; EVICT removes it
+    client.load("oc", 1, oc_path.to_str().unwrap()).expect("wire load");
+    let oc_direct = reference(&oc_path);
+    let oc_probe =
+        Mat::from_rows(&[(0..oc_direct.sv.cols).map(|i| 0.2 * i as f64).collect()]);
+    let wire = client.score("oc", 1, &oc_probe).expect("score the loaded model");
+    assert_eq!(wire[0].to_bits(), oc_direct.decision(&oc_probe)[0].to_bits());
+    client.evict("oc", 1).expect("evict");
+    assert!(client.score("oc", 1, &oc_probe).is_err());
+
+    // the error counter saw the rejections
+    let stats = client.stats().expect("stats");
+    assert!(!stats.contains("\"errors\":0"), "rejections should be counted: {stats}");
+    drop(client);
+
+    server.shutdown();
+    for p in [nu_path, oc_path, corrupt] {
+        let _ = std::fs::remove_file(&p);
+    }
+}
+
+#[test]
+fn abrupt_disconnects_and_shutdown_stay_clean() {
+    let (nu_path, oc_path) = train_fixtures("drop");
+    let registry = Arc::new(Registry::new());
+    registry.load_file("m", 1, &nu_path).expect("admit");
+    let server = Server::bind("127.0.0.1:0", registry, ServeConfig::default()).expect("bind");
+    let addr = server.addr.to_string();
+    let direct = reference(&nu_path);
+
+    // clients that connect and vanish without a clean close
+    for _ in 0..3 {
+        let c = Client::connect(&addr).expect("connect");
+        drop(c);
+    }
+    // a half-written frame followed by a hangup must not wedge a thread
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(&addr).expect("connect raw");
+        s.write_all(&100u32.to_le_bytes()).expect("half frame");
+        // drop with 100 promised bytes never sent
+    }
+    // the server still answers real traffic afterwards
+    let mut client = Client::connect(&addr).expect("connect");
+    let probe = Mat::from_rows(&[(0..direct.sv.cols).map(|i| 0.3 * i as f64).collect()]);
+    let wire = client.score("m", 1, &probe).expect("score after abrupt disconnects");
+    assert_eq!(wire[0].to_bits(), direct.decision(&probe)[0].to_bits());
+    drop(client);
+
+    server.shutdown(); // must join the broken-connection threads too
+    let _ = std::fs::remove_file(&nu_path);
+    let _ = std::fs::remove_file(&oc_path);
+}
