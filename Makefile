@@ -17,7 +17,9 @@ verify:
 
 # Local mirror of CI's gram-matrix job: the conformance + safety suites
 # once per kernel-matrix policy, each with gap-safe dynamic screening
-# forced on and off (8 runs).
+# forced on and off (8 runs), then one fault-injection leg
+# (SRBO_TEST_FAULTS=on) re-running the durability + serving audits under
+# injected torn writes, transient reads, and eval panics.
 verify-matrix:
 	@set -e; for g in dense lru sharded stream; do \
 		for dyn in on off; do \
@@ -26,6 +28,8 @@ verify-matrix:
 				$(CARGO) test -q --test conformance --test safety; \
 		done; \
 	done
+	@echo "== SRBO_TEST_FAULTS=on =="
+	@SRBO_TEST_FAULTS=on $(CARGO) test -q --test faults --test serve
 
 # Lint gate: formatting + clippy with warnings denied.
 lint:

@@ -5,7 +5,7 @@
 //!   1. generate a benchmark-mimic dataset fleet (Table III entries),
 //!   2. run the L3 coordinator's grid-search service (ν-path × σ grid,
 //!      SRBO screening, Gram cache, worker threads) on each dataset,
-//!   3. export each selected model as a versioned `SRBOMD01` artifact,
+//!   3. export each selected model as a versioned `SRBOMD02` artifact,
 //!      admit it into the serving registry, and serve batched decision
 //!      requests over the threaded TCP loop (`srbo::serve`) — the eval
 //!      worker coalesces each batch into one cross-Gram block + one
@@ -106,7 +106,7 @@ fn main() -> srbo::Result<()> {
         total_plain_time / total_screened_time
     );
 
-    println!("=== serving layer: SRBOMD01 artifacts over the threaded TCP loop ===");
+    println!("=== serving layer: SRBOMD02 artifacts over the threaded TCP loop ===");
     let rt = Runtime::load_default();
     if let Err(e) = &rt {
         println!("  (artifacts not built — `make aot`; {e}; native path only)");

@@ -35,11 +35,14 @@ use crate::qp::dcdm::{self, DcdmTuning};
 use crate::qp::gqp::{self, GqpOpts};
 use crate::qp::{reduced, ConstraintKind, QpProblem, SolveStats, WarmStart};
 use crate::screening::{self, delta, gap as gap_rule, oneclass, srbo, ScreenCode};
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::timer::{PhaseTimes, Timer};
 use crate::util::Mat;
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use crate::util::durable::{cleanup_stale_tmp, verify_crc64_trailer, write_atomic, TRAILER_BYTES};
+use crate::util::fault::FaultPlan;
+
+use std::io::{BufReader, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use super::metrics::PathMetrics;
@@ -371,11 +374,15 @@ impl NuPath {
 /// everything [`resume`] needs to recycle the incumbents — the family
 /// flag, the ν grid and every step's full α.
 ///
-/// Format (`SRBOPT01`, all integers u64 LE, all floats f64 LE):
+/// Format (`SRBOPT02`, all integers u64 LE, all floats f64 LE):
 /// magic (8) · flags (bit 0 = one-class) · n_steps · l · nus
-/// (n_steps) · alphas (n_steps × l, step-major).  `load` validates the
-/// magic, the counts and the exact byte length before touching the
-/// payload, mirroring the feature-store discipline.
+/// (n_steps) · alphas (n_steps × l, step-major) · CRC-64/XZ trailer (8).
+/// `load` validates the magic, the counts, the exact byte length and
+/// the checksum before touching the payload, mirroring the
+/// feature-store discipline; version-1 snapshots (`SRBOPT01`, no
+/// trailer) are still readable.  Saves go through the crash-safe
+/// [`write_atomic`](crate::util::durable::write_atomic) path, and
+/// `load` sweeps stale `<path>.tmp` debris left by a crashed writer.
 #[derive(Clone, Debug)]
 pub struct SavedPath {
     pub oneclass: bool,
@@ -386,18 +393,20 @@ pub struct SavedPath {
     pub alphas: Vec<Vec<f64>>,
 }
 
-const SAVED_MAGIC: &[u8; 8] = b"SRBOPT01";
+const SAVED_MAGIC: &[u8; 8] = b"SRBOPT02";
+
+/// Version-1 magic: same layout, no checksum trailer (still readable).
+const SAVED_MAGIC_V1: &[u8; 8] = b"SRBOPT01";
 
 /// Soft ceiling on counts read from a snapshot header — rejects garbage
 /// headers before any allocation is sized by them.
 const SAVED_MAX_COUNT: u64 = 1 << 40;
 
-fn put_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
-    w.write_all(&v.to_le_bytes())?;
-    Ok(())
+fn put_u64(w: &mut dyn Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
 }
 
-fn put_f64s<W: Write>(w: &mut W, vals: &[f64]) -> Result<()> {
+fn put_f64s(w: &mut dyn Write, vals: &[f64]) -> std::io::Result<()> {
     for &v in vals {
         w.write_all(&v.to_le_bytes())?;
     }
@@ -431,34 +440,60 @@ impl SavedPath {
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_with_faults(path, FaultPlan::from_env()?.as_deref())
+    }
+
+    /// [`save`](Self::save) with an explicit fault plan (tests arm torn
+    /// writes through this; production callers pass the env plan).
+    pub fn save_with_faults(&self, path: &Path, faults: Option<&FaultPlan>) -> Result<()> {
         if self.alphas.len() != self.nus.len() {
             bail!("saved path: {} alphas for {} nus", self.alphas.len(), self.nus.len());
         }
-        let mut w = BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(SAVED_MAGIC)?;
-        put_u64(&mut w, self.oneclass as u64)?;
-        put_u64(&mut w, self.nus.len() as u64)?;
-        put_u64(&mut w, self.l as u64)?;
-        put_f64s(&mut w, &self.nus)?;
         for a in &self.alphas {
             if a.len() != self.l {
                 bail!("saved path: step alpha has {} rows, expected {}", a.len(), self.l);
             }
-            put_f64s(&mut w, a)?;
         }
-        w.flush()?;
+        write_atomic(path, faults, |w| {
+            w.write_all(SAVED_MAGIC)?;
+            put_u64(w, self.oneclass as u64)?;
+            put_u64(w, self.nus.len() as u64)?;
+            put_u64(w, self.l as u64)?;
+            put_f64s(w, &self.nus)?;
+            for a in &self.alphas {
+                put_f64s(w, a)?;
+            }
+            Ok(())
+        })
+        .with_context(|| format!("write path snapshot {}", path.display()))?;
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<SavedPath> {
-        let file = std::fs::File::open(path)?;
+        cleanup_stale_tmp(path);
+        let mut file = std::fs::File::open(path)?;
         let file_len = file.metadata()?.len();
-        let mut r = BufReader::new(file);
         let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic != SAVED_MAGIC {
+        file.read_exact(&mut magic)?;
+        let trailer = if &magic == SAVED_MAGIC {
+            TRAILER_BYTES
+        } else if &magic == SAVED_MAGIC_V1 {
+            0
+        } else if magic[..6] == SAVED_MAGIC[..6] {
+            bail!(
+                "{}: unsupported path-snapshot format version {:?} (this build reads 01 and 02)",
+                path.display(),
+                String::from_utf8_lossy(&magic[6..])
+            );
+        } else {
             bail!("not a path snapshot: bad magic in {}", path.display());
+        };
+        if trailer > 0 {
+            let what = format!("path snapshot {}", path.display());
+            verify_crc64_trailer(&mut file, file_len, &what)?;
+            file.seek(SeekFrom::Start(8))?;
         }
+        let mut r = BufReader::new(file);
         let flags = get_u64(&mut r)?;
         if flags > 1 {
             bail!("path snapshot: unknown flags {flags:#x}");
@@ -471,7 +506,7 @@ impl SavedPath {
         let expect = n_steps
             .checked_mul(1 + l)
             .and_then(|v| v.checked_mul(8))
-            .and_then(|v| v.checked_add(8 + 3 * 8));
+            .and_then(|v| v.checked_add(8 + 3 * 8 + trailer));
         if expect != Some(file_len) {
             let expect = expect.map_or("overflow".to_string(), |e| e.to_string());
             bail!(
@@ -838,7 +873,43 @@ mod tests {
         assert!(SavedPath::load(&path).is_err());
         std::fs::write(&path, b"NOTMAGIC").unwrap();
         assert!(SavedPath::load(&path).is_err());
+        std::fs::write(&path, b"SRBOPT09").unwrap();
+        let err = SavedPath::load(&path).unwrap_err();
+        assert!(err.msg().contains("unsupported path-snapshot format version"), "{err}");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// A version-1 snapshot (old magic, no checksum trailer) still loads
+    /// bit-identically; a stale trailer on a v2 file is rejected loudly.
+    #[test]
+    fn v1_snapshots_without_trailer_still_load() {
+        let d = gaussians(24, 2.0, 13);
+        let cfg = PathConfig::new(grid(0.25, 0.35, 3), KernelKind::Linear);
+        let p = NuPath::run(&d.x, &d.y, &cfg).unwrap();
+        let path = tmp("v1compat");
+        p.save(&path).unwrap();
+
+        let mut bytes = std::fs::read(&path).unwrap();
+        // corrupting a payload byte must now trip the checksum
+        let mut flipped = bytes.clone();
+        flipped[40] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = SavedPath::load(&path).unwrap_err();
+        assert!(err.msg().contains("checksum mismatch"), "{err}");
+
+        // strip the trailer + downgrade the magic: a faithful v1 file
+        bytes.truncate(bytes.len() - 8);
+        bytes[..8].copy_from_slice(b"SRBOPT01");
+        std::fs::write(&path, &bytes).unwrap();
+        let loaded = SavedPath::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(loaded.nus.len(), p.steps.len());
+        for (k, s) in p.steps.iter().enumerate() {
+            assert_eq!(loaded.nus[k].to_bits(), s.nu.to_bits());
+            for (a, b) in loaded.alphas[k].iter().zip(&s.alpha) {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {k}");
+            }
+        }
     }
 
     /// A resumed path after append + remove edits lands on the same

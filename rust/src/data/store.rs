@@ -16,19 +16,34 @@
 //!
 //! ```text
 //! offset  size      field
-//! 0       8         magic "SRBOFS01"
+//! 0       8         magic "SRBOFS02"
 //! 8       8         l  (rows, u64, ≥ 1)
 //! 16      8         d  (features per row, u64, ≥ 1)
 //! 24      8         flags (u64; bit 0 = labels present)
 //! 32      8·l       squared row norms ‖x_i‖² (f64)
 //! …       8·l       labels in {+1,−1} (f64; only when flagged)
 //! …       8·l·d     row-major feature data (f64)
+//! end−8   8         CRC-64/XZ of all preceding bytes
 //! ```
 //!
 //! [`FileStore::open`] validates the magic, the header fields, the exact
-//! file size, and that every norm is finite — truncated, corrupt, or
-//! NaN-norm files surface a [`SrboError`](crate::util::error::SrboError)
-//! instead of a panic (pinned by the property tests below).
+//! file size, the checksum trailer, and that every norm is finite —
+//! truncated, torn, corrupt, or NaN-norm files surface a
+//! [`SrboError`](crate::util::error::SrboError) instead of a panic
+//! (pinned by the property tests below and `tests/faults.rs`).  Version
+//! 1 files (magic `SRBOFS01`, no trailer) are still readable; every
+//! write emits version 2 through the crash-safe
+//! [`write_atomic`](crate::util::durable::write_atomic) path (CRC
+//! trailer, `sync_all`, atomic rename, parent-dir fsync), and `open`
+//! sweeps stale `<path>.tmp` debris left by a crashed writer.
+//!
+//! # Fault tolerance
+//!
+//! Pooled reads run under a bounded-exponential-backoff retry loop:
+//! transient errors (`Interrupted`/`WouldBlock`/`TimedOut`, injectable
+//! deterministically via [`crate::util::fault::FaultPlan`]) are retried
+//! up to [`READ_RETRY_MAX`] times and surface in [`FileStore::io_stats`]
+//! counters; results are bit-identical to a fault-free run.
 //!
 //! # Mutation (incremental training)
 //!
@@ -43,7 +58,7 @@
 //!   logical→physical row map reroutes every read while the file stays
 //!   untouched (reopening the path still sees the full original store).
 //!   Append streams a compacted rewrite into `<path>.tmp`, renames it
-//!   over the original under the same SRBOFS01 validation discipline,
+//!   over the original under the same validation discipline,
 //!   and clears the pooled reader handles (they reference the unlinked
 //!   inode) — so one rewrite both persists pending tombstones and adds
 //!   the new rows.
@@ -54,24 +69,43 @@
 //! the `WarmStart` α-mapping key off.
 
 use std::fs::{self, File};
-use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::bail;
 use crate::kernel::gram::row_norms;
+use crate::util::durable::{cleanup_stale_tmp, verify_crc64_trailer, write_atomic, TRAILER_BYTES};
 use crate::util::error::{Context, Result};
+use crate::util::fault::{self, FaultPlan};
+use crate::util::sync::lock_mutex;
 use crate::util::Mat;
 
-/// Magic bytes opening every feature-store file.
-pub const STORE_MAGIC: [u8; 8] = *b"SRBOFS01";
+/// Magic bytes opening every feature-store file (version 2: CRC trailer).
+pub const STORE_MAGIC: [u8; 8] = *b"SRBOFS02";
+
+/// Version-1 magic: same layout, no checksum trailer (still readable).
+pub const STORE_MAGIC_V1: [u8; 8] = *b"SRBOFS01";
 
 /// Header flag bit: a label vector follows the norms.
 const FLAG_LABELS: u64 = 1;
 
 /// Fixed-size header bytes before the norms block.
 const HEADER_BYTES: u64 = 32;
+
+/// Max retries of a transient pooled-read error before giving up.
+pub const READ_RETRY_MAX: u32 = 6;
+
+/// Transient read errors absorbed (and not) by the pooled-reader retry
+/// loop — the `cache_stats`-shaped observability for fault tolerance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoStats {
+    /// Individual transient read errors that triggered a backoff retry.
+    pub retries: u64,
+    /// Read operations that needed at least one retry before succeeding.
+    pub recovered_reads: u64,
+}
 
 /// Accumulated record of store mutations: the old→new logical row remap
 /// plus the number of freshly appended rows.
@@ -367,14 +401,35 @@ pub struct FileStore {
     /// in-memory — the file is untouched until the next append rewrite
     /// compacts it.
     live: Option<Vec<u64>>,
+    /// Optional injected-fault schedule under the pooled readers and the
+    /// append rewrite (set from `SRBO_FAULTS` at open, or via
+    /// [`FileStore::set_faults`] in tests).
+    faults: Option<Arc<FaultPlan>>,
+    /// Transient read errors retried (see [`IoStats`]).
+    io_retries: AtomicU64,
+    /// Reads that succeeded only after retrying.
+    io_recovered: AtomicU64,
 }
 
 impl FileStore {
     /// Serialize (x, y) into the binary format at `path`, returning the
-    /// total bytes written.  Norms are computed here once (the same
-    /// [`row_norms`] arithmetic as every resident backend) so readers
-    /// get the RBF hoist for free.
+    /// total bytes written (CRC trailer included).  Norms are computed
+    /// here once (the same [`row_norms`] arithmetic as every resident
+    /// backend) so readers get the RBF hoist for free.  The write is
+    /// crash-safe: staged into `<path>.tmp`, checksummed, fsynced, and
+    /// atomically renamed over the target.
     pub fn write(path: &Path, x: &Mat, y: Option<&[f64]>) -> Result<u64> {
+        Self::write_with_faults(path, x, y, fault::FaultPlan::from_env()?.as_deref())
+    }
+
+    /// [`FileStore::write`] with an explicit fault plan (tests arm torn
+    /// writes through this; `write` itself reads `SRBO_FAULTS`).
+    pub fn write_with_faults(
+        path: &Path,
+        x: &Mat,
+        y: Option<&[f64]>,
+        faults: Option<&FaultPlan>,
+    ) -> Result<u64> {
         if x.rows == 0 || x.cols == 0 {
             bail!("feature store needs l ≥ 1 and d ≥ 1 (got {}×{})", x.rows, x.cols);
         }
@@ -384,46 +439,47 @@ impl FileStore {
             }
         }
         let norms = row_norms(x);
-        let file = File::create(path)
-            .with_context(|| format!("create feature store {}", path.display()))?;
-        let mut w = BufWriter::new(file);
-        let mut written = || -> std::io::Result<()> {
+        write_atomic(path, faults, |w| {
             w.write_all(&STORE_MAGIC)?;
             w.write_all(&(x.rows as u64).to_le_bytes())?;
             w.write_all(&(x.cols as u64).to_le_bytes())?;
             let flags = if y.is_some() { FLAG_LABELS } else { 0 };
             w.write_all(&flags.to_le_bytes())?;
-            for n in &norms {
-                w.write_all(&n.to_le_bytes())?;
-            }
+            write_f64s(w, &norms)?;
             if let Some(y) = y {
-                for v in y {
-                    w.write_all(&v.to_le_bytes())?;
-                }
+                write_f64s(w, y)?;
             }
-            for v in &x.data {
-                w.write_all(&v.to_le_bytes())?;
-            }
-            w.flush()
-        };
-        written().with_context(|| format!("write feature store {}", path.display()))?;
-        let blocks = 1 + u64::from(y.is_some());
-        Ok(HEADER_BYTES + 8 * (x.rows as u64) * (blocks + x.cols as u64))
+            write_f64s(w, &x.data)
+        })
+        .with_context(|| format!("write feature store {}", path.display()))
     }
 
     /// Open and validate a feature-store file.  Truncated files, bad
-    /// magic/header fields, size mismatches, and non-finite norms all
-    /// return errors — readers can trust `len`/`dim`/`norms` afterwards.
+    /// magic/header fields, size mismatches, checksum failures, and
+    /// non-finite norms all return errors — readers can trust
+    /// `len`/`dim`/`norms` afterwards.  Stale `<path>.tmp` debris left
+    /// by a crashed writer is swept first.
     pub fn open(path: &Path) -> Result<FileStore> {
+        cleanup_stale_tmp(path);
         let mut file =
             File::open(path).with_context(|| format!("open feature store {}", path.display()))?;
         let ctx = |what: &str| format!("{}: {what}", path.display());
         let mut header = [0u8; HEADER_BYTES as usize];
         file.read_exact(&mut header)
             .with_context(|| ctx("truncated header (want 32 bytes)"))?;
-        if header[..8] != STORE_MAGIC {
-            bail!("{}: bad magic (not a SRBOFS01 feature store)", path.display());
-        }
+        let trailer = if header[..8] == STORE_MAGIC {
+            TRAILER_BYTES
+        } else if header[..8] == STORE_MAGIC_V1 {
+            0 // version 1: identical layout, no checksum trailer
+        } else if header[..6] == STORE_MAGIC[..6] {
+            bail!(
+                "{}: unsupported feature-store format version {:?} (this build reads 01 and 02)",
+                path.display(),
+                String::from_utf8_lossy(&header[6..8])
+            );
+        } else {
+            bail!("{}: bad magic (not a SRBOFS feature store)", path.display());
+        };
         let word = |k: usize| u64::from_le_bytes(header[8 * k..8 * (k + 1)].try_into().unwrap());
         let (l64, d64, flags) = (word(1), word(2), word(3));
         if l64 == 0 || d64 == 0 {
@@ -438,7 +494,10 @@ impl FileStore {
             .checked_mul(l64)
             .and_then(|b| b.checked_mul(blocks + d64))
             .unwrap_or(u64::MAX);
-        let want_size = HEADER_BYTES.checked_add(payload).unwrap_or(u64::MAX);
+        let want_size = HEADER_BYTES
+            .checked_add(payload)
+            .and_then(|b| b.checked_add(trailer))
+            .unwrap_or(u64::MAX);
         let actual = file.metadata().with_context(|| ctx("stat failed"))?.len();
         if actual != want_size {
             bail!(
@@ -447,15 +506,18 @@ impl FileStore {
                 path.display()
             );
         }
+        if trailer > 0 {
+            verify_crc64_trailer(&mut file, actual, &format!("feature store {}", path.display()))?;
+        }
         let (l, d) = (l64 as usize, d64 as usize);
         let mut norms = vec![0.0; l];
-        read_f64s(&mut file, HEADER_BYTES, &mut norms).with_context(|| ctx("read norms"))?;
+        read_f64s(&mut file, HEADER_BYTES, &mut norms, None).with_context(|| ctx("read norms"))?;
         if let Some(i) = norms.iter().position(|n| !n.is_finite()) {
             bail!("{}: non-finite squared norm at row {i} ({})", path.display(), norms[i]);
         }
         let labels = if has_labels {
             let mut y = vec![0.0; l];
-            read_f64s(&mut file, HEADER_BYTES + 8 * l64, &mut y)
+            read_f64s(&mut file, HEADER_BYTES + 8 * l64, &mut y, None)
                 .with_context(|| ctx("read labels"))?;
             if let Some(i) = y.iter().position(|&v| v != 1.0 && v != -1.0) {
                 bail!("{}: label at row {i} is {} (want ±1)", path.display(), y[i]);
@@ -474,6 +536,9 @@ impl FileStore {
             pool: Mutex::new(vec![file]),
             temp: false,
             live: None,
+            faults: fault::FaultPlan::from_env()?,
+            io_retries: AtomicU64::new(0),
+            io_recovered: AtomicU64::new(0),
         })
     }
 
@@ -501,6 +566,21 @@ impl FileStore {
         self.labels.as_deref()
     }
 
+    /// Install (or clear) a fault plan under the pooled readers and the
+    /// append rewrite.  `open` installs the `SRBO_FAULTS` plan; tests
+    /// use this to inject faults into one store deterministically.
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
+    }
+
+    /// Retry telemetry for the pooled readers.
+    pub fn io_stats(&self) -> IoStats {
+        IoStats {
+            retries: self.io_retries.load(Ordering::Relaxed),
+            recovered_reads: self.io_recovered.load(Ordering::Relaxed),
+        }
+    }
+
     /// Physical file row behind logical row `i` (identity unless
     /// tombstones are pending).
     #[inline]
@@ -519,18 +599,41 @@ impl FileStore {
 
     /// Run `f` with a pooled reader handle (popped outside the read, so
     /// concurrent callers each hold their own descriptor and offset).
-    fn with_reader<R>(&self, f: impl FnOnce(&mut File) -> std::io::Result<R>) -> R {
-        let pooled = self.pool.lock().unwrap().pop();
+    ///
+    /// Transient errors (`Interrupted`/`WouldBlock`/`TimedOut`) are
+    /// retried with bounded exponential backoff — reads are idempotent
+    /// re-seeks, so a retried read is bit-identical to an unfaulted one.
+    /// Hard errors (or retry exhaustion) still panic, as the
+    /// [`FeatureStore`] read methods carry no `Result`.
+    fn with_reader<R>(&self, mut f: impl FnMut(&mut File) -> std::io::Result<R>) -> R {
+        let pooled = lock_mutex(&self.pool).pop();
         let mut file = match pooled {
             Some(f) => f,
             None => File::open(&self.path).unwrap_or_else(|e| {
                 panic!("feature store {}: reopen failed: {e}", self.path.display())
             }),
         };
-        let out = f(&mut file).unwrap_or_else(|e| {
-            panic!("feature store {}: read failed: {e}", self.path.display())
-        });
-        self.pool.lock().unwrap().push(file);
+        let mut attempt = 0u32;
+        let out = loop {
+            match f(&mut file) {
+                Ok(r) => {
+                    if attempt > 0 {
+                        self.io_recovered.fetch_add(1, Ordering::Relaxed);
+                    }
+                    break r;
+                }
+                Err(e) if fault::is_transient(&e) && attempt < READ_RETRY_MAX => {
+                    attempt += 1;
+                    self.io_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_micros(50 << attempt));
+                }
+                Err(e) => panic!(
+                    "feature store {}: read failed after {attempt} retries: {e}",
+                    self.path.display()
+                ),
+            }
+        };
+        lock_mutex(&self.pool).push(file);
         out
     }
 }
@@ -579,7 +682,7 @@ impl FeatureStore for FileStore {
                     run += 1;
                 }
                 let dst = &mut out[(k - lo) * d..(k - lo + run) * d];
-                read_f64s(file, self.row_off(start), dst)?;
+                read_f64s(file, self.row_off(start), dst, self.faults.as_deref())?;
                 k += run;
             }
             Ok(())
@@ -609,7 +712,8 @@ impl FeatureStore for FileStore {
                 {
                     run += 1;
                 }
-                read_f64s(file, self.row_off(start), &mut out[k * d..(k + run) * d])?;
+                let dst = &mut out[k * d..(k + run) * d];
+                read_f64s(file, self.row_off(start), dst, self.faults.as_deref())?;
                 k += run;
             }
             Ok(())
@@ -648,10 +752,9 @@ impl FeatureStore for FileStore {
         }
         let new_norms = row_norms(x);
         let total = self.rows + x.rows;
-        let mut tmp_name = self.path.as_os_str().to_owned();
-        tmp_name.push(".tmp");
-        let tmp = PathBuf::from(tmp_name);
-        let emit = |w: &mut BufWriter<File>| -> std::io::Result<()> {
+        // crash-safe rewrite: CRC trailer + fsync + atomic rename (an
+        // injected torn write leaves `.tmp` debris, like a real crash)
+        write_atomic(&self.path, self.faults.as_deref(), |w| {
             w.write_all(&STORE_MAGIC)?;
             w.write_all(&(total as u64).to_le_bytes())?;
             w.write_all(&(self.dim as u64).to_le_bytes())?;
@@ -674,22 +777,10 @@ impl FeatureStore for FileStore {
                 write_f64s(w, chunk)?;
                 lo = hi;
             }
-            write_f64s(w, &x.data)?;
-            w.flush()
-        };
-        let rewrite = || -> Result<()> {
-            let file = File::create(&tmp)
-                .with_context(|| format!("create feature store {}", tmp.display()))?;
-            let mut w = BufWriter::new(file);
-            emit(&mut w).with_context(|| format!("write feature store {}", tmp.display()))?;
-            fs::rename(&tmp, &self.path)
-                .with_context(|| format!("rename {} over {}", tmp.display(), self.path.display()))
-        };
-        if let Err(e) = rewrite() {
-            let _ = fs::remove_file(&tmp);
-            return Err(e);
-        }
-        self.pool.lock().unwrap().clear();
+            write_f64s(w, &x.data)
+        })
+        .with_context(|| format!("rewrite feature store {}", self.path.display()))?;
+        lock_mutex(&self.pool).clear();
         self.norms.extend_from_slice(&new_norms);
         if let (Some(lab), Some(y)) = (&mut self.labels, y) {
             lab.extend_from_slice(y);
@@ -737,7 +828,7 @@ impl FeatureStore for FileStore {
 }
 
 /// Write f64s little-endian — the mirror of [`read_f64s`].
-fn write_f64s<W: Write>(w: &mut W, vals: &[f64]) -> std::io::Result<()> {
+fn write_f64s(w: &mut dyn Write, vals: &[f64]) -> std::io::Result<()> {
     for v in vals {
         w.write_all(&v.to_le_bytes())?;
     }
@@ -746,13 +837,20 @@ fn write_f64s<W: Write>(w: &mut W, vals: &[f64]) -> std::io::Result<()> {
 
 /// Seek to `off` and decode `out.len()` little-endian f64s through a
 /// fixed page buffer (so a chunk read never doubles its own footprint).
-fn read_f64s(file: &mut File, off: u64, out: &mut [f64]) -> std::io::Result<()> {
+/// A fault plan injects transient errors / short reads per page; short
+/// reads are absorbed, transients surface to the retry loop.
+fn read_f64s(
+    file: &mut File,
+    off: u64,
+    out: &mut [f64],
+    faults: Option<&FaultPlan>,
+) -> std::io::Result<()> {
     file.seek(SeekFrom::Start(off))?;
     let mut page = [0u8; 8192];
     let mut k = 0;
     while k < out.len() {
         let take = ((out.len() - k) * 8).min(page.len());
-        file.read_exact(&mut page[..take])?;
+        fault::read_exact_faulty(file, &mut page[..take], faults)?;
         for bytes in page[..take].chunks_exact(8) {
             out[k] = f64::from_le_bytes(bytes.try_into().unwrap());
             k += 1;
@@ -770,6 +868,15 @@ mod tests {
     fn tmp(tag: &str) -> PathBuf {
         let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
         std::env::temp_dir().join(format!("srbo-test-{}-{tag}-{seq}.fsb", std::process::id()))
+    }
+
+    /// Recompute the CRC trailer after a test patches payload bytes, so
+    /// the corruption being tested reaches its own validation (rather
+    /// than tripping the checksum first).
+    fn fix_crc(bytes: &mut [u8]) {
+        let n = bytes.len();
+        let crc = crate::util::crc::crc64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&crc.to_le_bytes());
     }
 
     fn random_mat(g: &mut Gen, l: usize, d: usize) -> Mat {
@@ -941,12 +1048,21 @@ mod tests {
         fs::write(&path, &bad).unwrap();
         assert!(FileStore::open(&path).is_err());
 
-        // NaN norm
+        // NaN norm (checksum fixed up so the norm validation is reached)
+        let mut bad = good.clone();
+        bad[32..40].copy_from_slice(&f64::NAN.to_le_bytes());
+        fix_crc(&mut bad);
+        fs::write(&path, &bad).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("non-finite squared norm at row 0"), "{e}");
+
+        // the same patch with a stale trailer is a checksum mismatch
         let mut bad = good.clone();
         bad[32..40].copy_from_slice(&f64::NAN.to_le_bytes());
         fs::write(&path, &bad).unwrap();
         let e = FileStore::open(&path).unwrap_err();
-        assert!(e.msg().contains("non-finite squared norm at row 0"), "{e}");
+        assert!(e.msg().contains("checksum mismatch"), "{e}");
+        assert!(e.msg().contains(path.to_str().unwrap()), "{e} should name the file");
 
         // trailing garbage is a size mismatch, not silently ignored
         let mut bad = good.clone();
@@ -955,6 +1071,34 @@ mod tests {
         let e = FileStore::open(&path).unwrap_err();
         assert!(e.msg().contains("size mismatch"), "{e}");
 
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_files_without_trailer_still_open() {
+        let mut g = Gen::new(0x0F51);
+        let x = random_mat(&mut g, 6, 3);
+        let y = vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        let path = tmp("v1compat");
+        FileStore::write(&path, &x, Some(&y)).unwrap();
+        // rewrite as version 1: strip the trailer, patch the magic
+        let mut bytes = fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 8);
+        bytes[..8].copy_from_slice(&STORE_MAGIC_V1);
+        fs::write(&path, &bytes).unwrap();
+        let v1 = FileStore::open(&path).unwrap();
+        assert_eq!(v1.len(), 6);
+        assert_eq!(v1.labels().unwrap(), &y[..]);
+        let mem = MemStore::new(x.clone());
+        for i in 0..6 {
+            assert_eq!(v1.row(i), mem.row(i), "v1 row {i}");
+        }
+        // an unknown future version is rejected by name
+        bytes[..8].copy_from_slice(b"SRBOFS09");
+        fs::write(&path, &bytes).unwrap();
+        let e = FileStore::open(&path).unwrap_err();
+        assert!(e.msg().contains("unsupported feature-store format version"), "{e}");
+        drop(v1);
         let _ = fs::remove_file(&path);
     }
 
@@ -969,6 +1113,7 @@ mod tests {
         // patch label 0 (offset 32 + 8·l norms) to an invalid value
         let off = 32 + 8 * 4;
         bytes[off..off + 8].copy_from_slice(&0.5f64.to_le_bytes());
+        fix_crc(&mut bytes);
         fs::write(&path, &bytes).unwrap();
         let e = FileStore::open(&path).unwrap_err();
         assert!(e.msg().contains("label at row 0"), "{e}");

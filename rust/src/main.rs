@@ -5,7 +5,7 @@
 //!   path        run a full SRBO ν-path and print screening telemetry
 //!   grid        grid-search (ν × σ) model selection via the coordinator
 //!   convert     write a libsvm/csv file into the binary feature store
-//!   save-model  train once and export a versioned SRBOMD01 model file
+//!   save-model  train once and export a versioned SRBOMD02 model file
 //!   serve       threaded TCP model server (batched scoring, telemetry)
 //!   datasets    list the built-in Table-III benchmark fleet
 //!   runtime     load + smoke-test the PJRT artifacts
@@ -97,7 +97,7 @@ fn usage() -> ! {
            --input FILE      source .libsvm/.csv file (required)\n\
            --output FILE     target feature store (default: input with .fsb)\n\
          save-model options (plus the training flags above):\n\
-           --output FILE     target SRBOMD01 model file (default: <dataset>.mdl)\n\
+           --output FILE     target SRBOMD02 model file (default: <dataset>.mdl)\n\
            --no-norms        skip storing squared SV norms (server recomputes\n\
                              them at load; scores are identical either way)\n\
          serve options:\n\
@@ -106,7 +106,18 @@ fn usage() -> ! {
            --model SPEC      comma list of name[@version]=file.mdl entries\n\
                              (version defaults to 1); more models can be\n\
                              loaded/evicted at runtime over the wire\n\
-           --eval-threads N  shards per coalesced Gram pass (default: cores)"
+           --eval-threads N  shards per coalesced Gram pass (default: cores)\n\
+           --queue-cap N     admission-queue bound; requests past it are shed\n\
+                             with OVERLOADED error frames (default 1024,\n\
+                             0 = unbounded)\n\
+           --deadline-ms N   per-request deadline; late requests get DEADLINE\n\
+                             error frames (default 0 = none)\n\
+           --max-conns N     concurrent-connection cap (default 1024,\n\
+                             0 = unlimited)\n\
+         fault injection (all commands):\n\
+           SRBO_FAULTS       env spec seed=7,transient=0.2,short=0.1,torn=153,\n\
+                             panic=1,delay-ms=20 — deterministic injected I/O\n\
+                             and eval faults for drills and tests"
     );
     std::process::exit(2);
 }
@@ -628,7 +639,7 @@ fn cmd_path(args: &Args) {
     save_if_asked(args, &path);
 }
 
-/// `save-model`: train once on the dataset flags, export a `SRBOMD01`
+/// `save-model`: train once on the dataset flags, export a `SRBOMD02`
 /// artifact, and re-open it to prove the file validates end to end
 /// (mirrors `convert`'s write-then-verify discipline).
 fn cmd_save_model(args: &Args) {
@@ -707,20 +718,32 @@ fn cmd_serve(args: &Args) {
         });
         println!("loaded {name}@{version} from {file}");
     }
+    let faults = srbo::util::fault::FaultPlan::from_env().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
+    let defaults = ServeConfig::default();
+    let deadline_ms = args.get_u64("deadline-ms", 0);
     let cfg = ServeConfig {
-        eval_threads: args
-            .get_usize("eval-threads", ServeConfig::default().eval_threads)
-            .max(1),
+        eval_threads: args.get_usize("eval-threads", defaults.eval_threads).max(1),
+        queue_cap: args.get_usize("queue-cap", defaults.queue_cap),
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        max_conns: args.get_usize("max-conns", defaults.max_conns),
+        faults,
     };
-    let server = Server::bind(&listen, registry, cfg).unwrap_or_else(|e| {
+    let server = Server::bind(&listen, registry, cfg.clone()).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(1);
     });
     println!(
-        "serving {} model(s) on {} (eval_threads={}); Ctrl-C to stop",
+        "serving {} model(s) on {} (eval_threads={}, queue_cap={}, deadline_ms={}, \
+         max_conns={}); Ctrl-C to stop",
         server.registry().len(),
         server.addr,
-        cfg.eval_threads
+        cfg.eval_threads,
+        cfg.queue_cap,
+        deadline_ms,
+        cfg.max_conns
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

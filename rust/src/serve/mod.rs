@@ -1,6 +1,6 @@
 //! Production model serving: the "millions of users" leg of the
 //! system.  A trained ν/C-SVM or OC-SVM is exported as a versioned
-//! `SRBOMD01` artifact ([`crate::svm::model_io`]), admitted into a
+//! `SRBOMD02` artifact ([`crate::svm::model_io`]), admitted into a
 //! [`Registry`], and scored over a std-only threaded TCP loop.
 //!
 //! Layering:
@@ -11,9 +11,12 @@
 //!   norms and the batched scoring path;
 //! * [`server`] — acceptor, per-connection threads, and the
 //!   admission/batching queue that coalesces in-flight requests into
-//!   one sharded Gram pass per model;
-//! * [`telemetry`] — p50/p99 latency, queue depth, throughput counters
-//!   in the `BENCH_*.json` style.
+//!   one sharded Gram pass per model, hardened for overload: a bounded
+//!   queue that sheds with `OVERLOADED` frames, per-request deadlines,
+//!   a connection cap, and `catch_unwind` panic isolation in the eval
+//!   worker;
+//! * [`telemetry`] — p50/p99 latency, queue depth, throughput, and
+//!   shed/deadline/panic counters in the `BENCH_*.json` style.
 //!
 //! The contract that makes batching safe: every kernel entry flows
 //! through the same blocked micro-kernel as training
@@ -28,7 +31,7 @@ pub mod registry;
 pub mod server;
 pub mod telemetry;
 
-pub use protocol::{Client, Request, Response, MAX_FRAME};
+pub use protocol::{Client, Request, Response, MAX_FRAME, OVERLOADED};
 pub use registry::{Registry, ServableModel};
 pub use server::{ServeConfig, Server};
 pub use telemetry::{Stats, Telemetry};

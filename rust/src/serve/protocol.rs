@@ -18,8 +18,12 @@
 //! ERR    1 | UTF-8 message
 //! ```
 //!
-//! All integers and floats are little-endian, matching the `SRBOMD01`
-//! and `SRBOFS01` file formats.
+//! All integers and floats are little-endian, matching the `SRBOMD`
+//! and `SRBOFS` file formats.
+//!
+//! Error frames emitted under overload open with the [`OVERLOADED`]
+//! marker, so clients can tell "back off and retry" apart from
+//! permanent rejections without parsing prose.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -41,6 +45,10 @@ pub const OP_LIST: u8 = 5;
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
 
+/// Prefix of every load-shedding error frame (full queue or connection
+/// cap): the request was well-formed and may be retried after backoff.
+pub const OVERLOADED: &str = "OVERLOADED";
+
 const KIND_SCORES: u8 = 0;
 const KIND_ACK: u8 = 1;
 const KIND_TEXT: u8 = 2;
@@ -50,7 +58,7 @@ const KIND_TEXT: u8 = 2;
 pub enum Request {
     /// Score the rows of `x` against model `name@version`.
     Score { name: String, version: u32, x: Mat },
-    /// Load a `SRBOMD01` file into the registry as `name@version`.
+    /// Load a `SRBOMD` model file into the registry as `name@version`.
     Load { name: String, version: u32, path: String },
     /// Drop `name@version` from the registry.
     Evict { name: String, version: u32 },

@@ -1,5 +1,5 @@
 //! Multi-model registry: resident [`ServableModel`]s keyed by
-//! `name@version`, loaded from `SRBOMD01` files and evictable at
+//! `name@version`, loaded from `SRBOMD` model files and evictable at
 //! runtime.
 //!
 //! A servable model hoists its squared SV norms once at admission (the
@@ -19,6 +19,7 @@ use crate::kernel::gram::{cross_gram_hoisted_threaded, row_norms};
 use crate::svm::model_io::{ModelFamily, SavedModel};
 use crate::svm::KernelModel;
 use crate::util::error::Result;
+use crate::util::sync::{read_lock, write_lock};
 use crate::util::tsv::Json;
 use crate::util::Mat;
 
@@ -90,10 +91,10 @@ impl Registry {
     /// Admit (or replace) a model under its `name@version` key.
     pub fn insert(&self, model: ServableModel) {
         let key = (model.name.clone(), model.version);
-        self.models.write().unwrap().insert(key, Arc::new(model));
+        write_lock(&self.models).insert(key, Arc::new(model));
     }
 
-    /// Load a `SRBOMD01` file (fully validated) and admit it.
+    /// Load a `SRBOMD` model file (fully validated) and admit it.
     pub fn load_file(&self, name: &str, version: u32, path: &Path) -> Result<()> {
         let saved = SavedModel::load(path)?;
         self.insert(ServableModel::new(name, version, saved));
@@ -102,15 +103,15 @@ impl Registry {
 
     /// Drop a model; `false` when it was not registered.
     pub fn evict(&self, name: &str, version: u32) -> bool {
-        self.models.write().unwrap().remove(&(name.to_string(), version)).is_some()
+        write_lock(&self.models).remove(&(name.to_string(), version)).is_some()
     }
 
     pub fn get(&self, name: &str, version: u32) -> Option<Arc<ServableModel>> {
-        self.models.read().unwrap().get(&(name.to_string(), version)).cloned()
+        read_lock(&self.models).get(&(name.to_string(), version)).cloned()
     }
 
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        read_lock(&self.models).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -120,7 +121,7 @@ impl Registry {
     /// Registry contents as a JSON array (the LIST response body),
     /// sorted by key for stable output.
     pub fn list_json(&self) -> Json {
-        let map = self.models.read().unwrap();
+        let map = read_lock(&self.models);
         let mut rows: Vec<&Arc<ServableModel>> = map.values().collect();
         rows.sort_by(|a, b| (&a.name, a.version).cmp(&(&b.name, b.version)));
         Json::Arr(

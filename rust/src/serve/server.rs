@@ -16,43 +16,88 @@
 //! acceptor is woken by a loopback connect; the eval worker is stopped
 //! only after every producer thread has been joined, so no queued job
 //! can be orphaned mid-request.
+//!
+//! Overload hardening: admission is bounded ([`ServeConfig::queue_cap`])
+//! and requests past the cap are shed immediately with an `OVERLOADED`
+//! error frame instead of queueing without bound; every score request
+//! can carry a deadline after which the connection answers a `DEADLINE`
+//! error frame (the eval worker also drops queue-expired jobs before
+//! paying for a Gram pass); a panic inside the eval pass is caught, the
+//! affected requests get error frames, and the worker survives; the
+//! acceptor refuses connections past [`ServeConfig::max_conns`]. Every
+//! lock uses the poison-recovering helpers in [`crate::util::sync`], so
+//! a panicking thread can never wedge the server.
 
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::protocol::{
-    decode_request, encode_response, write_frame, Request, Response, MAX_FRAME,
+    decode_request, encode_response, write_frame, Request, Response, MAX_FRAME, OVERLOADED,
 };
 use super::registry::{Registry, ServableModel};
 use super::telemetry::Telemetry;
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Result, SrboError};
+use crate::util::fault::FaultPlan;
+use crate::util::sync::{lock_mutex, wait_timeout_recover};
 use crate::util::Mat;
 
 /// Serving knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Shards per coalesced Gram pass (defaults to the machine's
     /// parallelism).
     pub eval_threads: usize,
+    /// Admission-queue bound: score requests arriving while this many
+    /// are already queued are shed with an `OVERLOADED` error frame
+    /// (0 = unbounded).
+    pub queue_cap: usize,
+    /// Per-request deadline; a request that cannot be answered in time
+    /// gets a `DEADLINE` error frame (`None` = wait forever).
+    pub deadline: Option<Duration>,
+    /// Concurrent-connection cap; the acceptor answers one `OVERLOADED`
+    /// error frame and closes connections past it (0 = unlimited).
+    pub max_conns: usize,
+    /// Optional fault-injection plan (eval delays + panics) for tests
+    /// and fault drills.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ServeConfig { eval_threads: cores }
+        ServeConfig {
+            eval_threads: cores,
+            queue_cap: 1024,
+            deadline: None,
+            max_conns: 1024,
+            faults: None,
+        }
     }
 }
 
-/// One queued score request: the resolved model, the batch rows, and
-/// the channel carrying the result back to the connection thread.
+/// Why a queued score request came back without scores.
+enum EvalError {
+    /// The model evaluation itself failed.
+    Failed(SrboError),
+    /// The request expired in the queue before evaluation.
+    Deadline,
+    /// The eval worker panicked mid-pass (caught; the worker survives).
+    Panicked,
+}
+
+/// One queued score request: the resolved model, the batch rows, the
+/// channel carrying the result back to the connection thread, and the
+/// instant after which the answer no longer matters.
 struct Job {
     model: Arc<ServableModel>,
     x: Mat,
-    tx: mpsc::Sender<Result<Vec<f64>>>,
+    tx: mpsc::Sender<std::result::Result<Vec<f64>, EvalError>>,
+    deadline: Option<Instant>,
 }
 
 /// The admission queue (jobs + wakeup for the eval worker).
@@ -92,13 +137,17 @@ impl Server {
         let eval = {
             let (queue, eval_stop, telemetry) = (queue.clone(), eval_stop.clone(), telemetry.clone());
             let threads = cfg.eval_threads.max(1);
-            std::thread::spawn(move || eval_loop(&queue, &eval_stop, &telemetry, threads))
+            let faults = cfg.faults.clone();
+            std::thread::spawn(move || {
+                eval_loop(&queue, &eval_stop, &telemetry, threads, faults.as_deref())
+            })
         };
         let acceptor = {
             let (registry, telemetry) = (registry.clone(), telemetry.clone());
             let (stop, queue) = (stop.clone(), queue.clone());
+            let cfg = cfg.clone();
             std::thread::spawn(move || {
-                accept_loop(listener, &registry, &telemetry, &queue, &stop)
+                accept_loop(listener, &registry, &telemetry, &queue, &stop, &cfg)
             })
         };
         Ok(Server {
@@ -153,27 +202,41 @@ impl Drop for Server {
 
 // ------------------------------------------------------------ eval worker
 
-/// Drain-all batching loop: every pass takes the whole queue, groups
-/// jobs by target model, and runs one sharded Gram pass per group.
-fn eval_loop(queue: &Queue, stop: &AtomicBool, telemetry: &Telemetry, threads: usize) {
+/// Drain-all batching loop: every pass takes the whole queue, drops
+/// queue-expired jobs, groups the rest by target model, and runs one
+/// sharded Gram pass per group inside a panic fence — an injected (or
+/// genuine) panic answers the affected jobs with error results and the
+/// worker keeps serving.
+fn eval_loop(
+    queue: &Queue,
+    stop: &AtomicBool,
+    telemetry: &Telemetry,
+    threads: usize,
+    faults: Option<&FaultPlan>,
+) {
     loop {
         let drained: Vec<Job> = {
-            let mut jobs = queue.jobs.lock().unwrap();
+            let mut jobs = lock_mutex(&queue.jobs);
             while jobs.is_empty() {
                 if stop.load(Ordering::SeqCst) {
                     return;
                 }
-                let (guard, _) = queue
-                    .wake
-                    .wait_timeout(jobs, Duration::from_millis(50))
-                    .unwrap();
+                let (guard, _) = wait_timeout_recover(&queue.wake, jobs, Duration::from_millis(50));
                 jobs = guard;
             }
             jobs.drain(..).collect()
         };
+        // answer queue-expired jobs without paying for a Gram pass (the
+        // connection thread counts the deadline hit, not the worker)
+        let now = Instant::now();
+        let (live, expired): (Vec<Job>, Vec<Job>) =
+            drained.into_iter().partition(|j| !j.deadline.is_some_and(|d| d <= now));
+        for job in expired {
+            let _ = job.tx.send(Err(EvalError::Deadline));
+        }
         // group by model identity, preserving arrival order
         let mut groups: Vec<(Arc<ServableModel>, Vec<Job>)> = Vec::new();
-        for job in drained {
+        for job in live {
             match groups.iter_mut().find(|(m, _)| Arc::ptr_eq(m, &job.model)) {
                 Some((_, g)) => g.push(job),
                 None => groups.push((job.model.clone(), vec![job])),
@@ -181,7 +244,16 @@ fn eval_loop(queue: &Queue, stop: &AtomicBool, telemetry: &Telemetry, threads: u
         }
         for (model, jobs) in groups {
             telemetry.batch_evaluated(jobs.len());
-            evaluate_group(&model, jobs, threads);
+            let txs: Vec<_> = jobs.iter().map(|j| j.tx.clone()).collect();
+            let pass = catch_unwind(AssertUnwindSafe(|| {
+                evaluate_group(&model, jobs, threads, faults)
+            }));
+            if pass.is_err() {
+                telemetry.eval_panicked();
+                for tx in txs {
+                    let _ = tx.send(Err(EvalError::Panicked));
+                }
+            }
         }
     }
 }
@@ -189,7 +261,20 @@ fn eval_loop(queue: &Queue, stop: &AtomicBool, telemetry: &Telemetry, threads: u
 /// One coalesced pass: concatenate the group's rows, score once, split
 /// the results back per job (row order in == row order out, and rows
 /// are independent, so results are bit-identical to per-job scoring).
-fn evaluate_group(model: &ServableModel, jobs: Vec<Job>, threads: usize) {
+fn evaluate_group(
+    model: &ServableModel,
+    jobs: Vec<Job>,
+    threads: usize,
+    faults: Option<&FaultPlan>,
+) {
+    if let Some(p) = faults {
+        if let Some(delay) = p.eval_delay() {
+            std::thread::sleep(delay);
+        }
+        if p.take_eval_panic() {
+            panic!("injected eval-worker panic");
+        }
+    }
     let d = model.dim();
     let total: usize = jobs.iter().map(|j| j.x.rows).sum();
     let mut all = Mat::zeros(total, d);
@@ -210,7 +295,7 @@ fn evaluate_group(model: &ServableModel, jobs: Vec<Job>, threads: usize) {
         }
         Err(e) => {
             for job in jobs {
-                let _ = job.tx.send(Err(e.clone()));
+                let _ = job.tx.send(Err(EvalError::Failed(e.clone())));
             }
         }
     }
@@ -224,18 +309,30 @@ fn accept_loop(
     telemetry: &Arc<Telemetry>,
     queue: &Arc<Queue>,
     stop: &Arc<AtomicBool>,
+    cfg: &ServeConfig,
 ) {
-    let mut conns = Vec::new();
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
         match listener.accept() {
-            Ok((stream, _)) => {
+            Ok((mut stream, _)) => {
                 if stop.load(Ordering::SeqCst) {
                     break; // the shutdown wake-up connect
                 }
+                conns.retain(|h| !h.is_finished());
+                if cfg.max_conns > 0 && conns.len() >= cfg.max_conns {
+                    telemetry.conn_rejected();
+                    let resp = Response::Error(format!(
+                        "{OVERLOADED}: connection limit reached (cap {})",
+                        cfg.max_conns
+                    ));
+                    let _ = write_frame(&mut stream, &encode_response(&resp));
+                    continue;
+                }
                 let (registry, telemetry) = (registry.clone(), telemetry.clone());
                 let (queue, stop) = (queue.clone(), stop.clone());
+                let cfg = cfg.clone();
                 conns.push(std::thread::spawn(move || {
-                    handle_conn(stream, &registry, &telemetry, &queue, &stop)
+                    handle_conn(stream, &registry, &telemetry, &queue, &stop, &cfg)
                 }));
             }
             Err(_) => {
@@ -314,6 +411,7 @@ fn handle_conn(
     telemetry: &Telemetry,
     queue: &Queue,
     stop: &AtomicBool,
+    cfg: &ServeConfig,
 ) {
     stream.set_nodelay(true).ok();
     if stream.set_read_timeout(Some(Duration::from_millis(100))).is_err() {
@@ -333,7 +431,7 @@ fn handle_conn(
             }
         };
         let resp = match decode_request(&payload) {
-            Ok(req) => dispatch(req, registry, telemetry, queue),
+            Ok(req) => dispatch(req, registry, telemetry, queue, cfg),
             Err(e) => Response::Error(format!("malformed request: {e}")),
         };
         if matches!(resp, Response::Error(_)) {
@@ -345,7 +443,13 @@ fn handle_conn(
     }
 }
 
-fn dispatch(req: Request, registry: &Registry, telemetry: &Telemetry, queue: &Queue) -> Response {
+fn dispatch(
+    req: Request,
+    registry: &Registry,
+    telemetry: &Telemetry,
+    queue: &Queue,
+    cfg: &ServeConfig,
+) -> Response {
     match req {
         Request::Score { name, version, x } => {
             let model = match registry.get(&name, version) {
@@ -361,22 +465,53 @@ fn dispatch(req: Request, registry: &Registry, telemetry: &Telemetry, queue: &Qu
             }
             let rows = x.rows;
             let t0 = Instant::now();
-            telemetry.request_enqueued();
+            let deadline = cfg.deadline.map(|d| t0 + d);
             let (tx, rx) = mpsc::channel();
-            queue.jobs.lock().unwrap().push_back(Job { model, x, tx });
+            {
+                let mut jobs = lock_mutex(&queue.jobs);
+                if cfg.queue_cap > 0 && jobs.len() >= cfg.queue_cap {
+                    drop(jobs);
+                    telemetry.shed();
+                    return Response::Error(format!(
+                        "{OVERLOADED}: admission queue full (cap {})",
+                        cfg.queue_cap
+                    ));
+                }
+                telemetry.request_enqueued();
+                jobs.push_back(Job { model, x, tx, deadline });
+            }
             queue.wake.notify_one();
-            match rx.recv() {
-                Ok(Ok(scores)) => {
-                    telemetry.request_done(rows, t0.elapsed().as_secs_f64());
-                    Response::Scores(scores)
+            let outcome = match deadline {
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    match rx.recv_timeout(left) {
+                        Ok(r) => r,
+                        Err(mpsc::RecvTimeoutError::Timeout) => Err(EvalError::Deadline),
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            telemetry.request_done(rows, t0.elapsed().as_secs_f64());
+                            return Response::Error("server shutting down".to_string());
+                        }
+                    }
                 }
-                Ok(Err(e)) => {
-                    telemetry.request_done(rows, t0.elapsed().as_secs_f64());
-                    Response::Error(format!("evaluation failed: {e}"))
+                None => match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => {
+                        telemetry.request_done(rows, t0.elapsed().as_secs_f64());
+                        return Response::Error("server shutting down".to_string());
+                    }
+                },
+            };
+            telemetry.request_done(rows, t0.elapsed().as_secs_f64());
+            match outcome {
+                Ok(scores) => Response::Scores(scores),
+                Err(EvalError::Failed(e)) => Response::Error(format!("evaluation failed: {e}")),
+                Err(EvalError::Deadline) => {
+                    telemetry.deadline_hit();
+                    let ms = cfg.deadline.map_or(0, |d| d.as_millis());
+                    Response::Error(format!("DEADLINE: request exceeded the {ms} ms deadline"))
                 }
-                Err(_) => {
-                    telemetry.request_done(rows, t0.elapsed().as_secs_f64());
-                    Response::Error("server shutting down".to_string())
+                Err(EvalError::Panicked) => {
+                    Response::Error("evaluation failed: eval worker panicked (recovered)".into())
                 }
             }
         }
@@ -426,8 +561,8 @@ mod tests {
         let sv = servable(&mut g, "m", 1);
         let direct = sv.model.clone();
         registry.insert(sv);
-        let server =
-            Server::bind("127.0.0.1:0", registry, ServeConfig { eval_threads: 2 }).unwrap();
+        let cfg = ServeConfig { eval_threads: 2, ..ServeConfig::default() };
+        let server = Server::bind("127.0.0.1:0", registry, cfg).unwrap();
         let addr = server.addr.to_string();
 
         let mut client = Client::connect(&addr).unwrap();
@@ -463,5 +598,68 @@ mod tests {
         let _idle2 = Client::connect(&addr).unwrap();
         std::thread::sleep(Duration::from_millis(20));
         server.shutdown(); // joins acceptor + conn threads without hanging
+    }
+
+    /// An injected eval panic answers the request with an error frame
+    /// and the worker survives to score the next one bit-identically.
+    #[test]
+    fn eval_panic_is_isolated_and_the_worker_survives() {
+        let mut g = Gen::new(0x5EB2);
+        let registry = Arc::new(Registry::new());
+        let sv = servable(&mut g, "m", 1);
+        let direct = sv.model.clone();
+        registry.insert(sv);
+        let cfg = ServeConfig {
+            eval_threads: 1,
+            faults: Some(Arc::new(FaultPlan::new(7).with_eval_panics(1))),
+            ..ServeConfig::default()
+        };
+        let server = Server::bind("127.0.0.1:0", registry, cfg).unwrap();
+        let addr = server.addr.to_string();
+
+        let mut client = Client::connect(&addr).unwrap();
+        let x = Mat::from_rows(
+            &(0..3).map(|_| g.vec_f64(direct.sv.cols, -2.0, 2.0)).collect::<Vec<_>>(),
+        );
+        let err = client.score("m", 1, &x).unwrap_err();
+        assert!(err.msg().contains("panicked"), "{err}");
+        // same connection, same worker: the next request succeeds
+        let served = client.score("m", 1, &x).unwrap();
+        let want = direct.decision(&x);
+        for (a, b) in served.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let stats = server.telemetry().snapshot();
+        assert_eq!(stats.eval_panics, 1);
+        drop(client);
+        server.shutdown();
+    }
+
+    /// With a deadline far shorter than the injected eval delay, the
+    /// request gets a DEADLINE error frame and the hit is counted once.
+    #[test]
+    fn deadline_miss_answers_an_error_frame() {
+        let mut g = Gen::new(0x5EB3);
+        let registry = Arc::new(Registry::new());
+        let sv = servable(&mut g, "m", 1);
+        let dim = sv.model.sv.cols;
+        registry.insert(sv);
+        let cfg = ServeConfig {
+            eval_threads: 1,
+            deadline: Some(Duration::from_millis(10)),
+            faults: Some(Arc::new(FaultPlan::new(7).with_eval_delay_ms(200))),
+            ..ServeConfig::default()
+        };
+        let server = Server::bind("127.0.0.1:0", registry, cfg).unwrap();
+        let addr = server.addr.to_string();
+
+        let mut client = Client::connect(&addr).unwrap();
+        let x = Mat::from_rows(&[g.vec_f64(dim, -2.0, 2.0)]);
+        let err = client.score("m", 1, &x).unwrap_err();
+        assert!(err.msg().contains("DEADLINE"), "{err}");
+        let stats = server.telemetry().snapshot();
+        assert_eq!(stats.deadline_hits, 1);
+        drop(client);
+        server.shutdown();
     }
 }

@@ -10,6 +10,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::util::sync::lock_mutex;
 use crate::util::tsv::Json;
 
 /// Latency samples retained for percentile estimates.
@@ -23,6 +24,10 @@ pub struct Telemetry {
     batches: AtomicU64,
     coalesced: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
+    deadline_hits: AtomicU64,
+    eval_panics: AtomicU64,
+    conns_rejected: AtomicU64,
     queue_depth: AtomicU64,
     queue_peak: AtomicU64,
     lat: Mutex<Ring>,
@@ -61,7 +66,7 @@ impl Telemetry {
     pub fn request_done(&self, rows: usize, secs: f64) {
         self.queue_depth.fetch_sub(1, Ordering::Relaxed);
         self.samples.fetch_add(rows as u64, Ordering::Relaxed);
-        self.lat.lock().unwrap().push(secs);
+        lock_mutex(&self.lat).push(secs);
     }
 
     /// The eval worker ran one coalesced Gram pass covering
@@ -76,8 +81,28 @@ impl Telemetry {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A score request was shed at admission (queue at capacity).
+    pub fn shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A score request missed its deadline before a result arrived.
+    pub fn deadline_hit(&self) {
+        self.deadline_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The eval worker caught a panic during a coalesced pass.
+    pub fn eval_panicked(&self) {
+        self.eval_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection was refused at the connection cap.
+    pub fn conn_rejected(&self) {
+        self.conns_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Stats {
-        let lats: Vec<f64> = self.lat.lock().unwrap().buf.clone();
+        let lats: Vec<f64> = lock_mutex(&self.lat).buf.clone();
         let (p50, p99, max) = percentiles(&lats);
         Stats {
             requests: self.requests.load(Ordering::Relaxed),
@@ -85,6 +110,10 @@ impl Telemetry {
             batches: self.batches.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_hits: self.deadline_hits.load(Ordering::Relaxed),
+            eval_panics: self.eval_panics.load(Ordering::Relaxed),
+            conns_rejected: self.conns_rejected.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_peak: self.queue_peak.load(Ordering::Relaxed),
             p50_ms: p50 * 1e3,
@@ -122,6 +151,14 @@ pub struct Stats {
     pub coalesced: u64,
     /// Requests answered with an error frame.
     pub errors: u64,
+    /// Score requests shed at admission because the queue was full.
+    pub shed: u64,
+    /// Score requests that missed their deadline.
+    pub deadline_hits: u64,
+    /// Panics caught (and survived) by the eval worker.
+    pub eval_panics: u64,
+    /// Connections refused at the connection cap.
+    pub conns_rejected: u64,
     /// Requests in flight right now.
     pub queue_depth: u64,
     /// High-water queue depth.
@@ -142,6 +179,10 @@ impl Stats {
             ("batches".into(), Json::Num(self.batches as f64)),
             ("coalesced".into(), Json::Num(self.coalesced as f64)),
             ("errors".into(), Json::Num(self.errors as f64)),
+            ("shed".into(), Json::Num(self.shed as f64)),
+            ("deadline_hits".into(), Json::Num(self.deadline_hits as f64)),
+            ("eval_panics".into(), Json::Num(self.eval_panics as f64)),
+            ("conns_rejected".into(), Json::Num(self.conns_rejected as f64)),
             ("queue_depth".into(), Json::Num(self.queue_depth as f64)),
             ("queue_peak".into(), Json::Num(self.queue_peak as f64)),
             ("p50_ms".into(), Json::Num(self.p50_ms)),
@@ -177,12 +218,21 @@ mod tests {
         t.request_done(2, 0.003);
         t.request_done(1, 0.002);
         t.error();
+        t.shed();
+        t.shed();
+        t.deadline_hit();
+        t.eval_panicked();
+        t.conn_rejected();
         let s = t.snapshot();
         assert_eq!(s.requests, 3);
         assert_eq!(s.samples, 7);
         assert_eq!(s.batches, 1);
         assert_eq!(s.coalesced, 3);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_hits, 1);
+        assert_eq!(s.eval_panics, 1);
+        assert_eq!(s.conns_rejected, 1);
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.queue_peak, 3);
         assert_eq!(s.p50_ms, 2.0);
@@ -196,7 +246,7 @@ mod tests {
             t.request_enqueued();
             t.request_done(1, i as f64);
         }
-        let lats = t.lat.lock().unwrap().buf.clone();
+        let lats = lock_mutex(&t.lat).buf.clone();
         assert_eq!(lats.len(), LAT_RING_CAP);
         // the 100 oldest samples (0..100) were overwritten
         assert!(lats.iter().all(|&v| v >= 100.0));
@@ -208,7 +258,19 @@ mod tests {
     fn stats_render_json_schema() {
         let s = Telemetry::new().snapshot();
         let j = s.to_json().render();
-        for key in ["requests", "batches", "errors", "queue_peak", "p50_ms", "p99_ms"] {
+        let keys = [
+            "requests",
+            "batches",
+            "errors",
+            "shed",
+            "deadline_hits",
+            "eval_panics",
+            "conns_rejected",
+            "queue_peak",
+            "p50_ms",
+            "p99_ms",
+        ];
+        for key in keys {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
         }
     }

@@ -1,5 +1,5 @@
 //! Versioned on-disk model format for production serving: a trained
-//! [`KernelModel`] (either family) ships as a single `SRBOMD01` file the
+//! [`KernelModel`] (either family) ships as a single `SRBOMD02` file the
 //! serve layer can load, validate, and score against without retraining.
 //!
 //! Screening's payoff at serving time is exactly this artifact being
@@ -11,7 +11,7 @@
 //!
 //! ```text
 //! offset  size      field
-//! 0       8         magic "SRBOMD01" ("SRBOMD" + 2-digit format version)
+//! 0       8         magic "SRBOMD02" ("SRBOMD" + 2-digit format version)
 //! 8       8         flags (u64; bit 0 = one-class family, bit 1 = RBF
 //!                   kernel, bit 2 = squared SV norms stored)
 //! 16      8         m  (support-vector rows, u64, ≥ 1)
@@ -21,22 +21,29 @@
 //! 48      8·m       coefficients coef_i = y_i α_i / α_i (f64)
 //! …       8·m       squared SV norms ‖sv_i‖² (f64; only when flagged)
 //! …       8·m·d     row-major SV feature rows (f64)
+//! end−8   8         CRC-64/XZ of all preceding bytes
 //! ```
 //!
 //! [`SavedModel::load`] mirrors the [`FileStore`](crate::data::store)
-//! `SRBOFS01` discipline: magic, version, flags, header counts, the
-//! exact file size and every float's finiteness are validated before the
-//! model is trusted — truncated, corrupt, NaN-α, or trailing-garbage
-//! files surface a [`SrboError`](crate::util::error::SrboError) naming
-//! the offending path, never a panic (pinned by the property tests
-//! below).
+//! `SRBOFS02` discipline: magic, version, flags, header counts, the
+//! exact file size, the checksum trailer, and every float's finiteness
+//! are validated before the model is trusted — truncated, torn, corrupt,
+//! NaN-α, or trailing-garbage files surface a
+//! [`SrboError`](crate::util::error::SrboError) naming the offending
+//! path, never a panic (pinned by the property tests below and
+//! `tests/faults.rs`).  Version-1 files (magic `SRBOMD01`, no trailer)
+//! are still readable; every save emits version 2 through the
+//! crash-safe [`write_atomic`](crate::util::durable::write_atomic)
+//! discipline (CRC trailer, `sync_all`, atomic rename, parent-dir
+//! fsync), and `load` sweeps stale `<path>.tmp` debris left by a
+//! crashed writer.
 //!
 //! Stored norms are written from [`row_norms`] at save time — the same
 //! lane arithmetic as every kernel entry — so a server that hoists them
 //! once per model scores bit-identically to a fresh recompute.
 
 use std::fs::File;
-use std::io::{BufWriter, Read, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use super::nu::NuSvm;
@@ -45,11 +52,16 @@ use super::KernelModel;
 use crate::bail;
 use crate::kernel::gram::row_norms;
 use crate::kernel::KernelKind;
+use crate::util::durable::{cleanup_stale_tmp, verify_crc64_trailer, write_atomic, TRAILER_BYTES};
 use crate::util::error::{Context, Result};
+use crate::util::fault::FaultPlan;
 use crate::util::Mat;
 
-/// Magic bytes opening every saved-model file.
-pub const MODEL_MAGIC: [u8; 8] = *b"SRBOMD01";
+/// Magic bytes opening every saved-model file (version 2: CRC trailer).
+pub const MODEL_MAGIC: [u8; 8] = *b"SRBOMD02";
+
+/// Version-1 magic: same layout, no checksum trailer (still readable).
+pub const MODEL_MAGIC_V1: [u8; 8] = *b"SRBOMD01";
 
 /// Fixed-size header bytes before the coefficient block.
 const HEADER_BYTES: u64 = 48;
@@ -120,10 +132,18 @@ impl SavedModel {
         }
     }
 
-    /// Serialize into the `SRBOMD01` format at `path`, returning the
-    /// total bytes written.  The invariants `load` enforces are checked
-    /// up front so a save can never produce a file `load` rejects.
+    /// Serialize into the `SRBOMD02` format at `path`, returning the
+    /// total bytes written (CRC trailer included).  The invariants
+    /// `load` enforces are checked up front so a save can never produce
+    /// a file `load` rejects.  The write is crash-safe: staged into
+    /// `<path>.tmp`, checksummed, fsynced, and atomically renamed.
     pub fn save(&self, path: &Path) -> Result<u64> {
+        self.save_with_faults(path, FaultPlan::from_env()?.as_deref())
+    }
+
+    /// [`SavedModel::save`] with an explicit fault plan (tests arm torn
+    /// writes through this; `save` itself reads `SRBO_FAULTS`).
+    pub fn save_with_faults(&self, path: &Path, faults: Option<&FaultPlan>) -> Result<u64> {
         let sv = &self.model.sv;
         let (m, d) = (sv.rows, sv.cols);
         if m == 0 || d == 0 {
@@ -160,10 +180,7 @@ impl SavedModel {
         if self.norms.is_some() {
             flags |= FLAG_NORMS;
         }
-        let file = File::create(path)
-            .with_context(|| format!("create saved model {}", path.display()))?;
-        let mut w = BufWriter::new(file);
-        let emit = |w: &mut BufWriter<File>| -> std::io::Result<()> {
+        write_atomic(path, faults, |w| {
             w.write_all(&MODEL_MAGIC)?;
             w.write_all(&flags.to_le_bytes())?;
             w.write_all(&(m as u64).to_le_bytes())?;
@@ -174,20 +191,20 @@ impl SavedModel {
             if let Some(n) = &self.norms {
                 write_f64s(w, n)?;
             }
-            write_f64s(w, &sv.data)?;
-            w.flush()
-        };
-        emit(&mut w).with_context(|| format!("write saved model {}", path.display()))?;
-        let blocks = 1 + u64::from(self.norms.is_some());
-        Ok(HEADER_BYTES + 8 * (m as u64) * (blocks + d as u64))
+            write_f64s(w, &sv.data)
+        })
+        .with_context(|| format!("write saved model {}", path.display()))
     }
 
     /// Open and fully validate a saved model.  Bad magic, an unsupported
     /// format version, unknown flags, zero-SV headers, size mismatches
-    /// (truncation or trailing garbage), and non-finite floats anywhere
-    /// in the payload all return errors naming the path — afterwards the
-    /// model can be served without further checks.
+    /// (truncation or trailing garbage), checksum failures, and
+    /// non-finite floats anywhere in the payload all return errors
+    /// naming the path — afterwards the model can be served without
+    /// further checks.  Stale `<path>.tmp` debris left by a crashed
+    /// writer is swept first.
     pub fn load(path: &Path) -> Result<SavedModel> {
+        cleanup_stale_tmp(path);
         let mut file =
             File::open(path).with_context(|| format!("open saved model {}", path.display()))?;
         let ctx = |what: &str| format!("{}: {what}", path.display());
@@ -197,13 +214,17 @@ impl SavedModel {
         if header[..6] != MODEL_MAGIC[..6] {
             bail!("{}: bad magic (not a SRBOMD saved model)", path.display());
         }
-        if header[..8] != MODEL_MAGIC {
+        let trailer = if header[..8] == MODEL_MAGIC {
+            TRAILER_BYTES
+        } else if header[..8] == MODEL_MAGIC_V1 {
+            0 // version 1: identical layout, no checksum trailer
+        } else {
             bail!(
-                "{}: unsupported model format version {:?} (this build reads 01)",
+                "{}: unsupported model format version {:?} (this build reads 01 and 02)",
                 path.display(),
                 String::from_utf8_lossy(&header[6..8])
             );
-        }
+        };
         let word = |k: usize| u64::from_le_bytes(header[8 * k..8 * (k + 1)].try_into().unwrap());
         let float = |k: usize| f64::from_le_bytes(header[8 * k..8 * (k + 1)].try_into().unwrap());
         let (flags, m64, d64) = (word(1), word(2), word(3));
@@ -220,7 +241,10 @@ impl SavedModel {
             .checked_mul(m64)
             .and_then(|b| b.checked_mul(blocks + d64))
             .unwrap_or(u64::MAX);
-        let want_size = HEADER_BYTES.checked_add(payload).unwrap_or(u64::MAX);
+        let want_size = HEADER_BYTES
+            .checked_add(payload)
+            .and_then(|b| b.checked_add(trailer))
+            .unwrap_or(u64::MAX);
         let actual = file.metadata().with_context(|| ctx("stat failed"))?.len();
         if actual != want_size {
             bail!(
@@ -228,6 +252,11 @@ impl SavedModel {
                  norms={has_norms}), file has {actual} (truncated or corrupt)",
                 path.display()
             );
+        }
+        if trailer > 0 {
+            verify_crc64_trailer(&mut file, actual, &format!("saved model {}", path.display()))?;
+            // the checksum pass consumed the file; re-seek past the header
+            file.seek(SeekFrom::Start(HEADER_BYTES)).with_context(|| ctx("seek"))?;
         }
         let kernel = if flags & FLAG_RBF != 0 {
             if !(gamma.is_finite() && gamma > 0.0) {
@@ -289,7 +318,7 @@ impl SavedModel {
 }
 
 /// Write f64s little-endian (mirror of [`read_f64s`]).
-fn write_f64s<W: Write>(w: &mut W, vals: &[f64]) -> std::io::Result<()> {
+fn write_f64s(w: &mut dyn Write, vals: &[f64]) -> std::io::Result<()> {
     for v in vals {
         w.write_all(&v.to_le_bytes())?;
     }
@@ -431,6 +460,14 @@ mod tests {
             assert!(e.msg().contains(want), "want {want:?} in: {e}");
             assert!(e.msg().contains(p), "{e} should name the file");
         };
+        // recompute the CRC trailer after a patch so the corruption
+        // under test reaches its own validation (not the checksum's)
+        let fixed = |mut bytes: Vec<u8>| -> Vec<u8> {
+            let n = bytes.len();
+            let crc = crate::util::crc::crc64(&bytes[..n - 8]);
+            bytes[n - 8..].copy_from_slice(&crc.to_le_bytes());
+            bytes
+        };
 
         // truncated mid-data
         reject(&good[..good.len() - 11], "size mismatch");
@@ -455,26 +492,49 @@ mod tests {
         // NaN coefficient (the NaN-α case)
         let mut bad = good.clone();
         bad[48..56].copy_from_slice(&f64::NAN.to_le_bytes());
-        reject(&bad, "non-finite coefficient");
+        reject(&fixed(bad.clone()), "non-finite coefficient");
+        // the same patch with a stale trailer is a checksum mismatch
+        reject(&bad, "checksum mismatch");
         // NaN stored norm (norms block starts after the 5 coefs)
         let mut bad = good.clone();
         let off = 48 + 8 * 5;
         bad[off..off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
-        reject(&bad, "bad squared SV norm at row 0");
+        reject(&fixed(bad), "bad squared SV norm at row 0");
         // NaN SV feature value
         let mut bad = good.clone();
         let off = 48 + 8 * 5 * 2;
         bad[off..off + 8].copy_from_slice(&f64::INFINITY.to_le_bytes());
-        reject(&bad, "non-finite SV feature at row 0");
+        reject(&fixed(bad), "non-finite SV feature at row 0");
         // non-finite threshold
         let mut bad = good.clone();
         bad[40..48].copy_from_slice(&f64::NAN.to_le_bytes());
-        reject(&bad, "non-finite threshold");
+        reject(&fixed(bad), "non-finite threshold");
         // trailing garbage is a size mismatch, not silently ignored
         let mut bad = good.clone();
         bad.push(7);
         reject(&bad, "size mismatch");
 
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_files_without_trailer_still_load_and_score() {
+        let mut g = Gen::new(0x3D03);
+        let saved = random_model(&mut g);
+        let path = tmp("v1compat");
+        saved.save(&path).unwrap();
+        // rewrite as version 1: strip the trailer, patch the magic
+        let mut bytes = fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 8);
+        bytes[..8].copy_from_slice(&MODEL_MAGIC_V1);
+        fs::write(&path, &bytes).unwrap();
+        let v1 = SavedModel::load(&path).unwrap();
+        assert_eq!(v1.family, saved.family);
+        let d = saved.model.sv.cols;
+        let x = Mat::from_rows(&(0..4).map(|_| g.vec_f64(d, -2.0, 2.0)).collect::<Vec<_>>());
+        for (a, b) in v1.model.decision(&x).iter().zip(saved.model.decision(&x)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "v1 decisions differ");
+        }
         let _ = fs::remove_file(&path);
     }
 

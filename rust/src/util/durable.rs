@@ -1,0 +1,278 @@
+//! Crash-safe durable writes shared by every on-disk format.
+//!
+//! [`write_atomic`] is the single write path for `SRBOFS`/`SRBOMD`/
+//! `SRBOPT` files: stream the payload through a CRC-64 accumulator into
+//! `<path>.tmp`, append the 8-byte checksum trailer, `flush` +
+//! `sync_all`, rename over the target, then fsync the parent directory
+//! so the rename itself is durable. A crash (or an injected torn write)
+//! at any byte leaves either the old file or the new file — never a
+//! half-written target — plus possibly a `.tmp` sibling that
+//! [`cleanup_stale_tmp`] sweeps on the next open.
+//!
+//! [`verify_crc64_trailer`] is the matching read-side check: loaders
+//! stream the file through the same CRC before parsing, so every
+//! truncation point and silent bit-flip is rejected with a message that
+//! names the file.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::bail;
+use crate::util::crc::{Crc64, Crc64Write};
+use crate::util::error::{Context, Result};
+use crate::util::fault::FaultPlan;
+
+/// Size of the CRC-64 trailer every v2 format file ends with.
+pub const TRAILER_BYTES: u64 = 8;
+
+/// The temp-file sibling a durable write stages into: `<path>.tmp`.
+pub fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".tmp");
+    PathBuf::from(name)
+}
+
+/// Remove a stale `<path>.tmp` left behind by a crashed writer. Returns
+/// `true` when debris was actually found and removed.
+pub fn cleanup_stale_tmp(path: &Path) -> bool {
+    let tmp = tmp_sibling(path);
+    tmp.exists() && std::fs::remove_file(&tmp).is_ok()
+}
+
+/// Best-effort fsync of `path`'s parent directory, making a completed
+/// rename durable. Errors are ignored: not every filesystem supports
+/// directory fsync, and the rename itself already happened.
+fn fsync_parent_dir(path: &Path) {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// `Write` adapter that "crashes" after an armed number of bytes: the
+/// byte at the cut and everything after it never reach the file, and
+/// every later write fails, so buffered writers cannot sneak more bytes
+/// through their `Drop` flush.
+struct TornWriter<W: Write> {
+    inner: W,
+    cut: Option<u64>,
+    written: u64,
+    tripped: Arc<AtomicBool>,
+}
+
+impl<W: Write> TornWriter<W> {
+    fn new(inner: W, cut: Option<u64>, tripped: Arc<AtomicBool>) -> TornWriter<W> {
+        TornWriter { inner, cut, written: 0, tripped }
+    }
+
+    fn torn_error() -> std::io::Error {
+        std::io::Error::other("injected torn write (simulated crash)")
+    }
+}
+
+impl<W: Write> Write for TornWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.tripped.load(Ordering::SeqCst) {
+            return Err(Self::torn_error());
+        }
+        if let Some(cut) = self.cut {
+            let remaining = cut.saturating_sub(self.written);
+            if (buf.len() as u64) > remaining {
+                if remaining > 0 {
+                    self.inner.write_all(&buf[..remaining as usize])?;
+                }
+                let _ = self.inner.flush();
+                self.written = cut;
+                self.tripped.store(true, Ordering::SeqCst);
+                return Err(Self::torn_error());
+            }
+        }
+        let n = self.inner.write(buf)?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.tripped.load(Ordering::SeqCst) {
+            return Ok(()); // the kept prefix was already flushed at the cut
+        }
+        self.inner.flush()
+    }
+}
+
+/// Stream `emit`'s bytes into `<path>.tmp` with a CRC-64 trailer, fsync,
+/// and atomically rename over `path` (then fsync the parent directory).
+/// Returns the total bytes written, trailer included.
+///
+/// On failure the staged temp file is removed — except when the failure
+/// was an injected torn write, which models a crash: the truncated
+/// `.tmp` debris is deliberately left behind for [`cleanup_stale_tmp`]
+/// to find, exactly like a real power cut would.
+pub fn write_atomic(
+    path: &Path,
+    faults: Option<&FaultPlan>,
+    emit: impl FnOnce(&mut dyn Write) -> std::io::Result<()>,
+) -> Result<u64> {
+    let tmp = tmp_sibling(path);
+    let tripped = Arc::new(AtomicBool::new(false));
+    let cut = faults.and_then(|p| p.torn_write_at());
+
+    let attempt = || -> std::io::Result<u64> {
+        let file = File::create(&tmp)?;
+        let torn = TornWriter::new(file, cut, Arc::clone(&tripped));
+        let mut w = Crc64Write::new(std::io::BufWriter::new(torn));
+        emit(&mut w)?;
+        let digest = w.digest();
+        w.write_all(&digest.to_le_bytes())?;
+        let total = w.written();
+        w.flush()?;
+        let torn = w.into_inner().into_inner().map_err(|e| e.into_error())?;
+        torn.inner.sync_all()?;
+        Ok(total)
+    };
+
+    match attempt() {
+        Ok(total) => {
+            if let Err(e) = std::fs::rename(&tmp, path) {
+                let _ = std::fs::remove_file(&tmp);
+                bail!("rename {} -> {}: {e}", tmp.display(), path.display());
+            }
+            fsync_parent_dir(path);
+            Ok(total)
+        }
+        Err(e) => {
+            if tripped.load(Ordering::SeqCst) {
+                // simulated crash: leave the torn .tmp debris in place so
+                // recovery paths (and their tests) see what a real crash leaves
+                if let Some(p) = faults {
+                    p.note_torn_write();
+                }
+            } else {
+                let _ = std::fs::remove_file(&tmp);
+            }
+            bail!("write {}: {e}", tmp.display())
+        }
+    }
+}
+
+/// Verify the CRC-64 trailer of an open file: stream all but the last 8
+/// bytes through the CRC and compare with the stored trailer. Leaves the
+/// cursor at end-of-file; callers seek before parsing. `what` names the
+/// file in error messages.
+pub fn verify_crc64_trailer(file: &mut File, file_len: u64, what: &str) -> Result<()> {
+    if file_len < TRAILER_BYTES {
+        bail!("{what}: {file_len} bytes is too short for a checksum trailer");
+    }
+    file.seek(SeekFrom::Start(0)).with_context(|| format!("{what}: seek"))?;
+    let mut crc = Crc64::new();
+    let mut page = [0u8; 8192];
+    let mut left = file_len - TRAILER_BYTES;
+    while left > 0 {
+        let take = page.len().min(left as usize);
+        file.read_exact(&mut page[..take])
+            .with_context(|| format!("{what}: read during checksum"))?;
+        crc.update(&page[..take]);
+        left -= take as u64;
+    }
+    let mut trailer = [0u8; 8];
+    file.read_exact(&mut trailer).with_context(|| format!("{what}: read checksum trailer"))?;
+    let stored = u64::from_le_bytes(trailer);
+    let computed = crc.finish();
+    if stored != computed {
+        bail!(
+            "{what}: checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — \
+             torn write or corruption"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::crc::crc64;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("srbo_durable_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn write_atomic_appends_trailer_and_cleans_up() {
+        let path = tmp_path("basic.bin");
+        let total = write_atomic(&path, None, |w| w.write_all(b"payload")).unwrap();
+        assert_eq!(total, 7 + TRAILER_BYTES);
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..7], b"payload");
+        assert_eq!(u64::from_le_bytes(bytes[7..].try_into().unwrap()), crc64(b"payload"));
+        assert!(!tmp_sibling(&path).exists(), "no staged tmp after success");
+
+        let mut f = File::open(&path).unwrap();
+        verify_crc64_trailer(&mut f, 15, "test file").unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_write_leaves_debris_and_preserves_the_old_file() {
+        let path = tmp_path("torn.bin");
+        write_atomic(&path, None, |w| w.write_all(b"original")).unwrap();
+
+        let plan = FaultPlan::new(1);
+        plan.arm_torn_write(3);
+        let err = write_atomic(&path, Some(&plan), |w| w.write_all(b"replacement")).unwrap_err();
+        assert!(err.msg().contains("torn write"), "{err}");
+        assert_eq!(plan.counters().torn, 1);
+
+        // the target still holds the fully valid original
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"original");
+        // the crash left truncated debris behind, cut at exactly byte 3
+        let debris = std::fs::read(tmp_sibling(&path)).unwrap();
+        assert_eq!(debris, b"rep");
+        assert!(cleanup_stale_tmp(&path), "sweep finds the debris");
+        assert!(!tmp_sibling(&path).exists());
+        assert!(!cleanup_stale_tmp(&path), "second sweep finds nothing");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn every_truncation_point_fails_the_checksum() {
+        let path = tmp_path("trunc.bin");
+        write_atomic(&path, None, |w| w.write_all(b"0123456789")).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        assert_eq!(full.len() as u64, 10 + TRAILER_BYTES);
+
+        for cut in 0..full.len() {
+            let short_path = tmp_path("trunc_cut.bin");
+            std::fs::write(&short_path, &full[..cut]).unwrap();
+            let mut f = File::open(&short_path).unwrap();
+            let err = verify_crc64_trailer(&mut f, cut as u64, "cut file").unwrap_err();
+            assert!(
+                err.msg().contains("checksum") || err.msg().contains("too short"),
+                "cut at {cut}: {err}"
+            );
+            std::fs::remove_file(&short_path).unwrap();
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn hard_write_errors_still_remove_the_staged_tmp() {
+        let path = tmp_path("hardfail.bin");
+        let err = write_atomic(&path, None, |w| {
+            w.write_all(b"partial")?;
+            Err(std::io::Error::other("disk exploded"))
+        })
+        .unwrap_err();
+        assert!(err.msg().contains("disk exploded"), "{err}");
+        assert!(!tmp_sibling(&path).exists(), "non-crash failures clean up");
+        assert!(!path.exists());
+    }
+}

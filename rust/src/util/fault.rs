@@ -1,0 +1,452 @@
+//! Deterministic fault injection for durability and overload testing.
+//!
+//! A [`FaultPlan`] is a seeded schedule of injected failures that the I/O
+//! and serving layers consult at well-defined points:
+//!
+//! - **transient read errors** (`ErrorKind::Interrupted`) surfaced from
+//!   the pooled `FileStore` readers, exercising the bounded-backoff
+//!   retry loop;
+//! - **short reads** (the OS returning fewer bytes than asked), which the
+//!   fault-aware [`read_exact_faulty`] loop must absorb without
+//!   corrupting row data;
+//! - **torn writes**: the writer "crashes" after exactly `k` bytes of
+//!   the temp file, leaving truncated `.tmp` debris behind — the
+//!   checksum trailer plus atomic-rename discipline must keep the
+//!   original file intact and the next open must sweep the debris;
+//! - **eval-worker panics** and **eval delays** inside the serve layer,
+//!   exercising `catch_unwind` isolation, queue shedding, and deadlines.
+//!
+//! Plans are built directly in tests or parsed from the `SRBO_FAULTS`
+//! environment variable (`seed=7,transient=0.2,short=0.2,torn=153,
+//! panic=1,delay-ms=20`). Probabilistic decisions come from a splitmix64
+//! stream over an atomic sequence counter, so a single-threaded replay
+//! with the same seed injects the identical fault sequence. Transient
+//! errors are bounded by `max-consecutive` (default 3, below the retry
+//! budget), so every retried read is guaranteed to eventually succeed —
+//! faults change timing and counters, never results.
+
+use std::io::Read;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::bail;
+use crate::util::error::{Context, Result};
+
+/// Environment variable holding a [`FaultPlan`] spec.
+pub const FAULTS_ENV: &str = "SRBO_FAULTS";
+
+/// Sentinel meaning "no torn write armed".
+const TORN_NONE: u64 = u64::MAX;
+
+/// A seeded, shareable schedule of injected faults. All state is atomic:
+/// one plan can sit behind an `Arc` under a `FileStore` reader pool and
+/// the serve eval worker at the same time.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Probability in [0, 1] that a read attempt fails with `Interrupted`.
+    transient: f64,
+    /// Probability in [0, 1] that a read is truncated to half its length.
+    short: f64,
+    /// Upper bound on back-to-back transient failures (keeps retries finite).
+    max_consecutive: u32,
+    /// Byte offset at which the next durable write tears ([`TORN_NONE`] = disarmed).
+    torn: AtomicU64,
+    /// Remaining injected eval-worker panics.
+    eval_panics: AtomicU64,
+    /// Artificial latency added to every eval batch (0 = none).
+    eval_delay_ms: u64,
+    /// Decision sequence counter feeding the splitmix64 stream.
+    seq: AtomicU64,
+    /// Current run of back-to-back transient failures.
+    consecutive: AtomicU32,
+    // --- observability: what was actually injected ---
+    transients_injected: AtomicU64,
+    shorts_injected: AtomicU64,
+    torn_injected: AtomicU64,
+    panics_injected: AtomicU64,
+}
+
+/// Snapshot of how many faults a plan has actually injected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub transients: u64,
+    pub shorts: u64,
+    pub torn: u64,
+    pub panics: u64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing until configured (useful as a base).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            transient: 0.0,
+            short: 0.0,
+            max_consecutive: 3,
+            torn: AtomicU64::new(TORN_NONE),
+            eval_panics: AtomicU64::new(0),
+            eval_delay_ms: 0,
+            seq: AtomicU64::new(0),
+            consecutive: AtomicU32::new(0),
+            transients_injected: AtomicU64::new(0),
+            shorts_injected: AtomicU64::new(0),
+            torn_injected: AtomicU64::new(0),
+            panics_injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Builder: transient-read-error probability.
+    pub fn with_transient(mut self, p: f64) -> FaultPlan {
+        self.transient = p;
+        self
+    }
+
+    /// Builder: short-read probability.
+    pub fn with_short(mut self, p: f64) -> FaultPlan {
+        self.short = p;
+        self
+    }
+
+    /// Builder: cap on back-to-back transient failures.
+    pub fn with_max_consecutive(mut self, n: u32) -> FaultPlan {
+        self.max_consecutive = n;
+        self
+    }
+
+    /// Builder: artificial per-batch eval latency in milliseconds.
+    pub fn with_eval_delay_ms(mut self, ms: u64) -> FaultPlan {
+        self.eval_delay_ms = ms;
+        self
+    }
+
+    /// Builder: number of eval batches that will panic.
+    pub fn with_eval_panics(self, n: u64) -> FaultPlan {
+        self.eval_panics.store(n, Ordering::SeqCst);
+        self
+    }
+
+    /// Arm (or re-arm) a torn write: the next durable write through
+    /// [`crate::util::durable::write_atomic`] stops after `k` bytes and
+    /// errors out, simulating a crash mid-write.
+    pub fn arm_torn_write(&self, k: u64) {
+        self.torn.store(k, Ordering::SeqCst);
+    }
+
+    /// Parse a comma-separated `key=value` spec, e.g.
+    /// `seed=7,transient=0.2,short=0.1,torn=153,panic=1,delay-ms=20`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0x5EED_FA17);
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .with_context(|| format!("{FAULTS_ENV}: entry {part:?} is not key=value"))?;
+            let bad = |what: &str| format!("{FAULTS_ENV}: {key}={val}: bad {what}");
+            match key {
+                "seed" => plan.seed = val.parse().with_context(|| bad("u64 seed"))?,
+                "transient" => {
+                    plan.transient = val.parse().with_context(|| bad("probability"))?;
+                }
+                "short" => plan.short = val.parse().with_context(|| bad("probability"))?,
+                "max-consecutive" => {
+                    plan.max_consecutive = val.parse().with_context(|| bad("u32 count"))?;
+                }
+                "torn" => {
+                    let k: u64 = val.parse().with_context(|| bad("byte offset"))?;
+                    if k == TORN_NONE {
+                        bail!("{FAULTS_ENV}: torn={val} is the disarmed sentinel");
+                    }
+                    plan.torn.store(k, Ordering::SeqCst);
+                }
+                "panic" => {
+                    let n: u64 = val.parse().with_context(|| bad("u64 count"))?;
+                    plan.eval_panics.store(n, Ordering::SeqCst);
+                }
+                "delay-ms" => plan.eval_delay_ms = val.parse().with_context(|| bad("u64 ms"))?,
+                other => bail!(
+                    "{FAULTS_ENV}: unknown key {other:?} (want seed / transient / short / \
+                     max-consecutive / torn / panic / delay-ms)"
+                ),
+            }
+        }
+        for (name, p) in [("transient", plan.transient), ("short", plan.short)] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{FAULTS_ENV}: {name}={p} is not a probability in [0, 1]");
+            }
+        }
+        if plan.max_consecutive == 0 {
+            bail!("{FAULTS_ENV}: max-consecutive must be >= 1");
+        }
+        Ok(plan)
+    }
+
+    /// The process-wide plan from `SRBO_FAULTS`, if set. A malformed
+    /// spec is a loud error, not a silently fault-free run.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(Arc::new(FaultPlan::parse(&s)?))),
+            _ => Ok(None),
+        }
+    }
+
+    /// Next unit-interval sample from the seeded splitmix64 stream.
+    fn unit(&self) -> f64 {
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut z = self
+            .seed
+            .wrapping_add(n.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Should this read attempt fail with an injected transient error?
+    /// Bounded: after `max_consecutive` failures in a row the next
+    /// attempt is forced to succeed, so bounded retry always wins.
+    pub fn transient_read_error(&self) -> bool {
+        if self.transient <= 0.0 {
+            return false;
+        }
+        if self.consecutive.load(Ordering::Relaxed) >= self.max_consecutive {
+            self.consecutive.store(0, Ordering::Relaxed);
+            return false;
+        }
+        if self.unit() < self.transient {
+            self.consecutive.fetch_add(1, Ordering::Relaxed);
+            self.transients_injected.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            self.consecutive.store(0, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Possibly truncate a read request: returns how many bytes to ask
+    /// the OS for (always >= 1, so progress is guaranteed).
+    pub fn short_read_len(&self, want: usize) -> usize {
+        if self.short <= 0.0 || want <= 1 {
+            return want;
+        }
+        if self.unit() < self.short {
+            self.shorts_injected.fetch_add(1, Ordering::Relaxed);
+            (want / 2).max(1)
+        } else {
+            want
+        }
+    }
+
+    /// Consume the armed torn-write offset, if any (one shot: the write
+    /// that draws it is the one that "crashes").
+    pub fn torn_write_at(&self) -> Option<u64> {
+        let k = self.torn.swap(TORN_NONE, Ordering::SeqCst);
+        (k != TORN_NONE).then_some(k)
+    }
+
+    /// Record that a torn write actually fired (called by the durable
+    /// writer once the cut is hit).
+    pub fn note_torn_write(&self) {
+        self.torn_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consume one injected eval panic, if any remain.
+    pub fn take_eval_panic(&self) -> bool {
+        let mut cur = self.eval_panics.load(Ordering::SeqCst);
+        while cur > 0 {
+            let swap = self
+                .eval_panics
+                .compare_exchange(cur, cur - 1, Ordering::SeqCst, Ordering::SeqCst);
+            match swap {
+                Ok(_) => {
+                    self.panics_injected.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(now) => cur = now,
+            }
+        }
+        false
+    }
+
+    /// Artificial eval latency, if configured.
+    pub fn eval_delay(&self) -> Option<std::time::Duration> {
+        (self.eval_delay_ms > 0).then(|| std::time::Duration::from_millis(self.eval_delay_ms))
+    }
+
+    /// How many faults this plan has injected so far.
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            transients: self.transients_injected.load(Ordering::Relaxed),
+            shorts: self.shorts_injected.load(Ordering::Relaxed),
+            torn: self.torn_injected.load(Ordering::Relaxed),
+            panics: self.panics_injected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// `read_exact` with injected faults: transient errors surface to the
+/// caller (the pooled-reader retry loop handles them); short reads are
+/// absorbed here by looping, exactly like a real `read_exact` absorbs a
+/// partial `read(2)`.
+pub fn read_exact_faulty(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    plan: Option<&FaultPlan>,
+) -> std::io::Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if let Some(p) = plan {
+            if p.transient_read_error() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected transient read error",
+                ));
+            }
+        }
+        let want = buf.len() - filled;
+        let take = plan.map_or(want, |p| p.short_read_len(want));
+        match r.read(&mut buf[filled..filled + take]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "unexpected end of file mid-read",
+                ))
+            }
+            Ok(n) => filled += n,
+            // a genuine OS-level EINTR is retried in place, as read_exact does
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted && plan.is_none() => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Is this I/O error worth retrying with backoff?
+pub fn is_transient(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_and_reject_malformed() {
+        let p = FaultPlan::parse("seed=7, transient=0.25,short=0.5,torn=153,panic=2,delay-ms=20")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.transient, 0.25);
+        assert_eq!(p.short, 0.5);
+        assert_eq!(p.torn_write_at(), Some(153));
+        assert_eq!(p.torn_write_at(), None, "torn offset is one-shot");
+        assert!(p.take_eval_panic());
+        assert!(p.take_eval_panic());
+        assert!(!p.take_eval_panic());
+        assert_eq!(p.eval_delay(), Some(std::time::Duration::from_millis(20)));
+
+        let bad_specs = [
+            "transient",
+            "transient=1.5",
+            "short=-0.1",
+            "wibble=1",
+            "seed=xyz",
+            "max-consecutive=0",
+        ];
+        for bad in bad_specs {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert!(err.msg().contains(FAULTS_ENV), "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_a_no_fault_plan() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(!p.transient_read_error());
+        assert_eq!(p.short_read_len(100), 100);
+        assert_eq!(p.torn_write_at(), None);
+        assert!(!p.take_eval_panic());
+        assert_eq!(p.eval_delay(), None);
+        assert_eq!(p.counters(), FaultCounters::default());
+    }
+
+    #[test]
+    fn transient_failures_are_bounded_by_max_consecutive() {
+        // transient=1.0 would fail forever without the bound
+        let p = FaultPlan::new(42).with_transient(1.0).with_max_consecutive(3);
+        for round in 0..10 {
+            let mut fails = 0;
+            while p.transient_read_error() {
+                fails += 1;
+                assert!(fails <= 3, "round {round}: unbounded failure run");
+            }
+            assert_eq!(fails, 3, "round {round}");
+        }
+        assert_eq!(p.counters().transients, 30);
+    }
+
+    #[test]
+    fn same_seed_same_decision_stream() {
+        let a = FaultPlan::new(99).with_transient(0.3).with_short(0.3);
+        let b = FaultPlan::new(99).with_transient(0.3).with_short(0.3);
+        for _ in 0..200 {
+            assert_eq!(a.transient_read_error(), b.transient_read_error());
+            assert_eq!(a.short_read_len(64), b.short_read_len(64));
+        }
+        let c = FaultPlan::new(100).with_transient(0.3);
+        let diverged = (0..200).any(|_| a.transient_read_error() != c.transient_read_error());
+        assert!(diverged, "different seeds should diverge");
+    }
+
+    #[test]
+    fn short_reads_always_make_progress() {
+        let p = FaultPlan::new(1).with_short(1.0);
+        assert_eq!(p.short_read_len(1), 1);
+        assert_eq!(p.short_read_len(2), 1);
+        assert_eq!(p.short_read_len(100), 50);
+        assert!(p.counters().shorts >= 2);
+    }
+
+    #[test]
+    fn faulty_read_exact_recovers_short_reads_bit_identically() {
+        let data: Vec<u8> = (0..200u8).collect();
+        let p = FaultPlan::new(5).with_short(0.9);
+        let mut out = vec![0u8; 200];
+        read_exact_faulty(&mut &data[..], &mut out, Some(&p)).unwrap();
+        assert_eq!(out, data);
+        assert!(p.counters().shorts > 0, "shorts were actually injected");
+    }
+
+    #[test]
+    fn faulty_read_exact_surfaces_injected_transients() {
+        let data = vec![7u8; 64];
+        let p = FaultPlan::new(3).with_transient(1.0);
+        let mut out = vec![0u8; 64];
+        let e = read_exact_faulty(&mut &data[..], &mut out, Some(&p)).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::Interrupted);
+        assert!(is_transient(&e));
+        // after the bounded run the same call succeeds
+        loop {
+            match read_exact_faulty(&mut &data[..], &mut out, Some(&p)) {
+                Ok(()) => break,
+                Err(e) => assert!(is_transient(&e)),
+            }
+        }
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn from_env_round_trips_and_rejects_garbage() {
+        // touch the env var briefly; no other test reads SRBO_FAULTS
+        std::env::set_var(FAULTS_ENV, "seed=11,delay-ms=5");
+        let p = FaultPlan::from_env().unwrap().expect("plan set");
+        assert_eq!(p.eval_delay(), Some(std::time::Duration::from_millis(5)));
+        std::env::set_var(FAULTS_ENV, "nonsense");
+        assert!(FaultPlan::from_env().is_err());
+        std::env::remove_var(FAULTS_ENV);
+        assert!(FaultPlan::from_env().unwrap().is_none());
+    }
+}

@@ -1,5 +1,7 @@
 //! Dependency-free substrates: RNG, dense linear algebra, sorting,
-//! timing, TSV/JSON report writers, CLI parsing.
+//! timing, TSV/JSON report writers, CLI parsing, CRC-64 checksums,
+//! crash-safe durable writes, deterministic fault injection, and
+//! poison-recovering lock helpers.
 //!
 //! The offline crate registry only carries the `xla` crate's closure, so
 //! `rand`, `serde`, `clap` etc. are re-implemented here at the size this
@@ -7,9 +9,13 @@
 
 pub mod argsort;
 pub mod cli;
+pub mod crc;
+pub mod durable;
 pub mod error;
+pub mod fault;
 pub mod linalg;
 pub mod rng;
+pub mod sync;
 pub mod timer;
 pub mod tsv;
 

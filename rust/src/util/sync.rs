@@ -1,0 +1,85 @@
+//! Poison-recovering lock helpers.
+//!
+//! A panic while holding a `std::sync` lock poisons it, and every later
+//! `lock().unwrap()` turns one failed request into a process-wide
+//! cascade. All the state guarded by these locks in this crate (the
+//! serve admission queue, the telemetry latency ring, the model
+//! registry, the `FileStore` reader pool) stays structurally valid at
+//! every await-free point — a panicked holder can leave at most a
+//! partially processed batch, never a broken invariant — so the right
+//! policy is to strip the poison flag and carry on. The serve layer's
+//! `catch_unwind` isolation then turns the original panic into error
+//! frames for the affected requests while every other request proceeds.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_mutex<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Acquire a read lock, recovering from poisoning.
+pub fn read_lock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Acquire a write lock, recovering from poisoning.
+pub fn write_lock<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` that recovers the guard from poisoning.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn poisoned_mutex_recovers_with_state_intact() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned(), "precondition: the lock is poisoned");
+        let guard = lock_mutex(&m);
+        assert_eq!(*guard, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn poisoned_rwlock_recovers_for_readers_and_writers() {
+        let l = Arc::new(RwLock::new(7u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _guard = l2.write().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*read_lock(&l), 7);
+        *write_lock(&l) = 8;
+        assert_eq!(*read_lock(&l), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out_on_a_healthy_lock() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let (guard, res) = wait_timeout_recover(&cv, lock_mutex(&m), Duration::from_millis(5));
+        assert!(res.timed_out());
+        drop(guard);
+    }
+}

@@ -1,0 +1,326 @@
+//! Fault-injection audit: every on-disk format and the serving loop
+//! under deterministic injected failures.
+//!
+//! Durability: a torn write (simulated crash mid-`<path>.tmp`) must
+//! leave the original file fully readable, leave truncated debris the
+//! next open sweeps, and every truncation point of every format must be
+//! rejected by the CRC-64 trailer.  Retry: pooled `FileStore` readers
+//! absorb injected transient errors and short reads with results
+//! bit-identical to a resident store.  Overload: under a queue bound of
+//! 1 with slowed, panicking evaluation, every concurrent request is
+//! answered — correct scores, an `OVERLOADED` shed, or a panic error
+//! frame — and the server keeps serving afterwards.
+//!
+//! `SRBO_TEST_FAULTS=on` (the CI fault-matrix leg) raises the request
+//! counts; the default keeps the suite fast for local runs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use srbo::coordinator::path::SavedPath;
+use srbo::data::store::{FeatureStore, FileStore, MemStore};
+use srbo::kernel::KernelKind;
+use srbo::prop::Gen;
+use srbo::serve::{Client, Registry, ServableModel, ServeConfig, Server, OVERLOADED};
+use srbo::svm::model_io::{ModelFamily, SavedModel};
+use srbo::svm::KernelModel;
+use srbo::util::durable::tmp_sibling;
+use srbo::util::fault::FaultPlan;
+use srbo::util::Mat;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("srbo-faults-{}-{tag}", std::process::id()))
+}
+
+/// Heavier request counts on the CI fault-matrix leg.
+fn heavy() -> bool {
+    std::env::var("SRBO_TEST_FAULTS").map(|v| v == "on").unwrap_or(false)
+}
+
+fn fixture_mat(g: &mut Gen, rows: usize, cols: usize) -> Mat {
+    Mat::from_rows(&(0..rows).map(|_| g.vec_f64(cols, -2.0, 2.0)).collect::<Vec<_>>())
+}
+
+fn fixture_model(g: &mut Gen) -> SavedModel {
+    let sv = fixture_mat(g, 5, 3);
+    let coef = g.vec_f64(5, -1.0, 1.0);
+    let model =
+        KernelModel { kernel: KernelKind::Rbf { gamma: 0.7 }, sv, coef, threshold: 0.25 };
+    SavedModel::new(ModelFamily::Supervised, model).with_stored_norms()
+}
+
+fn fixture_path(g: &mut Gen) -> SavedPath {
+    let l = 6;
+    let nus = vec![0.2, 0.3, 0.4];
+    let alphas = (0..nus.len()).map(|_| g.vec_f64(l, 0.0, 1.0)).collect();
+    SavedPath { oneclass: false, l, nus, alphas }
+}
+
+// ------------------------------------------------------- torn writes
+
+/// A crash mid-rewrite leaves the original intact plus `.tmp` debris,
+/// and the next open/load sweeps the debris — for all three formats.
+#[test]
+fn torn_writes_preserve_originals_and_reopen_sweeps_debris() {
+    let mut g = Gen::new(0xFA01);
+
+    // feature store: write, then tear a rewrite at byte 40
+    let fsb = tmp("torn.fsb");
+    let x = fixture_mat(&mut g, 4, 3);
+    let y: Vec<f64> = (0..4).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    FileStore::write(&fsb, &x, Some(&y)).expect("seed store");
+    let before = std::fs::read(&fsb).expect("read original");
+    let plan = FaultPlan::new(3);
+    plan.arm_torn_write(40);
+    let x2 = fixture_mat(&mut g, 4, 3);
+    let err = FileStore::write_with_faults(&fsb, &x2, Some(&y), Some(&plan)).unwrap_err();
+    assert!(err.msg().contains("torn write"), "{err}");
+    assert_eq!(std::fs::read(&fsb).expect("reread"), before, "original must survive");
+    assert!(tmp_sibling(&fsb).exists(), "the crash leaves .tmp debris");
+    let store = FileStore::open(&fsb).expect("reopen after crash");
+    assert!(!tmp_sibling(&fsb).exists(), "open sweeps the debris");
+    let mut got = vec![0.0; x.rows * x.cols];
+    store.rows_into(0, x.rows, &mut got);
+    for (a, b) in got.iter().zip(&x.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    drop(store);
+    let _ = std::fs::remove_file(&fsb);
+
+    // model file
+    let mdl = tmp("torn.mdl");
+    let saved = fixture_model(&mut g);
+    saved.save(&mdl).expect("seed model");
+    let before = std::fs::read(&mdl).expect("read original");
+    let plan = FaultPlan::new(4);
+    plan.arm_torn_write(25);
+    let err = fixture_model(&mut g).save_with_faults(&mdl, Some(&plan)).unwrap_err();
+    assert!(err.msg().contains("torn write"), "{err}");
+    assert_eq!(std::fs::read(&mdl).expect("reread"), before);
+    assert!(tmp_sibling(&mdl).exists());
+    let loaded = SavedModel::load(&mdl).expect("reload after crash");
+    assert!(!tmp_sibling(&mdl).exists(), "load sweeps the debris");
+    for (a, b) in loaded.model.coef.iter().zip(&saved.model.coef) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let _ = std::fs::remove_file(&mdl);
+
+    // path snapshot
+    let snap = tmp("torn.path");
+    let saved = fixture_path(&mut g);
+    saved.save(&snap).expect("seed snapshot");
+    let before = std::fs::read(&snap).expect("read original");
+    let plan = FaultPlan::new(5);
+    plan.arm_torn_write(17);
+    let err = fixture_path(&mut g).save_with_faults(&snap, Some(&plan)).unwrap_err();
+    assert!(err.msg().contains("torn write"), "{err}");
+    assert_eq!(std::fs::read(&snap).expect("reread"), before);
+    assert!(tmp_sibling(&snap).exists());
+    let loaded = SavedPath::load(&snap).expect("reload after crash");
+    assert!(!tmp_sibling(&snap).exists(), "load sweeps the debris");
+    for (a, b) in loaded.alphas[0].iter().zip(&saved.alphas[0]) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// Every truncation point of every format is rejected loudly — the
+/// checksum trailer means no prefix of a valid file is a valid file.
+#[test]
+fn every_truncation_point_is_rejected_for_all_three_formats() {
+    let mut g = Gen::new(0xFA02);
+
+    let fsb = tmp("cuts.fsb");
+    let x = fixture_mat(&mut g, 3, 2);
+    FileStore::write(&fsb, &x, None).expect("seed store");
+    let full = std::fs::read(&fsb).expect("read");
+    for cut in 0..full.len() {
+        std::fs::write(&fsb, &full[..cut]).expect("truncate");
+        assert!(FileStore::open(&fsb).is_err(), "store cut at {cut} must be rejected");
+    }
+    let _ = std::fs::remove_file(&fsb);
+
+    let mdl = tmp("cuts.mdl");
+    fixture_model(&mut g).save(&mdl).expect("seed model");
+    let full = std::fs::read(&mdl).expect("read");
+    for cut in 0..full.len() {
+        std::fs::write(&mdl, &full[..cut]).expect("truncate");
+        assert!(SavedModel::load(&mdl).is_err(), "model cut at {cut} must be rejected");
+    }
+    let _ = std::fs::remove_file(&mdl);
+
+    let snap = tmp("cuts.path");
+    fixture_path(&mut g).save(&snap).expect("seed snapshot");
+    let full = std::fs::read(&snap).expect("read");
+    for cut in 0..full.len() {
+        std::fs::write(&snap, &full[..cut]).expect("truncate");
+        assert!(SavedPath::load(&snap).is_err(), "snapshot cut at {cut} must be rejected");
+    }
+    let _ = std::fs::remove_file(&snap);
+}
+
+// --------------------------------------------------- transient retries
+
+/// Injected transient errors and short reads are absorbed by the
+/// bounded-backoff retry loop: every read path returns bits identical
+/// to a resident store, and the retry counters prove faults fired.
+#[test]
+fn transient_read_faults_are_retried_transparently() {
+    let mut g = Gen::new(0xFA03);
+    let rows = if heavy() { 96 } else { 48 };
+    let x = fixture_mat(&mut g, rows, 5);
+    let mem = MemStore::new(x.clone());
+
+    let mut store = FileStore::spill(&x, None).expect("spill");
+    let plan = Arc::new(FaultPlan::new(11).with_transient(0.4).with_short(0.4));
+    store.set_faults(Some(Arc::clone(&plan)));
+
+    // ranged reads
+    let mut a = vec![0.0; rows * 5];
+    let mut b = vec![0.0; rows * 5];
+    store.rows_into(0, rows, &mut a);
+    mem.rows_into(0, rows, &mut b);
+    for (p, q) in a.iter().zip(&b) {
+        assert_eq!(p.to_bits(), q.to_bits());
+    }
+    // gathered reads over a scattered index set
+    let idx: Vec<usize> = (0..rows).step_by(3).collect();
+    let mut a = vec![0.0; idx.len() * 5];
+    let mut b = vec![0.0; idx.len() * 5];
+    store.gather_rows(&idx, &mut a);
+    mem.gather_rows(&idx, &mut b);
+    for (p, q) in a.iter().zip(&b) {
+        assert_eq!(p.to_bits(), q.to_bits());
+    }
+    // full materialisation
+    let whole = store.to_mat();
+    for (p, q) in whole.data.iter().zip(&x.data) {
+        assert_eq!(p.to_bits(), q.to_bits());
+    }
+
+    let stats = store.io_stats();
+    let counters = plan.counters();
+    assert!(counters.transients > 0, "the plan must actually have injected faults");
+    assert!(stats.retries > 0, "retries must be counted");
+    assert!(stats.recovered_reads > 0, "recoveries must be counted");
+}
+
+// ------------------------------------------------------- overload e2e
+
+fn overload_servable(g: &mut Gen) -> ServableModel {
+    let sv = fixture_mat(g, 6, 4);
+    let coef = g.vec_f64(6, -1.0, 1.0);
+    let model =
+        KernelModel { kernel: KernelKind::Rbf { gamma: 0.5 }, sv, coef, threshold: 0.0 };
+    ServableModel::from_model("m", 1, ModelFamily::Supervised, model)
+}
+
+/// N clients against a queue bound of 1 with slowed evaluation and one
+/// injected eval panic: every request is answered (correct bits, an
+/// `OVERLOADED` shed, or a panic error frame), nothing is dropped, the
+/// worker survives the panic, and the shed/panic counters land in STATS.
+#[test]
+fn overloaded_server_sheds_survives_panics_and_answers_everyone() {
+    let mut g = Gen::new(0xFA04);
+    let registry = Arc::new(Registry::new());
+    let sv = overload_servable(&mut g);
+    let direct = sv.model.clone();
+    registry.insert(sv);
+    let cfg = ServeConfig {
+        eval_threads: 1,
+        queue_cap: 1,
+        faults: Some(Arc::new(FaultPlan::new(21).with_eval_delay_ms(15).with_eval_panics(1))),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind("127.0.0.1:0", registry, cfg).expect("bind");
+    let addr = server.addr.to_string();
+
+    let clients = 6u64;
+    let per_client = if heavy() { 16 } else { 6 };
+    let mut threads = Vec::new();
+    for t in 0..clients {
+        let addr = addr.clone();
+        let dim = direct.sv.cols;
+        threads.push(std::thread::spawn(move || {
+            let mut g = Gen::new(0xFA10 + t);
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut outcomes = Vec::new();
+            for _ in 0..per_client {
+                let x = Mat::from_rows(&[g.vec_f64(dim, -2.0, 2.0)]);
+                match client.score("m", 1, &x) {
+                    Ok(scores) => outcomes.push((x, Some(scores))),
+                    Err(e) => {
+                        let msg = e.msg().to_string();
+                        assert!(
+                            msg.contains(OVERLOADED) || msg.contains("panicked"),
+                            "unexpected error under overload: {msg}"
+                        );
+                        outcomes.push((x, None));
+                    }
+                }
+            }
+            outcomes
+        }));
+    }
+    let mut answered = 0usize;
+    let mut scored = 0usize;
+    for th in threads {
+        for (x, outcome) in th.join().expect("client thread panicked") {
+            answered += 1;
+            if let Some(scores) = outcome {
+                scored += 1;
+                let want = direct.decision(&x);
+                assert_eq!(scores[0].to_bits(), want[0].to_bits(), "shed-path must not corrupt");
+            }
+        }
+    }
+    assert_eq!(answered, (clients as usize) * per_client, "no request may be dropped");
+    assert!(scored > 0, "some requests must get through the bounded queue");
+
+    // the server is still healthy: a clean request scores bit-identically
+    let mut client = Client::connect(&addr).expect("connect after overload");
+    let probe = Mat::from_rows(&[(0..direct.sv.cols).map(|i| 0.1 * i as f64).collect()]);
+    let wire = client.score("m", 1, &probe).expect("score after the storm");
+    assert_eq!(wire[0].to_bits(), direct.decision(&probe)[0].to_bits());
+
+    let stats = client.stats().expect("stats");
+    for key in ["shed", "deadline_hits", "eval_panics", "conns_rejected"] {
+        assert!(stats.contains(&format!("\"{key}\":")), "missing {key} in {stats}");
+    }
+    assert!(stats.contains("\"eval_panics\":1"), "the injected panic must be counted: {stats}");
+    drop(client);
+    server.shutdown();
+}
+
+/// The connection cap answers one `OVERLOADED` frame and closes; the
+/// counter lands in telemetry and admitted connections keep working.
+#[test]
+fn connection_cap_rejects_with_an_error_frame() {
+    let mut g = Gen::new(0xFA05);
+    let registry = Arc::new(Registry::new());
+    let sv = overload_servable(&mut g);
+    let direct = sv.model.clone();
+    registry.insert(sv);
+    let cfg = ServeConfig { eval_threads: 1, max_conns: 1, ..ServeConfig::default() };
+    let server = Server::bind("127.0.0.1:0", registry, cfg).expect("bind");
+    let addr = server.addr.to_string();
+
+    let mut first = Client::connect(&addr).expect("first connection admitted");
+    // exercise the admitted connection so its thread is live
+    let probe = Mat::from_rows(&[(0..direct.sv.cols).map(|i| 0.1 * i as f64).collect()]);
+    first.score("m", 1, &probe).expect("admitted connection scores");
+
+    // the second connection gets one OVERLOADED frame, then EOF
+    let mut second = Client::connect(&addr).expect("tcp connect");
+    let e = second.score("m", 1, &probe).unwrap_err();
+    assert!(e.msg().contains(OVERLOADED), "{e}");
+
+    // the first connection is unaffected
+    let wire = first.score("m", 1, &probe).expect("still serving");
+    assert_eq!(wire[0].to_bits(), direct.decision(&probe)[0].to_bits());
+    let stats = first.stats().expect("stats");
+    assert!(stats.contains("\"conns_rejected\":1"), "{stats}");
+    drop(first);
+    drop(second);
+    server.shutdown();
+}

@@ -1,5 +1,5 @@
 //! End-to-end serving audit: a real trained model travels the full
-//! production path — train → `SRBOMD01` file → registry load → threaded
+//! production path — train → `SRBOMD02` file → registry load → threaded
 //! TCP server → concurrent clients — and every decision that comes back
 //! over the wire is bit-identical to calling `KernelModel::decision`
 //! directly on the same model.  Malformed frames are answered with an
@@ -27,7 +27,7 @@ fn tmp(tag: &str) -> PathBuf {
 }
 
 /// Train one model per family on real synthetic data and export both as
-/// `SRBOMD01` files — the supervised one with stored norms, the
+/// `SRBOMD02` files — the supervised one with stored norms, the
 /// one-class one without, so both load paths are exercised end to end.
 fn train_fixtures(tag: &str) -> (PathBuf, PathBuf) {
     let d = synthetic::gaussians(80, 2.0, 11);
@@ -53,8 +53,8 @@ fn concurrent_clients_get_bit_identical_decisions() {
     let registry = Arc::new(Registry::new());
     registry.load_file("nu", 1, &nu_path).expect("admit nu");
     registry.load_file("oc", 2, &oc_path).expect("admit oc");
-    let server =
-        Server::bind("127.0.0.1:0", registry, ServeConfig { eval_threads: 3 }).expect("bind");
+    let cfg = ServeConfig { eval_threads: 3, ..ServeConfig::default() };
+    let server = Server::bind("127.0.0.1:0", registry, cfg).expect("bind");
     let addr = server.addr.to_string();
     let models = [("nu", 1u32, reference(&nu_path)), ("oc", 2u32, reference(&oc_path))];
 
@@ -123,8 +123,8 @@ fn malformed_frames_get_error_frames_not_dropped_connections() {
     let (nu_path, oc_path) = train_fixtures("mal");
     let registry = Arc::new(Registry::new());
     registry.load_file("m", 1, &nu_path).expect("admit");
-    let server = Server::bind("127.0.0.1:0", registry, ServeConfig { eval_threads: 1 })
-        .expect("bind");
+    let cfg = ServeConfig { eval_threads: 1, ..ServeConfig::default() };
+    let server = Server::bind("127.0.0.1:0", registry, cfg).expect("bind");
     let addr = server.addr.to_string();
     let direct = reference(&nu_path);
     let mut client = Client::connect(&addr).expect("connect");
